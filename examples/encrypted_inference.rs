@@ -1,0 +1,101 @@
+//! End-to-end driver (DESIGN.md §6): encrypted distributed inference.
+//!
+//! Proves that all three layers compose on a real workload:
+//!   * L1/L2 — the MLP block was authored in JAX (Pallas matmul inside)
+//!     and AOT-lowered to `artifacts/mlp_8x128.hlo.txt`;
+//!   * runtime — every "node" loads the artifact through PJRT and runs the
+//!     real forward pass (no Python anywhere);
+//!   * L3 — activations cross nodes through CryptMPI's encrypted
+//!     point-to-point path; the driver serves batched requests over a
+//!     2-stage pipeline and reports latency/throughput for the three
+//!     libraries of the paper.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example encrypted_inference
+//! ```
+
+use cryptmpi::coordinator::{run_cluster, ClusterConfig, SecurityMode};
+use cryptmpi::crypto::rand::SimRng;
+use cryptmpi::net::SystemProfile;
+use cryptmpi::runtime::Service;
+
+const BATCH: usize = 8;
+const DIM: usize = 128;
+const HIDDEN: usize = 256;
+const REQUESTS: usize = 24;
+
+fn f32s_to_bytes(v: &[f32]) -> Vec<u8> {
+    v.iter().flat_map(|x| x.to_le_bytes()).collect()
+}
+
+fn bytes_to_f32s(b: &[u8]) -> Vec<f32> {
+    b.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect()
+}
+
+fn weights(seed: u64, n: usize, scale: f32) -> Vec<f32> {
+    let mut rng = SimRng::new(seed);
+    (0..n).map(|_| (rng.f64() as f32 - 0.5) * scale).collect()
+}
+
+fn serve(mode: SecurityMode, rt: Service) -> (f64, f64, Vec<f32>) {
+    // 2 ranks on 2 nodes: rank 0 = pipeline stage 1, rank 1 = stage 2.
+    let cfg = ClusterConfig::pingpong(SystemProfile::noleland(), mode);
+    let (outs, rep) = run_cluster(&cfg, move |rank| {
+        // Each stage owns one MLP block (distinct weights).
+        let stage = rank.id() as u64;
+        let w1 = weights(100 + stage, DIM * HIDDEN, 0.2);
+        let b1 = weights(200 + stage, HIDDEN, 0.1);
+        let w2 = weights(300 + stage, HIDDEN * DIM, 0.2);
+        let b2 = weights(400 + stage, DIM, 0.1);
+        let mut last_logits = Vec::new();
+        // Virtual cost of one artifact execution on a "node" (charged as
+        // compute; the real PJRT execution provides the actual numbers).
+        let flop_cost_ns = (2.0 * (BATCH * DIM * HIDDEN * 2) as f64 * 0.5) as u64;
+        for req in 0..REQUESTS as u64 {
+            if rank.id() == 0 {
+                // Batched request arrives at stage 1.
+                let x = weights(1000 + req, BATCH * DIM, 1.0);
+                let h = rt.mlp_forward(&x, &w1, &b1, &w2, &b2).expect("stage-1 forward");
+                rank.compute_ns(flop_cost_ns);
+                // Activations cross to the other node encrypted (64 KB+
+                // batches would chop; this 4 KB activation uses the
+                // direct-GCM small path).
+                rank.send(1, req, &f32s_to_bytes(&h));
+            } else {
+                let act = bytes_to_f32s(&rank.recv(0, req));
+                let y = rt.mlp_forward(&act, &w1, &b1, &w2, &b2).expect("stage-2 forward");
+                rank.compute_ns(flop_cost_ns);
+                last_logits = y;
+            }
+        }
+        last_logits
+    });
+    let elapsed_s = rep.per_rank[1].elapsed_ns as f64 / 1e9;
+    let latency_ms = elapsed_s * 1e3 / REQUESTS as f64;
+    let throughput = (REQUESTS * BATCH) as f64 / elapsed_s;
+    (latency_ms, throughput, outs[1].clone())
+}
+
+fn main() -> anyhow::Result<()> {
+    let rt = Service::start(None)?;
+    println!("== encrypted inference: 2-stage pipeline, batch {BATCH}, {REQUESTS} requests ==");
+    let mut baseline = Vec::new();
+    for mode in [SecurityMode::Unencrypted, SecurityMode::CryptMpi, SecurityMode::Naive] {
+        let (lat, tput, logits) = serve(mode, rt.clone());
+        if baseline.is_empty() {
+            baseline = logits.clone();
+        } else {
+            // Correctness across modes: encryption must not change results.
+            assert_eq!(logits, baseline, "mode {mode:?} changed inference output");
+        }
+        println!(
+            "{:12}: {:7.3} ms/request  {:8.1} samples/s  (output[0..3] = {:?})",
+            mode.name(),
+            lat,
+            tput,
+            &logits[..3]
+        );
+    }
+    println!("\nall modes produce identical logits; e2e stack (Pallas→HLO→PJRT→CryptMPI) OK");
+    Ok(())
+}

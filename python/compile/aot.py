@@ -1,0 +1,68 @@
+"""AOT lowering: JAX → StableHLO → XLA computation → HLO *text*.
+
+HLO text (not ``.serialize()``) is the interchange format: jax ≥ 0.5 emits
+protos with 64-bit instruction ids which the runtime's xla_extension 0.5.1
+rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Usage: ``python -m compile.aot --out-dir ../artifacts`` (from python/), or
+just ``make artifacts`` at the repo root. Re-lowering is skipped when the
+artifact is newer than the compile-path sources (incremental builds).
+"""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants: the default HLO printer ELIDES big constant
+    # arrays as `constant({...})`, which the runtime's old text parser then
+    # reads as garbage — lookup tables must survive the round trip.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_all(out_dir: pathlib.Path, only: str | None = None) -> list[pathlib.Path]:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    written = []
+    for name, (fn, specs) in model.artifact_specs().items():
+        if only and name != only:
+            continue
+        path = out_dir / f"{name}.hlo.txt"
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path.write_text(text)
+        print(f"wrote {path} ({len(text)} chars)", file=sys.stderr)
+        written.append(path)
+    return written
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts", help="artifact directory")
+    ap.add_argument("--only", default=None, help="lower a single artifact")
+    # Back-compat: --out <file> writes the gcm artifact to an explicit path.
+    ap.add_argument("--out", default=None, help=argparse.SUPPRESS)
+    args = ap.parse_args()
+    if args.out:
+        out = pathlib.Path(args.out)
+        out.parent.mkdir(parents=True, exist_ok=True)
+        fn, specs = model.artifact_specs()["gcm_seal_256"]
+        out.write_text(to_hlo_text(jax.jit(fn).lower(*specs)))
+        print(f"wrote {out}", file=sys.stderr)
+        return
+    lower_all(pathlib.Path(args.out_dir), args.only)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,185 @@
+"""L1 — AES-128 primitives for the Pallas GCM kernel.
+
+TPU adaptation of the paper's AES-NI hot loop (DESIGN.md §Hardware-
+Adaptation): AES rounds become 256-entry table gathers + byte permutations
+over a ``(blocks, 16)`` uint8 tile, so the embarrassingly-parallel CTR axis
+is the vectorized leading dimension — the role OpenMP threads play on the
+paper's Xeons. Tables are compile-time constants that live in VMEM.
+
+Everything here is build-time Python; the Rust runtime only ever sees the
+lowered HLO.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+# ----------------------------------------------------------------------
+# Table generation (checked against FIPS-197 known values in tests).
+# ----------------------------------------------------------------------
+
+
+def _gf_mul(a: int, b: int) -> int:
+    p = 0
+    for _ in range(8):
+        if b & 1:
+            p ^= a
+        hi = a & 0x80
+        a = (a << 1) & 0xFF
+        if hi:
+            a ^= 0x1B
+        b >>= 1
+    return p
+
+
+def _make_sbox() -> np.ndarray:
+    # Multiplicative inverse in GF(2^8) followed by the affine transform.
+    inv = [0] * 256
+    for x in range(1, 256):
+        for y in range(1, 256):
+            if _gf_mul(x, y) == 1:
+                inv[x] = y
+                break
+    sbox = np.zeros(256, dtype=np.uint8)
+    for x in range(256):
+        b = inv[x]
+        res = 0x63
+        for i in range(8):
+            bit = (
+                (b >> i)
+                ^ (b >> ((i + 4) % 8))
+                ^ (b >> ((i + 5) % 8))
+                ^ (b >> ((i + 6) % 8))
+                ^ (b >> ((i + 7) % 8))
+            ) & 1
+            res ^= bit << i
+        sbox[x] = res  # x = 0 has inv 0, so res = 0x63 as required
+    return sbox
+
+
+SBOX = _make_sbox()
+XT2 = np.array([_gf_mul(i, 2) for i in range(256)], dtype=np.uint8)
+XT3 = np.array([_gf_mul(i, 3) for i in range(256)], dtype=np.uint8)
+RCON = np.array([0x01, 0x02, 0x04, 0x08, 0x10, 0x20, 0x40, 0x80, 0x1B, 0x36], dtype=np.uint8)
+
+# ShiftRows permutation for the FIPS column-major byte layout
+# (byte index 4*c + r): new[4c + r] = old[4*((c + r) % 4) + r].
+SHIFT_IDX = np.array(
+    [4 * ((c + r) % 4) + r for c in range(4) for r in range(4)], dtype=np.int32
+)
+
+
+def key_expansion(key: np.ndarray) -> np.ndarray:
+    """Expand a 16-byte AES-128 key to the (11, 16) uint8 round-key schedule.
+
+    Host-side numpy: the schedule is an *input* of the lowered kernels, so
+    key expansion never appears in the HLO (mirroring the Rust runtime,
+    which also expands keys outside the hot loop).
+    """
+    key = np.asarray(key, dtype=np.uint8)
+    assert key.shape == (16,), "AES-128 key must be 16 bytes"
+    w = [key[4 * i : 4 * i + 4].copy() for i in range(4)]
+    for i in range(4, 44):
+        temp = w[i - 1].copy()
+        if i % 4 == 0:
+            temp = np.roll(temp, -1)
+            temp = SBOX[temp]
+            temp[0] ^= RCON[i // 4 - 1]
+        w.append(w[i - 4] ^ temp)
+    return np.concatenate(w).reshape(11, 16)
+
+
+# ----------------------------------------------------------------------
+# jnp round functions (traceable: used inside Pallas kernel bodies).
+#
+# Pallas kernels may not capture constant *arrays* from their closure, so
+# the lookup tables travel as explicit arguments (`tables()` builds the
+# triple once per call site; inside a kernel they arrive as input refs).
+# ShiftRows uses static per-byte indexing (no index-array constant).
+# ----------------------------------------------------------------------
+
+
+def tables():
+    """(sbox, xt2, xt3) as jnp arrays — pass these into kernels as inputs."""
+    return jnp.asarray(SBOX), jnp.asarray(XT2), jnp.asarray(XT3)
+
+
+def lut(table, idx):
+    """Table lookup WITHOUT a gather op: one-hot compare-and-sum.
+
+    The xla_extension 0.5.1 runtime that executes our artifacts mis-executes
+    the gather emitted by modern `jnp.take` on multi-dim indices (verified
+    by op-level bisection — it returns the indices). A one-hot select-sum
+    avoids gather entirely, and is the MXU-friendly formulation of a table
+    lookup on TPU anyway (DESIGN.md §Hardware-Adaptation).
+    """
+    iota = jax.lax.broadcasted_iota(jnp.int32, idx.shape + (256,), idx.ndim)
+    eq = idx.astype(jnp.int32)[..., None] == iota
+    vals = jnp.where(eq, table.astype(jnp.int32), 0)
+    return jnp.sum(vals, axis=-1).astype(jnp.uint8)
+
+
+def sub_bytes(st, sbox):
+    return lut(sbox, st)
+
+
+def shift_rows(st):
+    return jnp.stack([st[..., int(i)] for i in SHIFT_IDX], axis=-1)
+
+
+def mix_columns(st, xt2, xt3):
+    s = st.reshape(st.shape[:-1] + (4, 4))  # (..., column, row)
+    x2 = lut(xt2, s)
+    x3 = lut(xt3, s)
+    r0 = x2[..., 0] ^ x3[..., 1] ^ s[..., 2] ^ s[..., 3]
+    r1 = s[..., 0] ^ x2[..., 1] ^ x3[..., 2] ^ s[..., 3]
+    r2 = s[..., 0] ^ s[..., 1] ^ x2[..., 2] ^ x3[..., 3]
+    r3 = x3[..., 0] ^ s[..., 1] ^ s[..., 2] ^ x2[..., 3]
+    out = jnp.stack([r0, r1, r2, r3], axis=-1)
+    return out.reshape(st.shape)
+
+
+def aes_encrypt_blocks_t(rk, blocks, sbox, xt2, xt3):
+    """Encrypt ``blocks`` (..., 16) uint8 under schedule ``rk`` (11, 16),
+    with the lookup tables passed explicitly (kernel-safe)."""
+    st = blocks ^ rk[0]
+    for r in range(1, 10):
+        st = sub_bytes(st, sbox)
+        st = shift_rows(st)
+        st = mix_columns(st, xt2, xt3)
+        st = st ^ rk[r]
+    st = sub_bytes(st, sbox)
+    st = shift_rows(st)
+    return st ^ rk[10]
+
+
+def aes_encrypt_blocks(rk, blocks):
+    """Convenience wrapper for non-kernel (plain jax) callers."""
+    sbox, xt2, xt3 = tables()
+    return aes_encrypt_blocks_t(rk, blocks, sbox, xt2, xt3)
+
+
+def ctr_blocks(j0, nblocks, offset=1):
+    """Counter blocks: ``inc32`` applied ``offset + i`` times to ``J0``,
+    for i in range(nblocks) (SP 800-38D: data blocks start at inc32(J0),
+    i.e. offset = 1)."""
+    base = (
+        j0[12].astype(jnp.uint32) << 24
+        | j0[13].astype(jnp.uint32) << 16
+        | j0[14].astype(jnp.uint32) << 8
+        | j0[15].astype(jnp.uint32)
+    )
+    cnt = base + jnp.uint32(offset) + jnp.arange(nblocks, dtype=jnp.uint32)
+    prefix = jnp.broadcast_to(j0[:12], (nblocks, 12))
+    tail = jnp.stack(
+        [
+            (cnt >> 24).astype(jnp.uint8),
+            (cnt >> 16).astype(jnp.uint8),
+            (cnt >> 8).astype(jnp.uint8),
+            cnt.astype(jnp.uint8),
+        ],
+        axis=-1,
+    )
+    return jnp.concatenate([prefix, tail], axis=-1)

@@ -1,0 +1,85 @@
+"""L1 — the fused AES-GCM seal kernel (Pallas).
+
+One kernel invocation seals one segment: CTR keystream generation + XOR
+(vectorized over blocks — the MXU/VPU-parallel axis) fused with the GHASH
+tag computation. ``interpret=True`` everywhere: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, and interpret-mode lowering emits plain HLO
+that the Rust runtime loads (see /opt/xla-example/README.md).
+
+Pallas kernels cannot capture constant arrays, so the AES lookup tables
+and the GCM length block travel as explicit kernel inputs.
+
+VMEM budget (DESIGN.md §Perf): a 4 KB segment tile holds counters +
+plaintext + ciphertext = 3 × 4 KB plus ~0.8 KB of AES tables ≈ 13 KB —
+far below the ~16 MB VMEM of a modern TPU core, leaving room to scale the
+block dimension to ~256 KB segments per invocation before double
+buffering is needed.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import aes
+from . import ghash
+
+
+def gcm_seal_body(rk, j0, pt, sbox, xt2, xt3, lenblk):
+    """Traceable GCM seal: returns (ciphertext blocks, 16-byte tag).
+
+    ``rk``: (11, 16) uint8 round keys; ``j0``: (16,) uint8 pre-counter
+    block (nonce ‖ 0x00000001); ``pt``: (N, 16) uint8 plaintext blocks;
+    ``lenblk``: (16,) uint8 GCM length block.
+    """
+    nblocks = pt.shape[0]
+    # Keystream: E_K(inc32^i(J0)) for i = 1..N, XORed into the plaintext.
+    ctrs = aes.ctr_blocks(j0, nblocks, offset=1)
+    ks = aes.aes_encrypt_blocks_t(rk, ctrs, sbox, xt2, xt3)
+    ct = pt ^ ks
+    # Tag: GHASH(H; C ‖ lens) ⊕ E_K(J0), with H = AES_K(0).
+    zero = pt[:1] ^ pt[:1]  # (1, 16) zeros without a constant array
+    h = aes.aes_encrypt_blocks_t(rk, zero, sbox, xt2, xt3)[0]
+    s = ghash.ghash(h, ct, lenblk)
+    mask = aes.aes_encrypt_blocks_t(rk, j0[None, :], sbox, xt2, xt3)[0]
+    return ct, s ^ mask
+
+
+def _kernel(rk_ref, j0_ref, pt_ref, sbox_ref, xt2_ref, xt3_ref, len_ref, ct_ref, tag_ref):
+    ct, tag = gcm_seal_body(
+        rk_ref[...],
+        j0_ref[...],
+        pt_ref[...],
+        sbox_ref[...],
+        xt2_ref[...],
+        xt3_ref[...],
+        len_ref[...],
+    )
+    ct_ref[...] = ct
+    tag_ref[...] = tag
+
+
+def gcm_seal(rk, j0, pt):
+    """Pallas-wrapped GCM seal of a whole segment (single VMEM tile)."""
+    n = pt.shape[0]
+    sbox, xt2, xt3 = aes.tables()
+    lenblk = jnp.asarray(ghash.length_block(0, n * 16))
+    return pl.pallas_call(
+        _kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((n, 16), jnp.uint8),
+            jax.ShapeDtypeStruct((16,), jnp.uint8),
+        ),
+        interpret=True,
+    )(rk, j0, pt, sbox, xt2, xt3, lenblk)
+
+
+def gcm_seal_segments(rk, j0s, pts):
+    """Seal S segments at once — the L2 multi-thread analog: ``vmap`` over
+    the segment axis plays the role of the paper's ``t`` OpenMP threads.
+
+    ``j0s``: (S, 16) uint8; ``pts``: (S, N, 16) uint8.
+    Returns (S, N, 16) ciphertext and (S, 16) tags.
+    """
+    return jax.vmap(lambda j0, pt: gcm_seal(rk, j0, pt))(j0s, pts)

@@ -1,0 +1,91 @@
+"""L1 — GHASH (GF(2^128) universal hash) in traceable jnp.
+
+The paper's x86 hot loop uses PCLMULQDQ; a TPU has no carry-less multiply,
+so the field element is bit-sliced across four 32-bit lanes and multiplied
+with the SP 800-38D right-shift algorithm inside ``lax.fori_loop`` — the
+VPU executes the 4-lane shift/xor network, and the sequential dependence
+over blocks becomes an XLA ``While`` (DESIGN.md §Hardware-Adaptation).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Reduction constant R = 0xE1 << 120: only the top limb's top byte is set.
+# Kept as a Python int so it lowers as an inlined scalar literal (Pallas
+# kernels may not capture constant arrays).
+_R_TOP = 0xE1000000
+
+
+def bytes_to_u32x4(block):
+    """(…, 16) uint8 → (…, 4) uint32, big-endian limbs (limb 0 = MSW)."""
+    b = block.astype(jnp.uint32)
+    return (
+        b[..., 0::4] << 24 | b[..., 1::4] << 16 | b[..., 2::4] << 8 | b[..., 3::4]
+    )
+
+
+def u32x4_to_bytes(x):
+    """(…, 4) uint32 → (…, 16) uint8, big-endian."""
+    parts = [
+        (x >> 24).astype(jnp.uint8),
+        (x >> 16).astype(jnp.uint8),
+        (x >> 8).astype(jnp.uint8),
+        x.astype(jnp.uint8),
+    ]
+    out = jnp.stack(parts, axis=-1)  # (..., 4 limbs, 4 bytes)
+    return out.reshape(x.shape[:-1] + (16,))
+
+
+def gf128_mul(x, y):
+    """Field multiply of two (4,) uint32 big-endian elements
+    (SP 800-38D Algorithm 1: Z ← Z⊕V on set bits of X, V right-shifts)."""
+
+    def body(i, zv):
+        z, v = zv
+        limb = i // 32
+        off = 31 - (i % 32)
+        bit = (jnp.take(x, limb) >> off) & 1
+        z = jnp.where(bit == 1, z ^ v, z)
+        lsb = v[3] & 1
+        carry = jnp.concatenate([jnp.zeros(1, jnp.uint32), v[:3] << 31])
+        v = (v >> 1) | carry
+        v = v.at[0].set(jnp.where(lsb == 1, v[0] ^ jnp.uint32(_R_TOP), v[0]))
+        return (z, v)
+
+    z0 = jnp.zeros(4, jnp.uint32)
+    z, _ = jax.lax.fori_loop(0, 128, body, (z0, y))
+    return z
+
+
+def length_block(aad_bytes: int, ct_bytes: int):
+    """The GCM length block ``[len(A)]_64 ‖ [len(C)]_64`` (bit lengths) as
+    a (16,) uint8 numpy array — precomputed host-side and passed into
+    kernels as an input (constant arrays cannot be captured)."""
+    import numpy as np
+
+    return np.frombuffer(
+        (aad_bytes * 8).to_bytes(8, "big") + (ct_bytes * 8).to_bytes(8, "big"),
+        dtype=np.uint8,
+    ).copy()
+
+
+def ghash(h_block, data_blocks, lenblk):
+    """GHASH over ``data_blocks`` (N, 16) uint8 plus the (16,) uint8
+    length block ``lenblk`` (see [`length_block`]).
+
+    ``h_block`` is the 16-byte hash subkey H = AES_K(0).
+    """
+    h = bytes_to_u32x4(h_block)
+    w = bytes_to_u32x4(data_blocks)  # (N, 4)
+
+    def body(n, y):
+        # dynamic_slice, not jnp.take: the artifact runtime (xla_extension
+        # 0.5.1) mis-executes modern gather ops (see aes.lut).
+        row = jax.lax.dynamic_slice_in_dim(w, n, 1, axis=0)[0]
+        return gf128_mul(y ^ row, h)
+
+    y = jax.lax.fori_loop(0, w.shape[0], body, jnp.zeros(4, jnp.uint32))
+    lens = bytes_to_u32x4(lenblk)
+    return u32x4_to_bytes(gf128_mul(y ^ lens, h))

@@ -1,0 +1,200 @@
+"""Independent correctness oracle: a straightforward byte-at-a-time
+AES-128-GCM written with plain Python integers and numpy — deliberately
+sharing no round/shift/table code with the Pallas kernels it checks.
+
+Includes the NIST GCM specification test vectors.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# --- AES (textbook, byte-oriented) -----------------------------------
+
+
+def _xtime(b: int) -> int:
+    b <<= 1
+    if b & 0x100:
+        b ^= 0x11B
+    return b & 0xFF
+
+
+def _mul(a: int, b: int) -> int:
+    p = 0
+    while b:
+        if b & 1:
+            p ^= a
+        a = _xtime(a)
+        b >>= 1
+    return p
+
+
+def _make_sbox():
+    # Exponentiation tables over the generator 3.
+    exp = [0] * 510
+    log = [0] * 256
+    x = 1
+    for i in range(255):
+        exp[i] = x
+        log[x] = i
+        x = _mul(x, 3)
+    for i in range(255, 510):
+        exp[i] = exp[i - 255]
+
+    def inv(b):
+        return 0 if b == 0 else exp[255 - log[b]]
+
+    sbox = []
+    for b in range(256):
+        c = inv(b)
+        r = 0
+        for i in range(8):
+            bit = (
+                (c >> i) ^ (c >> ((i + 4) % 8)) ^ (c >> ((i + 5) % 8))
+                ^ (c >> ((i + 6) % 8)) ^ (c >> ((i + 7) % 8)) ^ (0x63 >> i)
+            ) & 1
+            r |= bit << i
+        sbox.append(r)
+    return sbox
+
+
+_SBOX = _make_sbox()
+_RCON = [0x01, 0x02, 0x04, 0x08, 0x10, 0x20, 0x40, 0x80, 0x1B, 0x36]
+
+
+def expand_key_ref(key: bytes) -> list[bytes]:
+    w = [list(key[4 * i : 4 * i + 4]) for i in range(4)]
+    for i in range(4, 44):
+        t = list(w[i - 1])
+        if i % 4 == 0:
+            t = t[1:] + t[:1]
+            t = [_SBOX[b] for b in t]
+            t[0] ^= _RCON[i // 4 - 1]
+        w.append([a ^ b for a, b in zip(w[i - 4], t)])
+    return [bytes(sum((w[4 * r + c] for c in range(4)), [])) for r in range(11)]
+
+
+def aes_encrypt_block_ref(rks: list[bytes], block: bytes) -> bytes:
+    s = [b ^ k for b, k in zip(block, rks[0])]
+
+    def sub(s):
+        return [_SBOX[b] for b in s]
+
+    def shift(s):
+        return [s[4 * ((c + r) % 4) + r] for c in range(4) for r in range(4)]
+
+    def mix(s):
+        out = []
+        for c in range(4):
+            col = s[4 * c : 4 * c + 4]
+            out += [
+                _mul(col[0], 2) ^ _mul(col[1], 3) ^ col[2] ^ col[3],
+                col[0] ^ _mul(col[1], 2) ^ _mul(col[2], 3) ^ col[3],
+                col[0] ^ col[1] ^ _mul(col[2], 2) ^ _mul(col[3], 3),
+                _mul(col[0], 3) ^ col[1] ^ col[2] ^ _mul(col[3], 2),
+            ]
+        return out
+
+    for r in range(1, 10):
+        s = [b ^ k for b, k in zip(mix(shift(sub(s))), rks[r])]
+    s = [b ^ k for b, k in zip(shift(sub(s)), rks[10])]
+    return bytes(s)
+
+
+# --- GHASH / GCM over Python ints -------------------------------------
+
+_R = 0xE1 << 120
+
+
+def gf128_mul_ref(x: int, y: int) -> int:
+    z, v = 0, y
+    for i in range(128):
+        if (x >> (127 - i)) & 1:
+            z ^= v
+        lsb = v & 1
+        v >>= 1
+        if lsb:
+            v ^= _R
+    return z
+
+
+def ghash_ref(h: int, data: bytes) -> int:
+    y = 0
+    for off in range(0, len(data), 16):
+        blk = data[off : off + 16].ljust(16, b"\x00")
+        y = gf128_mul_ref(y ^ int.from_bytes(blk, "big"), h)
+    return y
+
+
+def inc32(block: bytes, n: int = 1) -> bytes:
+    ctr = (int.from_bytes(block[12:], "big") + n) & 0xFFFFFFFF
+    return block[:12] + ctr.to_bytes(4, "big")
+
+
+def gcm_seal_ref(key: bytes, nonce: bytes, aad: bytes, pt: bytes) -> tuple[bytes, bytes]:
+    """Returns (ciphertext, 16-byte tag). Nonce must be 12 bytes."""
+    assert len(key) == 16 and len(nonce) == 12
+    rks = expand_key_ref(key)
+    h = int.from_bytes(aes_encrypt_block_ref(rks, b"\x00" * 16), "big")
+    j0 = nonce + b"\x00\x00\x00\x01"
+    ct = bytearray()
+    for i in range(0, len(pt), 16):
+        ks = aes_encrypt_block_ref(rks, inc32(j0, 1 + i // 16))
+        chunk = pt[i : i + 16]
+        ct += bytes(a ^ b for a, b in zip(chunk, ks))
+    data = aad + b"\x00" * ((16 - len(aad) % 16) % 16)
+    data += bytes(ct) + b"\x00" * ((16 - len(ct) % 16) % 16)
+    data += (len(aad) * 8).to_bytes(8, "big") + (len(ct) * 8).to_bytes(8, "big")
+    s = ghash_ref(h, data)
+    tag = s ^ int.from_bytes(aes_encrypt_block_ref(rks, j0), "big")
+    return bytes(ct), tag.to_bytes(16, "big")
+
+
+# --- NIST GCM spec test vectors (AES-128) ------------------------------
+
+NIST_VECTORS = [
+    # (key, iv, aad, pt, ct, tag) — hex strings
+    (
+        "00000000000000000000000000000000",
+        "000000000000000000000000",
+        "",
+        "",
+        "",
+        "58e2fccefa7e3061367f1d57a4e7455a",
+    ),
+    (
+        "00000000000000000000000000000000",
+        "000000000000000000000000",
+        "",
+        "00000000000000000000000000000000",
+        "0388dace60b6a392f328c2b971b2fe78",
+        "ab6e47d42cec13bdf53a67b21257bddf",
+    ),
+    (
+        "feffe9928665731c6d6a8f9467308308",
+        "cafebabefacedbaddecaf888",
+        "",
+        "d9313225f88406e5a55909c5aff5269a86a7a9531534f7da2e4c303d8a318a72"
+        "1c3c0c95956809532fcf0e2449a6b525b16aedf5aa0de657ba637b391aafd255",
+        "42831ec2217774244b7221b784d0d49ce3aa212f2c02a4e035c17e2329aca12e"
+        "21d514b25466931c7d8f6a5aac84aa051ba30b396a0aac973d58e091473f5985",
+        "4d5c2af327cd64a62cf35abd2ba6fab4",
+    ),
+    (
+        "feffe9928665731c6d6a8f9467308308",
+        "cafebabefacedbaddecaf888",
+        "feedfacedeadbeeffeedfacedeadbeefabaddad2",
+        "d9313225f88406e5a55909c5aff5269a86a7a9531534f7da2e4c303d8a318a72"
+        "1c3c0c95956809532fcf0e2449a6b525b16aedf5aa0de657ba637b39",
+        "42831ec2217774244b7221b784d0d49ce3aa212f2c02a4e035c17e2329aca12e"
+        "21d514b25466931c7d8f6a5aac84aa051ba30b396a0aac973d58e091",
+        "5bc94fbc3221a5db94fae95ae7121a47",
+    ),
+]
+
+
+def pt_to_blocks(pt: bytes) -> np.ndarray:
+    """Pad to 16 and reshape to (N, 16) uint8 for the kernel interfaces."""
+    n = (len(pt) + 15) // 16
+    buf = pt.ljust(n * 16, b"\x00")
+    return np.frombuffer(buf, dtype=np.uint8).reshape(n, 16).copy()

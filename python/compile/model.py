@@ -1,0 +1,90 @@
+"""L2 — the JAX compute graphs that get AOT-lowered for the Rust runtime.
+
+Three graphs (one per artifact):
+
+* ``gcm_seal_graph``   — seal one fixed-size segment with the Pallas GCM
+  kernel (the XLA crypto backend the Rust tests cross-check against).
+* ``gcm_seal_multiseg`` — seal S segments via ``vmap`` (the multi-thread
+  analog: the vmapped segment axis is what OpenMP threads do in the paper).
+* ``stencil_graph``    — the stencil kernels' per-round compute.
+* ``mlp_graph``        — a small MLP block for the encrypted-inference
+  example (Pallas matmul + bias + relu + matmul).
+
+Python never runs at MPI runtime: these lower once, in ``aot.py``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import gcm, stencil
+
+
+def gcm_seal_graph(rk, j0, pt):
+    """Seal a segment: (rk (11,16)u8, j0 (16,)u8, pt (N,16)u8) →
+    (ct (N,16)u8, tag (16,)u8)."""
+    return gcm.gcm_seal(rk, j0, pt)
+
+
+def gcm_seal_multiseg(rk, j0s, pts):
+    """Seal S segments at once (vmapped Pallas GCM)."""
+    return gcm.gcm_seal_segments(rk, j0s, pts)
+
+
+def stencil_graph(state, w):
+    """One stencil compute round (tiled Pallas matmul + tanh)."""
+    return (stencil.stencil_compute(state, w),)
+
+
+def mlp_graph(x, w1, b1, w2, b2):
+    """MLP block: relu(x @ w1 + b1) @ w2 + b2 (first matmul via Pallas)."""
+    h = stencil.matmul(x, w1) + b1
+    h = jnp.maximum(h, 0.0)
+    return (jnp.dot(h, w2, preferred_element_type=jnp.float32) + b2,)
+
+
+def gcm_wrapped(rk, j0, pt):
+    """Tuple-returning wrapper for AOT lowering."""
+    ct, tag = gcm_seal_graph(rk, j0, pt)
+    return (ct, tag)
+
+
+def gcm_multiseg_wrapped(rk, j0s, pts):
+    ct, tags = gcm_seal_multiseg(rk, j0s, pts)
+    return (ct, tags)
+
+
+# Shape registry: artifact name → (function, example input specs).
+def artifact_specs():
+    u8 = jnp.uint8
+    f32 = jnp.float32
+    s = jax.ShapeDtypeStruct
+    return {
+        # 4 KB segment = 256 AES blocks.
+        "gcm_seal_256": (
+            gcm_wrapped,
+            (s((11, 16), u8), s((16,), u8), s((256, 16), u8)),
+        ),
+        # 8 segments × 1 KB — the vmapped multi-thread analog.
+        "gcm_seal_8x64": (
+            gcm_multiseg_wrapped,
+            (s((11, 16), u8), s((8, 16), u8), s((8, 64, 16), u8)),
+        ),
+        # Stencil compute: 128×128 state and weights.
+        "stencil_128": (
+            stencil_graph,
+            (s((128, 128), f32), s((128, 128), f32)),
+        ),
+        # MLP block: batch 8, 128 → 256 → 128.
+        "mlp_8x128": (
+            mlp_graph,
+            (
+                s((8, 128), f32),
+                s((128, 256), f32),
+                s((256,), f32),
+                s((256, 128), f32),
+                s((128,), f32),
+            ),
+        ),
+    }

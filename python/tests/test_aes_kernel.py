@@ -1,0 +1,96 @@
+"""L1 AES primitives vs the independent byte-oriented reference."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import aes
+from compile.kernels import ref
+
+
+def test_sbox_known_values():
+    assert aes.SBOX[0x00] == 0x63
+    assert aes.SBOX[0x01] == 0x7C
+    assert aes.SBOX[0x53] == 0xED
+    assert aes.SBOX[0xFF] == 0x16
+    # Bijectivity.
+    assert len(set(aes.SBOX.tolist())) == 256
+
+
+def test_sbox_matches_ref_sbox():
+    assert aes.SBOX.tolist() == ref._SBOX
+
+
+def test_key_expansion_fips197():
+    key = bytes.fromhex("2b7e151628aed2a6abf7158809cf4f3c")
+    rk = aes.key_expansion(np.frombuffer(key, dtype=np.uint8))
+    assert rk.shape == (11, 16)
+    # FIPS-197 A.1: final round key words b6630ca6... (w40..w43).
+    assert rk[10][-4:].tobytes().hex() == "b6630ca6"
+    # Cross-check the whole schedule against the reference.
+    rks_ref = ref.expand_key_ref(key)
+    for r in range(11):
+        assert rk[r].tobytes() == rks_ref[r], f"round {r}"
+
+
+def test_encrypt_block_fips197_appendix_b():
+    key = bytes.fromhex("2b7e151628aed2a6abf7158809cf4f3c")
+    pt = bytes.fromhex("3243f6a8885a308d313198a2e0370734")
+    rk = aes.key_expansion(np.frombuffer(key, dtype=np.uint8))
+    blocks = np.frombuffer(pt, dtype=np.uint8).reshape(1, 16)
+    ct = np.asarray(aes.aes_encrypt_blocks(rk, blocks))
+    assert ct[0].tobytes().hex() == "3925841d02dc09fbdc118597196a0b32"
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.binary(min_size=16, max_size=16), st.binary(min_size=16, max_size=16))
+def test_encrypt_matches_ref_random(key, block):
+    rk = aes.key_expansion(np.frombuffer(key, dtype=np.uint8))
+    blocks = np.frombuffer(block, dtype=np.uint8).reshape(1, 16)
+    ours = np.asarray(aes.aes_encrypt_blocks(rk, blocks))[0].tobytes()
+    theirs = ref.aes_encrypt_block_ref(ref.expand_key_ref(key), block)
+    assert ours == theirs
+
+
+def test_vectorized_blocks_match_blockwise():
+    key = bytes(range(16))
+    rk = aes.key_expansion(np.frombuffer(key, dtype=np.uint8))
+    rng = np.random.default_rng(0)
+    blocks = rng.integers(0, 256, size=(32, 16), dtype=np.uint8)
+    out = np.asarray(aes.aes_encrypt_blocks(rk, blocks))
+    rks_ref = ref.expand_key_ref(key)
+    for i in range(32):
+        assert out[i].tobytes() == ref.aes_encrypt_block_ref(rks_ref, blocks[i].tobytes())
+
+
+def test_ctr_blocks_layout():
+    import jax.numpy as jnp
+
+    j0 = np.zeros(16, dtype=np.uint8)
+    j0[:12] = np.arange(12)
+    j0[15] = 1  # counter field = 1
+    ctrs = np.asarray(aes.ctr_blocks(jnp.asarray(j0), 3, offset=1))
+    assert ctrs.shape == (3, 16)
+    for i, c in enumerate(ctrs):
+        assert c[:12].tolist() == list(range(12))
+        assert int.from_bytes(c[12:].tobytes(), "big") == 2 + i
+
+
+def test_ctr_blocks_wraparound():
+    import jax.numpy as jnp
+
+    j0 = np.zeros(16, dtype=np.uint8)
+    j0[12:] = 0xFF  # counter = 0xFFFFFFFF
+    ctrs = np.asarray(aes.ctr_blocks(jnp.asarray(j0), 2, offset=1))
+    assert int.from_bytes(ctrs[0][12:].tobytes(), "big") == 0  # wrapped
+    assert int.from_bytes(ctrs[1][12:].tobytes(), "big") == 1
+
+
+@pytest.mark.parametrize("nblocks", [1, 2, 7, 64])
+def test_shapes_preserved(nblocks):
+    rk = aes.key_expansion(np.zeros(16, dtype=np.uint8))
+    blocks = np.zeros((nblocks, 16), dtype=np.uint8)
+    out = np.asarray(aes.aes_encrypt_blocks(rk, blocks))
+    assert out.shape == (nblocks, 16)
+    # All-zero blocks under the all-zero key: every output identical.
+    assert len({bytes(b) for b in out}) == 1

@@ -1,0 +1,131 @@
+"""The Pallas GCM kernel vs NIST vectors and the independent reference —
+the CORE correctness signal of the L1 layer."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import aes, gcm, ghash, ref
+
+
+def seal_with_kernel(key: bytes, nonce: bytes, pt_blocks: np.ndarray):
+    rk = aes.key_expansion(np.frombuffer(key, dtype=np.uint8))
+    j0 = np.frombuffer(nonce + b"\x00\x00\x00\x01", dtype=np.uint8)
+    ct, tag = gcm.gcm_seal(jnp.asarray(rk), jnp.asarray(j0), jnp.asarray(pt_blocks))
+    return np.asarray(ct), np.asarray(tag)
+
+
+# ---------------- GHASH field unit tests ----------------
+
+
+def test_gf128_identity_and_commutativity():
+    one = np.zeros(4, dtype=np.uint32)
+    one[0] = 0x80000000  # x^0 coefficient (MSB-first)
+    rng = np.random.default_rng(1)
+    for _ in range(5):
+        x = rng.integers(0, 2**32, size=4, dtype=np.uint32)
+        y = rng.integers(0, 2**32, size=4, dtype=np.uint32)
+        xi = int.from_bytes(np.asarray(ghash.u32x4_to_bytes(jnp.asarray(x))).tobytes(), "big")
+        yi = int.from_bytes(np.asarray(ghash.u32x4_to_bytes(jnp.asarray(y))).tobytes(), "big")
+        got_xy = np.asarray(ghash.gf128_mul(jnp.asarray(x), jnp.asarray(y)))
+        got_yx = np.asarray(ghash.gf128_mul(jnp.asarray(y), jnp.asarray(x)))
+        want = ref.gf128_mul_ref(xi, yi)
+        got_int = int.from_bytes(
+            np.asarray(ghash.u32x4_to_bytes(jnp.asarray(got_xy))).tobytes(), "big"
+        )
+        assert got_int == want
+        assert got_xy.tolist() == got_yx.tolist()
+        # identity
+        gi = np.asarray(ghash.gf128_mul(jnp.asarray(x), jnp.asarray(one)))
+        assert gi.tolist() == x.tolist()
+
+
+def test_bytes_u32_roundtrip():
+    rng = np.random.default_rng(2)
+    blocks = rng.integers(0, 256, size=(5, 16), dtype=np.uint8)
+    w = ghash.bytes_to_u32x4(jnp.asarray(blocks))
+    back = np.asarray(ghash.u32x4_to_bytes(w))
+    assert back.tolist() == blocks.tolist()
+
+
+# ---------------- Full GCM against NIST vectors ----------------
+
+
+@pytest.mark.parametrize("idx", [1, 2])  # block-aligned, empty-AAD vectors
+def test_nist_vectors_kernel(idx):
+    key_h, iv_h, aad_h, pt_h, ct_h, tag_h = ref.NIST_VECTORS[idx]
+    if aad_h:
+        pytest.skip("kernel path carries no AAD (CryptMPI never uses it)")
+    key, iv, pt = bytes.fromhex(key_h), bytes.fromhex(iv_h), bytes.fromhex(pt_h)
+    if len(pt) % 16 != 0 or not pt:
+        pytest.skip("kernel seals whole blocks")
+    blocks = ref.pt_to_blocks(pt)
+    ct, tag = seal_with_kernel(key, iv, blocks)
+    assert ct.tobytes().hex() == ct_h
+    assert tag.tobytes().hex() == tag_h
+
+
+def test_nist_vector_3_64_bytes():
+    key_h, iv_h, _, pt_h, ct_h, tag_h = ref.NIST_VECTORS[2]
+    key, iv, pt = bytes.fromhex(key_h), bytes.fromhex(iv_h), bytes.fromhex(pt_h)
+    ct, tag = seal_with_kernel(key, iv, ref.pt_to_blocks(pt))
+    assert ct.tobytes().hex() == ct_h
+    assert tag.tobytes().hex() == tag_h
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    key=st.binary(min_size=16, max_size=16),
+    nonce=st.binary(min_size=12, max_size=12),
+    nblocks=st.integers(min_value=1, max_value=8),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_kernel_matches_reference_random(key, nonce, nblocks, seed):
+    rng = np.random.default_rng(seed)
+    blocks = rng.integers(0, 256, size=(nblocks, 16), dtype=np.uint8)
+    ct, tag = seal_with_kernel(key, nonce, blocks)
+    want_ct, want_tag = ref.gcm_seal_ref(key, nonce, b"", blocks.tobytes())
+    assert ct.tobytes() == want_ct
+    assert tag.tobytes() == want_tag
+
+
+def test_multiseg_vmap_matches_single():
+    key = bytes(range(16))
+    rk = jnp.asarray(aes.key_expansion(np.frombuffer(key, dtype=np.uint8)))
+    rng = np.random.default_rng(3)
+    S, N = 4, 8
+    pts = rng.integers(0, 256, size=(S, N, 16), dtype=np.uint8)
+    j0s = np.zeros((S, 16), dtype=np.uint8)
+    for i in range(S):
+        # Algorithm 1 positional nonces: [0]_7 ‖ [last]_1 ‖ [i]_4, J0 ‖ 1.
+        j0s[i][7] = 1 if i == S - 1 else 0
+        j0s[i][8:12] = np.frombuffer((i + 1).to_bytes(4, "big"), dtype=np.uint8)
+        j0s[i][15] = 1
+    cts, tags = gcm.gcm_seal_segments(rk, jnp.asarray(j0s), jnp.asarray(pts))
+    cts, tags = np.asarray(cts), np.asarray(tags)
+    for i in range(S):
+        ct1, tag1 = gcm.gcm_seal(rk, jnp.asarray(j0s[i]), jnp.asarray(pts[i]))
+        assert np.asarray(ct1).tolist() == cts[i].tolist()
+        assert np.asarray(tag1).tolist() == tags[i].tolist()
+        # And against the byte-oriented reference.
+        nonce = j0s[i][:12].tobytes()
+        want_ct, want_tag = ref.gcm_seal_ref(key, nonce, b"", pts[i].tobytes())
+        assert cts[i].tobytes() == want_ct
+        assert tags[i].tobytes() == want_tag
+
+
+def test_tag_changes_with_any_input():
+    key = b"\x01" * 16
+    nonce = b"\x02" * 12
+    blocks = np.zeros((2, 16), dtype=np.uint8)
+    _, tag0 = seal_with_kernel(key, nonce, blocks)
+    b2 = blocks.copy()
+    b2[1][5] ^= 1
+    _, tag1 = seal_with_kernel(key, nonce, b2)
+    assert tag0.tobytes() != tag1.tobytes()
+    _, tag2 = seal_with_kernel(key, b"\x03" * 12, blocks)
+    assert tag0.tobytes() != tag2.tobytes()
+    _, tag3 = seal_with_kernel(b"\x04" * 16, nonce, blocks)
+    assert tag0.tobytes() != tag3.tobytes()

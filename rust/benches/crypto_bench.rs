@@ -1,0 +1,126 @@
+//! Crypto micro-benchmarks (hot-path profiling for the §Perf pass).
+//!
+//! `cargo bench --bench crypto_bench` — measures the real hot path: AES-NI
+//! GCM seal/open at the paper's message sizes, the software fallbacks, the
+//! streaming (Algorithm 1) segment path, SHA-256, and RSA-OAEP. Also
+//! cross-times the RustCrypto `aes` crate block cipher as a reference
+//! point for the AES core.
+
+use cryptmpi::crypto::rand::SimRng;
+use cryptmpi::crypto::{Gcm, StreamOpener, StreamSealer};
+use std::time::Instant;
+
+fn bench(name: &str, bytes_per_iter: usize, mut f: impl FnMut()) {
+    // Warm up, then run for ~300 ms.
+    f();
+    let t0 = Instant::now();
+    let mut iters = 0u64;
+    while t0.elapsed().as_millis() < 300 {
+        f();
+        iters += 1;
+    }
+    let el = t0.elapsed().as_secs_f64();
+    let mb_s = (iters as f64 * bytes_per_iter as f64) / el / 1e6;
+    let us = el / iters as f64 * 1e6;
+    println!("{name:38} {mb_s:10.1} MB/s  {us:10.2} us/op  ({iters} iters)");
+}
+
+fn main() {
+    println!("== crypto_bench (real wall-clock, release) ==");
+    let mut rng = SimRng::new(1);
+    let key = [0x42u8; 16];
+    let nonce = [7u8; 12];
+
+    for (label, hw) in [("aes-ni+clmul", true), ("soft(table AES + bitwise GHASH)", false)] {
+        let gcm = Gcm::with_backend(&key, hw);
+        if hw && !gcm.is_hw() {
+            println!("hardware path unavailable; skipping");
+            continue;
+        }
+        for size in [1024usize, 16 * 1024, 64 * 1024, 512 * 1024, 4 << 20] {
+            let mut buf = vec![0u8; size];
+            rng.fill(&mut buf);
+            bench(&format!("gcm seal {label} {}B", size), size, || {
+                std::hint::black_box(gcm.seal_in_place(&nonce, &[], &mut buf));
+            });
+            if !hw && size > 64 * 1024 {
+                break; // soft path is slow; keep the run short
+            }
+        }
+    }
+
+    // Verified open (tag check + decrypt).
+    let gcm = Gcm::new(&key);
+    let size = 512 * 1024;
+    let mut pt = vec![0u8; size];
+    rng.fill(&mut pt);
+    let sealed = gcm.seal(&nonce, &[], &pt);
+    let tag: [u8; 16] = sealed[size..].try_into().unwrap();
+    let mut ct = sealed[..size].to_vec();
+    bench("gcm open+verify 512KB", size, || {
+        let mut c = ct.clone();
+        gcm.open_in_place(&nonce, &[], &mut c, &tag).expect("auth");
+        std::hint::black_box(&c);
+    });
+    let _ = &mut ct;
+
+    // Algorithm 1 streaming: chop a 4 MB message into 64 segments.
+    let k1 = Gcm::new(&[9u8; 16]);
+    let msg = vec![0x5au8; 4 << 20];
+    bench("algorithm1 chop+seal 4MB (64 segs)", msg.len(), || {
+        let sealer = StreamSealer::new(&k1, msg.len(), 64);
+        for i in 1..=sealer.num_segments() {
+            let mut seg = msg[sealer.segment_range(i)].to_vec();
+            std::hint::black_box(sealer.seal_segment(i, &mut seg));
+        }
+    });
+    {
+        let sealer = StreamSealer::new(&k1, msg.len(), 64);
+        let mut segs = Vec::new();
+        for i in 1..=sealer.num_segments() {
+            let mut seg = msg[sealer.segment_range(i)].to_vec();
+            let tag = sealer.seal_segment(i, &mut seg);
+            segs.push((seg, tag));
+        }
+        let header = sealer.header().clone();
+        bench("algorithm1 open-stream 4MB", msg.len(), || {
+            let mut opener = StreamOpener::new(&k1, &header).expect("header");
+            for (i, (seg, tag)) in segs.iter().enumerate() {
+                let mut s = seg.clone();
+                opener.open_segment(i as u32 + 1, &mut s, tag).expect("auth");
+                opener.mark_received();
+            }
+            opener.finish().expect("count");
+        });
+    }
+
+    // SHA-256 and RSA-OAEP (key-distribution path).
+    let data = vec![0xaau8; 1 << 20];
+    bench("sha256 1MB", data.len(), || {
+        std::hint::black_box(cryptmpi::crypto::sha256::sha256(&data));
+    });
+    let mut crng = cryptmpi::crypto::rand::ChaChaRng::from_seed([3u8; 32]);
+    let t0 = Instant::now();
+    let kp = cryptmpi::crypto::rsa::RsaKeyPair::generate(1024, &mut crng);
+    println!("rsa-1024 keygen                     {:10.1} ms", t0.elapsed().as_secs_f64() * 1e3);
+    let ct = kp.public.encrypt_oaep(&[0u8; 32]).unwrap();
+    bench("rsa-oaep encrypt (1024)", 32, || {
+        std::hint::black_box(kp.public.encrypt_oaep(&[0u8; 32]).unwrap());
+    });
+    bench("rsa-oaep decrypt (1024)", 32, || {
+        std::hint::black_box(kp.private.decrypt_oaep(&ct).unwrap());
+    });
+
+    // RustCrypto oracle timing for perspective (AES block only).
+    {
+        use aes::cipher::{BlockEncrypt, KeyInit};
+        let oracle = aes::Aes128::new(&key.into());
+        let mut blocks = vec![aes::Block::from([0u8; 16]); 4096];
+        bench("rustcrypto aes128 64KB (reference)", 65536, || {
+            for b in blocks.iter_mut() {
+                oracle.encrypt_block(b);
+            }
+            std::hint::black_box(&blocks);
+        });
+    }
+}

@@ -1,0 +1,35 @@
+//! Paper-reproduction bench: regenerates every figure and table of the
+//! evaluation (writes results/*.csv and prints the rendered tables).
+//!
+//! `cargo bench --bench paper_bench` — equivalent to
+//! `cryptmpi bench --exp all --out results`.
+//!
+//! Filter with an argument: `cargo bench --bench paper_bench fig6 table3`.
+
+use cryptmpi::bench::runners::{run_experiment, ALL_EXPERIMENTS};
+use std::path::Path;
+use std::time::Instant;
+
+fn main() {
+    let filters: Vec<String> = std::env::args()
+        .skip(1)
+        .filter(|a| !a.starts_with('-')) // ignore --bench etc. from cargo
+        .collect();
+    let names: Vec<&str> = if filters.is_empty() {
+        ALL_EXPERIMENTS.to_vec()
+    } else {
+        ALL_EXPERIMENTS
+            .iter()
+            .copied()
+            .filter(|n| filters.iter().any(|f| n.contains(f.as_str())))
+            .collect()
+    };
+    let out = Path::new("results");
+    for name in names {
+        let t0 = Instant::now();
+        let table = run_experiment(name).expect("registered experiment");
+        table.write_csv(out).expect("write csv");
+        println!("{}", table.render());
+        eprintln!("[{name} done in {:.1} s]\n", t0.elapsed().as_secs_f64());
+    }
+}

@@ -1,0 +1,11 @@
+//! Benchmark applications: the workloads of the paper's evaluation.
+
+pub mod multipair;
+pub mod nas;
+pub mod pingpong;
+pub mod stencil;
+
+pub use multipair::{run_multipair, MultiPairResult};
+pub use nas::{run_nas, NasKernel, NasResult, NasScale};
+pub use pingpong::{run_pingpong, PingPongResult};
+pub use stencil::{calibrate_compute, run_stencil, StencilDim, StencilResult};

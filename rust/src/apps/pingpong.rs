@@ -1,0 +1,96 @@
+//! Ping-pong benchmark: uni-directional latency/throughput between two
+//! ranks on different nodes (paper §V "Ping-pong").
+
+use crate::coordinator::{run_cluster, ClusterConfig, SecurityMode};
+use crate::crypto::rand::SimRng;
+use crate::net::SystemProfile;
+
+#[derive(Debug, Clone, Copy)]
+pub struct PingPongResult {
+    pub msg_bytes: usize,
+    /// Average one-way time, µs (virtual).
+    pub one_way_us: f64,
+    /// Uni-directional throughput, MB/s.
+    pub throughput_mb_s: f64,
+}
+
+/// Run a ping-pong of `iters` round trips at one message size.
+pub fn run_pingpong(
+    profile: &SystemProfile,
+    mode: SecurityMode,
+    msg_bytes: usize,
+    iters: usize,
+) -> PingPongResult {
+    let cfg = ClusterConfig::pingpong(profile.clone(), mode);
+    let (_, rep) = run_cluster(&cfg, move |rank| {
+        let mut payload = vec![0u8; msg_bytes];
+        SimRng::new(rank.id() as u64 + 1).fill(&mut payload);
+        if rank.id() == 0 {
+            for _ in 0..iters {
+                rank.send(1, 1, &payload);
+                let echo = rank.recv(1, 2);
+                debug_assert_eq!(echo.len(), msg_bytes);
+            }
+        } else {
+            for _ in 0..iters {
+                let m = rank.recv(0, 1);
+                rank.send(0, 2, &m);
+            }
+        }
+    });
+    // Rank 0's elapsed clock spans 2·iters one-way transfers.
+    let elapsed_ns = rep.per_rank[0].elapsed_ns;
+    let one_way_us = elapsed_ns as f64 / 1e3 / (2.0 * iters as f64);
+    PingPongResult {
+        msg_bytes,
+        one_way_us,
+        throughput_mb_s: msg_bytes as f64 / one_way_us, // B/µs == MB/s
+    }
+}
+
+/// Sweep message sizes (doubling) for one library mode.
+pub fn sweep(
+    profile: &SystemProfile,
+    mode: SecurityMode,
+    sizes: &[usize],
+    iters_small: usize,
+    iters_large: usize,
+) -> Vec<PingPongResult> {
+    sizes
+        .iter()
+        .map(|&m| {
+            let iters = if m < (1 << 20) { iters_small } else { iters_large };
+            run_pingpong(profile, mode, m, iters)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_increases_with_size_then_saturates() {
+        let p = SystemProfile::noleland();
+        let small = run_pingpong(&p, SecurityMode::Unencrypted, 4 * 1024, 4);
+        let large = run_pingpong(&p, SecurityMode::Unencrypted, 4 << 20, 2);
+        assert!(large.throughput_mb_s > small.throughput_mb_s);
+        // 4 MB unencrypted should approach 1/β ≈ 12.7 GB/s.
+        assert!(large.throughput_mb_s > 8000.0, "{}", large.throughput_mb_s);
+    }
+
+    #[test]
+    fn paper_fig6_shape_at_4mb() {
+        // Naive overhead ≫ CryptMPI overhead at 4 MB (paper: 412% vs 13%).
+        let p = SystemProfile::noleland();
+        let m = 4 << 20;
+        let plain = run_pingpong(&p, SecurityMode::Unencrypted, m, 2);
+        let crypt = run_pingpong(&p, SecurityMode::CryptMpi, m, 2);
+        let naive = run_pingpong(&p, SecurityMode::Naive, m, 2);
+        let ovh_c = plain.throughput_mb_s / crypt.throughput_mb_s - 1.0;
+        let ovh_n = plain.throughput_mb_s / naive.throughput_mb_s - 1.0;
+        assert!(ovh_n > 1.0, "naive overhead must be large, got {ovh_n:.2}");
+        assert!(ovh_c < 0.6, "cryptmpi overhead must be modest, got {ovh_c:.2}");
+        assert!(ovh_n > 3.0 * ovh_c, "gap must be wide: {ovh_c:.2} vs {ovh_n:.2}");
+    }
+}

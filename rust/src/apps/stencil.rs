@@ -1,0 +1,214 @@
+//! 2D/3D/4D stencil kernels (paper §V "Benchmarks"): each rank in a
+//! cartesian grid does some matrix-multiplication compute, exchanges
+//! m-byte halos with its 2·D neighbors via non-blocking sends, and closes
+//! the round with `MPI_Waitall`. The compute load is tuned so that for
+//! unencrypted MPI it is about p% of total time, exactly as in the paper.
+
+use crate::coordinator::{run_cluster, ClusterConfig, SecurityMode};
+use crate::crypto::rand::SimRng;
+use crate::mpi::ClusterReport;
+use crate::net::SystemProfile;
+
+/// Stencil dimensionality (5-point / 7-point / 9-point patterns).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StencilDim {
+    D2,
+    D3,
+    D4,
+}
+
+impl StencilDim {
+    pub fn dims(self) -> usize {
+        match self {
+            StencilDim::D2 => 2,
+            StencilDim::D3 => 3,
+            StencilDim::D4 => 4,
+        }
+    }
+
+    /// Side length for `ranks` in a D-dimensional grid (must be exact).
+    pub fn side(self, ranks: usize) -> usize {
+        let d = self.dims() as u32;
+        let side = (ranks as f64).powf(1.0 / d as f64).round() as usize;
+        assert_eq!(side.pow(d), ranks, "ranks {ranks} not a {d}-d grid");
+        side
+    }
+}
+
+/// Grid coordinates of a rank (row-major).
+fn coords(rank: usize, side: usize, d: usize) -> Vec<usize> {
+    let mut c = vec![0; d];
+    let mut r = rank;
+    for i in (0..d).rev() {
+        c[i] = r % side;
+        r /= side;
+    }
+    c
+}
+
+fn rank_of(c: &[usize], side: usize) -> usize {
+    c.iter().fold(0, |acc, &x| acc * side + x)
+}
+
+/// Neighbors along each axis (no wraparound, like the NAS stencils).
+fn neighbors(rank: usize, side: usize, d: usize) -> Vec<usize> {
+    let c = coords(rank, side, d);
+    let mut out = Vec::with_capacity(2 * d);
+    for axis in 0..d {
+        if c[axis] > 0 {
+            let mut cc = c.clone();
+            cc[axis] -= 1;
+            out.push(rank_of(&cc, side));
+        }
+        if c[axis] + 1 < side {
+            let mut cc = c.clone();
+            cc[axis] += 1;
+            out.push(rank_of(&cc, side));
+        }
+    }
+    out
+}
+
+#[derive(Debug, Clone)]
+pub struct StencilResult {
+    /// Average per-rank communication time, seconds.
+    pub comm_s: f64,
+    /// Average per-rank inter-node communication time, seconds.
+    pub inter_s: f64,
+    /// Average per-rank total time, seconds.
+    pub total_s: f64,
+    pub report: ClusterReport,
+}
+
+/// Run the stencil kernel.
+///
+/// * `msg_bytes` — halo size per neighbor per round.
+/// * `rounds` — iteration count (paper: 1250; scale down for quick runs).
+/// * `compute_ns_per_round` — virtual compute charged per round (see
+///   [`calibrate_compute`]).
+pub fn run_stencil(
+    profile: &SystemProfile,
+    mode: SecurityMode,
+    dim: StencilDim,
+    ranks: usize,
+    ranks_per_node: usize,
+    msg_bytes: usize,
+    rounds: usize,
+    compute_ns_per_round: u64,
+) -> StencilResult {
+    let side = dim.side(ranks);
+    let d = dim.dims();
+    let cfg = ClusterConfig::new(ranks, ranks_per_node, profile.clone(), mode);
+    let (_, report) = run_cluster(&cfg, move |rank| {
+        let me = rank.id();
+        let nbrs = neighbors(me, side, d);
+        let mut halo = vec![0u8; msg_bytes];
+        SimRng::new(me as u64).fill(&mut halo);
+        for round in 0..rounds {
+            // The "matrix multiplications" of the paper's kernel: charged
+            // in virtual time (the real-PJRT variant lives in the
+            // stencil_app example).
+            rank.compute_ns(compute_ns_per_round);
+            let tag = (round % 1024) as u64;
+            let sends: Vec<_> = nbrs.iter().map(|&nb| rank.isend(nb, tag, &halo)).collect();
+            let recvs: Vec<_> = nbrs.iter().map(|&nb| rank.irecv(nb, tag)).collect();
+            let msgs = rank.waitall_recv(recvs);
+            debug_assert!(msgs.iter().all(|m| m.len() == msg_bytes));
+            rank.waitall_send(sends);
+        }
+    });
+    StencilResult {
+        comm_s: report.avg_comm_s(),
+        inter_s: report.avg_inter_s(),
+        total_s: report.avg_exec_s(),
+        report,
+    }
+}
+
+/// Calibrate the per-round compute charge so that compute is `pct`% of
+/// total round time for the *unencrypted* library (paper methodology).
+pub fn calibrate_compute(
+    profile: &SystemProfile,
+    dim: StencilDim,
+    ranks: usize,
+    ranks_per_node: usize,
+    msg_bytes: usize,
+    pct: f64,
+) -> u64 {
+    // Measure pure-comm round time with a short unencrypted run.
+    let probe =
+        run_stencil(profile, SecurityMode::Unencrypted, dim, ranks, ranks_per_node, msg_bytes, 20, 0);
+    let comm_per_round_ns = probe.total_s * 1e9 / 20.0;
+    // compute = total·p ⇒ compute = comm · p/(1-p).
+    let frac = (pct / 100.0).clamp(0.01, 0.95);
+    (comm_per_round_ns * frac / (1.0 - frac)) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_neighbors_2d() {
+        // 4×4 grid: corner has 2, edge 3, interior 4.
+        assert_eq!(neighbors(0, 4, 2).len(), 2);
+        assert_eq!(neighbors(1, 4, 2).len(), 3);
+        assert_eq!(neighbors(5, 4, 2).len(), 4);
+        // Symmetry: if a is b's neighbor, b is a's.
+        for r in 0..16 {
+            for &nb in &neighbors(r, 4, 2) {
+                assert!(neighbors(nb, 4, 2).contains(&r), "{r} <-> {nb}");
+            }
+        }
+    }
+
+    #[test]
+    fn grid_neighbors_3d_4d() {
+        assert_eq!(neighbors(13, 3, 3).len(), 6); // 3×3×3 center
+        assert_eq!(neighbors(0, 2, 4).len(), 4); // 2^4 corner
+        assert_eq!(StencilDim::D3.side(27), 3);
+        assert_eq!(StencilDim::D4.side(16), 2);
+    }
+
+    #[test]
+    fn stencil_runs_and_orders_modes() {
+        let p = SystemProfile::noleland();
+        let compute = calibrate_compute(&p, StencilDim::D2, 4, 1, 256 * 1024, 50.0);
+        let plain = run_stencil(
+            &p,
+            SecurityMode::Unencrypted,
+            StencilDim::D2,
+            4,
+            1,
+            256 * 1024,
+            30,
+            compute,
+        );
+        let crypt =
+            run_stencil(&p, SecurityMode::CryptMpi, StencilDim::D2, 4, 1, 256 * 1024, 30, compute);
+        let naive =
+            run_stencil(&p, SecurityMode::Naive, StencilDim::D2, 4, 1, 256 * 1024, 30, compute);
+        assert!(plain.total_s < crypt.total_s);
+        assert!(crypt.total_s < naive.total_s, "{} vs {}", crypt.total_s, naive.total_s);
+        // Compute calibration: compute should be near half the plain total.
+        let comm_frac = plain.comm_s / plain.total_s;
+        assert!(comm_frac > 0.3 && comm_frac < 0.7, "comm fraction {comm_frac:.2}");
+    }
+
+    #[test]
+    fn stencil_3d_runs() {
+        let p = SystemProfile::noleland();
+        let r = run_stencil(
+            &p,
+            SecurityMode::CryptMpi,
+            StencilDim::D3,
+            8,
+            2,
+            64 * 1024,
+            5,
+            1000,
+        );
+        assert!(r.total_s > 0.0);
+        assert!(r.inter_s > 0.0, "2 ranks/node must produce inter-node traffic");
+    }
+}

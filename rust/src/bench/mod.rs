@@ -1,0 +1,134 @@
+//! The paper-reproduction harness: one runner per figure/table of the
+//! evaluation (§V). Each runner sweeps the paper's parameters on the
+//! simulated cluster, writes `results/<exp>.csv`, and returns a rendered
+//! text table for the console / EXPERIMENTS.md.
+
+pub mod runners;
+pub mod stats;
+
+use std::io::Write;
+use std::path::Path;
+
+/// A tabular result: header row + data rows.
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub name: String,
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+    /// Free-text notes (acceptance criteria, paper comparison).
+    pub notes: Vec<String>,
+}
+
+impl Table {
+    pub fn new(name: &str, title: &str, header: &[&str]) -> Self {
+        Table {
+            name: name.to_string(),
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            notes: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row arity");
+        self.rows.push(cells);
+    }
+
+    pub fn note(&mut self, s: impl Into<String>) {
+        self.notes.push(s.into());
+    }
+
+    /// Write `results/<name>.csv`.
+    pub fn write_csv(&self, out_dir: &Path) -> std::io::Result<()> {
+        std::fs::create_dir_all(out_dir)?;
+        let mut f = std::fs::File::create(out_dir.join(format!("{}.csv", self.name)))?;
+        writeln!(f, "{}", self.header.join(","))?;
+        for r in &self.rows {
+            writeln!(f, "{}", r.join(","))?;
+        }
+        Ok(())
+    }
+
+    /// Render as a fixed-width text/markdown table.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = format!("## {} — {}\n\n", self.name, self.title);
+        let line = |cells: &[String], widths: &[usize]| {
+            let mut s = String::from("|");
+            for (c, w) in cells.iter().zip(widths) {
+                s += &format!(" {:>w$} |", c, w = w);
+            }
+            s
+        };
+        out += &line(&self.header, &widths);
+        out += "\n|";
+        for w in &widths {
+            out += &format!("{}|", "-".repeat(w + 2));
+        }
+        out += "\n";
+        for r in &self.rows {
+            out += &line(r, &widths);
+            out += "\n";
+        }
+        for n in &self.notes {
+            out += &format!("\n> {n}\n");
+        }
+        out += "\n";
+        out
+    }
+}
+
+/// Round helper for table cells.
+pub fn f(v: f64, digits: usize) -> String {
+    format!("{v:.digits$}")
+}
+
+/// Human size label (64K, 4M).
+pub fn size_label(bytes: usize) -> String {
+    if bytes >= 1 << 20 && bytes % (1 << 20) == 0 {
+        format!("{}M", bytes >> 20)
+    } else if bytes >= 1024 && bytes % 1024 == 0 {
+        format!("{}K", bytes >> 10)
+    } else {
+        format!("{bytes}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_and_writes() {
+        let mut t = Table::new("demo", "Demo table", &["a", "b"]);
+        t.row(vec!["1".into(), "2.50".into()]);
+        t.note("shape holds");
+        let s = t.render();
+        assert!(s.contains("demo") && s.contains("2.50") && s.contains("> shape holds"));
+        let dir = std::env::temp_dir().join("cryptmpi_table_test");
+        t.write_csv(&dir).unwrap();
+        let csv = std::fs::read_to_string(dir.join("demo.csv")).unwrap();
+        assert_eq!(csv, "a,b\n1,2.50\n");
+    }
+
+    #[test]
+    fn size_labels() {
+        assert_eq!(size_label(64 * 1024), "64K");
+        assert_eq!(size_label(4 << 20), "4M");
+        assert_eq!(size_label(100), "100");
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn row_arity_checked() {
+        let mut t = Table::new("x", "t", &["a"]);
+        t.row(vec!["1".into(), "2".into()]);
+    }
+}

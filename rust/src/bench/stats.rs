@@ -1,0 +1,90 @@
+//! The paper's measurement methodology (§V "Benchmark methodology"):
+//! repeat each experiment until the standard deviation is within 5 % of
+//! the arithmetic mean (min/max repetition counts configurable — the
+//! virtual-time simulation is near-deterministic, so convergence is fast).
+
+#[derive(Debug, Clone, Copy)]
+pub struct Measurement {
+    pub mean: f64,
+    pub stddev: f64,
+    pub reps: usize,
+}
+
+impl Measurement {
+    /// Relative stddev (coefficient of variation).
+    pub fn cv(&self) -> f64 {
+        if self.mean == 0.0 {
+            0.0
+        } else {
+            self.stddev / self.mean
+        }
+    }
+}
+
+/// Run `f` repeatedly (between `min_reps` and `max_reps`) until the sample
+/// stddev is within `target_cv` of the mean.
+pub fn measure_until_stable(
+    min_reps: usize,
+    max_reps: usize,
+    target_cv: f64,
+    mut fnc: impl FnMut() -> f64,
+) -> Measurement {
+    let mut samples = Vec::with_capacity(min_reps);
+    loop {
+        samples.push(fnc());
+        if samples.len() >= min_reps {
+            let m = mean(&samples);
+            let s = stddev(&samples, m);
+            if s <= target_cv * m || samples.len() >= max_reps {
+                return Measurement { mean: m, stddev: s, reps: samples.len() };
+            }
+        }
+    }
+}
+
+pub fn mean(v: &[f64]) -> f64 {
+    v.iter().sum::<f64>() / v.len() as f64
+}
+
+pub fn stddev(v: &[f64], mean: f64) -> f64 {
+    if v.len() < 2 {
+        return 0.0;
+    }
+    (v.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / (v.len() - 1) as f64).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stable_immediately_for_constant_values() {
+        let m = measure_until_stable(3, 100, 0.05, || 42.0);
+        assert_eq!(m.reps, 3);
+        assert!((m.mean - 42.0).abs() < 1e-12);
+        assert_eq!(m.stddev, 0.0);
+    }
+
+    #[test]
+    fn keeps_sampling_for_noisy_values() {
+        let mut i = 0usize;
+        let m = measure_until_stable(3, 10, 0.0001, move || {
+            i += 1;
+            if i % 2 == 0 {
+                10.0
+            } else {
+                12.0
+            }
+        });
+        assert_eq!(m.reps, 10, "never stabilizes below max_reps");
+        assert!(m.cv() > 0.05);
+    }
+
+    #[test]
+    fn basic_stats() {
+        let v = [1.0, 2.0, 3.0];
+        let m = mean(&v);
+        assert!((m - 2.0).abs() < 1e-12);
+        assert!((stddev(&v, m) - 1.0).abs() < 1e-12);
+    }
+}

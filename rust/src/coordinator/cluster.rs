@@ -1,0 +1,299 @@
+//! Cluster runner: spawn one OS thread per rank over a shared simulated
+//! fabric, run the application function, collect timing reports.
+
+use crate::coordinator::keydist::distribute_keys;
+use crate::coordinator::rank::Rank;
+use crate::coordinator::{Keys, SecurityMode};
+use crate::crypto::rand::secure_array;
+use crate::mpi::{ClusterReport, RankReport, Transport};
+use crate::net::{SystemProfile, Topology};
+use crate::vtime::calib;
+use std::sync::Arc;
+
+/// How the AES master keys reach the ranks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KeyDistMode {
+    /// Full protocol of the paper: per-rank RSA keygen, gather, OAEP,
+    /// scatter. Costs real CPU (keygen) — used by the quickstart, the key
+    /// distribution tests, and one bench.
+    RsaOaep { bits: usize },
+    /// Out-of-band shared keys (pre-staged). Benchmarks use this: the
+    /// paper's measurements never include `MPI_Init`.
+    Fast,
+    /// No keys at all (Unencrypted / IpsecSim runs).
+    None,
+}
+
+/// Configuration of a simulated cluster run.
+#[derive(Clone)]
+pub struct ClusterConfig {
+    pub ranks: usize,
+    pub ranks_per_node: usize,
+    pub profile: SystemProfile,
+    pub mode: SecurityMode,
+    pub keydist: KeyDistMode,
+}
+
+impl ClusterConfig {
+    /// Two ranks on two nodes of the given profile — the ping-pong shape.
+    pub fn pingpong(profile: SystemProfile, mode: SecurityMode) -> Self {
+        ClusterConfig { ranks: 2, ranks_per_node: 1, profile, mode, keydist: KeyDistMode::Fast }
+    }
+
+    pub fn new(
+        ranks: usize,
+        ranks_per_node: usize,
+        profile: SystemProfile,
+        mode: SecurityMode,
+    ) -> Self {
+        ClusterConfig { ranks, ranks_per_node, profile, mode, keydist: KeyDistMode::Fast }
+    }
+}
+
+/// Run `f` on every rank of a simulated cluster; returns per-rank results
+/// and the timing report.
+pub fn run_cluster<F, R>(cfg: &ClusterConfig, f: F) -> (Vec<R>, ClusterReport)
+where
+    F: Fn(&mut Rank) -> R + Send + Sync,
+    R: Send,
+{
+    let topo = Topology::new(cfg.ranks, cfg.ranks_per_node);
+    let ipsec = match cfg.mode {
+        SecurityMode::IpsecSim => Some(cfg.profile.ipsec_rate),
+        _ => None,
+    };
+    let tp = Arc::new(Transport::new(topo.clone(), cfg.profile.net.clone(), ipsec));
+    let profile = Arc::new(cfg.profile.clone());
+    let cal = calib::get();
+    let t0 = topo.threads_per_rank(cfg.profile.hyperthreads);
+
+    // Fast key staging happens once, outside the ranks.
+    let fast_keys: Option<Keys> = match (cfg.keydist, cfg.mode) {
+        (KeyDistMode::Fast, SecurityMode::Naive | SecurityMode::CryptMpi) => {
+            let k1: [u8; 16] = secure_array();
+            let k2: [u8; 16] = secure_array();
+            Some(Keys::from_bytes(&k1, &k2))
+        }
+        _ => None,
+    };
+
+    let mut results: Vec<Option<(R, RankReport)>> = (0..cfg.ranks).map(|_| None).collect();
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for (id, slot) in results.iter_mut().enumerate() {
+            let tp = Arc::clone(&tp);
+            let profile = Arc::clone(&profile);
+            let fast_keys = fast_keys.clone();
+            let fref = &f;
+            handles.push(s.spawn(move || {
+                let mut rank =
+                    Rank::new(id, tp, profile, cal, cfg.mode, fast_keys, t0);
+                if let KeyDistMode::RsaOaep { bits } = cfg.keydist {
+                    let keys = distribute_keys(&mut rank, bits);
+                    rank.set_keys(keys);
+                }
+                let out = fref(&mut rank);
+                let (elapsed_ns, stats) = rank.finish();
+                *slot = Some((out, RankReport { rank: id, elapsed_ns, stats }));
+            }));
+        }
+        for h in handles {
+            h.join().expect("rank thread panicked");
+        }
+    });
+
+    let mut outs = Vec::with_capacity(cfg.ranks);
+    let mut reports = Vec::with_capacity(cfg.ranks);
+    for slot in results {
+        let (out, rep) = slot.expect("rank completed");
+        outs.push(out);
+        reports.push(rep);
+    }
+    (outs, ClusterReport { per_rank: reports })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::rand::SimRng;
+
+    fn payload(n: usize, seed: u64) -> Vec<u8> {
+        let mut r = SimRng::new(seed);
+        let mut v = vec![0u8; n];
+        r.fill(&mut v);
+        v
+    }
+
+    fn roundtrip(mode: SecurityMode, n: usize) {
+        let cfg = ClusterConfig::pingpong(SystemProfile::noleland(), mode);
+        let msg = payload(n, n as u64);
+        let msg2 = msg.clone();
+        let (outs, rep) = run_cluster(&cfg, move |rank| {
+            if rank.id() == 0 {
+                rank.send(1, 7, &msg);
+                true
+            } else {
+                let got = rank.recv(0, 7);
+                got == msg2
+            }
+        });
+        assert!(outs.iter().all(|&ok| ok), "mode={mode:?} n={n}");
+        assert!(rep.per_rank[1].elapsed_ns > 0);
+    }
+
+    #[test]
+    fn send_recv_all_modes_small_and_large() {
+        for mode in [
+            SecurityMode::Unencrypted,
+            SecurityMode::Naive,
+            SecurityMode::CryptMpi,
+            SecurityMode::IpsecSim,
+        ] {
+            for n in [1usize, 1000, 64 * 1024, 1 << 20] {
+                roundtrip(mode, n);
+            }
+        }
+    }
+
+    #[test]
+    fn cryptmpi_chopped_boundary_sizes() {
+        // Around the 64 KB chop threshold and awkward sizes.
+        for n in [64 * 1024 - 1, 64 * 1024, 64 * 1024 + 1, 100_001, 513 * 1024, (4 << 20) + 3] {
+            roundtrip(SecurityMode::CryptMpi, n);
+        }
+    }
+
+    #[test]
+    fn intra_node_messages_stay_plain_but_correct() {
+        // 2 ranks on the SAME node: CryptMPI sends plaintext (threat model:
+        // nodes are trusted) and data still round-trips.
+        let cfg = ClusterConfig::new(2, 2, SystemProfile::noleland(), SecurityMode::CryptMpi);
+        let msg = payload(1 << 20, 5);
+        let msg2 = msg.clone();
+        let (outs, rep) = run_cluster(&cfg, move |rank| {
+            if rank.id() == 0 {
+                rank.send(1, 1, &msg);
+                0u64
+            } else {
+                let got = rank.recv(0, 1);
+                assert_eq!(got, msg2);
+                rank.stats().crypto_ns
+            }
+        });
+        assert_eq!(outs[1], 0, "no crypto cost on intra-node path");
+        assert_eq!(rep.per_rank[1].stats.inter_ns, 0);
+        assert!(rep.per_rank[1].stats.intra_ns > 0);
+    }
+
+    #[test]
+    fn nonblocking_and_waitall() {
+        let cfg = ClusterConfig::pingpong(SystemProfile::noleland(), SecurityMode::CryptMpi);
+        let msgs: Vec<Vec<u8>> = (0..8).map(|i| payload(128 * 1024, i)).collect();
+        let expect = msgs.clone();
+        let (outs, _) = run_cluster(&cfg, move |rank| {
+            if rank.id() == 0 {
+                let reqs: Vec<_> =
+                    msgs.iter().enumerate().map(|(i, m)| rank.isend(1, i as u64, m)).collect();
+                assert_eq!(rank.outstanding_sends(), 8);
+                rank.waitall_send(reqs);
+                assert_eq!(rank.outstanding_sends(), 0);
+                true
+            } else {
+                let reqs: Vec<_> = (0..8).map(|i| rank.irecv(0, i as u64)).collect();
+                let got = rank.waitall_recv(reqs);
+                got == expect
+            }
+        });
+        assert!(outs[1]);
+    }
+
+    #[test]
+    fn collectives_work_over_cluster() {
+        let cfg = ClusterConfig::new(6, 2, SystemProfile::noleland(), SecurityMode::CryptMpi);
+        let (outs, _) = run_cluster(&cfg, |rank| {
+            let n = rank.size();
+            // bcast
+            let data =
+                if rank.id() == 2 { b"broadcast-payload".to_vec() } else { Vec::new() };
+            let b = rank.bcast(2, data);
+            assert_eq!(b, b"broadcast-payload");
+            // barrier
+            rank.barrier();
+            // gather at 1
+            let mine = vec![rank.id() as u8; 3];
+            let g = rank.gather(1, &mine);
+            if rank.id() == 1 {
+                let g = g.unwrap();
+                assert_eq!(g.len(), n);
+                for (r, blob) in g.iter().enumerate() {
+                    assert_eq!(blob, &vec![r as u8; 3]);
+                }
+            }
+            // scatter from 0
+            let parts = if rank.id() == 0 {
+                Some((0..n).map(|r| vec![r as u8 + 10; 2]).collect())
+            } else {
+                None
+            };
+            let part = rank.scatter(0, parts);
+            assert_eq!(part, vec![rank.id() as u8 + 10; 2]);
+            // allreduce
+            let v = rank.allreduce_sum(&[rank.id() as f64, 1.0]);
+            let expect: f64 = (0..n).map(|x| x as f64).sum();
+            assert!((v[0] - expect).abs() < 1e-9);
+            assert!((v[1] - n as f64).abs() < 1e-9);
+            true
+        });
+        assert!(outs.iter().all(|&x| x));
+    }
+
+    #[test]
+    fn full_rsa_key_distribution() {
+        let mut cfg =
+            ClusterConfig::new(4, 2, SystemProfile::noleland(), SecurityMode::CryptMpi);
+        cfg.keydist = KeyDistMode::RsaOaep { bits: 1024 };
+        let msg = payload(256 * 1024, 77);
+        let msg2 = msg.clone();
+        let (outs, _) = run_cluster(&cfg, move |rank| {
+            // After init every rank shares (K1, K2): encrypted traffic works
+            // between nodes.
+            if rank.id() == 0 {
+                rank.send(2, 9, &msg); // inter-node (ranks/node = 2)
+                true
+            } else if rank.id() == 2 {
+                rank.recv(0, 9) == msg2
+            } else {
+                true
+            }
+        });
+        assert!(outs.iter().all(|&x| x));
+    }
+
+    #[test]
+    fn cryptmpi_overhead_between_unencrypted_and_naive() {
+        // The paper's headline shape: for large messages,
+        //   T(unencrypted) < T(cryptmpi) << T(naive).
+        let m = 4 << 20;
+        let time_for = |mode| {
+            let cfg = ClusterConfig::pingpong(SystemProfile::noleland(), mode);
+            let msg = payload(m, 3);
+            let (_, rep) = run_cluster(&cfg, move |rank| {
+                if rank.id() == 0 {
+                    rank.send(1, 1, &msg);
+                } else {
+                    let _ = rank.recv(0, 1);
+                }
+            });
+            rep.per_rank[1].elapsed_ns
+        };
+        let plain = time_for(SecurityMode::Unencrypted);
+        let crypt = time_for(SecurityMode::CryptMpi);
+        let naive = time_for(SecurityMode::Naive);
+        assert!(plain < crypt, "plain={plain} crypt={crypt}");
+        assert!(crypt < naive, "crypt={crypt} naive={naive}");
+        // CryptMPI's overhead vs plain must be well under half of Naive's.
+        let ovh_c = crypt as f64 / plain as f64 - 1.0;
+        let ovh_n = naive as f64 / plain as f64 - 1.0;
+        assert!(ovh_c < 0.5 * ovh_n, "ovh_c={ovh_c:.3} ovh_n={ovh_n:.3}");
+    }
+}

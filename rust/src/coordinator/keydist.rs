@@ -1,0 +1,85 @@
+//! Key distribution at `MPI_Init` (paper §IV "Key distribution").
+//!
+//! Each rank generates an RSA keypair; public keys are gathered at rank 0
+//! over the *unencrypted* collective path; rank 0 generates the two AES
+//! master keys `(K1, K2)`, encrypts them per rank with RSA-OAEP, and
+//! scatters the ciphertexts; every rank decrypts with its private key.
+//!
+//! Secure against a passive adversary (provable privacy of RSA-OAEP);
+//! active MITM is out of scope exactly as in the paper.
+
+use crate::coordinator::rank::Rank;
+use crate::coordinator::Keys;
+use crate::crypto::bignum::Bn;
+use crate::crypto::rand::{secure_array, ChaChaRng};
+use crate::crypto::rsa::{RsaKeyPair, RsaPublicKey};
+
+/// Wire encoding of an RSA public key: `k:u32 ‖ n (k bytes) ‖ e (8 bytes)`.
+fn encode_pk(pk: &RsaPublicKey) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4 + pk.k + 8);
+    out.extend_from_slice(&(pk.k as u32).to_le_bytes());
+    out.extend_from_slice(&pk.n.to_bytes_be(pk.k));
+    out.extend_from_slice(&pk.e.to_bytes_be(8));
+    out
+}
+
+fn decode_pk(buf: &[u8]) -> RsaPublicKey {
+    let k = u32::from_le_bytes(buf[..4].try_into().unwrap()) as usize;
+    let n = Bn::from_bytes_be(&buf[4..4 + k]);
+    let e = Bn::from_bytes_be(&buf[4 + k..4 + k + 8]);
+    RsaPublicKey { n, e, k }
+}
+
+/// Run the paper's key-distribution protocol on an initialized (but
+/// keyless) rank. Returns the shared `(K1, K2)` context.
+///
+/// `rsa_bits` — modulus size (1024 default; ≥ 1024 required for
+/// OAEP-SHA-256).
+pub fn distribute_keys(rank: &mut Rank, rsa_bits: usize) -> Keys {
+    // 1. Every process generates (pk_i, sk_i).
+    let mut rng = ChaChaRng::from_os().expect("entropy");
+    let kp = RsaKeyPair::generate(rsa_bits, &mut rng);
+
+    // 2. Gather public keys at process 0 (unencrypted MPI_Gather).
+    let pks = rank.gather(0, &encode_pk(&kp.public));
+
+    // 3. Process 0 draws (K1, K2) and RSA-OAEP-encrypts them per rank.
+    let parts = pks.map(|pks| {
+        let k1: [u8; 16] = secure_array();
+        let k2: [u8; 16] = secure_array();
+        let mut payload = [0u8; 32];
+        payload[..16].copy_from_slice(&k1);
+        payload[16..].copy_from_slice(&k2);
+        pks.iter()
+            .map(|pk_bytes| {
+                let pk = decode_pk(pk_bytes);
+                pk.encrypt_oaep(&payload).expect("OAEP encrypt")
+            })
+            .collect::<Vec<_>>()
+    });
+
+    // 4. MPI_Scatter the ciphertexts; each rank decrypts with sk_i.
+    let my_ct = rank.scatter(0, parts);
+    let payload = kp.private.decrypt_oaep(&my_ct).expect("OAEP decrypt");
+    assert_eq!(payload.len(), 32, "key payload must be two AES-128 keys");
+    let k1: [u8; 16] = payload[..16].try_into().unwrap();
+    let k2: [u8; 16] = payload[16..].try_into().unwrap();
+    assert_ne!(k1, k2, "K1 and K2 must be distinct (key separation)");
+    Keys::from_bytes(&k1, &k2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::rand::ChaChaRng;
+    use crate::crypto::rsa::RsaKeyPair;
+
+    #[test]
+    fn pk_codec_roundtrip() {
+        let mut rng = ChaChaRng::from_seed([9u8; 32]);
+        let kp = RsaKeyPair::generate(1024, &mut rng);
+        let enc = encode_pk(&kp.public);
+        let dec = decode_pk(&enc);
+        assert_eq!(dec, kp.public);
+    }
+}

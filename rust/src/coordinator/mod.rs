@@ -1,0 +1,70 @@
+//! The CryptMPI coordinator — the paper's system contribution.
+//!
+//! * [`rank`] — the per-rank communication API (send/recv/isend/irecv/
+//!   wait/waitall + collectives) with the paper's security modes.
+//! * [`pool`] — the multi-thread encryption worker pool (the OpenMP analog).
+//! * [`params`] — (k, t) parameter selection with the paper's constraints.
+//! * [`keydist`] — RSA-OAEP key distribution at init (paper §IV).
+//! * [`cluster`] — spawn a simulated cluster and run a rank function.
+
+pub mod cluster;
+pub mod keydist;
+pub mod params;
+pub mod pool;
+pub mod rank;
+
+pub use cluster::{run_cluster, ClusterConfig, KeyDistMode};
+pub use rank::{Rank, RecvReq, SendReq};
+
+use crate::crypto::Gcm;
+
+/// The library variants compared throughout the paper's evaluation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SecurityMode {
+    /// Conventional MPI, no encryption ("Unencrypted").
+    Unencrypted,
+    /// Naser et al.'s vanilla whole-message AES-GCM ("Naive").
+    Naive,
+    /// This paper's system: (k,t)-chopping + multi-thread encryption.
+    CryptMpi,
+    /// IPSec-style lower-level encryption (Fig 1 motivation): the MPI
+    /// library sends plaintext; every inter-node byte is serialized
+    /// through a per-node kernel crypto context.
+    IpsecSim,
+}
+
+impl SecurityMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            SecurityMode::Unencrypted => "unencrypted",
+            SecurityMode::Naive => "naive",
+            SecurityMode::CryptMpi => "cryptmpi",
+            SecurityMode::IpsecSim => "ipsec",
+        }
+    }
+
+    pub fn by_name(s: &str) -> Option<Self> {
+        match s {
+            "unencrypted" | "plain" => Some(SecurityMode::Unencrypted),
+            "naive" => Some(SecurityMode::Naive),
+            "cryptmpi" | "crypt" => Some(SecurityMode::CryptMpi),
+            "ipsec" => Some(SecurityMode::IpsecSim),
+            _ => None,
+        }
+    }
+}
+
+/// The two AES-128 master keys of the paper: `K1` for Algorithm 1
+/// (chopped, ≥ 64 KB) and `K2` for direct GCM (small messages). Key
+/// separation is security-critical — see `crypto::stream` tests.
+#[derive(Clone)]
+pub struct Keys {
+    pub k1: Gcm,
+    pub k2: Gcm,
+}
+
+impl Keys {
+    pub fn from_bytes(k1: &[u8; 16], k2: &[u8; 16]) -> Self {
+        Keys { k1: Gcm::new(k1), k2: Gcm::new(k2) }
+    }
+}

@@ -1,0 +1,84 @@
+//! (k, t) parameter selection — the paper's §IV "Parameter Selection".
+//!
+//! * `k = ⌊max{1, m/512}⌋` for message size `m` in KB (512 KB chunks).
+//! * `t` from the per-system table (`SystemProfile::t_table`).
+//! * Thread cap: request `min{T0 − T1, t}` threads, where `T0` is the
+//!   rank's hyper-thread allocation and `T1` the communication reserve.
+//! * Back-pressure: if more than [`MAX_OUTSTANDING`] send requests are
+//!   pending in this rank, fall back to `k = 1`.
+
+use crate::net::SystemProfile;
+
+/// The paper's outstanding-send throttle threshold.
+pub const MAX_OUTSTANDING: usize = 64;
+
+/// Chunk count `k` for an `m`-byte message (before back-pressure).
+pub fn select_k(m_bytes: usize) -> u32 {
+    let m_kb = m_bytes / 1024;
+    (m_kb / 512).max(1) as u32
+}
+
+/// Chunk count after the outstanding-request constraint.
+pub fn select_k_constrained(m_bytes: usize, outstanding_sends: usize) -> u32 {
+    if outstanding_sends > MAX_OUTSTANDING {
+        1
+    } else {
+        select_k(m_bytes)
+    }
+}
+
+/// Threads to use: the profile's `t` capped by `min{T0 − T1, t}`.
+pub fn select_t_threads(profile: &SystemProfile, m_bytes: usize, t0: u32) -> u32 {
+    profile.threads_for(m_bytes, t0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::SystemProfile;
+
+    #[test]
+    fn k_matches_paper_examples() {
+        // §V: 4 MB message → k = 8 (4096/512).
+        assert_eq!(select_k(4 << 20), 8);
+        // 64 KB → k = 1 (max{1, 64/512} = 1).
+        assert_eq!(select_k(64 * 1024), 1);
+        // 512 KB → k = 1; 1 MB → 2; 2 MB → 4.
+        assert_eq!(select_k(512 * 1024), 1);
+        assert_eq!(select_k(1 << 20), 2);
+        assert_eq!(select_k(2 << 20), 4);
+        // Fig 10 setting: 2 MB stencil messages → k = 4 (paper: "k = 4
+        // chunks" at 60 % load).
+        assert_eq!(select_k(2 * 1024 * 1024), 4);
+    }
+
+    #[test]
+    fn outstanding_throttle() {
+        assert_eq!(select_k_constrained(4 << 20, 0), 8);
+        assert_eq!(select_k_constrained(4 << 20, 64), 8);
+        // Paper §V (OSU discussion): "after the 8th messages, there are
+        // already 64 pending send requests, and CryptMPI will reset k=1".
+        assert_eq!(select_k_constrained(4 << 20, 65), 1);
+    }
+
+    #[test]
+    fn paper_noleland_pingpong_cases() {
+        let p = SystemProfile::noleland();
+        // §V: 64 KB messages, 2 ranks on separate nodes → T0 = 32,
+        // min{T0-T1, t} = min{30, 2} = 2.
+        assert_eq!(select_t_threads(&p, 64 * 1024, 32), 2);
+        // 4 MB → t = 8.
+        assert_eq!(select_t_threads(&p, 4 << 20, 32), 8);
+        // 8 pairs per node → T0 = 4 → min{2, 8} = 2 (paper §V).
+        assert_eq!(select_t_threads(&p, 4 << 20, 4), 2);
+    }
+
+    #[test]
+    fn paper_bridges_pingpong_cases() {
+        let p = SystemProfile::bridges();
+        // §V B: 64 KB → min{T0−T1, 4} = 4 with T0 = 28.
+        assert_eq!(select_t_threads(&p, 64 * 1024, 28), 4);
+        // 4 MB → t = 16.
+        assert_eq!(select_t_threads(&p, 4 << 20, 28), 16);
+    }
+}

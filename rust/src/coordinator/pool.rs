@@ -1,0 +1,160 @@
+//! Per-rank worker pool for multi-threaded encryption/decryption.
+//!
+//! Plays the role OpenMP plays in the paper: `t` worker threads seal or
+//! open the `t` segments of a chunk concurrently. The *virtual* cost of a
+//! chunk is charged analytically by the caller (max-rate model); the pool
+//! does the *real* cryptographic work so the bytes and security properties
+//! are genuine, and so the structure is faithful on a multi-core host.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Cmd {
+    Run(Job),
+    Quit,
+}
+
+/// A simple persistent worker pool.
+pub struct WorkerPool {
+    tx: Sender<Cmd>,
+    workers: Vec<JoinHandle<()>>,
+    size: usize,
+}
+
+impl WorkerPool {
+    /// Spawn `size` workers (at least 1).
+    pub fn new(size: usize) -> Self {
+        let size = size.max(1);
+        let (tx, rx) = channel::<Cmd>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..size)
+            .map(|i| {
+                let rx: Arc<Mutex<Receiver<Cmd>>> = Arc::clone(&rx);
+                std::thread::Builder::new()
+                    .name(format!("enc-worker-{i}"))
+                    .spawn(move || loop {
+                        let cmd = { rx.lock().unwrap().recv() };
+                        match cmd {
+                            Ok(Cmd::Run(job)) => job(),
+                            Ok(Cmd::Quit) | Err(_) => break,
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        WorkerPool { tx, workers, size }
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Run the closures concurrently on the pool and wait for all of them.
+    ///
+    /// `scope_run` is structured concurrency: the jobs may borrow from the
+    /// caller's stack because we block until every job completes.
+    pub fn scope_run<'scope>(&self, jobs: Vec<Box<dyn FnOnce() + Send + 'scope>>) {
+        if jobs.is_empty() {
+            return;
+        }
+        let n = jobs.len();
+        let (done_tx, done_rx) = channel::<()>();
+        for job in jobs {
+            let done = done_tx.clone();
+            // SAFETY: we join all jobs below before returning, so borrows
+            // with lifetime 'scope outlive the job execution.
+            let job: Box<dyn FnOnce() + Send + 'static> =
+                unsafe { std::mem::transmute::<Box<dyn FnOnce() + Send + 'scope>, _>(job) };
+            self.tx
+                .send(Cmd::Run(Box::new(move || {
+                    job();
+                    let _ = done.send(());
+                })))
+                .expect("pool alive");
+        }
+        for _ in 0..n {
+            done_rx.recv().expect("worker completed");
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        for _ in &self.workers {
+            let _ = self.tx.send(Cmd::Quit);
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = WorkerPool::new(4);
+        let counter = AtomicUsize::new(0);
+        let jobs: Vec<Box<dyn FnOnce() + Send>> = (0..100)
+            .map(|_| {
+                let c = &counter;
+                Box::new(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                }) as Box<dyn FnOnce() + Send>
+            })
+            .collect();
+        pool.scope_run(jobs);
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn jobs_can_mutate_disjoint_borrows() {
+        let pool = WorkerPool::new(3);
+        let mut data = vec![0u64; 6];
+        {
+            let jobs: Vec<Box<dyn FnOnce() + Send>> = data
+                .chunks_mut(2)
+                .enumerate()
+                .map(|(i, chunk)| {
+                    Box::new(move || {
+                        for (j, x) in chunk.iter_mut().enumerate() {
+                            *x = (i * 2 + j) as u64 * 10;
+                        }
+                    }) as Box<dyn FnOnce() + Send>
+                })
+                .collect();
+            pool.scope_run(jobs);
+        }
+        assert_eq!(data, vec![0, 10, 20, 30, 40, 50]);
+    }
+
+    #[test]
+    fn empty_job_list_is_noop() {
+        let pool = WorkerPool::new(2);
+        pool.scope_run(vec![]);
+    }
+
+    #[test]
+    fn pool_survives_many_rounds() {
+        let pool = WorkerPool::new(2);
+        let counter = AtomicUsize::new(0);
+        for _ in 0..50 {
+            let jobs: Vec<Box<dyn FnOnce() + Send>> = (0..4)
+                .map(|_| {
+                    let c = &counter;
+                    Box::new(move || {
+                        c.fetch_add(1, Ordering::SeqCst);
+                    }) as Box<dyn FnOnce() + Send>
+                })
+                .collect();
+            pool.scope_run(jobs);
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 200);
+    }
+}

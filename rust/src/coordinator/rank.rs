@@ -1,0 +1,655 @@
+//! The per-rank communication API: MPI-style point-to-point and collective
+//! operations with the paper's security modes.
+//!
+//! Send path for `CryptMpi` mode (inter-node, ≥ 64 KB):
+//! header first, then `k` chunks of `t` segments each; each chunk is
+//! really encrypted by `t` worker threads (Algorithm 1 under a per-message
+//! subkey) and charged `T_enc(chunk, t)` of virtual time, so encryption of
+//! chunk `i+1` overlaps transmission of chunk `i` exactly as in the paper.
+//! The receiver decrypts chunks as they arrive. Small messages use direct
+//! GCM under the separate key `K2`.
+
+use crate::coordinator::params::{select_k_constrained, select_t_threads};
+use crate::coordinator::pool::WorkerPool;
+use crate::coordinator::{Keys, SecurityMode};
+use crate::crypto::rand::secure_array;
+use crate::crypto::{
+    AuthError, Gcm, Header, Opcode, StreamOpener, StreamSealer, CHOP_THRESHOLD, HEADER_LEN,
+    TAG_LEN,
+};
+use crate::mpi::{CommStats, Route, Transport};
+use crate::net::SystemProfile;
+use crate::vtime::calib::CryptoCalibration;
+use crate::vtime::VClock;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// Base tag for internal collective traffic (app tags must stay below).
+const COLL_TAG_BASE: u64 = 1 << 40;
+
+/// A pending non-blocking send.
+#[derive(Debug)]
+pub struct SendReq {
+    local_complete_ns: u64,
+    needs_drain: bool,
+}
+
+/// A pending non-blocking receive (matching is deferred to `wait`).
+#[derive(Debug)]
+pub struct RecvReq {
+    from: Option<usize>,
+    tag: u64,
+}
+
+/// One MPI rank of the simulated cluster.
+pub struct Rank {
+    id: usize,
+    tp: Arc<Transport>,
+    profile: Arc<SystemProfile>,
+    calib: &'static CryptoCalibration,
+    mode: SecurityMode,
+    keys: Option<Keys>,
+    pool: Option<WorkerPool>,
+    clock: VClock,
+    stats: CommStats,
+    outstanding_sends: usize,
+    /// Hyper-threads allocated to this rank (T0).
+    t0: u32,
+    coll_seq: u64,
+}
+
+impl Rank {
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn new(
+        id: usize,
+        tp: Arc<Transport>,
+        profile: Arc<SystemProfile>,
+        calib: &'static CryptoCalibration,
+        mode: SecurityMode,
+        keys: Option<Keys>,
+        t0: u32,
+    ) -> Self {
+        Rank {
+            id,
+            tp,
+            profile,
+            calib,
+            mode,
+            keys,
+            pool: None,
+            clock: VClock::new(),
+            stats: CommStats::default(),
+            outstanding_sends: 0,
+            t0,
+            coll_seq: 0,
+        }
+    }
+
+    pub fn id(&self) -> usize {
+        self.id
+    }
+
+    pub fn size(&self) -> usize {
+        self.tp.topo().ranks
+    }
+
+    pub fn node(&self) -> usize {
+        self.tp.topo().node_of(self.id)
+    }
+
+    pub fn mode(&self) -> SecurityMode {
+        self.mode
+    }
+
+    pub fn profile(&self) -> &SystemProfile {
+        &self.profile
+    }
+
+    /// Current virtual time (ns).
+    pub fn now_ns(&self) -> u64 {
+        self.clock.now()
+    }
+
+    /// Charge local computation time (ns of virtual time).
+    pub fn compute_ns(&mut self, ns: u64) {
+        self.clock.advance(ns);
+    }
+
+    pub fn compute_us(&mut self, us: f64) {
+        self.clock.advance(crate::vtime::us_to_ns(us));
+    }
+
+    pub fn stats(&self) -> &CommStats {
+        &self.stats
+    }
+
+    pub(crate) fn set_keys(&mut self, keys: Keys) {
+        self.keys = Some(keys);
+    }
+
+    pub(crate) fn keys(&self) -> Option<&Keys> {
+        self.keys.as_ref()
+    }
+
+    fn keys_ref(&self) -> &Keys {
+        self.keys.as_ref().expect("keys not distributed (init)")
+    }
+
+    /// Lazily create (or resize) the worker pool to at least `t` threads.
+    fn pool(&mut self, t: u32) -> &WorkerPool {
+        let need = t.max(1) as usize;
+        let recreate = match &self.pool {
+            Some(p) => p.size() < need,
+            None => true,
+        };
+        if recreate {
+            self.pool = Some(WorkerPool::new(need));
+        }
+        self.pool.as_ref().unwrap()
+    }
+
+    // ---------------------------------------------------------------
+    // Point-to-point
+    // ---------------------------------------------------------------
+
+    /// Blocking send.
+    pub fn send(&mut self, to: usize, tag: u64, data: &[u8]) {
+        let req = self.isend(to, tag, data);
+        self.wait_send(req);
+    }
+
+    /// Blocking receive. Panics on authentication failure (the library
+    /// aborts, as MPI would); use [`Rank::recv_checked`] to observe errors.
+    pub fn recv(&mut self, from: usize, tag: u64) -> Vec<u8> {
+        self.recv_checked(Some(from), tag).expect("decryption failure")
+    }
+
+    /// Blocking receive from any source.
+    pub fn recv_any(&mut self, tag: u64) -> Vec<u8> {
+        self.recv_checked(None, tag).expect("decryption failure")
+    }
+
+    /// Non-blocking send: encryption (if any) is performed here, chunks are
+    /// handed to the transport, and the request tracks local completion.
+    pub fn isend(&mut self, to: usize, tag: u64, data: &[u8]) -> SendReq {
+        let start = self.clock.now();
+        let route = self.tp.route(self.id, to);
+        let req = self.send_impl(to, tag, data, route);
+        let spent = self.clock.now() - start;
+        match route {
+            Route::InterNode => self.stats.inter_ns += spent,
+            Route::IntraNode => self.stats.intra_ns += spent,
+        }
+        self.stats.bytes_sent += data.len() as u64;
+        self.stats.msgs_sent += 1;
+        self.outstanding_sends += 1;
+        req
+    }
+
+    /// Non-blocking receive (matching deferred to wait).
+    pub fn irecv(&mut self, from: usize, tag: u64) -> RecvReq {
+        RecvReq { from: Some(from), tag }
+    }
+
+    pub fn irecv_any(&mut self, tag: u64) -> RecvReq {
+        RecvReq { from: None, tag }
+    }
+
+    /// Wait for a send request.
+    pub fn wait_send(&mut self, req: SendReq) {
+        if req.needs_drain {
+            let waited = self.clock.wait_until(req.local_complete_ns);
+            self.stats.inter_ns += waited;
+        }
+        self.outstanding_sends = self.outstanding_sends.saturating_sub(1);
+    }
+
+    /// Wait for a receive request, returning the message.
+    pub fn wait_recv(&mut self, req: RecvReq) -> Vec<u8> {
+        self.recv_checked(req.from, req.tag).expect("decryption failure")
+    }
+
+    /// Wait for all requests.
+    pub fn waitall_send(&mut self, reqs: Vec<SendReq>) {
+        for r in reqs {
+            self.wait_send(r);
+        }
+    }
+
+    pub fn waitall_recv(&mut self, reqs: Vec<RecvReq>) -> Vec<Vec<u8>> {
+        reqs.into_iter().map(|r| self.wait_recv(r)).collect()
+    }
+
+    /// Number of in-flight send requests (drives the k=1 throttle).
+    pub fn outstanding_sends(&self) -> usize {
+        self.outstanding_sends
+    }
+
+    // ---------------------------------------------------------------
+    // Send implementation
+    // ---------------------------------------------------------------
+
+    fn send_impl(&mut self, to: usize, tag: u64, data: &[u8], route: Route) -> SendReq {
+        // Intra-node traffic is trusted (threat model) — always plaintext.
+        // IpsecSim encrypts below the MPI layer (in the transport).
+        let effective = match (route, self.mode) {
+            (Route::IntraNode, _) => SecurityMode::Unencrypted,
+            (_, SecurityMode::IpsecSim) => SecurityMode::Unencrypted,
+            (_, m) => m,
+        };
+        match effective {
+            SecurityMode::Unencrypted | SecurityMode::IpsecSim => self.send_plain(to, tag, data),
+            SecurityMode::Naive => self.send_direct(to, tag, data, /*naive=*/ true),
+            SecurityMode::CryptMpi => {
+                if data.len() < CHOP_THRESHOLD {
+                    self.send_direct(to, tag, data, false)
+                } else {
+                    self.send_chopped(to, tag, data)
+                }
+            }
+        }
+    }
+
+    fn send_plain(&mut self, to: usize, tag: u64, data: &[u8]) -> SendReq {
+        let header = Header {
+            opcode: Opcode::Plain,
+            seed: [0u8; 16],
+            msg_len: data.len() as u64,
+            seg_size: 0,
+        };
+        let mut body = Vec::with_capacity(HEADER_LEN + data.len());
+        body.extend_from_slice(&header.encode());
+        body.extend_from_slice(data);
+        let wire = body.len();
+        let info = self.tp.post(self.id, to, tag, 0, body, self.clock.now());
+        SendReq {
+            local_complete_ns: info.local_complete_ns,
+            needs_drain: wire > self.tp.net().eager_threshold,
+        }
+    }
+
+    /// Direct GCM of the whole message: the Naive library for any size, or
+    /// CryptMPI's small-message path. One thread.
+    fn send_direct(&mut self, to: usize, tag: u64, data: &[u8], naive: bool) -> SendReq {
+        let keys = self.keys_ref().clone();
+        let nonce: [u8; 12] = secure_array();
+        let mut seed = [0u8; 16];
+        seed[..12].copy_from_slice(&nonce);
+        let header = Header {
+            opcode: Opcode::Direct,
+            seed,
+            msg_len: data.len() as u64,
+            seg_size: 0,
+        };
+        let mut body = Vec::with_capacity(HEADER_LEN + data.len() + TAG_LEN);
+        body.extend_from_slice(&header.encode());
+        body.extend_from_slice(data);
+        let tag_bytes = keys.k2.seal_in_place(&nonce, &[], &mut body[HEADER_LEN..]);
+        body.extend_from_slice(&tag_bytes);
+        // Virtual cost: single-thread GCM over the whole message.
+        let enc = self.profile.crypto.enc_ns(self.calib, data.len(), 1);
+        self.clock.advance(enc);
+        self.stats.crypto_ns += enc;
+        let _ = naive;
+        let wire = body.len();
+        let info = self.tp.post(self.id, to, tag, 0, body, self.clock.now());
+        SendReq {
+            local_complete_ns: info.local_complete_ns,
+            needs_drain: wire > self.tp.net().eager_threshold,
+        }
+    }
+
+    /// The (k,t)-chopping send (paper Algorithm 1 + §IV "Putting things
+    /// together").
+    fn send_chopped(&mut self, to: usize, tag: u64, data: &[u8]) -> SendReq {
+        let m = data.len();
+        let t = select_t_threads(&self.profile, m, self.t0);
+        let k = select_k_constrained(m, self.outstanding_sends);
+        let keys = self.keys_ref().clone();
+        let sealer = StreamSealer::new(&keys.k1, m, k * t);
+        let nsegs = sealer.num_segments();
+
+        // Header travels first.
+        let hinfo =
+            self.tp
+                .post(self.id, to, tag, 0, sealer.header().encode().to_vec(), self.clock.now());
+        let mut local_complete = hinfo.local_complete_ns;
+
+        // Chunks of up to `t` segments; encrypt with `t` workers, then post.
+        let mut seq = 1u32;
+        let mut seg = 1u32;
+        let mut max_wire = 0usize;
+        while seg <= nsegs {
+            let hi = (seg + t - 1).min(nsegs);
+            // Assemble the chunk: plaintext segments + space for tags.
+            let mut parts: Vec<(u32, Vec<u8>)> = (seg..=hi)
+                .map(|i| (i, data[sealer.segment_range(i)].to_vec()))
+                .collect();
+            let chunk_bytes: usize = parts.iter().map(|(_, p)| p.len()).sum();
+            // Real parallel encryption on the worker pool.
+            {
+                let sealer_ref = &sealer;
+                let pool = self.pool(t);
+                let jobs: Vec<Box<dyn FnOnce() + Send>> = parts
+                    .iter_mut()
+                    .map(|(i, buf)| {
+                        let i = *i;
+                        let b: &mut Vec<u8> = buf;
+                        Box::new(move || {
+                            let tag = sealer_ref.seal_segment(i, &mut b[..]);
+                            b.extend_from_slice(&tag);
+                        }) as Box<dyn FnOnce() + Send>
+                    })
+                    .collect();
+                pool.scope_run(jobs);
+            }
+            // Virtual cost: t threads over the chunk (max-rate model).
+            let enc = self.profile.crypto.enc_ns(self.calib, chunk_bytes, t);
+            self.clock.advance(enc);
+            self.stats.crypto_ns += enc;
+            // Post the chunk as one wire message.
+            let mut body = Vec::with_capacity(chunk_bytes + parts.len() * TAG_LEN);
+            for (_, p) in &parts {
+                body.extend_from_slice(p);
+            }
+            max_wire = max_wire.max(body.len());
+            let info = self.tp.post(self.id, to, tag, seq, body, self.clock.now());
+            local_complete = local_complete.max(info.local_complete_ns);
+            seq += 1;
+            seg = hi + 1;
+        }
+        SendReq {
+            local_complete_ns: local_complete,
+            needs_drain: max_wire > self.tp.net().eager_threshold,
+        }
+    }
+
+    // ---------------------------------------------------------------
+    // Receive implementation
+    // ---------------------------------------------------------------
+
+    /// Blocking receive that surfaces authentication failures.
+    pub fn recv_checked(
+        &mut self,
+        from: Option<usize>,
+        tag: u64,
+    ) -> Result<Vec<u8>, AuthError> {
+        let start = self.clock.now();
+        let hmsg = self.tp.recv_match(self.id, from, tag);
+        let src = hmsg.src;
+        let route = self.tp.route(self.id, src);
+        self.clock.wait_until(hmsg.arrival_ns);
+        debug_assert_eq!(hmsg.seq, 0, "header/whole message must be seq 0");
+        let header = Header::decode(&hmsg.body)?;
+        let out = match header.opcode {
+            Opcode::Plain => {
+                let m = header.msg_len as usize;
+                if hmsg.body.len() != HEADER_LEN + m {
+                    return Err(AuthError);
+                }
+                Ok(hmsg.body[HEADER_LEN..].to_vec())
+            }
+            Opcode::Direct => self.recv_direct(&header, &hmsg.body),
+            Opcode::Chopped => self.recv_chopped(&header, src, tag),
+        };
+        let spent = self.clock.now() - start;
+        match route {
+            Route::InterNode => self.stats.inter_ns += spent,
+            Route::IntraNode => self.stats.intra_ns += spent,
+        }
+        if let Ok(data) = &out {
+            self.stats.bytes_recv += data.len() as u64;
+            self.stats.msgs_recv += 1;
+        }
+        out
+    }
+
+    fn recv_direct(&mut self, header: &Header, body: &[u8]) -> Result<Vec<u8>, AuthError> {
+        let m = header.msg_len as usize;
+        if body.len() != HEADER_LEN + m + TAG_LEN {
+            return Err(AuthError);
+        }
+        let keys = self.keys_ref().clone();
+        let nonce: [u8; 12] = header.seed[..12].try_into().unwrap();
+        let mut data = body[HEADER_LEN..HEADER_LEN + m].to_vec();
+        let tag_bytes: [u8; TAG_LEN] = body[HEADER_LEN + m..].try_into().unwrap();
+        keys.k2.open_in_place(&nonce, &[], &mut data, &tag_bytes)?;
+        let dec = self.profile.crypto.enc_ns(self.calib, m, 1);
+        self.clock.advance(dec);
+        self.stats.crypto_ns += dec;
+        Ok(data)
+    }
+
+    fn recv_chopped(
+        &mut self,
+        header: &Header,
+        src: usize,
+        tag: u64,
+    ) -> Result<Vec<u8>, AuthError> {
+        let keys = self.keys_ref().clone();
+        let mut opener = StreamOpener::new(&keys.k1, header)?;
+        let nsegs = opener.num_segments();
+        let m = header.msg_len as usize;
+        let t = select_t_threads(&self.profile, m, self.t0);
+        let mut out = vec![0u8; m];
+        let mut next = 1u32;
+        let mut expect_seq = 1u32;
+        while next <= nsegs {
+            let cmsg = self.tp.recv_match(self.id, Some(src), tag);
+            if cmsg.seq != expect_seq {
+                return Err(AuthError);
+            }
+            expect_seq += 1;
+            self.clock.wait_until(cmsg.arrival_ns);
+            // Parse as many whole segments as the chunk contains.
+            let mut parts: Vec<(u32, Vec<u8>, [u8; TAG_LEN])> = Vec::new();
+            let mut off = 0usize;
+            let mut chunk_bytes = 0usize;
+            while off < cmsg.body.len() {
+                if next > nsegs {
+                    return Err(AuthError); // trailing garbage
+                }
+                let body_len = opener.segment_len(next);
+                if cmsg.body.len() < off + body_len + TAG_LEN {
+                    return Err(AuthError); // truncated segment
+                }
+                let seg_body = cmsg.body[off..off + body_len].to_vec();
+                let tag_bytes: [u8; TAG_LEN] =
+                    cmsg.body[off + body_len..off + body_len + TAG_LEN].try_into().unwrap();
+                off += body_len + TAG_LEN;
+                chunk_bytes += body_len;
+                parts.push((next, seg_body, tag_bytes));
+                next += 1;
+            }
+            if parts.is_empty() {
+                return Err(AuthError);
+            }
+            // Real parallel decryption.
+            let failed = AtomicBool::new(false);
+            {
+                let opener_ref = &opener;
+                let failed_ref = &failed;
+                let pool = self.pool(t);
+                let jobs: Vec<Box<dyn FnOnce() + Send>> = parts
+                    .iter_mut()
+                    .map(|(i, buf, tag_bytes)| {
+                        let i = *i;
+                        let tag_bytes = *tag_bytes;
+                        let b: &mut Vec<u8> = buf;
+                        Box::new(move || {
+                            if opener_ref.open_segment(i, &mut b[..], &tag_bytes).is_err() {
+                                failed_ref.store(true, Ordering::SeqCst);
+                            }
+                        }) as Box<dyn FnOnce() + Send>
+                    })
+                    .collect();
+                pool.scope_run(jobs);
+            }
+            if failed.load(Ordering::SeqCst) {
+                return Err(AuthError);
+            }
+            for (i, buf, _) in &parts {
+                out[opener.segment_range(*i)].copy_from_slice(buf);
+                opener.mark_received();
+            }
+            let dec = self.profile.crypto.enc_ns(self.calib, chunk_bytes, t);
+            self.clock.advance(dec);
+            self.stats.crypto_ns += dec;
+        }
+        opener.finish()?;
+        Ok(out)
+    }
+
+    // ---------------------------------------------------------------
+    // Collectives (unencrypted, as in the paper's NAS experiments)
+    // ---------------------------------------------------------------
+
+    fn next_coll_tag(&mut self) -> u64 {
+        let t = COLL_TAG_BASE + self.coll_seq;
+        self.coll_seq += 1;
+        t
+    }
+
+    fn coll_post(&mut self, to: usize, tag: u64, data: &[u8]) -> u64 {
+        let mut body = Vec::with_capacity(data.len());
+        body.extend_from_slice(data);
+        let info = self.tp.post(self.id, to, tag, 0, body, self.clock.now());
+        info.local_complete_ns
+    }
+
+    fn coll_recv(&mut self, from: usize, tag: u64) -> Vec<u8> {
+        let msg = self.tp.recv_match(self.id, Some(from), tag);
+        self.clock.wait_until(msg.arrival_ns);
+        msg.body
+    }
+
+    /// Dissemination barrier.
+    pub fn barrier(&mut self) {
+        let n = self.size();
+        let tag = self.next_coll_tag();
+        let start = self.clock.now();
+        let mut round = 1usize;
+        while round < n {
+            let to = (self.id + round) % n;
+            let from = (self.id + n - (round % n)) % n;
+            self.coll_post(to, tag + ((round as u64) << 50), &[1]);
+            let _ = self.coll_recv(from, tag + ((round as u64) << 50));
+            round <<= 1;
+        }
+        self.stats.coll_ns += self.clock.now() - start;
+    }
+
+    /// Binomial-tree broadcast from `root`.
+    pub fn bcast(&mut self, root: usize, data: Vec<u8>) -> Vec<u8> {
+        let n = self.size();
+        let tag = self.next_coll_tag();
+        let start = self.clock.now();
+        let vrank = (self.id + n - root) % n; // relative rank
+        let mut buf = if self.id == root { data } else { Vec::new() };
+        // Receive from parent (highest set bit), then forward to children.
+        if vrank != 0 {
+            let parent_v = vrank & (vrank - 1); // clear lowest set bit
+            let parent = (parent_v + root) % n;
+            buf = self.coll_recv(parent, tag);
+        }
+        let mut bit = 1usize;
+        while bit < n {
+            if vrank & (bit - 1) == 0 && vrank & bit == 0 {
+                let child_v = vrank | bit;
+                if child_v < n {
+                    let child = (child_v + root) % n;
+                    self.coll_post(child, tag, &buf);
+                }
+            }
+            bit <<= 1;
+        }
+        self.stats.coll_ns += self.clock.now() - start;
+        buf
+    }
+
+    /// Gather byte blobs at `root` (linear, like small-cluster MPI).
+    pub fn gather(&mut self, root: usize, data: &[u8]) -> Option<Vec<Vec<u8>>> {
+        let n = self.size();
+        let tag = self.next_coll_tag();
+        let start = self.clock.now();
+        let out = if self.id == root {
+            let mut all: Vec<Vec<u8>> = vec![Vec::new(); n];
+            all[root] = data.to_vec();
+            for r in 0..n {
+                if r != root {
+                    all[r] = self.coll_recv(r, tag);
+                }
+            }
+            Some(all)
+        } else {
+            self.coll_post(root, tag, data);
+            None
+        };
+        self.stats.coll_ns += self.clock.now() - start;
+        out
+    }
+
+    /// Scatter byte blobs from `root`; returns this rank's part.
+    pub fn scatter(&mut self, root: usize, parts: Option<Vec<Vec<u8>>>) -> Vec<u8> {
+        let n = self.size();
+        let tag = self.next_coll_tag();
+        let start = self.clock.now();
+        let out = if self.id == root {
+            let parts = parts.expect("root must provide parts");
+            assert_eq!(parts.len(), n);
+            for (r, p) in parts.iter().enumerate() {
+                if r != root {
+                    self.coll_post(r, tag, p);
+                }
+            }
+            parts[root].clone()
+        } else {
+            self.coll_recv(root, tag)
+        };
+        self.stats.coll_ns += self.clock.now() - start;
+        out
+    }
+
+    /// All-reduce (sum) of an f64 vector: binomial reduce to 0 + broadcast.
+    pub fn allreduce_sum(&mut self, data: &[f64]) -> Vec<f64> {
+        let n = self.size();
+        let tag = self.next_coll_tag();
+        let start = self.clock.now();
+        let mut acc = data.to_vec();
+        // Binomial reduction to rank 0.
+        let mut bit = 1usize;
+        while bit < n {
+            if self.id & (bit - 1) == 0 {
+                if self.id & bit != 0 {
+                    let dst = self.id & !bit;
+                    self.coll_post(dst, tag + ((bit as u64) << 50), &f64s_to_bytes(&acc));
+                    break;
+                } else if self.id | bit < n {
+                    let src = self.id | bit;
+                    let other = bytes_to_f64s(&self.coll_recv(src, tag + ((bit as u64) << 50)));
+                    for (a, b) in acc.iter_mut().zip(other.iter()) {
+                        *a += b;
+                    }
+                }
+            }
+            bit <<= 1;
+        }
+        self.stats.coll_ns += self.clock.now() - start;
+        // Broadcast the result.
+        let bytes = self.bcast(0, f64s_to_bytes(&acc));
+        bytes_to_f64s(&bytes)
+    }
+
+    /// Finish: return (elapsed virtual ns, stats).
+    pub(crate) fn finish(self) -> (u64, CommStats) {
+        (self.clock.now(), self.stats)
+    }
+}
+
+fn f64s_to_bytes(v: &[f64]) -> Vec<u8> {
+    v.iter().flat_map(|x| x.to_le_bytes()).collect()
+}
+
+fn bytes_to_f64s(b: &[u8]) -> Vec<f64> {
+    b.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect()
+}

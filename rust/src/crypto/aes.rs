@@ -1,0 +1,346 @@
+//! AES-128 block cipher — portable software implementation.
+//!
+//! This is the fallback path used when the host lacks AES-NI and the
+//! reference against which the AES-NI path ([`super::aesni`]) is tested.
+//! Table-based (T-tables for encryption), matching FIPS-197. Only the
+//! encryption direction is needed by GCM/CTR, but decryption is provided
+//! for completeness and for the round-trip tests.
+
+/// Number of rounds for AES-128.
+pub const ROUNDS: usize = 10;
+/// Block size in bytes.
+pub const BLOCK: usize = 16;
+
+/// The AES S-box.
+pub static SBOX: [u8; 256] = [
+    0x63, 0x7c, 0x77, 0x7b, 0xf2, 0x6b, 0x6f, 0xc5, 0x30, 0x01, 0x67, 0x2b, 0xfe, 0xd7, 0xab, 0x76,
+    0xca, 0x82, 0xc9, 0x7d, 0xfa, 0x59, 0x47, 0xf0, 0xad, 0xd4, 0xa2, 0xaf, 0x9c, 0xa4, 0x72, 0xc0,
+    0xb7, 0xfd, 0x93, 0x26, 0x36, 0x3f, 0xf7, 0xcc, 0x34, 0xa5, 0xe5, 0xf1, 0x71, 0xd8, 0x31, 0x15,
+    0x04, 0xc7, 0x23, 0xc3, 0x18, 0x96, 0x05, 0x9a, 0x07, 0x12, 0x80, 0xe2, 0xeb, 0x27, 0xb2, 0x75,
+    0x09, 0x83, 0x2c, 0x1a, 0x1b, 0x6e, 0x5a, 0xa0, 0x52, 0x3b, 0xd6, 0xb3, 0x29, 0xe3, 0x2f, 0x84,
+    0x53, 0xd1, 0x00, 0xed, 0x20, 0xfc, 0xb1, 0x5b, 0x6a, 0xcb, 0xbe, 0x39, 0x4a, 0x4c, 0x58, 0xcf,
+    0xd0, 0xef, 0xaa, 0xfb, 0x43, 0x4d, 0x33, 0x85, 0x45, 0xf9, 0x02, 0x7f, 0x50, 0x3c, 0x9f, 0xa8,
+    0x51, 0xa3, 0x40, 0x8f, 0x92, 0x9d, 0x38, 0xf5, 0xbc, 0xb6, 0xda, 0x21, 0x10, 0xff, 0xf3, 0xd2,
+    0xcd, 0x0c, 0x13, 0xec, 0x5f, 0x97, 0x44, 0x17, 0xc4, 0xa7, 0x7e, 0x3d, 0x64, 0x5d, 0x19, 0x73,
+    0x60, 0x81, 0x4f, 0xdc, 0x22, 0x2a, 0x90, 0x88, 0x46, 0xee, 0xb8, 0x14, 0xde, 0x5e, 0x0b, 0xdb,
+    0xe0, 0x32, 0x3a, 0x0a, 0x49, 0x06, 0x24, 0x5c, 0xc2, 0xd3, 0xac, 0x62, 0x91, 0x95, 0xe4, 0x79,
+    0xe7, 0xc8, 0x37, 0x6d, 0x8d, 0xd5, 0x4e, 0xa9, 0x6c, 0x56, 0xf4, 0xea, 0x65, 0x7a, 0xae, 0x08,
+    0xba, 0x78, 0x25, 0x2e, 0x1c, 0xa6, 0xb4, 0xc6, 0xe8, 0xdd, 0x74, 0x1f, 0x4b, 0xbd, 0x8b, 0x8a,
+    0x70, 0x3e, 0xb5, 0x66, 0x48, 0x03, 0xf6, 0x0e, 0x61, 0x35, 0x57, 0xb9, 0x86, 0xc1, 0x1d, 0x9e,
+    0xe1, 0xf8, 0x98, 0x11, 0x69, 0xd9, 0x8e, 0x94, 0x9b, 0x1e, 0x87, 0xe9, 0xce, 0x55, 0x28, 0xdf,
+    0x8c, 0xa1, 0x89, 0x0d, 0xbf, 0xe6, 0x42, 0x68, 0x41, 0x99, 0x2d, 0x0f, 0xb0, 0x54, 0xbb, 0x16,
+];
+
+/// Inverse S-box (for decryption).
+pub static INV_SBOX: [u8; 256] = {
+    let mut inv = [0u8; 256];
+    let mut i = 0;
+    while i < 256 {
+        inv[SBOX[i] as usize] = i as u8;
+        i += 1;
+    }
+    inv
+};
+
+/// Round constants for the AES-128 key schedule.
+const RCON: [u8; 10] = [0x01, 0x02, 0x04, 0x08, 0x10, 0x20, 0x40, 0x80, 0x1b, 0x36];
+
+/// GF(2^8) multiply by 2 (xtime).
+#[inline(always)]
+const fn xtime(b: u8) -> u8 {
+    (b << 1) ^ (((b >> 7) & 1) * 0x1b)
+}
+
+/// GF(2^8) multiplication (used by decryption's InvMixColumns and tests).
+pub const fn gf_mul(mut a: u8, mut b: u8) -> u8 {
+    let mut p = 0u8;
+    let mut i = 0;
+    while i < 8 {
+        if b & 1 != 0 {
+            p ^= a;
+        }
+        a = xtime(a);
+        b >>= 1;
+        i += 1;
+    }
+    p
+}
+
+/// T-table: `TE0[x] = (S[x]*2, S[x], S[x], S[x]*3)` packed little-endian-ish
+/// as a u32; the other three tables are byte rotations. Built at compile
+/// time.
+static TE0: [u32; 256] = {
+    let mut t = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let s = SBOX[i];
+        let s2 = xtime(s);
+        let s3 = s2 ^ s;
+        t[i] = (s2 as u32) | ((s as u32) << 8) | ((s as u32) << 16) | ((s3 as u32) << 24);
+        i += 1;
+    }
+    t
+};
+
+#[inline(always)]
+fn te(i: u8, rot: u32) -> u32 {
+    TE0[i as usize].rotate_left(rot * 8)
+}
+
+/// Expanded AES-128 key schedule: 11 round keys of 16 bytes.
+#[derive(Clone)]
+pub struct AesKey {
+    /// Round keys as 44 little-endian u32 words (FIPS-197 column order).
+    pub rk: [u32; 4 * (ROUNDS + 1)],
+}
+
+impl AesKey {
+    /// Expand a 16-byte AES-128 key.
+    pub fn new(key: &[u8; 16]) -> Self {
+        let mut rk = [0u32; 44];
+        for (i, w) in rk.iter_mut().take(4).enumerate() {
+            *w = u32::from_le_bytes([key[4 * i], key[4 * i + 1], key[4 * i + 2], key[4 * i + 3]]);
+        }
+        for i in 4..44 {
+            let mut temp = rk[i - 1];
+            if i % 4 == 0 {
+                // RotWord + SubWord + Rcon (little-endian word layout).
+                temp = temp.rotate_right(8);
+                let b = temp.to_le_bytes();
+                temp = u32::from_le_bytes([
+                    SBOX[b[0] as usize],
+                    SBOX[b[1] as usize],
+                    SBOX[b[2] as usize],
+                    SBOX[b[3] as usize],
+                ]);
+                temp ^= RCON[i / 4 - 1] as u32;
+            }
+            rk[i] = rk[i - 4] ^ temp;
+        }
+        AesKey { rk }
+    }
+
+    /// Round key `r` as 16 bytes (for the AES-NI path and tests).
+    pub fn round_key_bytes(&self, r: usize) -> [u8; 16] {
+        let mut out = [0u8; 16];
+        for c in 0..4 {
+            out[4 * c..4 * c + 4].copy_from_slice(&self.rk[4 * r + c].to_le_bytes());
+        }
+        out
+    }
+}
+
+/// Encrypt one 16-byte block in place (software T-table path).
+pub fn encrypt_block_soft(key: &AesKey, block: &mut [u8; 16]) {
+    let rk = &key.rk;
+    let mut s0 = u32::from_le_bytes([block[0], block[1], block[2], block[3]]) ^ rk[0];
+    let mut s1 = u32::from_le_bytes([block[4], block[5], block[6], block[7]]) ^ rk[1];
+    let mut s2 = u32::from_le_bytes([block[8], block[9], block[10], block[11]]) ^ rk[2];
+    let mut s3 = u32::from_le_bytes([block[12], block[13], block[14], block[15]]) ^ rk[3];
+
+    for r in 1..ROUNDS {
+        let t0 = te(s0 as u8, 0)
+            ^ te((s1 >> 8) as u8, 1)
+            ^ te((s2 >> 16) as u8, 2)
+            ^ te((s3 >> 24) as u8, 3)
+            ^ rk[4 * r];
+        let t1 = te(s1 as u8, 0)
+            ^ te((s2 >> 8) as u8, 1)
+            ^ te((s3 >> 16) as u8, 2)
+            ^ te((s0 >> 24) as u8, 3)
+            ^ rk[4 * r + 1];
+        let t2 = te(s2 as u8, 0)
+            ^ te((s3 >> 8) as u8, 1)
+            ^ te((s0 >> 16) as u8, 2)
+            ^ te((s1 >> 24) as u8, 3)
+            ^ rk[4 * r + 2];
+        let t3 = te(s3 as u8, 0)
+            ^ te((s0 >> 8) as u8, 1)
+            ^ te((s1 >> 16) as u8, 2)
+            ^ te((s2 >> 24) as u8, 3)
+            ^ rk[4 * r + 3];
+        s0 = t0;
+        s1 = t1;
+        s2 = t2;
+        s3 = t3;
+    }
+
+    // Final round: SubBytes + ShiftRows + AddRoundKey (no MixColumns).
+    let f = |a: u32, b: u32, c: u32, d: u32, k: u32| -> u32 {
+        ((SBOX[a as u8 as usize] as u32)
+            | ((SBOX[(b >> 8) as u8 as usize] as u32) << 8)
+            | ((SBOX[(c >> 16) as u8 as usize] as u32) << 16)
+            | ((SBOX[(d >> 24) as u8 as usize] as u32) << 24))
+            ^ k
+    };
+    let t0 = f(s0, s1, s2, s3, rk[40]);
+    let t1 = f(s1, s2, s3, s0, rk[41]);
+    let t2 = f(s2, s3, s0, s1, rk[42]);
+    let t3 = f(s3, s0, s1, s2, rk[43]);
+
+    block[0..4].copy_from_slice(&t0.to_le_bytes());
+    block[4..8].copy_from_slice(&t1.to_le_bytes());
+    block[8..12].copy_from_slice(&t2.to_le_bytes());
+    block[12..16].copy_from_slice(&t3.to_le_bytes());
+}
+
+/// Decrypt one 16-byte block in place (software path, straightforward
+/// byte-oriented implementation — decryption is never on the hot path:
+/// GCM/CTR only use the forward direction).
+pub fn decrypt_block_soft(key: &AesKey, block: &mut [u8; 16]) {
+    let mut state = *block;
+    add_round_key(&mut state, key, ROUNDS);
+    for r in (1..ROUNDS).rev() {
+        inv_shift_rows(&mut state);
+        for b in state.iter_mut() {
+            *b = INV_SBOX[*b as usize];
+        }
+        add_round_key(&mut state, key, r);
+        inv_mix_columns(&mut state);
+    }
+    inv_shift_rows(&mut state);
+    for b in state.iter_mut() {
+        *b = INV_SBOX[*b as usize];
+    }
+    add_round_key(&mut state, key, 0);
+    *block = state;
+}
+
+fn add_round_key(state: &mut [u8; 16], key: &AesKey, r: usize) {
+    let rk = key.round_key_bytes(r);
+    for i in 0..16 {
+        state[i] ^= rk[i];
+    }
+}
+
+fn inv_shift_rows(state: &mut [u8; 16]) {
+    // Row r (bytes r, r+4, r+8, r+12) rotates right by r.
+    let s = *state;
+    for r in 1..4 {
+        for c in 0..4 {
+            state[r + 4 * ((c + r) % 4)] = s[r + 4 * c];
+        }
+    }
+}
+
+fn inv_mix_columns(state: &mut [u8; 16]) {
+    for c in 0..4 {
+        let col = [state[4 * c], state[4 * c + 1], state[4 * c + 2], state[4 * c + 3]];
+        state[4 * c] =
+            gf_mul(col[0], 14) ^ gf_mul(col[1], 11) ^ gf_mul(col[2], 13) ^ gf_mul(col[3], 9);
+        state[4 * c + 1] =
+            gf_mul(col[0], 9) ^ gf_mul(col[1], 14) ^ gf_mul(col[2], 11) ^ gf_mul(col[3], 13);
+        state[4 * c + 2] =
+            gf_mul(col[0], 13) ^ gf_mul(col[1], 9) ^ gf_mul(col[2], 14) ^ gf_mul(col[3], 11);
+        state[4 * c + 3] =
+            gf_mul(col[0], 11) ^ gf_mul(col[1], 13) ^ gf_mul(col[2], 9) ^ gf_mul(col[3], 14);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// FIPS-197 Appendix B example.
+    #[test]
+    fn fips197_appendix_b() {
+        let key: [u8; 16] = [
+            0x2b, 0x7e, 0x15, 0x16, 0x28, 0xae, 0xd2, 0xa6, 0xab, 0xf7, 0x15, 0x88, 0x09, 0xcf,
+            0x4f, 0x3c,
+        ];
+        let mut block: [u8; 16] = [
+            0x32, 0x43, 0xf6, 0xa8, 0x88, 0x5a, 0x30, 0x8d, 0x31, 0x31, 0x98, 0xa2, 0xe0, 0x37,
+            0x07, 0x34,
+        ];
+        let k = AesKey::new(&key);
+        encrypt_block_soft(&k, &mut block);
+        let expect: [u8; 16] = [
+            0x39, 0x25, 0x84, 0x1d, 0x02, 0xdc, 0x09, 0xfb, 0xdc, 0x11, 0x85, 0x97, 0x19, 0x6a,
+            0x0b, 0x32,
+        ];
+        assert_eq!(block, expect);
+    }
+
+    /// FIPS-197 Appendix C.1 known-answer test.
+    #[test]
+    fn fips197_appendix_c1() {
+        let key: [u8; 16] =
+            core::array::from_fn(|i| i as u8); // 000102...0f
+        let mut block: [u8; 16] = core::array::from_fn(|i| (i as u8) * 0x11); // 00112233...
+        let k = AesKey::new(&key);
+        encrypt_block_soft(&k, &mut block);
+        let expect: [u8; 16] = [
+            0x69, 0xc4, 0xe0, 0xd8, 0x6a, 0x7b, 0x04, 0x30, 0xd8, 0xcd, 0xb7, 0x80, 0x70, 0xb4,
+            0xc5, 0x5a,
+        ];
+        assert_eq!(block, expect);
+    }
+
+    #[test]
+    fn encrypt_decrypt_round_trip() {
+        let key = [0xa5u8; 16];
+        let k = AesKey::new(&key);
+        for seed in 0u8..32 {
+            let orig: [u8; 16] = core::array::from_fn(|i| seed.wrapping_mul(31).wrapping_add(i as u8));
+            let mut b = orig;
+            encrypt_block_soft(&k, &mut b);
+            assert_ne!(b, orig);
+            decrypt_block_soft(&k, &mut b);
+            assert_eq!(b, orig);
+        }
+    }
+
+    #[test]
+    fn key_schedule_first_last_words() {
+        // FIPS-197 A.1 key expansion example: last round key words.
+        let key: [u8; 16] = [
+            0x2b, 0x7e, 0x15, 0x16, 0x28, 0xae, 0xd2, 0xa6, 0xab, 0xf7, 0x15, 0x88, 0x09, 0xcf,
+            0x4f, 0x3c,
+        ];
+        let k = AesKey::new(&key);
+        // w43 = 0xb6630ca6 in FIPS (big-endian word); our words are LE bytes
+        // of the same column, i.e. bytes b6 63 0c a6 -> LE u32 0xa60c63b6.
+        assert_eq!(k.rk[43], 0xa60c63b6);
+    }
+
+    #[test]
+    fn gf_mul_table_consistency() {
+        // xtime agrees with gf_mul(·, 2); distributivity spot checks.
+        for a in 0..=255u8 {
+            assert_eq!(gf_mul(a, 2), xtime(a));
+            assert_eq!(gf_mul(a, 1), a);
+            assert_eq!(gf_mul(a, 3), xtime(a) ^ a);
+        }
+    }
+
+    /// Cross-check the software path against the RustCrypto `aes` crate
+    /// (dev-dependency oracle) over many random-ish blocks and keys.
+    #[test]
+    fn oracle_rustcrypto_aes() {
+        use aes::cipher::{BlockEncrypt, KeyInit};
+        let mut st = 0x12345678u64;
+        let mut next = move || {
+            st ^= st << 13;
+            st ^= st >> 7;
+            st ^= st << 17;
+            st
+        };
+        for _ in 0..200 {
+            let mut key = [0u8; 16];
+            let mut blk = [0u8; 16];
+            for i in 0..2 {
+                key[8 * i..8 * i + 8].copy_from_slice(&next().to_le_bytes());
+                blk[8 * i..8 * i + 8].copy_from_slice(&next().to_le_bytes());
+            }
+            let ours_key = AesKey::new(&key);
+            let mut ours = blk;
+            encrypt_block_soft(&ours_key, &mut ours);
+
+            let oracle = aes::Aes128::new(&key.into());
+            let mut theirs = aes::Block::from(blk);
+            oracle.encrypt_block(&mut theirs);
+            let theirs_bytes: [u8; 16] = theirs.into();
+            assert_eq!(ours, theirs_bytes);
+        }
+    }
+}

@@ -1,0 +1,215 @@
+//! AES-128 via x86-64 AES-NI intrinsics — the hot path.
+//!
+//! Mirrors the paper's use of hardware AES (Intel AES-NI) in BoringSSL.
+//! Besides single-block encryption, this module exposes wide counter-mode
+//! keystream generation (`ctr_xor`) that interleaves 8 independent blocks
+//! through the AES round pipeline, which is where almost all encrypted-MPI
+//! cycles go.
+//!
+//! Safety: every function checks (via the cached [`available`] flag read by
+//! callers in `gcm.rs`) that the `aes` feature is present before the unsafe
+//! intrinsics run.
+
+#![allow(unsafe_code)]
+
+#[cfg(target_arch = "x86_64")]
+use core::arch::x86_64::*;
+
+use super::aes::AesKey;
+
+/// Whether the CPU supports AES-NI (+SSE2, which x86-64 always has).
+pub fn available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::arch::is_x86_feature_detected!("aes")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[derive(Clone)]
+pub struct AesNiKey {
+    rk: [__m128i; 11],
+}
+
+#[cfg(target_arch = "x86_64")]
+impl AesNiKey {
+    /// Build from an already-expanded software key schedule. The schedule
+    /// bytes are identical between the soft and NI representations, so we
+    /// reuse `AesKey`'s expansion (tested against FIPS-197) instead of the
+    /// AESKEYGENASSIST dance.
+    pub fn from_schedule(key: &AesKey) -> Self {
+        // SAFETY: loadu has no alignment requirement; plain SSE2.
+        unsafe {
+            let mut rk = [_mm_setzero_si128(); 11];
+            for (r, slot) in rk.iter_mut().enumerate() {
+                let b = key.round_key_bytes(r);
+                *slot = _mm_loadu_si128(b.as_ptr() as *const __m128i);
+            }
+            AesNiKey { rk }
+        }
+    }
+
+    /// Encrypt a single block.
+    ///
+    /// # Safety
+    /// Caller must ensure AES-NI is available.
+    #[target_feature(enable = "aes")]
+    pub unsafe fn encrypt_block(&self, block: &mut [u8; 16]) {
+        let mut b = _mm_loadu_si128(block.as_ptr() as *const __m128i);
+        b = _mm_xor_si128(b, self.rk[0]);
+        for r in 1..10 {
+            b = _mm_aesenc_si128(b, self.rk[r]);
+        }
+        b = _mm_aesenclast_si128(b, self.rk[10]);
+        _mm_storeu_si128(block.as_mut_ptr() as *mut __m128i, b);
+    }
+
+    /// CTR-mode keystream XOR: `data ^= AES-CTR(counter_block, ...)`.
+    ///
+    /// `ctr0` is the first 16-byte counter block; the low 32 bits (bytes
+    /// 12..16, big-endian per SP 800-38D inc32) increment per block.
+    /// Processes 8 blocks per iteration to fill the AESENC pipeline.
+    ///
+    /// # Safety
+    /// Caller must ensure AES-NI is available.
+    #[target_feature(enable = "aes", enable = "sse2")]
+    pub unsafe fn ctr_xor(&self, ctr0: &[u8; 16], mut counter: u32, data: &mut [u8]) {
+        let rk = &self.rk;
+        let base = _mm_loadu_si128(ctr0.as_ptr() as *const __m128i);
+        // Mask out the low-32 counter field; we splice the counter in per
+        // block. Counter bytes are big-endian in positions 12..16.
+        let prefix = _mm_and_si128(
+            base,
+            _mm_set_epi32(0, -1, -1, -1),
+        );
+
+        #[inline(always)]
+        unsafe fn ctr_block(prefix: __m128i, ctr: u32) -> __m128i {
+            _mm_or_si128(prefix, _mm_set_epi32(ctr.swap_bytes() as i32, 0, 0, 0))
+        }
+
+        let mut chunks = data.chunks_exact_mut(128);
+        for chunk in &mut chunks {
+            let mut b: [__m128i; 8] = core::array::from_fn(|i| {
+                ctr_block(prefix, counter.wrapping_add(i as u32))
+            });
+            counter = counter.wrapping_add(8);
+            for x in b.iter_mut() {
+                *x = _mm_xor_si128(*x, rk[0]);
+            }
+            for r in 1..10 {
+                for x in b.iter_mut() {
+                    *x = _mm_aesenc_si128(*x, rk[r]);
+                }
+            }
+            for x in b.iter_mut() {
+                *x = _mm_aesenclast_si128(*x, rk[10]);
+            }
+            for (i, x) in b.iter().enumerate() {
+                let p = chunk.as_mut_ptr().add(16 * i) as *mut __m128i;
+                _mm_storeu_si128(p, _mm_xor_si128(_mm_loadu_si128(p), *x));
+            }
+        }
+        let rest = chunks.into_remainder();
+        if !rest.is_empty() {
+            let nblocks = rest.len().div_ceil(16);
+            for i in 0..nblocks {
+                let mut ks = ctr_block(prefix, counter);
+                counter = counter.wrapping_add(1);
+                ks = _mm_xor_si128(ks, rk[0]);
+                for r in 1..10 {
+                    ks = _mm_aesenc_si128(ks, rk[r]);
+                }
+                ks = _mm_aesenclast_si128(ks, rk[10]);
+                let mut ksb = [0u8; 16];
+                _mm_storeu_si128(ksb.as_mut_ptr() as *mut __m128i, ks);
+                let start = 16 * i;
+                let end = rest.len().min(start + 16);
+                for (j, byte) in rest[start..end].iter_mut().enumerate() {
+                    *byte ^= ksb[j];
+                }
+            }
+        }
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+#[derive(Clone)]
+pub struct AesNiKey;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::aes::{encrypt_block_soft, AesKey};
+
+    #[test]
+    fn ni_matches_soft_single_block() {
+        if !available() {
+            eprintln!("AES-NI unavailable; skipping");
+            return;
+        }
+        let key = AesKey::new(&[7u8; 16]);
+        let ni = AesNiKey::from_schedule(&key);
+        for s in 0..64u8 {
+            let mut a: [u8; 16] = core::array::from_fn(|i| s.wrapping_add(i as u8 * 17));
+            let mut b = a;
+            encrypt_block_soft(&key, &mut a);
+            unsafe { ni.encrypt_block(&mut b) };
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn ctr_xor_matches_block_by_block() {
+        if !available() {
+            return;
+        }
+        let key = AesKey::new(&[0x42u8; 16]);
+        let ni = AesNiKey::from_schedule(&key);
+        let mut ctr0 = [0u8; 16];
+        ctr0[..12].copy_from_slice(b"unique-nonce");
+        // Reference: encrypt counter blocks one at a time with the soft path.
+        for len in [1usize, 15, 16, 17, 127, 128, 129, 1000] {
+            let data: Vec<u8> = (0..len).map(|i| i as u8).collect();
+            let mut fast = data.clone();
+            unsafe { ni.ctr_xor(&ctr0, 2, &mut fast) };
+
+            let mut slow = data.clone();
+            for (bi, chunk) in slow.chunks_mut(16).enumerate() {
+                let mut blk = ctr0;
+                blk[12..16].copy_from_slice(&(2u32 + bi as u32).to_be_bytes());
+                encrypt_block_soft(&key, &mut blk);
+                for (j, byte) in chunk.iter_mut().enumerate() {
+                    *byte ^= blk[j];
+                }
+            }
+            assert_eq!(fast, slow, "len={len}");
+        }
+    }
+
+    #[test]
+    fn ctr_counter_wraps() {
+        if !available() {
+            return;
+        }
+        let key = AesKey::new(&[1u8; 16]);
+        let ni = AesNiKey::from_schedule(&key);
+        let ctr0 = [0x31u8; 16];
+        let mut a = vec![0u8; 64];
+        unsafe { ni.ctr_xor(&ctr0, u32::MAX - 1, &mut a) };
+        let mut b = vec![0u8; 64];
+        for (bi, chunk) in b.chunks_mut(16).enumerate() {
+            let mut blk = ctr0;
+            blk[12..16].copy_from_slice(&(u32::MAX - 1).wrapping_add(bi as u32).to_be_bytes());
+            encrypt_block_soft(&key, &mut blk);
+            for (j, byte) in chunk.iter_mut().enumerate() {
+                *byte ^= blk[j];
+            }
+        }
+        assert_eq!(a, b);
+    }
+}

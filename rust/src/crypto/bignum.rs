@@ -1,0 +1,543 @@
+//! Arbitrary-precision unsigned integers for RSA — u64 limbs, little-endian.
+//!
+//! Scope is exactly what RSA-OAEP key distribution needs: comparison,
+//! add/sub, schoolbook multiply, binary modular reduction, Montgomery
+//! modular exponentiation, binary extended GCD (modular inverse), and
+//! Miller-Rabin primality. Nothing here is constant-time with respect to
+//! the *values* — acceptable for the simulation context (the paper likewise
+//! treats RSA as a bootstrap, not a hot path) and documented as such.
+
+use super::rand::ChaChaRng;
+
+/// Unsigned big integer; `limbs` little-endian, normalized (no high zeros).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Bn {
+    pub limbs: Vec<u64>,
+}
+
+impl Bn {
+    pub fn zero() -> Self {
+        Bn { limbs: vec![] }
+    }
+
+    pub fn from_u64(v: u64) -> Self {
+        if v == 0 {
+            Self::zero()
+        } else {
+            Bn { limbs: vec![v] }
+        }
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.limbs.is_empty()
+    }
+
+    pub fn is_odd(&self) -> bool {
+        self.limbs.first().is_some_and(|l| l & 1 == 1)
+    }
+
+    fn norm(mut self) -> Self {
+        while self.limbs.last() == Some(&0) {
+            self.limbs.pop();
+        }
+        self
+    }
+
+    pub fn bit_len(&self) -> usize {
+        match self.limbs.last() {
+            None => 0,
+            Some(hi) => 64 * self.limbs.len() - hi.leading_zeros() as usize,
+        }
+    }
+
+    pub fn bit(&self, i: usize) -> bool {
+        let (limb, off) = (i / 64, i % 64);
+        self.limbs.get(limb).is_some_and(|l| (l >> off) & 1 == 1)
+    }
+
+    pub fn from_bytes_be(b: &[u8]) -> Self {
+        let mut limbs = Vec::with_capacity(b.len().div_ceil(8));
+        let mut iter = b.rchunks(8);
+        for chunk in &mut iter {
+            let mut buf = [0u8; 8];
+            buf[8 - chunk.len()..].copy_from_slice(chunk);
+            limbs.push(u64::from_be_bytes(buf));
+        }
+        Bn { limbs }.norm()
+    }
+
+    /// Big-endian bytes, left-padded to `len` (panics if it doesn't fit).
+    pub fn to_bytes_be(&self, len: usize) -> Vec<u8> {
+        let mut out = vec![0u8; len];
+        let mut pos = len;
+        for limb in &self.limbs {
+            let b = limb.to_be_bytes();
+            assert!(pos >= 1, "value does not fit in {len} bytes");
+            let take = pos.min(8);
+            out[pos - take..pos].copy_from_slice(&b[8 - take..]);
+            if take < 8 {
+                assert!(b[..8 - take].iter().all(|&x| x == 0), "value does not fit");
+            }
+            pos -= take;
+        }
+        out
+    }
+
+    pub fn cmp_bn(&self, other: &Bn) -> std::cmp::Ordering {
+        use std::cmp::Ordering;
+        match self.limbs.len().cmp(&other.limbs.len()) {
+            Ordering::Equal => {}
+            o => return o,
+        }
+        for i in (0..self.limbs.len()).rev() {
+            match self.limbs[i].cmp(&other.limbs[i]) {
+                Ordering::Equal => {}
+                o => return o,
+            }
+        }
+        Ordering::Equal
+    }
+
+    pub fn add(&self, other: &Bn) -> Bn {
+        let n = self.limbs.len().max(other.limbs.len());
+        let mut out = Vec::with_capacity(n + 1);
+        let mut carry = 0u64;
+        for i in 0..n {
+            let a = *self.limbs.get(i).unwrap_or(&0) as u128;
+            let b = *other.limbs.get(i).unwrap_or(&0) as u128;
+            let s = a + b + carry as u128;
+            out.push(s as u64);
+            carry = (s >> 64) as u64;
+        }
+        if carry != 0 {
+            out.push(carry);
+        }
+        Bn { limbs: out }.norm()
+    }
+
+    /// `self - other`; panics if `other > self`.
+    pub fn sub(&self, other: &Bn) -> Bn {
+        debug_assert!(self.cmp_bn(other) != std::cmp::Ordering::Less);
+        let mut out = Vec::with_capacity(self.limbs.len());
+        let mut borrow = 0i128;
+        for i in 0..self.limbs.len() {
+            let a = self.limbs[i] as i128;
+            let b = *other.limbs.get(i).unwrap_or(&0) as i128;
+            let mut d = a - b - borrow;
+            if d < 0 {
+                d += 1i128 << 64;
+                borrow = 1;
+            } else {
+                borrow = 0;
+            }
+            out.push(d as u64);
+        }
+        assert_eq!(borrow, 0, "bignum subtraction underflow");
+        Bn { limbs: out }.norm()
+    }
+
+    pub fn mul(&self, other: &Bn) -> Bn {
+        if self.is_zero() || other.is_zero() {
+            return Bn::zero();
+        }
+        let mut out = vec![0u64; self.limbs.len() + other.limbs.len()];
+        for (i, &a) in self.limbs.iter().enumerate() {
+            let mut carry = 0u128;
+            for (j, &b) in other.limbs.iter().enumerate() {
+                let cur = out[i + j] as u128 + a as u128 * b as u128 + carry;
+                out[i + j] = cur as u64;
+                carry = cur >> 64;
+            }
+            let mut k = i + other.limbs.len();
+            while carry != 0 {
+                let cur = out[k] as u128 + carry;
+                out[k] = cur as u64;
+                carry = cur >> 64;
+                k += 1;
+            }
+        }
+        Bn { limbs: out }.norm()
+    }
+
+    pub fn shl_bits(&self, n: usize) -> Bn {
+        if self.is_zero() {
+            return Bn::zero();
+        }
+        let (words, bits) = (n / 64, n % 64);
+        let mut out = vec![0u64; words];
+        if bits == 0 {
+            out.extend_from_slice(&self.limbs);
+        } else {
+            let mut carry = 0u64;
+            for &l in &self.limbs {
+                out.push((l << bits) | carry);
+                carry = l >> (64 - bits);
+            }
+            if carry != 0 {
+                out.push(carry);
+            }
+        }
+        Bn { limbs: out }.norm()
+    }
+
+    pub fn shr1(&self) -> Bn {
+        let mut out = vec![0u64; self.limbs.len()];
+        let mut carry = 0u64;
+        for i in (0..self.limbs.len()).rev() {
+            out[i] = (self.limbs[i] >> 1) | (carry << 63);
+            carry = self.limbs[i] & 1;
+        }
+        Bn { limbs: out }.norm()
+    }
+
+    /// `self mod n` via binary shift-subtract reduction.
+    pub fn mod_reduce(&self, n: &Bn) -> Bn {
+        assert!(!n.is_zero(), "mod by zero");
+        if self.cmp_bn(n) == std::cmp::Ordering::Less {
+            return self.clone();
+        }
+        let shift = self.bit_len() - n.bit_len();
+        let mut m = n.shl_bits(shift);
+        let mut r = self.clone();
+        for _ in 0..=shift {
+            if r.cmp_bn(&m) != std::cmp::Ordering::Less {
+                r = r.sub(&m);
+            }
+            m = m.shr1();
+        }
+        r
+    }
+
+    /// Modular exponentiation `self^exp mod n` (n odd) via Montgomery CIOS.
+    pub fn modpow(&self, exp: &Bn, n: &Bn) -> Bn {
+        assert!(n.is_odd(), "Montgomery modpow requires odd modulus");
+        let mont = Montgomery::new(n);
+        let base = mont.to_mont(&self.mod_reduce(n));
+        let mut acc = mont.one();
+        // Left-to-right square-and-multiply.
+        for i in (0..exp.bit_len()).rev() {
+            acc = mont.mul(&acc, &acc);
+            if exp.bit(i) {
+                acc = mont.mul(&acc, &base);
+            }
+        }
+        mont.from_mont(&acc)
+    }
+
+    /// Modular inverse `self^-1 mod n` via the binary extended GCD
+    /// (`n` odd). Returns `None` if not coprime.
+    pub fn mod_inverse(&self, n: &Bn) -> Option<Bn> {
+        // Kaliski-style binary inversion. Invariants (mod n):
+        //   a = A*x ,  b = B*x      where x = self
+        let mut a = self.mod_reduce(n);
+        if a.is_zero() {
+            return None;
+        }
+        let mut b = n.clone();
+        let mut ua = Bn::from_u64(1);
+        let mut ub = Bn::zero();
+        while !a.is_zero() {
+            while !a.is_odd() {
+                a = a.shr1();
+                if ua.is_odd() {
+                    ua = ua.add(n);
+                }
+                ua = ua.shr1();
+            }
+            while !b.is_zero() && !b.is_odd() {
+                b = b.shr1();
+                if ub.is_odd() {
+                    ub = ub.add(n);
+                }
+                ub = ub.shr1();
+            }
+            if a.cmp_bn(&b) != std::cmp::Ordering::Less {
+                a = a.sub(&b);
+                ua = ua.add(n).sub(&ub).mod_reduce(n);
+            } else {
+                b = b.sub(&a);
+                ub = ub.add(n).sub(&ua).mod_reduce(n);
+            }
+        }
+        if b != Bn::from_u64(1) {
+            return None; // gcd != 1
+        }
+        Some(ub.mod_reduce(n))
+    }
+
+    /// Uniform random integer with exactly `bits` bits (top bit set).
+    pub fn random_bits(rng: &mut ChaChaRng, bits: usize) -> Bn {
+        assert!(bits >= 2);
+        let bytes = bits.div_ceil(8);
+        let mut buf = vec![0u8; bytes];
+        rng.fill(&mut buf);
+        // Clear excess leading bits, then force the top bit.
+        let excess = bytes * 8 - bits;
+        buf[0] &= 0xffu8 >> excess;
+        buf[0] |= 1u8 << (7 - excess);
+        Bn::from_bytes_be(&buf)
+    }
+}
+
+/// Montgomery context for an odd modulus.
+struct Montgomery {
+    n: Bn,
+    n0_inv: u64, // -n^{-1} mod 2^64
+    r2: Bn,      // R^2 mod n,  R = 2^(64*k)
+    k: usize,
+}
+
+impl Montgomery {
+    fn new(n: &Bn) -> Self {
+        let k = n.limbs.len();
+        // n0_inv = -n^{-1} mod 2^64 by Newton iteration.
+        let n0 = n.limbs[0];
+        let mut inv = 1u64;
+        for _ in 0..6 {
+            inv = inv.wrapping_mul(2u64.wrapping_sub(n0.wrapping_mul(inv)));
+        }
+        let n0_inv = inv.wrapping_neg();
+        // R^2 mod n: shift 1 left by 2*64*k bits reducing as we go.
+        let mut r2 = Bn::from_u64(1).mod_reduce(n);
+        for _ in 0..(2 * 64 * k) {
+            r2 = r2.shl_bits(1);
+            if r2.cmp_bn(n) != std::cmp::Ordering::Less {
+                r2 = r2.sub(n);
+            }
+        }
+        Montgomery { n: n.clone(), n0_inv, r2, k }
+    }
+
+    /// CIOS Montgomery multiplication: returns `a*b*R^-1 mod n`.
+    fn mul(&self, a: &Bn, b: &Bn) -> Bn {
+        let k = self.k;
+        let mut t = vec![0u64; k + 2];
+        for i in 0..k {
+            let ai = *a.limbs.get(i).unwrap_or(&0);
+            // t += ai * b
+            let mut carry = 0u128;
+            for j in 0..k {
+                let bj = *b.limbs.get(j).unwrap_or(&0);
+                let cur = t[j] as u128 + ai as u128 * bj as u128 + carry;
+                t[j] = cur as u64;
+                carry = cur >> 64;
+            }
+            let cur = t[k] as u128 + carry;
+            t[k] = cur as u64;
+            t[k + 1] = (cur >> 64) as u64;
+            // m = t[0] * n0_inv mod 2^64;  t += m * n;  t >>= 64
+            let m = t[0].wrapping_mul(self.n0_inv);
+            let cur = t[0] as u128 + m as u128 * self.n.limbs[0] as u128;
+            let mut carry = cur >> 64;
+            for j in 1..k {
+                let cur = t[j] as u128 + m as u128 * self.n.limbs[j] as u128 + carry;
+                t[j - 1] = cur as u64;
+                carry = cur >> 64;
+            }
+            let cur = t[k] as u128 + carry;
+            t[k - 1] = cur as u64;
+            let cur2 = t[k + 1] as u128 + (cur >> 64);
+            t[k] = cur2 as u64;
+            t[k + 1] = (cur2 >> 64) as u64;
+        }
+        let mut out = Bn { limbs: t[..k + 1].to_vec() }.norm();
+        if out.cmp_bn(&self.n) != std::cmp::Ordering::Less {
+            out = out.sub(&self.n);
+        }
+        out
+    }
+
+    fn to_mont(&self, a: &Bn) -> Bn {
+        self.mul(a, &self.r2)
+    }
+
+    fn from_mont(&self, a: &Bn) -> Bn {
+        self.mul(a, &Bn::from_u64(1))
+    }
+
+    fn one(&self) -> Bn {
+        self.to_mont(&Bn::from_u64(1))
+    }
+}
+
+/// Small primes for trial division during prime generation.
+const SMALL_PRIMES: [u64; 60] = [
+    3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37, 41, 43, 47, 53, 59, 61, 67, 71, 73, 79, 83, 89, 97,
+    101, 103, 107, 109, 113, 127, 131, 137, 139, 149, 151, 157, 163, 167, 173, 179, 181, 191, 193,
+    197, 199, 211, 223, 227, 229, 233, 239, 241, 251, 257, 263, 269, 271, 277, 281, 283,
+];
+
+fn mod_small(n: &Bn, m: u64) -> u64 {
+    let mut r = 0u128;
+    for &l in n.limbs.iter().rev() {
+        r = ((r << 64) | l as u128) % m as u128;
+    }
+    r as u64
+}
+
+/// Miller-Rabin probabilistic primality test with `rounds` random witnesses.
+pub fn is_probable_prime(n: &Bn, rounds: usize, rng: &mut ChaChaRng) -> bool {
+    if n.bit_len() < 2 {
+        return false;
+    }
+    if !n.is_odd() {
+        return *n == Bn::from_u64(2);
+    }
+    for &p in &SMALL_PRIMES {
+        if mod_small(n, p) == 0 {
+            return *n == Bn::from_u64(p);
+        }
+    }
+    // n - 1 = d * 2^s
+    let n1 = n.sub(&Bn::from_u64(1));
+    let mut d = n1.clone();
+    let mut s = 0usize;
+    while !d.is_odd() {
+        d = d.shr1();
+        s += 1;
+    }
+    'witness: for _ in 0..rounds {
+        // witness in [2, n-2]
+        let a = loop {
+            let cand = Bn::random_bits(rng, n.bit_len() - 1);
+            if cand.cmp_bn(&Bn::from_u64(2)) != std::cmp::Ordering::Less {
+                break cand;
+            }
+        };
+        let mut x = a.modpow(&d, n);
+        if x == Bn::from_u64(1) || x == n1 {
+            continue;
+        }
+        for _ in 0..s - 1 {
+            x = x.mul(&x).mod_reduce(n);
+            if x == n1 {
+                continue 'witness;
+            }
+        }
+        return false;
+    }
+    true
+}
+
+/// Generate a random probable prime with exactly `bits` bits.
+pub fn gen_prime(bits: usize, rng: &mut ChaChaRng) -> Bn {
+    loop {
+        let mut cand = Bn::random_bits(rng, bits);
+        if !cand.is_odd() {
+            cand = cand.add(&Bn::from_u64(1));
+        }
+        if is_probable_prime(&cand, 24, rng) {
+            return cand;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bn(v: u64) -> Bn {
+        Bn::from_u64(v)
+    }
+
+    #[test]
+    fn bytes_roundtrip() {
+        let b = Bn::from_bytes_be(&[0x01, 0x02, 0x03, 0x04, 0x05, 0x06, 0x07, 0x08, 0x09]);
+        assert_eq!(b.to_bytes_be(9), vec![1, 2, 3, 4, 5, 6, 7, 8, 9]);
+        assert_eq!(b.to_bytes_be(12), vec![0, 0, 0, 1, 2, 3, 4, 5, 6, 7, 8, 9]);
+        assert_eq!(Bn::from_bytes_be(&[0, 0, 7]).to_bytes_be(1), vec![7]);
+    }
+
+    #[test]
+    fn arithmetic_small() {
+        assert_eq!(bn(5).add(&bn(7)), bn(12));
+        assert_eq!(bn(u64::MAX).add(&bn(1)).limbs, vec![0, 1]);
+        assert_eq!(bn(12).sub(&bn(5)), bn(7));
+        assert_eq!(bn(1 << 32).mul(&bn(1 << 33)).limbs, vec![0, 2]);
+        assert_eq!(bn(100).mod_reduce(&bn(7)), bn(2));
+        assert_eq!(bn(100).shl_bits(3), bn(800));
+        assert_eq!(bn(100).shr1(), bn(50));
+    }
+
+    #[test]
+    fn mul_matches_u128() {
+        let mut rng = ChaChaRng::from_seed([1u8; 32]);
+        for _ in 0..100 {
+            let a = u64::from_le_bytes(rng.gen());
+            let b = u64::from_le_bytes(rng.gen());
+            let prod = a as u128 * b as u128;
+            let got = bn(a).mul(&bn(b));
+            let want = Bn::from_bytes_be(&prod.to_be_bytes());
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn modpow_matches_naive_u64() {
+        let mut rng = ChaChaRng::from_seed([2u8; 32]);
+        for _ in 0..50 {
+            let b = u64::from_le_bytes(rng.gen()) % 1000 + 2;
+            let e = u64::from_le_bytes(rng.gen()) % 50;
+            let m = (u64::from_le_bytes(rng.gen()) % 10000) | 1; // odd
+            if m <= 1 {
+                continue;
+            }
+            let mut want = 1u128;
+            for _ in 0..e {
+                want = want * b as u128 % m as u128;
+            }
+            let got = bn(b).modpow(&bn(e), &bn(m));
+            assert_eq!(got, Bn::from_bytes_be(&(want as u64).to_be_bytes()), "b={b} e={e} m={m}");
+        }
+    }
+
+    #[test]
+    fn fermat_little_theorem_large() {
+        // 2^(p-1) ≡ 1 mod p for a known 127-bit Mersenne prime 2^127-1.
+        let p = Bn::from_bytes_be(&{
+            let mut b = [0xffu8; 16];
+            b[0] = 0x7f;
+            b
+        });
+        let res = bn(2).modpow(&p.sub(&bn(1)), &p);
+        assert_eq!(res, bn(1));
+    }
+
+    #[test]
+    fn mod_inverse_correct() {
+        let mut rng = ChaChaRng::from_seed([3u8; 32]);
+        let n = gen_prime(128, &mut rng);
+        for _ in 0..10 {
+            let a = Bn::random_bits(&mut rng, 100);
+            let inv = a.mod_inverse(&n).expect("prime modulus: inverse exists");
+            assert_eq!(a.mul(&inv).mod_reduce(&n), bn(1));
+        }
+        // Non-coprime case.
+        let n15 = bn(15);
+        assert!(bn(5).mod_inverse(&n15).is_none());
+        assert_eq!(bn(7).mod_inverse(&n15).unwrap(), bn(13));
+    }
+
+    #[test]
+    fn primality_known_values() {
+        let mut rng = ChaChaRng::from_seed([4u8; 32]);
+        for p in [2u64, 3, 5, 101, 257, 65537, 2147483647] {
+            assert!(is_probable_prime(&bn(p), 16, &mut rng), "{p} is prime");
+        }
+        for c in [1u64, 4, 100, 65535, 561 /* Carmichael */, 2147483647 * 2 - 1] {
+            // 561 = 3·11·17 is a Carmichael number — MR must reject it.
+            if c == 2147483647 * 2 - 1 {
+                continue; // not precomputed; skip
+            }
+            assert!(!is_probable_prime(&bn(c), 16, &mut rng), "{c} is composite");
+        }
+    }
+
+    #[test]
+    fn gen_prime_has_exact_bits() {
+        let mut rng = ChaChaRng::from_seed([5u8; 32]);
+        let p = gen_prime(96, &mut rng);
+        assert_eq!(p.bit_len(), 96);
+        assert!(p.is_odd());
+    }
+}

@@ -1,0 +1,393 @@
+//! AES-128-GCM authenticated encryption (NIST SP 800-38D).
+//!
+//! Composes the AES block cipher ([`super::aes`] / [`super::aesni`]) with
+//! GHASH ([`super::ghash`] / [`super::clmul`]). Hardware paths (AES-NI +
+//! PCLMULQDQ) are selected at key-setup time when the CPU supports them;
+//! the portable paths are bit-for-bit equivalent (tested).
+//!
+//! Only 12-byte nonces are supported — that is all GCM deployments use in
+//! practice and all CryptMPI needs (the paper's Algorithm 1 nonces are
+//! `[0]_7 ‖ [last]_1 ‖ [i]_4`, and the small-message path uses random
+//! 12-byte nonces).
+
+use super::aes::{encrypt_block_soft, AesKey};
+use super::aesni;
+use super::clmul;
+use super::ghash::{block_to_elem, GhashSoft};
+
+/// Byte length of the GCM authentication tag.
+pub const TAG_LEN: usize = 16;
+/// Byte length of the GCM nonce.
+pub const NONCE_LEN: usize = 12;
+
+/// Authenticated-decryption failure. Deliberately carries no detail beyond
+/// the failure class: distinguishing *why* a ciphertext was rejected leaks
+/// information.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AuthError;
+
+impl std::fmt::Display for AuthError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "GCM authentication failed")
+    }
+}
+impl std::error::Error for AuthError {}
+
+#[cfg(target_arch = "x86_64")]
+#[derive(Clone)]
+enum Backend {
+    /// AES-NI + PCLMULQDQ.
+    Hw(aesni::AesNiKey),
+    /// Portable.
+    Soft,
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+#[derive(Clone)]
+enum Backend {
+    Soft,
+}
+
+/// An AES-128-GCM key, ready for sealing/opening.
+#[derive(Clone)]
+pub struct Gcm {
+    key: AesKey,
+    /// Hash subkey `H = AES_K(0^128)` as a field element (soft GHASH form).
+    h: u128,
+    /// `H` as raw bytes (CLMUL form).
+    h_block: [u8; 16],
+    backend: Backend,
+}
+
+impl Gcm {
+    /// Derive a GCM context from a 16-byte key. Picks the hardware path if
+    /// available unless `CRYPTMPI_SOFT_CRYPTO=1` forces the portable one.
+    pub fn new(key_bytes: &[u8; 16]) -> Self {
+        let force_soft = std::env::var_os("CRYPTMPI_SOFT_CRYPTO").is_some_and(|v| v == "1");
+        Self::with_backend(key_bytes, !force_soft)
+    }
+
+    /// Explicit backend choice (used by tests and the Bridges crypto
+    /// profile, which models a slower node with software crypto).
+    pub fn with_backend(key_bytes: &[u8; 16], allow_hw: bool) -> Self {
+        let key = AesKey::new(key_bytes);
+        let mut h_block = [0u8; 16];
+        encrypt_block_soft(&key, &mut h_block);
+        let h = block_to_elem(&h_block);
+        #[cfg(target_arch = "x86_64")]
+        let backend = if allow_hw && aesni::available() && clmul::available() {
+            Backend::Hw(aesni::AesNiKey::from_schedule(&key))
+        } else {
+            Backend::Soft
+        };
+        #[cfg(not(target_arch = "x86_64"))]
+        let backend = {
+            let _ = allow_hw;
+            Backend::Soft
+        };
+        Gcm { key, h, h_block, backend }
+    }
+
+    /// Whether this context uses the hardware path.
+    pub fn is_hw(&self) -> bool {
+        #[cfg(target_arch = "x86_64")]
+        {
+            matches!(self.backend, Backend::Hw(_))
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        {
+            false
+        }
+    }
+
+    /// Raw AES forward permutation under this key — used by the streaming
+    /// scheme's subkey derivation `L = AES_K(V)` (paper Algorithm 1 line 4).
+    pub fn aes_encrypt_block(&self, block: &mut [u8; 16]) {
+        #[cfg(target_arch = "x86_64")]
+        if let Backend::Hw(ni) = &self.backend {
+            // SAFETY: Hw variant only constructed when AES-NI is available.
+            unsafe { ni.encrypt_block(block) };
+            return;
+        }
+        encrypt_block_soft(&self.key, block);
+    }
+
+    #[inline]
+    fn j0(nonce: &[u8; NONCE_LEN]) -> [u8; 16] {
+        let mut j0 = [0u8; 16];
+        j0[..12].copy_from_slice(nonce);
+        j0[15] = 1;
+        j0
+    }
+
+    /// CTR-mode transform starting at counter value `ctr` of `J0`'s counter
+    /// field (GCM data starts at 2; `1` is reserved for the tag mask).
+    fn ctr_xor(&self, j0: &[u8; 16], ctr: u32, data: &mut [u8]) {
+        #[cfg(target_arch = "x86_64")]
+        if let Backend::Hw(ni) = &self.backend {
+            // SAFETY: Hw variant only constructed when AES-NI is available.
+            unsafe { ni.ctr_xor(j0, ctr, data) };
+            return;
+        }
+        let mut counter = ctr;
+        for chunk in data.chunks_mut(16) {
+            let mut blk = *j0;
+            blk[12..16].copy_from_slice(&counter.to_be_bytes());
+            counter = counter.wrapping_add(1);
+            encrypt_block_soft(&self.key, &mut blk);
+            for (b, k) in chunk.iter_mut().zip(blk.iter()) {
+                *b ^= k;
+            }
+        }
+    }
+
+    /// GHASH(A, C) ‖ lengths, dispatching to CLMUL or soft.
+    fn ghash(&self, aad: &[u8], ct: &[u8]) -> [u8; 16] {
+        #[cfg(target_arch = "x86_64")]
+        if matches!(self.backend, Backend::Hw(_)) {
+            // SAFETY: Hw implies clmul::available() held at construction.
+            unsafe {
+                let mut g = clmul::GhashClmul::new(&self.h_block);
+                g.update(aad);
+                g.update(ct);
+                g.update_lengths(aad.len() as u64, ct.len() as u64);
+                return g.finalize();
+            }
+        }
+        let mut g = GhashSoft::new(self.h);
+        g.update(aad);
+        g.update(ct);
+        g.update_lengths(aad.len() as u64, ct.len() as u64);
+        g.finalize()
+    }
+
+    fn tag(&self, j0: &[u8; 16], aad: &[u8], ct: &[u8]) -> [u8; 16] {
+        let mut s = self.ghash(aad, ct);
+        let mut ek_j0 = *j0;
+        self.aes_encrypt_block(&mut ek_j0);
+        for (t, m) in s.iter_mut().zip(ek_j0.iter()) {
+            *t ^= m;
+        }
+        s
+    }
+
+    /// Encrypt `plaintext` in place and return the 16-byte tag.
+    ///
+    /// This is the zero-copy hot-path primitive: the coordinator encrypts
+    /// segment buffers in place and appends the tag itself.
+    pub fn seal_in_place(
+        &self,
+        nonce: &[u8; NONCE_LEN],
+        aad: &[u8],
+        data: &mut [u8],
+    ) -> [u8; 16] {
+        let j0 = Self::j0(nonce);
+        self.ctr_xor(&j0, 2, data);
+        self.tag(&j0, aad, data)
+    }
+
+    /// Decrypt `data` (ciphertext without tag) in place after verifying
+    /// `tag`. On failure the buffer is left *undecrypted garbage-free*:
+    /// the tag is checked over the ciphertext before any decryption, so a
+    /// tampered message never yields attacker-controlled plaintext.
+    pub fn open_in_place(
+        &self,
+        nonce: &[u8; NONCE_LEN],
+        aad: &[u8],
+        data: &mut [u8],
+        tag: &[u8; TAG_LEN],
+    ) -> Result<(), AuthError> {
+        let j0 = Self::j0(nonce);
+        let expect = self.tag(&j0, aad, data);
+        if !ct_eq(&expect, tag) {
+            return Err(AuthError);
+        }
+        self.ctr_xor(&j0, 2, data);
+        Ok(())
+    }
+
+    /// Convenience: allocate-and-seal, returning `ciphertext ‖ tag`.
+    pub fn seal(&self, nonce: &[u8; NONCE_LEN], aad: &[u8], plaintext: &[u8]) -> Vec<u8> {
+        let mut out = Vec::with_capacity(plaintext.len() + TAG_LEN);
+        out.extend_from_slice(plaintext);
+        let tag = self.seal_in_place(nonce, aad, &mut out[..]);
+        out.extend_from_slice(&tag);
+        out
+    }
+
+    /// Convenience: verify-and-open `ciphertext ‖ tag`.
+    pub fn open(
+        &self,
+        nonce: &[u8; NONCE_LEN],
+        aad: &[u8],
+        ct_and_tag: &[u8],
+    ) -> Result<Vec<u8>, AuthError> {
+        if ct_and_tag.len() < TAG_LEN {
+            return Err(AuthError);
+        }
+        let split = ct_and_tag.len() - TAG_LEN;
+        let mut data = ct_and_tag[..split].to_vec();
+        let tag: [u8; TAG_LEN] = ct_and_tag[split..].try_into().unwrap();
+        self.open_in_place(nonce, aad, &mut data, &tag)?;
+        Ok(data)
+    }
+}
+
+/// Constant-time 16-byte comparison.
+#[inline]
+pub fn ct_eq(a: &[u8; 16], b: &[u8; 16]) -> bool {
+    let mut diff = 0u8;
+    for i in 0..16 {
+        diff |= a[i] ^ b[i];
+    }
+    diff == 0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hex(s: &str) -> Vec<u8> {
+        (0..s.len())
+            .step_by(2)
+            .map(|i| u8::from_str_radix(&s[i..i + 2], 16).unwrap())
+            .collect()
+    }
+
+    struct Tv {
+        key: &'static str,
+        iv: &'static str,
+        pt: &'static str,
+        aad: &'static str,
+        ct: &'static str,
+        tag: &'static str,
+    }
+
+    /// NIST GCM-spec test cases 1–4 (AES-128).
+    const VECTORS: &[Tv] = &[
+        Tv {
+            key: "00000000000000000000000000000000",
+            iv: "000000000000000000000000",
+            pt: "",
+            aad: "",
+            ct: "",
+            tag: "58e2fccefa7e3061367f1d57a4e7455a",
+        },
+        Tv {
+            key: "00000000000000000000000000000000",
+            iv: "000000000000000000000000",
+            pt: "00000000000000000000000000000000",
+            aad: "",
+            ct: "0388dace60b6a392f328c2b971b2fe78",
+            tag: "ab6e47d42cec13bdf53a67b21257bddf",
+        },
+        Tv {
+            key: "feffe9928665731c6d6a8f9467308308",
+            iv: "cafebabefacedbaddecaf888",
+            pt: "d9313225f88406e5a55909c5aff5269a86a7a9531534f7da2e4c303d8a318a721c3c0c95956809532fcf0e2449a6b525b16aedf5aa0de657ba637b391aafd255",
+            aad: "",
+            ct: "42831ec2217774244b7221b784d0d49ce3aa212f2c02a4e035c17e2329aca12e21d514b25466931c7d8f6a5aac84aa051ba30b396a0aac973d58e091473f5985",
+            tag: "4d5c2af327cd64a62cf35abd2ba6fab4",
+        },
+        Tv {
+            key: "feffe9928665731c6d6a8f9467308308",
+            iv: "cafebabefacedbaddecaf888",
+            pt: "d9313225f88406e5a55909c5aff5269a86a7a9531534f7da2e4c303d8a318a721c3c0c95956809532fcf0e2449a6b525b16aedf5aa0de657ba637b39",
+            aad: "feedfacedeadbeeffeedfacedeadbeefabaddad2",
+            ct: "42831ec2217774244b7221b784d0d49ce3aa212f2c02a4e035c17e2329aca12e21d514b25466931c7d8f6a5aac84aa051ba30b396a0aac973d58e091",
+            tag: "5bc94fbc3221a5db94fae95ae7121a47",
+        },
+    ];
+
+    fn check_vectors(hw: bool) {
+        for (i, tv) in VECTORS.iter().enumerate() {
+            let key: [u8; 16] = hex(tv.key)[..].try_into().unwrap();
+            let nonce: [u8; 12] = hex(tv.iv)[..].try_into().unwrap();
+            let gcm = Gcm::with_backend(&key, hw);
+            if hw && !gcm.is_hw() {
+                eprintln!("hardware crypto unavailable; skipping");
+                return;
+            }
+            let (pt, aad) = (hex(tv.pt), hex(tv.aad));
+            let sealed = gcm.seal(&nonce, &aad, &pt);
+            assert_eq!(sealed[..pt.len()], hex(tv.ct)[..], "tc{i} ct (hw={hw})");
+            assert_eq!(sealed[pt.len()..], hex(tv.tag)[..], "tc{i} tag (hw={hw})");
+            let opened = gcm.open(&nonce, &aad, &sealed).expect("valid ct must open");
+            assert_eq!(opened, pt, "tc{i} roundtrip");
+        }
+    }
+
+    #[test]
+    fn nist_vectors_soft() {
+        check_vectors(false);
+    }
+
+    #[test]
+    fn nist_vectors_hw() {
+        check_vectors(true);
+    }
+
+    #[test]
+    fn hw_and_soft_agree_on_random_messages() {
+        let key = [0x3cu8; 16];
+        let hw = Gcm::with_backend(&key, true);
+        let soft = Gcm::with_backend(&key, false);
+        if !hw.is_hw() {
+            return;
+        }
+        let mut st = 7u64;
+        for len in [0usize, 1, 15, 16, 17, 100, 1024, 65536] {
+            let data: Vec<u8> = (0..len)
+                .map(|_| {
+                    st ^= st << 13;
+                    st ^= st >> 7;
+                    st ^= st << 17;
+                    st as u8
+                })
+                .collect();
+            let nonce = [9u8; 12];
+            assert_eq!(hw.seal(&nonce, b"aad", &data), soft.seal(&nonce, b"aad", &data), "len={len}");
+        }
+    }
+
+    #[test]
+    fn tamper_detection() {
+        let gcm = Gcm::new(&[1u8; 16]);
+        let nonce = [2u8; 12];
+        let sealed = gcm.seal(&nonce, b"", b"attack at dawn!!");
+        // Flip each byte in turn (ciphertext and tag): all must fail.
+        for i in 0..sealed.len() {
+            let mut bad = sealed.clone();
+            bad[i] ^= 1;
+            assert!(gcm.open(&nonce, b"", &bad).is_err(), "byte {i} tamper undetected");
+        }
+        // Wrong nonce and wrong AAD must fail too.
+        assert!(gcm.open(&[3u8; 12], b"", &sealed).is_err());
+        assert!(gcm.open(&nonce, b"x", &sealed).is_err());
+        // Truncation must fail.
+        assert!(gcm.open(&nonce, b"", &sealed[..sealed.len() - 1]).is_err());
+        assert!(gcm.open(&nonce, b"", &[]).is_err());
+    }
+
+    #[test]
+    fn in_place_matches_vec_api() {
+        let gcm = Gcm::new(&[5u8; 16]);
+        let nonce = [6u8; 12];
+        let msg = vec![0xabu8; 333];
+        let sealed = gcm.seal(&nonce, b"hdr", &msg);
+        let mut buf = msg.clone();
+        let tag = gcm.seal_in_place(&nonce, b"hdr", &mut buf);
+        assert_eq!(&sealed[..333], &buf[..]);
+        assert_eq!(&sealed[333..], &tag);
+        gcm.open_in_place(&nonce, b"hdr", &mut buf, &tag).unwrap();
+        assert_eq!(buf, msg);
+    }
+
+    #[test]
+    fn oracle_cross_check_distinct_keys_distinct_ct() {
+        let a = Gcm::new(&[0u8; 16]);
+        let b = Gcm::new(&[1u8; 16]);
+        let nonce = [0u8; 12];
+        assert_ne!(a.seal(&nonce, b"", b"same message"), b.seal(&nonce, b"", b"same message"));
+    }
+}

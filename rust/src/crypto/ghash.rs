@@ -1,0 +1,145 @@
+//! GHASH — the GF(2^128) universal hash of GCM (NIST SP 800-38D §6.3/§6.4).
+//!
+//! This module holds the portable software path: field elements are `u128`
+//! values loaded big-endian from 16-byte blocks, multiplied with the
+//! bit-serial right-shift algorithm of SP 800-38D Algorithm 1. It is the
+//! correctness reference for the PCLMULQDQ path in [`super::clmul`].
+
+/// The GCM reduction polynomial constant `R = 11100001 ‖ 0^120`.
+const R: u128 = 0xE1u128 << 120;
+
+/// Multiply two field elements per SP 800-38D Algorithm 1 (`X • Y`).
+pub fn gf128_mul(x: u128, y: u128) -> u128 {
+    let mut z = 0u128;
+    let mut v = y;
+    for i in 0..128 {
+        if (x >> (127 - i)) & 1 == 1 {
+            z ^= v;
+        }
+        let lsb = v & 1;
+        v >>= 1;
+        if lsb == 1 {
+            v ^= R;
+        }
+    }
+    z
+}
+
+/// Load a 16-byte block as a field element.
+#[inline]
+pub fn block_to_elem(b: &[u8]) -> u128 {
+    let mut buf = [0u8; 16];
+    buf[..b.len()].copy_from_slice(b); // implicit zero-pad for short tails
+    u128::from_be_bytes(buf)
+}
+
+/// Incremental GHASH accumulator over the hash subkey `H`.
+///
+/// `update` consumes full or partial blocks (a partial block is zero-padded,
+/// exactly as the GHASH definition pads the tails of A and C).
+#[derive(Clone)]
+pub struct GhashSoft {
+    h: u128,
+    y: u128,
+}
+
+impl GhashSoft {
+    pub fn new(h: u128) -> Self {
+        GhashSoft { h, y: 0 }
+    }
+
+    /// Absorb `data`, treating it as a sequence of 16-byte blocks with the
+    /// final partial block zero-padded. GHASH over a byte string that is
+    /// not block-aligned only occurs at the A/C boundaries of GCM, which is
+    /// how callers use it.
+    pub fn update(&mut self, data: &[u8]) {
+        for chunk in data.chunks(16) {
+            self.y = gf128_mul(self.y ^ block_to_elem(chunk), self.h);
+        }
+    }
+
+    /// Absorb the GCM length block `[len(A)]_64 ‖ [len(C)]_64` (bit lengths).
+    pub fn update_lengths(&mut self, aad_bytes: u64, ct_bytes: u64) {
+        let block = ((aad_bytes as u128 * 8) << 64) | (ct_bytes as u128 * 8);
+        self.y = gf128_mul(self.y ^ block, self.h);
+    }
+
+    /// Finalize, returning the GHASH output block.
+    pub fn finalize(&self) -> [u8; 16] {
+        self.y.to_be_bytes()
+    }
+
+    pub fn raw(&self) -> u128 {
+        self.y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn field_identity_and_zero() {
+        // The multiplicative identity of this representation is the element
+        // with only the x^0 coefficient set, i.e. the MSB-first bit 0 = 0x80..0.
+        let one = 1u128 << 127;
+        for x in [0u128, 1, one, 0xdeadbeef_u128 << 64, u128::MAX] {
+            assert_eq!(gf128_mul(x, one), x, "x * 1 == x");
+            assert_eq!(gf128_mul(one, x), x, "1 * x == x");
+            assert_eq!(gf128_mul(x, 0), 0);
+        }
+    }
+
+    #[test]
+    fn field_commutative_distributive() {
+        let mut st = 0x9e3779b97f4a7c15u128;
+        let mut next = move || {
+            st = st.wrapping_mul(0x2545F4914F6CDD1D).wrapping_add(0x9E3779B9);
+            st ^ (st << 64)
+        };
+        for _ in 0..50 {
+            let (a, b, c) = (next(), next(), next());
+            assert_eq!(gf128_mul(a, b), gf128_mul(b, a));
+            assert_eq!(gf128_mul(a, b ^ c), gf128_mul(a, b) ^ gf128_mul(a, c));
+            // associativity
+            assert_eq!(gf128_mul(gf128_mul(a, b), c), gf128_mul(a, gf128_mul(b, c)));
+        }
+    }
+
+    /// GHASH known-answer: from NIST GCM test case 2 intermediates.
+    /// H = AES_0(0^128) = 66e94bd4ef8a2c3b884cfa59ca342b2e,
+    /// GHASH(H, {}, C=0388dace60b6a392f328c2b971b2fe78)
+    ///   = f38cbb1ad69223dcc3457ae5b6b0f885.
+    #[test]
+    fn ghash_known_answer() {
+        let h = u128::from_be_bytes([
+            0x66, 0xe9, 0x4b, 0xd4, 0xef, 0x8a, 0x2c, 0x3b, 0x88, 0x4c, 0xfa, 0x59, 0xca, 0x34,
+            0x2b, 0x2e,
+        ]);
+        let c: [u8; 16] = [
+            0x03, 0x88, 0xda, 0xce, 0x60, 0xb6, 0xa3, 0x92, 0xf3, 0x28, 0xc2, 0xb9, 0x71, 0xb2,
+            0xfe, 0x78,
+        ];
+        let mut g = GhashSoft::new(h);
+        g.update(&c);
+        g.update_lengths(0, 16);
+        let expect: [u8; 16] = [
+            0xf3, 0x8c, 0xbb, 0x1a, 0xd6, 0x92, 0x23, 0xdc, 0xc3, 0x45, 0x7a, 0xe5, 0xb6, 0xb0,
+            0xf8, 0x85,
+        ];
+        assert_eq!(g.finalize(), expect);
+    }
+
+    #[test]
+    fn partial_block_padding_matches_manual_pad() {
+        let h = 0x12345678_9abcdef0_0fedcba9_87654321u128;
+        let data = [0xaau8; 21]; // 1 full block + 5-byte tail
+        let mut a = GhashSoft::new(h);
+        a.update(&data);
+        let mut padded = [0u8; 32];
+        padded[..21].copy_from_slice(&data);
+        let mut b = GhashSoft::new(h);
+        b.update(&padded);
+        assert_eq!(a.finalize(), b.finalize());
+    }
+}

@@ -1,0 +1,30 @@
+//! Cryptographic substrate — everything CryptMPI needs, from scratch.
+//!
+//! * [`aes`] / [`aesni`] — AES-128 block cipher (portable + AES-NI).
+//! * [`ghash`] / [`clmul`] — GHASH in GF(2^128) (portable + PCLMULQDQ).
+//! * [`gcm`] — AES-128-GCM authenticated encryption (SP 800-38D).
+//! * [`stream`] — the paper's Algorithm 1: chopped streaming AE with
+//!   Tink-style subkey derivation, plus the wire header codec.
+//! * [`sha256`] — SHA-256 and MGF1 (for OAEP).
+//! * [`bignum`] — u64-limb big integers, Montgomery modpow, Miller-Rabin.
+//! * [`rsa`] — RSA-OAEP keypairs for the `MPI_Init` key distribution.
+//! * [`rand`] — ChaCha20 CSPRNG (keys/nonces/seeds) and xoshiro256**
+//!   deterministic PRNG (simulation workloads only).
+//!
+//! Oracles: NIST/FIPS/RFC test vectors inline; the RustCrypto `aes`/`sha2`
+//! crates as dev-dependency cross-checks; and the independently authored
+//! JAX/Pallas GCM (via PJRT) in the integration tests.
+
+pub mod aes;
+pub mod aesni;
+pub mod bignum;
+pub mod clmul;
+pub mod gcm;
+pub mod ghash;
+pub mod rand;
+pub mod rsa;
+pub mod sha256;
+pub mod stream;
+
+pub use gcm::{AuthError, Gcm, NONCE_LEN, TAG_LEN};
+pub use stream::{Header, Opcode, StreamOpener, StreamSealer, CHOP_THRESHOLD, HEADER_LEN};

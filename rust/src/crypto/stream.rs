@@ -1,0 +1,485 @@
+//! The paper's Algorithm 1: streaming authenticated encryption for chopped
+//! messages, Tink-style subkey derivation, and the wire header codec.
+//!
+//! Large messages (≥ 64 KB) are encrypted under a fresh *subkey*
+//! `L = AES_K1(V)` for a random 16-byte seed `V`; the message is chopped
+//! into segments, segment `i` (1-based) sealed under GCM(L, N_i) with
+//! `N_i = [0]_7 ‖ [last]_1 ‖ [i]_4`. The header `(V, m, s)` travels first.
+//! Small messages are sealed directly under `K2` with a random 12-byte
+//! nonce (key separation — see the module tests for the §IV forgery that
+//! breaks the single-key variant).
+
+use super::gcm::{AuthError, Gcm, NONCE_LEN, TAG_LEN};
+use super::rand::secure_array;
+
+/// Messages at or above this size use Algorithm 1 ((k,t)-chopping);
+/// smaller ones use direct GCM (paper §IV: "CryptMPI ... uses the
+/// (k,t)-chopping algorithm only if the message size is at least 64KB").
+pub const CHOP_THRESHOLD: usize = 64 * 1024;
+
+/// Wire opcodes carried in the header.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Opcode {
+    /// Direct GCM under K2 (small messages).
+    Direct = 1,
+    /// Algorithm 1 chopped encryption under a subkey of K1.
+    Chopped = 2,
+    /// Plaintext (Unencrypted baseline / intra-node traffic).
+    Plain = 3,
+}
+
+impl Opcode {
+    fn from_u8(v: u8) -> Option<Self> {
+        match v {
+            1 => Some(Opcode::Direct),
+            2 => Some(Opcode::Chopped),
+            3 => Some(Opcode::Plain),
+            _ => None,
+        }
+    }
+}
+
+/// Decoded message header.
+///
+/// Wire layout (fixed 33 bytes, little-endian integers):
+/// ```text
+/// offset 0   u8   opcode
+/// offset 1   [u8;16]  seed V (Chopped) | nonce ‖ 0-pad (Direct) | zero (Plain)
+/// offset 17  u64  message length m
+/// offset 25  u64  segment size s (Chopped; 0 otherwise)
+/// ```
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Header {
+    pub opcode: Opcode,
+    pub seed: [u8; 16],
+    pub msg_len: u64,
+    pub seg_size: u64,
+}
+
+/// Encoded header length on the wire.
+pub const HEADER_LEN: usize = 33;
+
+impl Header {
+    pub fn encode(&self) -> [u8; HEADER_LEN] {
+        let mut out = [0u8; HEADER_LEN];
+        out[0] = self.opcode as u8;
+        out[1..17].copy_from_slice(&self.seed);
+        out[17..25].copy_from_slice(&self.msg_len.to_le_bytes());
+        out[25..33].copy_from_slice(&self.seg_size.to_le_bytes());
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Self, AuthError> {
+        if buf.len() < HEADER_LEN {
+            return Err(AuthError);
+        }
+        let opcode = Opcode::from_u8(buf[0]).ok_or(AuthError)?;
+        let mut seed = [0u8; 16];
+        seed.copy_from_slice(&buf[1..17]);
+        let msg_len = u64::from_le_bytes(buf[17..25].try_into().unwrap());
+        let seg_size = u64::from_le_bytes(buf[25..33].try_into().unwrap());
+        Ok(Header { opcode, seed, msg_len, seg_size })
+    }
+}
+
+/// Segment nonce `N_i = [0]_7 ‖ [last]_1 ‖ [i]_4` (paper Algorithm 1, line 9;
+/// `i` is 1-based, big-endian).
+#[inline]
+pub fn segment_nonce(index: u32, last: bool) -> [u8; NONCE_LEN] {
+    let mut n = [0u8; NONCE_LEN];
+    n[7] = last as u8;
+    n[8..12].copy_from_slice(&index.to_be_bytes());
+    n
+}
+
+/// Derive the Tink-style subkey `L = AES_K(V)` from master context `k1`.
+pub fn derive_subkey(k1: &Gcm, seed: &[u8; 16]) -> [u8; 16] {
+    let mut l = *seed;
+    k1.aes_encrypt_block(&mut l);
+    l
+}
+
+/// Number of segments implied by a chopped header (receiver side derivation,
+/// paper §IV: "it derives the number of segments t ... from the segment size
+/// s and the message size m").
+pub fn segment_count(msg_len: u64, seg_size: u64) -> Result<u32, AuthError> {
+    if seg_size == 0 || msg_len == 0 {
+        return Err(AuthError);
+    }
+    let n = msg_len.div_ceil(seg_size);
+    u32::try_from(n).map_err(|_| AuthError)
+}
+
+/// Sender-side state for one chopped message: knows the subkey and hands out
+/// per-segment seals. Segments may be sealed from multiple worker threads
+/// (the context is `Sync`; each seal only needs the immutable subkey).
+pub struct StreamSealer {
+    sub: Gcm,
+    header: Header,
+    nsegs: u32,
+}
+
+impl StreamSealer {
+    /// Start a chopped encryption of an `msg_len`-byte message split into
+    /// `nsegs` segments under master key context `k1`. Draws a fresh random
+    /// seed. `nsegs` is `k·t` from the (k,t)-chopping algorithm.
+    pub fn new(k1: &Gcm, msg_len: usize, nsegs: u32) -> Self {
+        assert!(msg_len > 0 && nsegs > 0, "empty chopped message");
+        let seed: [u8; 16] = secure_array();
+        Self::with_seed(k1, msg_len, nsegs, seed)
+    }
+
+    /// Deterministic-seed variant (tests; also the §IV forgery demo).
+    pub fn with_seed(k1: &Gcm, msg_len: usize, nsegs: u32, seed: [u8; 16]) -> Self {
+        let seg_size = (msg_len as u64).div_ceil(nsegs as u64);
+        // Recompute the actual segment count: ceil division can make the
+        // final segments empty for adversarial (m, nsegs) combinations;
+        // the receiver derives count from (m, s), so the sender must too.
+        let nsegs = segment_count(msg_len as u64, seg_size).expect("nonempty");
+        let sub = Gcm::new(&derive_subkey(k1, &seed));
+        let header =
+            Header { opcode: Opcode::Chopped, seed, msg_len: msg_len as u64, seg_size };
+        StreamSealer { sub, header, nsegs }
+    }
+
+    pub fn header(&self) -> &Header {
+        &self.header
+    }
+
+    pub fn num_segments(&self) -> u32 {
+        self.nsegs
+    }
+
+    pub fn segment_size(&self) -> usize {
+        self.header.seg_size as usize
+    }
+
+    /// Byte range of segment `index` (1-based) within the message.
+    pub fn segment_range(&self, index: u32) -> std::ops::Range<usize> {
+        let s = self.header.seg_size as usize;
+        let start = s * (index as usize - 1);
+        let end = (start + s).min(self.header.msg_len as usize);
+        start..end
+    }
+
+    /// Seal segment `index` (1-based) in place; returns the tag.
+    pub fn seal_segment(&self, index: u32, data: &mut [u8]) -> [u8; TAG_LEN] {
+        debug_assert!(index >= 1 && index <= self.nsegs);
+        let nonce = segment_nonce(index, index == self.nsegs);
+        self.sub.seal_in_place(&nonce, &[], data)
+    }
+}
+
+/// Receiver-side state for one chopped message. Enforces the streaming-AE
+/// discipline: segments must verify under their positional nonce, the count
+/// must match the header, and the last-flag must appear exactly at the end.
+pub struct StreamOpener {
+    sub: Gcm,
+    msg_len: u64,
+    seg_size: u64,
+    nsegs: u32,
+    received: u32,
+}
+
+impl StreamOpener {
+    /// Initialize from a decoded chopped header under master context `k1`.
+    pub fn new(k1: &Gcm, header: &Header) -> Result<Self, AuthError> {
+        if header.opcode != Opcode::Chopped {
+            return Err(AuthError);
+        }
+        let nsegs = segment_count(header.msg_len, header.seg_size)?;
+        let sub = Gcm::new(&derive_subkey(k1, &header.seed));
+        Ok(StreamOpener {
+            sub,
+            msg_len: header.msg_len,
+            seg_size: header.seg_size,
+            nsegs,
+            received: 0,
+        })
+    }
+
+    pub fn num_segments(&self) -> u32 {
+        self.nsegs
+    }
+
+    /// Expected ciphertext length of segment `index` (1-based), tag excluded.
+    pub fn segment_len(&self, index: u32) -> usize {
+        let start = self.seg_size * (index as u64 - 1);
+        let end = (start + self.seg_size).min(self.msg_len);
+        (end - start) as usize
+    }
+
+    /// Byte range of segment `index` within the plaintext message.
+    pub fn segment_range(&self, index: u32) -> std::ops::Range<usize> {
+        let start = (self.seg_size * (index as u64 - 1)) as usize;
+        start..start + self.segment_len(index)
+    }
+
+    /// Verify-and-decrypt segment `index` (1-based) in place.
+    ///
+    /// Stateless per segment (may be called from worker threads in any
+    /// order); call [`finish`](Self::finish) after all segments to enforce
+    /// the count. A segment with the wrong position, wrong last-flag, or any
+    /// tamper fails because the nonce (and hence the tag) binds position.
+    pub fn open_segment(
+        &self,
+        index: u32,
+        data: &mut [u8],
+        tag: &[u8; TAG_LEN],
+    ) -> Result<(), AuthError> {
+        if index < 1 || index > self.nsegs || data.len() != self.segment_len(index) {
+            return Err(AuthError);
+        }
+        let nonce = segment_nonce(index, index == self.nsegs);
+        self.sub.open_in_place(&nonce, &[], data, tag)
+    }
+
+    /// Record one successfully opened segment.
+    pub fn mark_received(&mut self) {
+        self.received += 1;
+    }
+
+    /// Final count check (paper: "if the receiver does not get the correct
+    /// number of ciphertext segments, it will report a decryption failure").
+    pub fn finish(&self) -> Result<(), AuthError> {
+        if self.received == self.nsegs {
+            Ok(())
+        } else {
+            Err(AuthError)
+        }
+    }
+}
+
+/// One-shot convenience: chop `msg` into `nsegs` segments and encrypt
+/// (header, segments with trailing tags). Used by tests and the Naive-vs-
+/// CryptMPI harnesses; the coordinator uses the incremental API.
+pub fn chop_encrypt(k1: &Gcm, msg: &[u8], nsegs: u32) -> (Header, Vec<Vec<u8>>) {
+    let sealer = StreamSealer::new(k1, msg.len(), nsegs);
+    let mut segs = Vec::with_capacity(sealer.num_segments() as usize);
+    for i in 1..=sealer.num_segments() {
+        let mut buf = msg[sealer.segment_range(i)].to_vec();
+        let tag = sealer.seal_segment(i, &mut buf);
+        buf.extend_from_slice(&tag);
+        segs.push(buf);
+    }
+    (sealer.header().clone(), segs)
+}
+
+/// One-shot convenience: decrypt a full chopped message.
+pub fn chop_decrypt(k1: &Gcm, header: &Header, segs: &[Vec<u8>]) -> Result<Vec<u8>, AuthError> {
+    let mut opener = StreamOpener::new(k1, header)?;
+    if segs.len() != opener.num_segments() as usize {
+        return Err(AuthError);
+    }
+    let mut out = vec![0u8; header.msg_len as usize];
+    for (i, seg) in segs.iter().enumerate() {
+        let index = i as u32 + 1;
+        let body_len = opener.segment_len(index);
+        if seg.len() != body_len + TAG_LEN {
+            return Err(AuthError);
+        }
+        let mut body = seg[..body_len].to_vec();
+        let tag: [u8; TAG_LEN] = seg[body_len..].try_into().unwrap();
+        opener.open_segment(index, &mut body, &tag)?;
+        out[opener.segment_range(index)].copy_from_slice(&body);
+        opener.mark_received();
+    }
+    opener.finish()?;
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::rand::SimRng;
+
+    fn msg(n: usize, seed: u64) -> Vec<u8> {
+        let mut r = SimRng::new(seed);
+        let mut m = vec![0u8; n];
+        r.fill(&mut m);
+        m
+    }
+
+    #[test]
+    fn header_roundtrip() {
+        let h = Header {
+            opcode: Opcode::Chopped,
+            seed: [0xabu8; 16],
+            msg_len: 1 << 22,
+            seg_size: 65536,
+        };
+        assert_eq!(Header::decode(&h.encode()).unwrap(), h);
+        assert!(Header::decode(&[0u8; 5]).is_err());
+        let mut bad = h.encode();
+        bad[0] = 77; // unknown opcode
+        assert!(Header::decode(&bad).is_err());
+    }
+
+    #[test]
+    fn chop_roundtrip_various_shapes() {
+        let k1 = Gcm::new(&[1u8; 16]);
+        for (len, nsegs) in
+            [(1usize, 1u32), (100, 1), (100, 3), (65536, 8), (65537, 8), (1 << 20, 64), (17, 17), (5, 16)]
+        {
+            let m = msg(len, len as u64);
+            let (h, segs) = chop_encrypt(&k1, &m, nsegs);
+            let out = chop_decrypt(&k1, &h, &segs).expect("roundtrip");
+            assert_eq!(out, m, "len={len} nsegs={nsegs}");
+        }
+    }
+
+    #[test]
+    fn segment_reorder_detected() {
+        let k1 = Gcm::new(&[2u8; 16]);
+        let m = msg(64 * 1024, 1);
+        let (h, mut segs) = chop_encrypt(&k1, &m, 4);
+        segs.swap(0, 1);
+        assert!(chop_decrypt(&k1, &h, &segs).is_err());
+    }
+
+    #[test]
+    fn segment_drop_detected() {
+        let k1 = Gcm::new(&[2u8; 16]);
+        let m = msg(64 * 1024, 2);
+        let (h, mut segs) = chop_encrypt(&k1, &m, 4);
+        segs.pop();
+        assert!(chop_decrypt(&k1, &h, &segs).is_err());
+        // Dropping an interior segment (shifting the rest up) also fails.
+        let (h2, mut segs2) = chop_encrypt(&k1, &m, 4);
+        segs2.remove(1);
+        assert!(chop_decrypt(&k1, &h2, &segs2).is_err());
+    }
+
+    #[test]
+    fn segment_duplicate_detected() {
+        let k1 = Gcm::new(&[2u8; 16]);
+        let m = msg(64 * 1024, 3);
+        let (h, mut segs) = chop_encrypt(&k1, &m, 4);
+        let dup = segs[1].clone();
+        segs[2] = dup; // replay segment 2 in position 3
+        assert!(chop_decrypt(&k1, &h, &segs).is_err());
+    }
+
+    #[test]
+    fn header_tamper_detected() {
+        let k1 = Gcm::new(&[3u8; 16]);
+        let m = msg(128 * 1024, 4);
+        let (h, segs) = chop_encrypt(&k1, &m, 8);
+        // Tamper each header field; all must produce decryption failure.
+        let mut bad_seed = h.clone();
+        bad_seed.seed[0] ^= 1;
+        assert!(chop_decrypt(&k1, &bad_seed, &segs).is_err());
+        let mut bad_len = h.clone();
+        bad_len.msg_len -= 1;
+        assert!(chop_decrypt(&k1, &bad_len, &segs).is_err());
+        let mut bad_seg = h.clone();
+        bad_seg.seg_size /= 2;
+        assert!(chop_decrypt(&k1, &bad_seg, &segs).is_err());
+    }
+
+    #[test]
+    fn ciphertext_bitflip_detected_every_segment() {
+        let k1 = Gcm::new(&[4u8; 16]);
+        let m = msg(64 * 1024, 5);
+        let (h, segs) = chop_encrypt(&k1, &m, 4);
+        for i in 0..segs.len() {
+            let mut bad = segs.clone();
+            let mid = bad[i].len() / 2;
+            bad[i][mid] ^= 0x80;
+            assert!(chop_decrypt(&k1, &h, &bad).is_err(), "segment {i}");
+        }
+    }
+
+    #[test]
+    fn wrong_master_key_fails() {
+        let k1 = Gcm::new(&[5u8; 16]);
+        let other = Gcm::new(&[6u8; 16]);
+        let m = msg(64 * 1024, 6);
+        let (h, segs) = chop_encrypt(&k1, &m, 4);
+        assert!(chop_decrypt(&other, &h, &segs).is_err());
+    }
+
+    #[test]
+    fn subkey_differs_per_message() {
+        let k1 = Gcm::new(&[7u8; 16]);
+        let a = derive_subkey(&k1, &[1u8; 16]);
+        let b = derive_subkey(&k1, &[2u8; 16]);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn nonce_layout_matches_paper() {
+        let n = segment_nonce(0x01020304, true);
+        assert_eq!(&n[..7], &[0u8; 7]); // [0]_7
+        assert_eq!(n[7], 1); // [last]_1
+        assert_eq!(&n[8..], &[1, 2, 3, 4]); // [i]_4
+    }
+
+    /// The paper's §IV key-separation attack: with a single key K used for
+    /// both direct GCM and Algorithm 1, an adversary that knows a 16-byte
+    /// direct-GCM plaintext can extract `L = AES_K(V)` (where `V = N‖[1]_4`
+    /// is the first counter block) from `C = AES_K(V) ⊕ X`, then forge a
+    /// valid chopped ciphertext using V as "seed" and L as subkey. With
+    /// separate keys the forged message must fail.
+    #[test]
+    fn key_separation_attack() {
+        let k = Gcm::new(&[0x11u8; 16]);
+
+        // Victim encrypts a known 16-byte message X directly under K.
+        let x = *b"known plaintext!";
+        let nonce: [u8; 12] = [0x77u8; 12];
+        let sealed = k.seal(&nonce, &[], &x);
+
+        // Adversary extracts L = AES_K(V): the first CTR keystream block is
+        // AES_K(N ‖ [2]_4) — GCM data counters start at 2 — so V = N‖[2]_4.
+        let mut keystream = [0u8; 16];
+        for i in 0..16 {
+            keystream[i] = sealed[i] ^ x[i];
+        }
+        let mut v = [0u8; 16];
+        v[..12].copy_from_slice(&nonce);
+        v[12..16].copy_from_slice(&2u32.to_be_bytes());
+
+        // Forge: encrypt an arbitrary large message under subkey L with
+        // header seed V. Against the SAME key (single-key misuse), the
+        // receiver accepts the forgery.
+        let forged_msg = msg(64 * 1024, 99);
+        let sub = Gcm::new(&keystream);
+        let seg_size = (forged_msg.len() as u64).div_ceil(4);
+        let header = Header {
+            opcode: Opcode::Chopped,
+            seed: v,
+            msg_len: forged_msg.len() as u64,
+            seg_size,
+        };
+        let nsegs = segment_count(header.msg_len, header.seg_size).unwrap();
+        let mut segs = Vec::new();
+        for i in 1..=nsegs {
+            let start = (seg_size * (i as u64 - 1)) as usize;
+            let end = ((start as u64 + seg_size) as usize).min(forged_msg.len());
+            let mut buf = forged_msg[start..end].to_vec();
+            let tag = sub.seal_in_place(&segment_nonce(i, i == nsegs), &[], &mut buf);
+            buf.extend_from_slice(&tag);
+            segs.push(buf);
+        }
+
+        // Misuse: victim decrypts chopped messages under the SAME key K.
+        let accepted = chop_decrypt(&k, &header, &segs);
+        assert_eq!(accepted.expect("single-key misuse accepts the forgery"), forged_msg);
+
+        // Correct deployment: chopped messages use K1 ≠ K2; forgery fails.
+        let k1_distinct = Gcm::new(&[0x22u8; 16]);
+        assert!(chop_decrypt(&k1_distinct, &header, &segs).is_err());
+    }
+
+    #[test]
+    fn seed_uniqueness_statistical() {
+        // Draw many Algorithm-1 seeds; all must be distinct (Proposition 1).
+        let k1 = Gcm::new(&[9u8; 16]);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..1000 {
+            let s = StreamSealer::new(&k1, 1024, 2);
+            assert!(seen.insert(s.header().seed), "seed collision");
+        }
+    }
+}

@@ -1,0 +1,24 @@
+//! CryptMPI — a fast encrypted MPI library (reproduction of Naser et al.,
+//! 2020) on a calibrated virtual-time cluster.
+//!
+//! Layer map (see DESIGN.md):
+//! * [`crypto`] — AES-GCM, Algorithm 1 streaming AE, RSA-OAEP, from scratch.
+//! * [`vtime`] — virtual clocks + host calibration.
+//! * [`net`] — simulated interconnect (Hockney + contention) and profiles.
+//! * [`mpi`] — message transport with MPI matching semantics.
+//! * [`coordinator`] — the paper's system: security modes, (k,t)-chopping,
+//!   worker pool, parameter selection, key distribution, cluster runner.
+//! * [`model`] — the paper's performance model (fit + predict).
+//! * [`runtime`] — PJRT loader for the JAX/Pallas AOT artifacts.
+//! * [`apps`] — ping-pong, OSU multi-pair, stencil kernels, NAS mini-apps.
+//! * [`bench`] — one runner per paper figure/table.
+
+pub mod crypto;
+pub mod mpi;
+pub mod net;
+pub mod vtime;
+pub mod coordinator;
+pub mod model;
+pub mod runtime;
+pub mod apps;
+pub mod bench;

@@ -1,0 +1,204 @@
+//! CryptMPI CLI — the launcher for the simulated encrypted-MPI cluster and
+//! the paper-reproduction benchmark harness.
+//!
+//! ```text
+//! cryptmpi bench --exp all|fig6|table3 [--out results]
+//! cryptmpi pingpong --profile noleland --mode cryptmpi --size 4M --iters 5
+//! cryptmpi multipair --pairs 4 --size 4M [--profile ...] [--mode ...]
+//! cryptmpi stencil --dim 2 --ranks 16 --rpn 4 --size 2M --load 60
+//! cryptmpi nas --kernel cg|lu|sp|bt [--mode ...]
+//! cryptmpi predict --size 4M            # model-driven (k, t) choice
+//! cryptmpi info                          # calibration + profiles
+//! ```
+
+use cryptmpi::apps::{
+    calibrate_compute, run_multipair, run_nas, run_pingpong, run_stencil, NasKernel, NasScale,
+    StencilDim,
+};
+use cryptmpi::bench::runners::{analytic_model, run_experiment, ALL_EXPERIMENTS};
+use cryptmpi::coordinator::SecurityMode;
+use cryptmpi::net::SystemProfile;
+use cryptmpi::vtime::calib;
+use std::collections::HashMap;
+use std::path::Path;
+
+fn parse_size(s: &str) -> usize {
+    let s = s.trim();
+    let (num, mult) = match s.chars().last() {
+        Some('K') | Some('k') => (&s[..s.len() - 1], 1024),
+        Some('M') | Some('m') => (&s[..s.len() - 1], 1 << 20),
+        _ => (s, 1),
+    };
+    num.parse::<usize>().expect("size") * mult
+}
+
+fn args_map(args: &[String]) -> HashMap<String, String> {
+    let mut map = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            let val = args.get(i + 1).cloned().unwrap_or_default();
+            map.insert(key.to_string(), val);
+            i += 2;
+        } else {
+            i += 1;
+        }
+    }
+    map
+}
+
+fn profile_of(m: &HashMap<String, String>) -> SystemProfile {
+    let name = m.get("profile").map(|s| s.as_str()).unwrap_or("noleland");
+    SystemProfile::by_name(name).unwrap_or_else(|| panic!("unknown profile {name}"))
+}
+
+fn mode_of(m: &HashMap<String, String>) -> SecurityMode {
+    let name = m.get("mode").map(|s| s.as_str()).unwrap_or("cryptmpi");
+    SecurityMode::by_name(name).unwrap_or_else(|| panic!("unknown mode {name}"))
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = argv.first().map(|s| s.as_str()).unwrap_or("help");
+    let m = args_map(&argv[1.min(argv.len())..]);
+    match cmd {
+        "bench" => {
+            let exp = m.get("exp").map(|s| s.as_str()).unwrap_or("all");
+            let out = m.get("out").map(|s| s.as_str()).unwrap_or("results");
+            let names: Vec<&str> = if exp == "all" {
+                ALL_EXPERIMENTS.to_vec()
+            } else {
+                exp.split(',').collect()
+            };
+            for name in names {
+                eprintln!("running {name} ...");
+                let table = run_experiment(name).unwrap_or_else(|| panic!("unknown exp {name}"));
+                table.write_csv(Path::new(out)).expect("write csv");
+                println!("{}", table.render());
+            }
+        }
+        "pingpong" => {
+            let p = profile_of(&m);
+            let mode = mode_of(&m);
+            let size = parse_size(m.get("size").map(|s| s.as_str()).unwrap_or("4M"));
+            let iters: usize = m.get("iters").map(|s| s.parse().unwrap()).unwrap_or(5);
+            let r = run_pingpong(&p, mode, size, iters);
+            println!(
+                "profile={} mode={} size={} one_way={:.2}us throughput={:.1} MB/s",
+                p.name,
+                mode.name(),
+                size,
+                r.one_way_us,
+                r.throughput_mb_s
+            );
+        }
+        "multipair" => {
+            let p = profile_of(&m);
+            let mode = mode_of(&m);
+            let size = parse_size(m.get("size").map(|s| s.as_str()).unwrap_or("4M"));
+            let pairs: usize = m.get("pairs").map(|s| s.parse().unwrap()).unwrap_or(2);
+            let r = run_multipair(&p, mode, pairs, size, 3);
+            println!(
+                "profile={} mode={} pairs={} size={} aggregate={:.1} MB/s",
+                p.name,
+                mode.name(),
+                pairs,
+                size,
+                r.aggregate_mb_s
+            );
+        }
+        "stencil" => {
+            let p = profile_of(&m);
+            let mode = mode_of(&m);
+            let size = parse_size(m.get("size").map(|s| s.as_str()).unwrap_or("2M"));
+            let dim = match m.get("dim").map(|s| s.as_str()).unwrap_or("2") {
+                "2" => StencilDim::D2,
+                "3" => StencilDim::D3,
+                "4" => StencilDim::D4,
+                d => panic!("dim {d}"),
+            };
+            let ranks: usize = m.get("ranks").map(|s| s.parse().unwrap()).unwrap_or(16);
+            let rpn: usize = m.get("rpn").map(|s| s.parse().unwrap()).unwrap_or(4);
+            let load: f64 = m.get("load").map(|s| s.parse().unwrap()).unwrap_or(60.0);
+            let rounds: usize = m.get("rounds").map(|s| s.parse().unwrap()).unwrap_or(60);
+            let compute = calibrate_compute(&p, dim, ranks, rpn, size, load);
+            let r = run_stencil(&p, mode, dim, ranks, rpn, size, rounds, compute);
+            println!(
+                "profile={} mode={} dim={:?} ranks={} comm={:.4}s inter={:.4}s total={:.4}s",
+                p.name,
+                mode.name(),
+                dim,
+                ranks,
+                r.comm_s,
+                r.inter_s,
+                r.total_s
+            );
+        }
+        "nas" => {
+            let p = profile_of(&m);
+            let mode = mode_of(&m);
+            let kernel = match m.get("kernel").map(|s| s.as_str()).unwrap_or("cg") {
+                "cg" => NasKernel::Cg,
+                "lu" => NasKernel::Lu,
+                "sp" => NasKernel::Sp,
+                "bt" => NasKernel::Bt,
+                k => panic!("kernel {k}"),
+            };
+            let r = run_nas(&p, mode, kernel, 16, 4, &NasScale::default());
+            println!(
+                "{} mode={} T_i={:.3}s T_c={:.3}s T_e={:.3}s",
+                kernel.name(),
+                mode.name(),
+                r.t_i,
+                r.t_c,
+                r.t_e
+            );
+        }
+        "predict" => {
+            let p = profile_of(&m);
+            let size = parse_size(m.get("size").map(|s| s.as_str()).unwrap_or("4M"));
+            let model = analytic_model(&p);
+            let k = cryptmpi::coordinator::params::select_k(size);
+            let t = p.threads_for(size, p.hyperthreads);
+            let (ko, to) = model.optimize(size, p.hyperthreads - p.comm_reserved);
+            println!("profile={} size={}", p.name, size);
+            println!(
+                "paper rule:  k={k} t={t}  -> predicted {:.1} us one-way",
+                model.one_way_us(size, k, t)
+            );
+            println!(
+                "model optim: k={ko} t={to} -> predicted {:.1} us one-way",
+                model.one_way_us(size, ko, to)
+            );
+            println!(
+                "naive: {:.1} us, unencrypted: {:.1} us",
+                model.naive_one_way_us(size),
+                model.plain_one_way_us(size)
+            );
+        }
+        "info" => {
+            let c = calib::get();
+            println!("host calibration (B/us = MB/s):");
+            println!("  gcm hw (large):   {:.0}", c.gcm_rate_hw.last().unwrap());
+            println!("  gcm soft (large): {:.0}", c.gcm_rate_soft.last().unwrap());
+            println!("  memcpy:           {:.0}", c.memcpy_rate);
+            println!("  alpha_enc:        {:.2} us", c.alpha_enc_us);
+            for p in ["noleland", "bridges", "eth10g", "ib40g"] {
+                let pr = SystemProfile::by_name(p).unwrap();
+                println!(
+                    "profile {:9}: alpha={:.2}us beta={:.2e}us/B threads={} t_table={:?}",
+                    pr.name,
+                    pr.net.alpha_rdv_us,
+                    pr.net.beta_rdv_us_per_b,
+                    pr.hyperthreads,
+                    pr.t_table.0
+                );
+            }
+        }
+        _ => {
+            println!("cryptmpi {} — encrypted MPI reproduction", env!("CARGO_PKG_VERSION"));
+            println!("commands: bench | pingpong | multipair | stencil | nas | predict | info");
+            println!("see `cryptmpi bench --exp all --out results` for the paper harness");
+        }
+    }
+}

@@ -1,0 +1,248 @@
+//! Least-squares fitting: ordinary linear LSQ (Hockney) and Gauss-Newton
+//! with simple backtracking (the max-rate encryption model). Stands in for
+//! the paper's "Matlab non-linear least square".
+
+/// Fit `y ≈ a + b·x` by ordinary least squares. Returns `(a, b)`.
+pub fn linear_lsq(xs: &[f64], ys: &[f64]) -> (f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    assert!(xs.len() >= 2, "need at least two points");
+    let n = xs.len() as f64;
+    let sx: f64 = xs.iter().sum();
+    let sy: f64 = ys.iter().sum();
+    let sxx: f64 = xs.iter().map(|x| x * x).sum();
+    let sxy: f64 = xs.iter().zip(ys).map(|(x, y)| x * y).sum();
+    let denom = n * sxx - sx * sx;
+    assert!(denom.abs() > 1e-30, "degenerate x values");
+    let b = (n * sxy - sx * sy) / denom;
+    let a = (sy - b * sx) / n;
+    (a, b)
+}
+
+/// Coefficient of determination R² for predictions `fx` against `ys`.
+pub fn r_squared(ys: &[f64], fx: &[f64]) -> f64 {
+    let mean = ys.iter().sum::<f64>() / ys.len() as f64;
+    let ss_tot: f64 = ys.iter().map(|y| (y - mean).powi(2)).sum();
+    let ss_res: f64 = ys.iter().zip(fx).map(|(y, f)| (y - f).powi(2)).sum();
+    if ss_tot == 0.0 {
+        return 1.0;
+    }
+    1.0 - ss_res / ss_tot
+}
+
+/// A data point for the max-rate fit: encrypting `m` bytes with `t`
+/// threads took `y` µs.
+#[derive(Debug, Clone, Copy)]
+pub struct EncSample {
+    pub m_bytes: f64,
+    pub threads: f64,
+    pub y_us: f64,
+}
+
+/// The max-rate model `T(m, t) = α + m / (A + B (t − 1))`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MaxRateParams {
+    pub alpha_us: f64,
+    pub a: f64,
+    pub b: f64,
+}
+
+impl MaxRateParams {
+    pub fn predict_us(&self, m_bytes: f64, threads: f64) -> f64 {
+        self.alpha_us + m_bytes / (self.a + self.b * (threads - 1.0))
+    }
+}
+
+/// Fit the max-rate model by Gauss-Newton on residuals, started from a
+/// heuristic initial guess, with step backtracking. Mirrors the paper's
+/// nonlinear-LSQ fit of Table II.
+pub fn fit_max_rate(samples: &[EncSample]) -> MaxRateParams {
+    assert!(samples.len() >= 3, "need >= 3 samples for 3 parameters");
+    // Initial guess: α from the smallest message, A from single-thread
+    // throughput, B from the largest-thread sample.
+    let mut alpha = samples
+        .iter()
+        .map(|s| s.y_us)
+        .fold(f64::INFINITY, f64::min)
+        .max(1e-3)
+        * 0.5;
+    let a0 = samples
+        .iter()
+        .filter(|s| (s.threads - 1.0).abs() < 0.5)
+        .map(|s| s.m_bytes / (s.y_us - alpha).max(1e-9))
+        .fold(0.0f64, f64::max)
+        .max(1.0);
+    let mut p = MaxRateParams { alpha_us: alpha, a: a0, b: a0 * 0.5 };
+
+    let sse = |p: &MaxRateParams| -> f64 {
+        samples.iter().map(|s| (p.predict_us(s.m_bytes, s.threads) - s.y_us).powi(2)).sum()
+    };
+
+    for _ in 0..200 {
+        // Residuals and Jacobian.
+        let mut jtj = [[0.0f64; 3]; 3];
+        let mut jtr = [0.0f64; 3];
+        for s in samples {
+            let denom = p.a + p.b * (s.threads - 1.0);
+            let pred = p.alpha_us + s.m_bytes / denom;
+            let r = pred - s.y_us;
+            // d/dα = 1; d/dA = -m/denom²; d/dB = -m(t-1)/denom².
+            let j = [
+                1.0,
+                -s.m_bytes / (denom * denom),
+                -s.m_bytes * (s.threads - 1.0) / (denom * denom),
+            ];
+            for i in 0..3 {
+                jtr[i] += j[i] * r;
+                for k in 0..3 {
+                    jtj[i][k] += j[i] * j[k];
+                }
+            }
+        }
+        // Levenberg damping for stability.
+        for (i, row) in jtj.iter_mut().enumerate() {
+            row[i] *= 1.0 + 1e-6;
+            row[i] += 1e-12;
+        }
+        let delta = solve3(jtj, jtr);
+        // Backtracking line search on the Gauss-Newton step.
+        let base = sse(&p);
+        let mut step = 1.0;
+        let mut improved = false;
+        for _ in 0..20 {
+            let cand = MaxRateParams {
+                alpha_us: (p.alpha_us - step * delta[0]).max(0.0),
+                a: (p.a - step * delta[1]).max(1e-6),
+                b: (p.b - step * delta[2]).max(0.0),
+            };
+            if sse(&cand) < base {
+                p = cand;
+                improved = true;
+                break;
+            }
+            step *= 0.5;
+        }
+        if !improved {
+            break;
+        }
+        alpha = p.alpha_us;
+        let _ = alpha;
+    }
+    p
+}
+
+/// Solve a 3×3 linear system by Gaussian elimination with partial pivoting.
+fn solve3(mut a: [[f64; 3]; 3], mut b: [f64; 3]) -> [f64; 3] {
+    for col in 0..3 {
+        // pivot
+        let mut piv = col;
+        for r in col + 1..3 {
+            if a[r][col].abs() > a[piv][col].abs() {
+                piv = r;
+            }
+        }
+        a.swap(col, piv);
+        b.swap(col, piv);
+        let d = a[col][col];
+        if d.abs() < 1e-30 {
+            continue;
+        }
+        for r in col + 1..3 {
+            let f = a[r][col] / d;
+            for c in col..3 {
+                a[r][c] -= f * a[col][c];
+            }
+            b[r] -= f * b[col];
+        }
+    }
+    let mut x = [0.0f64; 3];
+    for r in (0..3).rev() {
+        let mut s = b[r];
+        for c in r + 1..3 {
+            s -= a[r][c] * x[c];
+        }
+        x[r] = if a[r][r].abs() < 1e-30 { 0.0 } else { s / a[r][r] };
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_fit_exact() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let ys: Vec<f64> = xs.iter().map(|x| 5.54 + 7.29e-5 * x * 1e6).collect();
+        let (a, b) = linear_lsq(&xs.map(|x| x * 1e6), &ys);
+        assert!((a - 5.54).abs() < 1e-9);
+        assert!((b - 7.29e-5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn linear_fit_noisy_r2() {
+        let xs: Vec<f64> = (1..50).map(|i| i as f64 * 1000.0).collect();
+        let ys: Vec<f64> = xs
+            .iter()
+            .enumerate()
+            .map(|(i, x)| 2.0 + 0.003 * x + if i % 2 == 0 { 0.5 } else { -0.5 })
+            .collect();
+        let (a, b) = linear_lsq(&xs, &ys);
+        assert!((a - 2.0).abs() < 0.3, "a={a}");
+        assert!((b - 0.003).abs() < 1e-4, "b={b}");
+        let fx: Vec<f64> = xs.iter().map(|x| a + b * x).collect();
+        assert!(r_squared(&ys, &fx) > 0.99);
+    }
+
+    #[test]
+    fn max_rate_fit_recovers_paper_table2() {
+        // Generate synthetic samples from the paper's "Large" row:
+        // α=5.07, A=5893, B=5769 — and check recovery.
+        let truth = MaxRateParams { alpha_us: 5.07, a: 5893.0, b: 5769.0 };
+        let mut samples = Vec::new();
+        for &m in &[1e6, 2e6, 4e6, 8e6] {
+            for &t in &[1.0, 2.0, 4.0, 8.0, 16.0] {
+                samples.push(EncSample { m_bytes: m, threads: t, y_us: truth.predict_us(m, t) });
+            }
+        }
+        let fit = fit_max_rate(&samples);
+        assert!((fit.alpha_us - truth.alpha_us).abs() / truth.alpha_us < 0.2, "{fit:?}");
+        assert!((fit.a - truth.a).abs() / truth.a < 0.05, "{fit:?}");
+        assert!((fit.b - truth.b).abs() / truth.b < 0.05, "{fit:?}");
+    }
+
+    #[test]
+    fn max_rate_fit_with_noise() {
+        let truth = MaxRateParams { alpha_us: 4.3, a: 5265.0, b: 843.0 };
+        let mut state = 1u64;
+        let mut noise = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            (state % 1000) as f64 / 1000.0 - 0.5
+        };
+        let mut samples = Vec::new();
+        for &m in &[8e3, 16e3, 32e3] {
+            for &t in &[1.0, 2.0, 4.0, 8.0] {
+                let y = truth.predict_us(m, t) * (1.0 + 0.02 * noise());
+                samples.push(EncSample { m_bytes: m, threads: t, y_us: y });
+            }
+        }
+        let fit = fit_max_rate(&samples);
+        // Predictions (not raw params) must track within a few percent.
+        for s in &samples {
+            let rel = (fit.predict_us(s.m_bytes, s.threads) - s.y_us).abs() / s.y_us;
+            assert!(rel < 0.1, "rel={rel} at m={} t={}", s.m_bytes, s.threads);
+        }
+    }
+
+    #[test]
+    fn solve3_known_system() {
+        let a = [[2.0, 1.0, 0.0], [1.0, 3.0, 1.0], [0.0, 1.0, 2.0]];
+        let b = [5.0, 10.0, 7.0];
+        let x = solve3(a, b);
+        for (i, row) in a.iter().enumerate() {
+            let s: f64 = row.iter().zip(&x).map(|(c, v)| c * v).sum();
+            assert!((s - b[i]).abs() < 1e-9);
+        }
+    }
+}

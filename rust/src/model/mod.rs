@@ -1,0 +1,10 @@
+//! The paper's performance model: Hockney communication model + max-rate
+//! multi-thread encryption model, the least-squares fitters that derive
+//! their parameters from benchmark sweeps (Tables I and II), and the
+//! complete (k,t)-chopping predictor with the model-driven optimizer.
+
+pub mod fit;
+pub mod predict;
+
+pub use fit::{fit_max_rate, linear_lsq, r_squared, EncSample, MaxRateParams};
+pub use predict::{ChoppingModel, EncModel, HockneyParams};

@@ -1,0 +1,187 @@
+//! The paper's complete (k,t)-chopping performance model (§IV) and the
+//! model-driven parameter optimizer.
+//!
+//! Total ping-pong one-way time for an `m`-byte message chopped into `k`
+//! chunks encrypted by `t` threads (chunk size `s = m/k`):
+//!
+//! ```text
+//! 2·T_enc(s,t) + (k−1)·max{ T_enc(s,t), β_comm·s } + T_comm(s)
+//! ```
+//!
+//! with `T_comm(m) = α_comm + β_comm·m` (Hockney) and
+//! `T_enc(m,t) = α_enc + m / (A + B(t−1))` (max-rate).
+
+use crate::model::fit::MaxRateParams;
+
+/// Hockney parameters (one protocol class).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HockneyParams {
+    pub alpha_us: f64,
+    pub beta_us_per_b: f64,
+}
+
+impl HockneyParams {
+    pub fn t_comm_us(&self, m_bytes: f64) -> f64 {
+        self.alpha_us + self.beta_us_per_b * m_bytes
+    }
+}
+
+/// The size-classed encryption model (paper Table II: small / moderate /
+/// large per-thread segment classes).
+#[derive(Debug, Clone)]
+pub struct EncModel {
+    pub small: MaxRateParams,
+    pub moderate: MaxRateParams,
+    pub large: MaxRateParams,
+}
+
+impl EncModel {
+    /// Class by the paper's levels: small < 32 KB, moderate < 1 MB, else
+    /// large. Classed by the *chunk* size being encrypted.
+    pub fn params_for(&self, m_bytes: f64) -> &MaxRateParams {
+        if m_bytes < 32.0 * 1024.0 {
+            &self.small
+        } else if m_bytes < 1024.0 * 1024.0 {
+            &self.moderate
+        } else {
+            &self.large
+        }
+    }
+
+    pub fn t_enc_us(&self, m_bytes: f64, threads: f64) -> f64 {
+        self.params_for(m_bytes).predict_us(m_bytes, threads)
+    }
+
+    /// Paper Table II values (Noleland), for tests and defaults.
+    pub fn paper_noleland() -> Self {
+        EncModel {
+            small: MaxRateParams { alpha_us: 4.278, a: 5265.0, b: 843.0 },
+            moderate: MaxRateParams { alpha_us: 4.643, a: 6072.0, b: 4106.0 },
+            large: MaxRateParams { alpha_us: 5.07, a: 5893.0, b: 5769.0 },
+        }
+    }
+}
+
+/// The complete model.
+#[derive(Debug, Clone)]
+pub struct ChoppingModel {
+    pub comm: HockneyParams,
+    pub enc: EncModel,
+}
+
+impl ChoppingModel {
+    /// Predicted one-way time (µs) of the (k,t)-chopping algorithm for an
+    /// m-byte message (paper §IV "The complete model").
+    pub fn one_way_us(&self, m_bytes: usize, k: u32, t: u32) -> f64 {
+        let m = m_bytes as f64;
+        let s = m / k as f64;
+        let t_enc = self.enc.t_enc_us(s, t as f64);
+        let wire = self.comm.beta_us_per_b * s;
+        2.0 * t_enc + (k as f64 - 1.0) * t_enc.max(wire) + self.comm.t_comm_us(s)
+    }
+
+    /// Predicted one-way time of the naive approach (single-thread encrypt,
+    /// transmit, single-thread decrypt, fully sequential).
+    pub fn naive_one_way_us(&self, m_bytes: usize) -> f64 {
+        let m = m_bytes as f64;
+        2.0 * self.enc.t_enc_us(m, 1.0) + self.comm.t_comm_us(m)
+    }
+
+    /// Predicted unencrypted one-way time.
+    pub fn plain_one_way_us(&self, m_bytes: usize) -> f64 {
+        self.comm.t_comm_us(m_bytes as f64)
+    }
+
+    /// Search (k, t) minimizing the predicted time, over k ∈ [1, 64] and
+    /// t ∈ {1, 2, 4, 8, 16} capped by `max_threads`.
+    pub fn optimize(&self, m_bytes: usize, max_threads: u32) -> (u32, u32) {
+        let mut best = (1u32, 1u32);
+        let mut best_us = f64::INFINITY;
+        for t in [1u32, 2, 4, 8, 16] {
+            if t > max_threads {
+                break;
+            }
+            for k in 1..=64u32 {
+                let us = self.one_way_us(m_bytes, k, t);
+                if us < best_us {
+                    best_us = us;
+                    best = (k, t);
+                }
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn paper_model() -> ChoppingModel {
+        ChoppingModel {
+            comm: HockneyParams { alpha_us: 5.75, beta_us_per_b: 7.86e-5 },
+            enc: EncModel::paper_noleland(),
+        }
+    }
+
+    #[test]
+    fn k1_t1_reduces_to_naive() {
+        let m = paper_model();
+        for bytes in [64 * 1024usize, 1 << 20, 4 << 20] {
+            let chop = m.one_way_us(bytes, 1, 1);
+            let naive = m.naive_one_way_us(bytes);
+            assert!((chop - naive).abs() < 1e-6, "bytes={bytes}");
+        }
+    }
+
+    #[test]
+    fn more_threads_help_large_messages() {
+        let m = paper_model();
+        let m4 = 4 << 20;
+        assert!(m.one_way_us(m4, 8, 8) < m.one_way_us(m4, 8, 2));
+        assert!(m.one_way_us(m4, 8, 2) < m.one_way_us(m4, 1, 1));
+    }
+
+    #[test]
+    fn pipelining_helps_when_enc_is_bottleneck() {
+        let m = paper_model();
+        let m4 = 4 << 20;
+        // Single thread: encryption dominates; chopping k=8 overlaps wire
+        // and enc, beating k=1.
+        assert!(m.one_way_us(m4, 8, 1) < m.one_way_us(m4, 1, 1));
+    }
+
+    #[test]
+    fn paper_4mb_overhead_shape() {
+        // §V: at 4 MB with (k=8, t=8) CryptMPI's ping-pong overhead over
+        // the unencrypted baseline is ~13 %; the naive overhead is ~412 %.
+        let m = paper_model();
+        let m4 = 4usize << 20;
+        let plain = m.plain_one_way_us(m4);
+        let crypt = m.one_way_us(m4, 8, 8);
+        let naive = m.naive_one_way_us(m4);
+        let ovh_c = crypt / plain - 1.0;
+        let ovh_n = naive / plain - 1.0;
+        assert!(ovh_c > 0.02 && ovh_c < 0.40, "cryptmpi overhead {ovh_c:.3}");
+        assert!(ovh_n > 2.5 && ovh_n < 6.5, "naive overhead {ovh_n:.3}");
+    }
+
+    #[test]
+    fn optimizer_prefers_chopping_for_large() {
+        let m = paper_model();
+        let (k, t) = m.optimize(4 << 20, 8);
+        assert!(k >= 4, "k={k}");
+        assert_eq!(t, 8);
+        // Small-ish (64 KB) messages: little gain from many chunks.
+        let (k64, _) = m.optimize(64 * 1024, 8);
+        assert!(k64 <= 2, "k64={k64}");
+    }
+
+    #[test]
+    fn hockney_linear() {
+        let h = HockneyParams { alpha_us: 5.54, beta_us_per_b: 7.29e-5 };
+        assert!((h.t_comm_us(0.0) - 5.54).abs() < 1e-12);
+        let m1 = 1e6;
+        assert!((h.t_comm_us(m1) - (5.54 + 72.9)).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,12 @@
+//! The MPI-like message-passing substrate: transport with (source, tag)
+//! matching over the simulated network, plus per-rank instrumentation.
+//!
+//! The public rank-level API (send/recv/isend/irecv/wait/collectives,
+//! with the security modes of the paper) lives in [`crate::coordinator`];
+//! this module is the raw layer beneath it.
+
+pub mod stats;
+pub mod transport;
+
+pub use stats::{ClusterReport, CommStats, RankReport};
+pub use transport::{PostInfo, Route, Transport, WireMsg};

@@ -1,0 +1,123 @@
+//! Per-rank instrumentation: the paper's Table III reports average
+//! inter-node communication time (T_i), total communication time (T_c) and
+//! total execution time (T_e); these counters produce them.
+
+/// Communication-time accounting for one rank (virtual nanoseconds).
+#[derive(Debug, Default, Clone)]
+pub struct CommStats {
+    /// Time in communication ops whose peer is on another node.
+    pub inter_ns: u64,
+    /// Time in communication ops whose peer is on the same node.
+    pub intra_ns: u64,
+    /// Time in collectives.
+    pub coll_ns: u64,
+    /// Cryptographic cost charged (subset of inter_ns for encrypted modes).
+    pub crypto_ns: u64,
+    /// Bytes sent / received (application payload).
+    pub bytes_sent: u64,
+    pub bytes_recv: u64,
+    /// Messages sent / received.
+    pub msgs_sent: u64,
+    pub msgs_recv: u64,
+}
+
+impl CommStats {
+    /// Total communication time T_c.
+    pub fn total_comm_ns(&self) -> u64 {
+        self.inter_ns + self.intra_ns + self.coll_ns
+    }
+
+    pub fn merge(&mut self, other: &CommStats) {
+        self.inter_ns += other.inter_ns;
+        self.intra_ns += other.intra_ns;
+        self.coll_ns += other.coll_ns;
+        self.crypto_ns += other.crypto_ns;
+        self.bytes_sent += other.bytes_sent;
+        self.bytes_recv += other.bytes_recv;
+        self.msgs_sent += other.msgs_sent;
+        self.msgs_recv += other.msgs_recv;
+    }
+}
+
+/// Final report from one rank after a cluster run.
+#[derive(Debug, Clone, Default)]
+pub struct RankReport {
+    pub rank: usize,
+    /// Total virtual execution time (T_e).
+    pub elapsed_ns: u64,
+    pub stats: CommStats,
+}
+
+/// Cluster-level aggregate (averages across ranks, as the paper reports).
+#[derive(Debug, Clone, Default)]
+pub struct ClusterReport {
+    pub per_rank: Vec<RankReport>,
+}
+
+impl ClusterReport {
+    /// Average inter-node communication time across ranks, seconds.
+    pub fn avg_inter_s(&self) -> f64 {
+        self.avg(|r| r.stats.inter_ns)
+    }
+
+    /// Average total communication time across ranks, seconds.
+    pub fn avg_comm_s(&self) -> f64 {
+        self.avg(|r| r.stats.total_comm_ns())
+    }
+
+    /// Average total execution time across ranks, seconds.
+    pub fn avg_exec_s(&self) -> f64 {
+        self.avg(|r| r.elapsed_ns)
+    }
+
+    /// Maximum execution time (makespan), seconds.
+    pub fn max_exec_s(&self) -> f64 {
+        self.per_rank.iter().map(|r| r.elapsed_ns).max().unwrap_or(0) as f64 / 1e9
+    }
+
+    fn avg(&self, f: impl Fn(&RankReport) -> u64) -> f64 {
+        if self.per_rank.is_empty() {
+            return 0.0;
+        }
+        let sum: u64 = self.per_rank.iter().map(&f).sum();
+        sum as f64 / self.per_rank.len() as f64 / 1e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn totals_and_averages() {
+        let mut a = CommStats::default();
+        a.inter_ns = 1_000_000_000;
+        a.intra_ns = 500_000_000;
+        assert_eq!(a.total_comm_ns(), 1_500_000_000);
+
+        let rep = ClusterReport {
+            per_rank: vec![
+                RankReport { rank: 0, elapsed_ns: 2_000_000_000, stats: a.clone() },
+                RankReport {
+                    rank: 1,
+                    elapsed_ns: 4_000_000_000,
+                    stats: CommStats { inter_ns: 3_000_000_000, ..Default::default() },
+                },
+            ],
+        };
+        assert!((rep.avg_inter_s() - 2.0).abs() < 1e-9);
+        assert!((rep.avg_exec_s() - 3.0).abs() < 1e-9);
+        assert!((rep.max_exec_s() - 4.0).abs() < 1e-9);
+        assert!((rep.avg_comm_s() - (1.5 + 3.0) / 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = CommStats { inter_ns: 5, bytes_sent: 10, ..Default::default() };
+        let b = CommStats { inter_ns: 7, msgs_recv: 2, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.inter_ns, 12);
+        assert_eq!(a.bytes_sent, 10);
+        assert_eq!(a.msgs_recv, 2);
+    }
+}

@@ -1,0 +1,181 @@
+//! The simulated interconnect: Hockney-model links with per-NIC bandwidth
+//! contention, node topology, and the system profiles (Noleland InfiniBand,
+//! PSC Bridges Omni-Path, 10 GbE, 40 Gb IB) used by the paper's evaluation.
+
+pub mod profile;
+
+pub use profile::{CryptoProfile, NetConfig, SystemProfile};
+
+use std::sync::Mutex;
+
+/// A half-duplex reservable resource (one direction of a NIC, or an IPSec
+/// crypto engine). Transfers reserve serialized intervals in virtual time;
+/// overlapping requests share bandwidth by queuing — this is what makes
+/// concurrent flows saturate (Figs 1, 7, 9).
+///
+/// Reservations are *gap-filling*: a request ready at virtual time `t`
+/// takes the earliest free interval at or after `t`, regardless of the
+/// real-time order in which rank threads reach the call. Without this,
+/// a rank running ahead in real time would reserve future slots and starve
+/// virtually-earlier messages (order-dependent results on a loaded host).
+#[derive(Debug, Default)]
+pub struct Channel {
+    /// Sorted, disjoint, merged busy intervals (start, end).
+    intervals: Mutex<Vec<(u64, u64)>>,
+}
+
+impl Channel {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Reserve `duration_ns` starting no earlier than `ready_ns`; returns
+    /// the completion time of the reserved interval.
+    pub fn reserve(&self, ready_ns: u64, duration_ns: u64) -> u64 {
+        let mut v = self.intervals.lock().unwrap();
+        // Find the earliest gap at or after ready_ns that fits.
+        let mut t = ready_ns;
+        let mut idx = v.len();
+        for (i, &(s, e)) in v.iter().enumerate() {
+            if t + duration_ns <= s {
+                idx = i;
+                break;
+            }
+            t = t.max(e);
+        }
+        let end = t + duration_ns;
+        v.insert(idx, (t, end));
+        // Merge touching neighbours to keep the list small.
+        let mut i = idx.saturating_sub(1);
+        while i + 1 < v.len() {
+            if v[i].1 >= v[i + 1].0 {
+                v[i].1 = v[i].1.max(v[i + 1].1);
+                v.remove(i + 1);
+            } else {
+                i += 1;
+            }
+        }
+        end
+    }
+
+    /// The end of the last busy interval (tests / metrics).
+    pub fn busy_until(&self) -> u64 {
+        self.intervals.lock().unwrap().last().map_or(0, |&(_, e)| e)
+    }
+}
+
+/// Per-node network resources.
+#[derive(Debug)]
+pub struct NodeNics {
+    pub egress: Channel,
+    pub ingress: Channel,
+    /// Present only in IPSec-simulation mode: the single kernel crypto
+    /// context every inter-node byte traverses serially (tx side).
+    pub ipsec_tx: Channel,
+    /// ... and rx side.
+    pub ipsec_rx: Channel,
+}
+
+impl NodeNics {
+    pub fn new() -> Self {
+        NodeNics {
+            egress: Channel::new(),
+            ingress: Channel::new(),
+            ipsec_tx: Channel::new(),
+            ipsec_rx: Channel::new(),
+        }
+    }
+}
+
+impl Default for NodeNics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Rank→node placement (block mapping, MVAPICH default).
+#[derive(Debug, Clone)]
+pub struct Topology {
+    pub ranks: usize,
+    pub ranks_per_node: usize,
+}
+
+impl Topology {
+    pub fn new(ranks: usize, ranks_per_node: usize) -> Self {
+        assert!(ranks_per_node >= 1 && ranks >= 1);
+        Topology { ranks, ranks_per_node }
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.ranks.div_ceil(self.ranks_per_node)
+    }
+
+    pub fn node_of(&self, rank: usize) -> usize {
+        rank / self.ranks_per_node
+    }
+
+    pub fn same_node(&self, a: usize, b: usize) -> bool {
+        self.node_of(a) == self.node_of(b)
+    }
+
+    /// Hyper-threads allocated to each rank: `T0 = ⌊T / r⌋` where `r` is
+    /// the number of ranks sharing a node (paper §IV footnote 3).
+    pub fn threads_per_rank(&self, total_hyperthreads: u32) -> u32 {
+        let r = self.ranks.min(self.ranks_per_node) as u32;
+        (total_hyperthreads / r).max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn channel_serializes_overlapping_reservations() {
+        let c = Channel::new();
+        // Two flows both ready at t=0, each needing 100ns: the second
+        // completes at 200 — aggregate bandwidth is shared.
+        assert_eq!(c.reserve(0, 100), 100);
+        assert_eq!(c.reserve(0, 100), 200);
+        // A later flow starts after the backlog.
+        assert_eq!(c.reserve(50, 10), 210);
+        // A flow ready far in the future is unaffected.
+        assert_eq!(c.reserve(1000, 10), 1010);
+    }
+
+    #[test]
+    fn channel_gap_filling_is_call_order_insensitive() {
+        // A virtually-early reservation arriving late (in real time) takes
+        // the free gap instead of queueing at the end.
+        let c = Channel::new();
+        assert_eq!(c.reserve(500, 100), 600); // fast rank reserves ahead
+        assert_eq!(c.reserve(0, 100), 100); // slow rank's earlier message fits before
+        assert_eq!(c.reserve(0, 450), 1050); // too big for the [100,500) gap → after
+        assert_eq!(c.busy_until(), 1050);
+        // Exactly-fitting gap [100, 500).
+        assert_eq!(c.reserve(100, 400), 500);
+    }
+
+    #[test]
+    fn topology_block_mapping() {
+        let t = Topology::new(8, 2);
+        assert_eq!(t.nodes(), 4);
+        assert_eq!(t.node_of(0), 0);
+        assert_eq!(t.node_of(1), 0);
+        assert_eq!(t.node_of(2), 1);
+        assert!(t.same_node(0, 1));
+        assert!(!t.same_node(1, 2));
+        // 32 hyperthreads, 2 ranks/node → T0 = 16.
+        assert_eq!(t.threads_per_rank(32), 16);
+    }
+
+    #[test]
+    fn threads_per_rank_single_node_cluster() {
+        // 2 ranks on one node of a 32-thread machine → 16 each.
+        let t = Topology::new(2, 16);
+        assert_eq!(t.threads_per_rank(32), 16);
+        // 16 ranks per node → 2 each.
+        let t = Topology::new(16, 16);
+        assert_eq!(t.threads_per_rank(32), 2);
+    }
+}

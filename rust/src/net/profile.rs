@@ -1,0 +1,351 @@
+//! System profiles: the network and crypto parameters of the paper's
+//! testbeds, expressed as virtual-time model constants.
+//!
+//! Network constants for Noleland come from the paper's own fitted Table I;
+//! the multi-thread encryption scaling ratios (B/A in the max-rate model)
+//! come from Table II. Single-thread crypto *rates* are not copied from the
+//! paper — they are calibrated from real measurements on this host
+//! ([`crate::vtime::calib`]) so the simulation stays grounded in real
+//! hardware; the profile only stores scaling shape and relative factors.
+
+use crate::vtime::calib::CryptoCalibration;
+
+/// Hockney-model network constants (µs, µs/byte).
+#[derive(Debug, Clone)]
+pub struct NetConfig {
+    pub alpha_eager_us: f64,
+    pub beta_eager_us_per_b: f64,
+    pub alpha_rdv_us: f64,
+    pub beta_rdv_us_per_b: f64,
+    /// Messages up to this size use the eager protocol.
+    pub eager_threshold: usize,
+    /// Intra-node (shared-memory) transfer rate, B/µs.
+    pub intra_rate: f64,
+    /// Intra-node latency, µs.
+    pub intra_alpha_us: f64,
+}
+
+impl NetConfig {
+    pub fn alpha_us(&self, bytes: usize) -> f64 {
+        if bytes <= self.eager_threshold {
+            self.alpha_eager_us
+        } else {
+            self.alpha_rdv_us
+        }
+    }
+
+    pub fn beta_us_per_b(&self, bytes: usize) -> f64 {
+        if bytes <= self.eager_threshold {
+            self.beta_eager_us_per_b
+        } else {
+            self.beta_rdv_us_per_b
+        }
+    }
+
+    /// Serialization time of `bytes` on the wire, ns.
+    pub fn wire_ns(&self, bytes: usize) -> u64 {
+        (self.beta_us_per_b(bytes) * bytes as f64 * 1e3).round() as u64
+    }
+
+    /// One-way latency term, ns.
+    pub fn alpha_ns(&self, bytes: usize) -> u64 {
+        (self.alpha_us(bytes) * 1e3).round() as u64
+    }
+}
+
+/// Crypto cost model: the paper's max-rate form
+/// `T_enc(s, t) = α_enc + s / (A + B·(t−1))`,
+/// with `A` looked up from the host calibration (per segment size) and
+/// `B = ba_ratio(size_class) · A` from the paper's Table II structure.
+#[derive(Debug, Clone)]
+pub struct CryptoProfile {
+    /// Use the hardware (AES-NI) calibration rates or the software ones
+    /// (software stands in for the older, slower PSC Bridges node).
+    pub hw: bool,
+    /// Global scale on the calibrated single-thread rate (models a CPU of
+    /// a different generation; 1.0 = this host).
+    pub rate_scale: f64,
+    /// B/A ratio for small (< 32 KB) per-thread segments (Table II: 843/5265).
+    pub ba_small: f64,
+    /// B/A for moderate (32 KB – 1 MB) segments (4106/6072).
+    pub ba_moderate: f64,
+    /// B/A for large (≥ 1 MB) segments (5769/5893).
+    pub ba_large: f64,
+    /// Fixed per-operation overhead α_enc, µs.
+    pub alpha_enc_us: f64,
+}
+
+impl CryptoProfile {
+    pub fn ba_ratio(&self, seg_bytes: usize) -> f64 {
+        if seg_bytes < 32 * 1024 {
+            self.ba_small
+        } else if seg_bytes < 1024 * 1024 {
+            self.ba_moderate
+        } else {
+            self.ba_large
+        }
+    }
+
+    /// Effective multi-thread throughput `A + B(t-1)` in B/µs for chunks
+    /// whose per-thread share is `seg_bytes`.
+    pub fn rate(&self, calib: &CryptoCalibration, seg_bytes: usize, threads: u32) -> f64 {
+        let a = calib.gcm_rate(seg_bytes.max(1), self.hw) * self.rate_scale;
+        let b = self.ba_ratio(seg_bytes) * a;
+        a + b * (threads.max(1) - 1) as f64
+    }
+
+    /// Virtual cost (ns) to encrypt (or decrypt) `chunk_bytes` using
+    /// `threads` threads, each handling a `chunk_bytes / threads` share.
+    pub fn enc_ns(&self, calib: &CryptoCalibration, chunk_bytes: usize, threads: u32) -> u64 {
+        if chunk_bytes == 0 {
+            return (self.alpha_enc_us * 1e3) as u64;
+        }
+        let per_thread = chunk_bytes / threads.max(1) as usize;
+        let rate = self.rate(calib, per_thread.max(1), threads);
+        ((self.alpha_enc_us + chunk_bytes as f64 / rate) * 1e3).round() as u64
+    }
+}
+
+/// Which `t` to use per message size — the paper's per-system tables (§IV
+/// Parameter Selection). Entries are (min size in KB, t); scanned last-to-
+/// first.
+#[derive(Debug, Clone)]
+pub struct TTable(pub Vec<(usize, u32)>);
+
+impl TTable {
+    pub fn t_for(&self, bytes: usize) -> u32 {
+        let kb = bytes / 1024;
+        let mut t = 1;
+        for &(min_kb, tv) in &self.0 {
+            if kb >= min_kb {
+                t = tv;
+            }
+        }
+        t
+    }
+}
+
+/// A complete simulated system.
+#[derive(Debug, Clone)]
+pub struct SystemProfile {
+    pub name: &'static str,
+    pub net: NetConfig,
+    pub crypto: CryptoProfile,
+    /// Total hyper-threads per node (32 Noleland, 28 Bridges).
+    pub hyperthreads: u32,
+    /// Hyper-threads reserved for communication (`T1`, = 2 in the paper).
+    pub comm_reserved: u32,
+    pub t_table: TTable,
+    /// IPSec kernel-crypto rate (B/µs) for the IPSec simulation mode.
+    pub ipsec_rate: f64,
+}
+
+/// Table II ratios (Noleland): B/A per size class.
+const BA_SMALL: f64 = 843.0 / 5265.0;
+const BA_MODERATE: f64 = 4106.0 / 6072.0;
+const BA_LARGE: f64 = 5769.0 / 5893.0;
+
+impl SystemProfile {
+    /// Local Noleland cluster: 100 Gb InfiniBand, Xeon Gold 6130
+    /// (16c/32t), AES-NI crypto. Network constants = paper Table I.
+    pub fn noleland() -> Self {
+        SystemProfile {
+            name: "noleland",
+            net: NetConfig {
+                alpha_eager_us: 5.54,
+                beta_eager_us_per_b: 7.29e-5,
+                alpha_rdv_us: 5.75,
+                beta_rdv_us_per_b: 7.86e-5,
+                eager_threshold: 17 * 1024,
+                intra_rate: 20_000.0,
+                intra_alpha_us: 0.6,
+            },
+            crypto: CryptoProfile {
+                hw: true,
+                rate_scale: 1.0,
+                ba_small: BA_SMALL,
+                ba_moderate: BA_MODERATE,
+                ba_large: BA_LARGE,
+                alpha_enc_us: 4.6,
+            },
+            hyperthreads: 32,
+            comm_reserved: 2,
+            t_table: TTable(vec![(64, 2), (128, 4), (512, 8)]),
+            ipsec_rate: 450.0,
+        }
+    }
+
+    /// PSC Bridges: 100 Gb Omni-Path, Haswell E5-2695v3 (14c/28t). The
+    /// Haswell node has AES-NI but is roughly half as fast per core as
+    /// Noleland's Skylake (paper: "the encryption throughput in Bridges is
+    /// much lower ... because machines in the latter are newer"), so it
+    /// uses the hardware calibration scaled by 0.55.
+    pub fn bridges() -> Self {
+        SystemProfile {
+            name: "bridges",
+            net: NetConfig {
+                alpha_eager_us: 6.10,
+                beta_eager_us_per_b: 7.60e-5,
+                alpha_rdv_us: 6.40,
+                beta_rdv_us_per_b: 8.20e-5,
+                eager_threshold: 17 * 1024,
+                intra_rate: 14_000.0,
+                intra_alpha_us: 0.8,
+            },
+            crypto: CryptoProfile {
+                hw: true,
+                rate_scale: 0.55,
+                ba_small: BA_SMALL,
+                ba_moderate: BA_MODERATE * 0.95,
+                ba_large: BA_LARGE * 0.92,
+                alpha_enc_us: 5.2,
+            },
+            hyperthreads: 28,
+            comm_reserved: 2,
+            t_table: TTable(vec![(64, 4), (256, 8), (512, 16)]),
+            ipsec_rate: 300.0,
+        }
+    }
+
+    /// The 10 GbE system of Fig 1 (IPSec motivation).
+    pub fn eth10g() -> Self {
+        SystemProfile {
+            name: "eth10g",
+            net: NetConfig {
+                alpha_eager_us: 25.0,
+                beta_eager_us_per_b: 8.3e-4, // ≈ 1.2 GB/s achievable
+                alpha_rdv_us: 30.0,
+                beta_rdv_us_per_b: 8.3e-4,
+                eager_threshold: 32 * 1024,
+                intra_rate: 20_000.0,
+                intra_alpha_us: 0.6,
+            },
+            crypto: CryptoProfile {
+                hw: true,
+                rate_scale: 1.0,
+                ba_small: BA_SMALL,
+                ba_moderate: BA_MODERATE,
+                ba_large: BA_LARGE,
+                alpha_enc_us: 4.6,
+            },
+            hyperthreads: 32,
+            comm_reserved: 2,
+            t_table: TTable(vec![(64, 2), (128, 4), (512, 8)]),
+            // IPSec throughput ≈ 1/3 of the raw link (Fig 1): raw ≈ 1200
+            // B/µs, so the serialized kernel crypto path runs ≈ 400 B/µs.
+            ipsec_rate: 400.0,
+        }
+    }
+
+    /// The 40 Gb InfiniBand cluster of Fig 2 (naive-approach motivation).
+    pub fn ib40g() -> Self {
+        SystemProfile {
+            name: "ib40g",
+            net: NetConfig {
+                alpha_eager_us: 6.0,
+                beta_eager_us_per_b: 3.33e-4, // ≈ 3.0 GB/s (paper Fig 2)
+                alpha_rdv_us: 6.3,
+                beta_rdv_us_per_b: 3.33e-4,
+                eager_threshold: 17 * 1024,
+                intra_rate: 20_000.0,
+                intra_alpha_us: 0.6,
+            },
+            crypto: CryptoProfile {
+                hw: true,
+                rate_scale: 1.0,
+                ba_small: BA_SMALL,
+                ba_moderate: BA_MODERATE,
+                ba_large: BA_LARGE,
+                alpha_enc_us: 4.6,
+            },
+            hyperthreads: 32,
+            comm_reserved: 2,
+            t_table: TTable(vec![(64, 2), (128, 4), (512, 8)]),
+            ipsec_rate: 450.0,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "noleland" => Some(Self::noleland()),
+            "bridges" => Some(Self::bridges()),
+            "eth10g" => Some(Self::eth10g()),
+            "ib40g" => Some(Self::ib40g()),
+            _ => None,
+        }
+    }
+
+    /// The paper's `t` selection plus the thread cap `min{T0−T1, t}`.
+    pub fn threads_for(&self, bytes: usize, t0: u32) -> u32 {
+        let t = self.t_table.t_for(bytes);
+        t.min(t0.saturating_sub(self.comm_reserved)).max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vtime::calib;
+
+    #[test]
+    fn t_table_matches_paper_noleland() {
+        let p = SystemProfile::noleland();
+        assert_eq!(p.t_table.t_for(32 * 1024), 1);
+        assert_eq!(p.t_table.t_for(64 * 1024), 2);
+        assert_eq!(p.t_table.t_for(127 * 1024), 2);
+        assert_eq!(p.t_table.t_for(128 * 1024), 4);
+        assert_eq!(p.t_table.t_for(511 * 1024), 4);
+        assert_eq!(p.t_table.t_for(512 * 1024), 8);
+        assert_eq!(p.t_table.t_for(4 << 20), 8);
+    }
+
+    #[test]
+    fn t_table_matches_paper_bridges() {
+        let p = SystemProfile::bridges();
+        assert_eq!(p.t_table.t_for(64 * 1024), 4);
+        assert_eq!(p.t_table.t_for(256 * 1024), 8);
+        assert_eq!(p.t_table.t_for(512 * 1024), 16);
+    }
+
+    #[test]
+    fn thread_cap_applies() {
+        let p = SystemProfile::noleland();
+        // 4 ranks per 32-thread node → T0 = 8, cap = 6 → t = min(6, 8) = 6.
+        assert_eq!(p.threads_for(4 << 20, 8), 6);
+        // 8 ranks → T0 = 4, cap = 2.
+        assert_eq!(p.threads_for(4 << 20, 4), 2);
+        // Plenty of threads → paper's t.
+        assert_eq!(p.threads_for(4 << 20, 32), 8);
+    }
+
+    #[test]
+    fn enc_cost_decreases_with_threads() {
+        let c = calib::synthetic();
+        let p = SystemProfile::noleland();
+        let t1 = p.crypto.enc_ns(&c, 1 << 20, 1);
+        let t4 = p.crypto.enc_ns(&c, 1 << 20, 4);
+        let t8 = p.crypto.enc_ns(&c, 1 << 20, 8);
+        assert!(t4 < t1 && t8 < t4, "t1={t1} t4={t4} t8={t8}");
+        // Large-class scaling is near-linear (B/A ≈ 0.98): 8 threads ≈ 7.85×.
+        let speedup = t1 as f64 / t8 as f64;
+        assert!(speedup > 5.0 && speedup < 8.2, "speedup={speedup}");
+    }
+
+    #[test]
+    fn hockney_times() {
+        let p = SystemProfile::noleland();
+        // 1 MB rendezvous: β·m = 7.86e-5 µs/B · 2^20 B ≈ 82.4 µs.
+        let ns = p.net.wire_ns(1 << 20);
+        assert!((ns as f64 / 1e3 - 82.42).abs() < 1.0, "{ns}");
+        assert_eq!(p.net.alpha_ns(1024), 5540);
+        assert_eq!(p.net.alpha_ns(1 << 20), 5750);
+    }
+
+    #[test]
+    fn soft_crypto_slower_than_hw() {
+        let c = calib::synthetic();
+        let nol = SystemProfile::noleland();
+        let bri = SystemProfile::bridges();
+        assert!(bri.crypto.enc_ns(&c, 1 << 20, 1) > nol.crypto.enc_ns(&c, 1 << 20, 1));
+    }
+}

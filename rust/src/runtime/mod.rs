@@ -1,0 +1,307 @@
+//! PJRT runtime: load the JAX/Pallas AOT artifacts (HLO text) and execute
+//! them from Rust. Python never runs on this path.
+//!
+//! Pattern from /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `compile` → `execute`. Artifacts are
+//! lowered with `return_tuple=True`, so results decompose as tuples.
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// Typed element buffers crossing the PJRT boundary.
+pub enum HostBuf {
+    U8(Vec<u8>),
+    F32(Vec<f32>),
+}
+
+impl HostBuf {
+    fn to_literal(&self, dims: &[usize]) -> Result<xla::Literal> {
+        let elem_count: usize = dims.iter().product();
+        let (ty, bytes): (xla::ElementType, &[u8]) = match self {
+            HostBuf::U8(v) => {
+                anyhow::ensure!(v.len() == elem_count, "u8 buffer length mismatch");
+                (xla::ElementType::U8, v.as_slice())
+            }
+            HostBuf::F32(v) => {
+                anyhow::ensure!(v.len() == elem_count, "f32 buffer length mismatch");
+                (xla::ElementType::F32, unsafe {
+                    std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
+                })
+            }
+        };
+        xla::Literal::create_from_shape_and_untyped_data(ty, dims, bytes)
+            .map_err(|e| anyhow!("literal creation: {e:?}"))
+    }
+}
+
+/// An executable artifact loaded onto the PJRT CPU client.
+pub struct Artifact {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Artifact {
+    /// Execute with typed host inputs; returns the decomposed output tuple
+    /// as raw little-endian byte vectors (callers reinterpret per dtype).
+    pub fn run(&self, inputs: &[(HostBuf, Vec<usize>)]) -> Result<Vec<Vec<u8>>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(buf, dims)| buf.to_literal(dims))
+            .collect::<Result<_>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.name))?;
+        let mut out = result
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("no replica output"))?
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("no device output"))?
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        // return_tuple=True → a 1-level tuple of outputs.
+        let parts = out
+            .decompose_tuple()
+            .map_err(|e| anyhow!("decompose: {e:?}"))?;
+        parts.into_iter().map(|lit| extract_bytes(&lit)).collect()
+    }
+
+    /// Execute with pre-built literals (test/debug helper).
+    pub fn run_literals(&self, literals: &[xla::Literal]) -> Result<Vec<Vec<u8>>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(literals)
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.name))?;
+        let mut out = result
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("no replica output"))?
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("no device output"))?
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        let parts = out.decompose_tuple().map_err(|e| anyhow!("decompose: {e:?}"))?;
+        parts.into_iter().map(|lit| extract_bytes(&lit)).collect()
+    }
+
+    /// Interpret an output part as f32s.
+    pub fn as_f32(bytes: &[u8]) -> Vec<f32> {
+        bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect()
+    }
+}
+
+/// Extract an output literal's contents as raw little-endian bytes.
+fn extract_bytes(lit: &xla::Literal) -> Result<Vec<u8>> {
+    let ty = lit.ty().map_err(|e| anyhow!("ty: {e:?}"))?;
+    match ty {
+        xla::ElementType::U8 => {
+            let mut v = vec![0u8; lit.element_count()];
+            lit.copy_raw_to::<u8>(&mut v).map_err(|e| anyhow!("copy_raw u8: {e:?}"))?;
+            Ok(v)
+        }
+        xla::ElementType::U32 => {
+            let mut v = vec![0u32; lit.element_count()];
+            lit.copy_raw_to::<u32>(&mut v).map_err(|e| anyhow!("copy_raw u32: {e:?}"))?;
+            Ok(v.iter().flat_map(|x| x.to_le_bytes()).collect())
+        }
+        xla::ElementType::F32 => {
+            let mut v = vec![0f32; lit.element_count()];
+            lit.copy_raw_to::<f32>(&mut v).map_err(|e| anyhow!("copy_raw f32: {e:?}"))?;
+            Ok(v.iter().flat_map(|x| x.to_le_bytes()).collect())
+        }
+        other => Err(anyhow!("unsupported output element type {other:?}")),
+    }
+}
+
+/// The PJRT CPU client plus a cache of compiled artifacts.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: Mutex<HashMap<String, std::sync::Arc<Artifact>>>,
+}
+
+impl Runtime {
+    /// Create a runtime reading artifacts from `dir` (default:
+    /// `$CRYPTMPI_ARTIFACTS` or `./artifacts`).
+    pub fn new(dir: Option<&Path>) -> Result<Self> {
+        let dir = dir
+            .map(|p| p.to_path_buf())
+            .or_else(|| std::env::var_os("CRYPTMPI_ARTIFACTS").map(PathBuf::from))
+            .unwrap_or_else(|| PathBuf::from("artifacts"));
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(Runtime { client, dir, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Load (and cache) an artifact by name (`<name>.hlo.txt` in the dir).
+    pub fn load(&self, name: &str) -> Result<std::sync::Arc<Artifact>> {
+        if let Some(a) = self.cache.lock().unwrap().get(name) {
+            return Ok(std::sync::Arc::clone(a));
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        let art = std::sync::Arc::new(Artifact { exe, name: name.to_string() });
+        self.cache.lock().unwrap().insert(name.to_string(), std::sync::Arc::clone(&art));
+        Ok(art)
+    }
+
+    /// Convenience: the stencil compute artifact (128×128 f32 state/weights).
+    pub fn stencil_step(&self, state: &[f32], w: &[f32]) -> Result<Vec<f32>> {
+        let art = self.load("stencil_128")?;
+        let out = art.run(&[
+            (HostBuf::F32(state.to_vec()), vec![128, 128]),
+            (HostBuf::F32(w.to_vec()), vec![128, 128]),
+        ])?;
+        Ok(Artifact::as_f32(&out[0]))
+    }
+
+    /// Convenience: the MLP block (batch 8 × 128; see model.py).
+    pub fn mlp_forward(
+        &self,
+        x: &[f32],
+        w1: &[f32],
+        b1: &[f32],
+        w2: &[f32],
+        b2: &[f32],
+    ) -> Result<Vec<f32>> {
+        let art = self.load("mlp_8x128")?;
+        let out = art.run(&[
+            (HostBuf::F32(x.to_vec()), vec![8, 128]),
+            (HostBuf::F32(w1.to_vec()), vec![128, 256]),
+            (HostBuf::F32(b1.to_vec()), vec![256]),
+            (HostBuf::F32(w2.to_vec()), vec![256, 128]),
+            (HostBuf::F32(b2.to_vec()), vec![128]),
+        ])?;
+        Ok(Artifact::as_f32(&out[0]))
+    }
+
+    /// Convenience: GCM-seal one 4 KB segment through the XLA backend.
+    /// `rk`: 11×16 round keys, `j0`: 16-byte pre-counter block, `pt`: 4096
+    /// bytes. Returns (ciphertext, 16-byte tag).
+    pub fn gcm_seal_256(&self, rk: &[u8], j0: &[u8], pt: &[u8]) -> Result<(Vec<u8>, Vec<u8>)> {
+        anyhow::ensure!(rk.len() == 176 && j0.len() == 16 && pt.len() == 4096);
+        let art = self.load("gcm_seal_256")?;
+        let mut out = art.run(&[
+            (HostBuf::U8(rk.to_vec()), vec![11, 16]),
+            (HostBuf::U8(j0.to_vec()), vec![16]),
+            (HostBuf::U8(pt.to_vec()), vec![256, 16]),
+        ])?;
+        anyhow::ensure!(out.len() == 2, "expected (ct, tag)");
+        let tag = out.pop().unwrap();
+        let ct = out.pop().unwrap();
+        Ok((ct, tag))
+    }
+}
+
+// ---------------------------------------------------------------------
+// Thread-safe service wrapper
+// ---------------------------------------------------------------------
+
+/// The PJRT client is not `Send`/`Sync` (internal `Rc`s), but rank threads
+/// of the simulated cluster need artifact execution. `Service` owns the
+/// [`Runtime`] on a dedicated thread and serves requests over a channel;
+/// handles are cheap to clone and `Send`.
+#[derive(Clone)]
+pub struct Service {
+    tx: std::sync::mpsc::Sender<ServiceReq>,
+}
+
+struct ServiceReq {
+    name: String,
+    inputs: Vec<(HostBuf, Vec<usize>)>,
+    reply: std::sync::mpsc::Sender<Result<Vec<Vec<u8>>>>,
+}
+
+impl Service {
+    /// Spawn the service thread (creates the PJRT client inside it).
+    pub fn start(dir: Option<std::path::PathBuf>) -> Result<Service> {
+        let (tx, rx) = std::sync::mpsc::channel::<ServiceReq>();
+        let (ready_tx, ready_rx) = std::sync::mpsc::channel::<Result<()>>();
+        std::thread::Builder::new()
+            .name("pjrt-service".into())
+            .spawn(move || {
+                let rt = match Runtime::new(dir.as_deref()) {
+                    Ok(rt) => {
+                        let _ = ready_tx.send(Ok(()));
+                        rt
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    let out = rt
+                        .load(&req.name)
+                        .and_then(|art| art.run(&req.inputs));
+                    let _ = req.reply.send(out);
+                }
+            })
+            .expect("spawn pjrt service");
+        ready_rx.recv().expect("service thread alive")?;
+        Ok(Service { tx })
+    }
+
+    /// Execute an artifact by name with typed inputs.
+    pub fn run(&self, name: &str, inputs: Vec<(HostBuf, Vec<usize>)>) -> Result<Vec<Vec<u8>>> {
+        let (reply_tx, reply_rx) = std::sync::mpsc::channel();
+        self.tx
+            .send(ServiceReq { name: name.to_string(), inputs, reply: reply_tx })
+            .map_err(|_| anyhow!("pjrt service stopped"))?;
+        reply_rx.recv().map_err(|_| anyhow!("pjrt service dropped reply"))?
+    }
+
+    /// Stencil step through the service (see [`Runtime::stencil_step`]).
+    pub fn stencil_step(&self, state: &[f32], w: &[f32]) -> Result<Vec<f32>> {
+        let out = self.run(
+            "stencil_128",
+            vec![
+                (HostBuf::F32(state.to_vec()), vec![128, 128]),
+                (HostBuf::F32(w.to_vec()), vec![128, 128]),
+            ],
+        )?;
+        Ok(Artifact::as_f32(&out[0]))
+    }
+
+    /// MLP forward through the service (see [`Runtime::mlp_forward`]).
+    pub fn mlp_forward(
+        &self,
+        x: &[f32],
+        w1: &[f32],
+        b1: &[f32],
+        w2: &[f32],
+        b2: &[f32],
+    ) -> Result<Vec<f32>> {
+        let out = self.run(
+            "mlp_8x128",
+            vec![
+                (HostBuf::F32(x.to_vec()), vec![8, 128]),
+                (HostBuf::F32(w1.to_vec()), vec![128, 256]),
+                (HostBuf::F32(b1.to_vec()), vec![256]),
+                (HostBuf::F32(w2.to_vec()), vec![256, 128]),
+                (HostBuf::F32(b2.to_vec()), vec![128]),
+            ],
+        )?;
+        Ok(Artifact::as_f32(&out[0]))
+    }
+}

@@ -1,0 +1,175 @@
+//! Startup calibration: measure the host's *real* single-thread crypto and
+//! memcpy rates, once, single-threaded, before any rank threads exist.
+//!
+//! The encryption-cost model (see [`crate::net::profile`]) charges virtual
+//! time as `α_enc + s / (A + B·(t−1))` — the paper's max-rate form — where
+//! `A` (single-thread throughput) comes from these measurements, bucketed
+//! by message size to capture the sub-32KB ramp-up the paper describes
+//! ("the encryption speed ... gathers momentum quickly and gets saturated
+//! at around 32 KB", §IV).
+
+use crate::crypto::Gcm;
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Measured single-thread rates, bytes per microsecond, per size bucket.
+#[derive(Debug, Clone)]
+pub struct CryptoCalibration {
+    /// Bucket upper bounds in bytes (ascending; last is u64::MAX).
+    pub bucket_max: Vec<usize>,
+    /// AES-GCM seal throughput per bucket (B/µs) — hardware path.
+    pub gcm_rate_hw: Vec<f64>,
+    /// AES-GCM seal throughput per bucket (B/µs) — software path
+    /// (stands in for the slower PSC Bridges node).
+    pub gcm_rate_soft: Vec<f64>,
+    /// Fixed per-call overhead (µs), from the smallest sizes.
+    pub alpha_enc_us: f64,
+    /// memcpy throughput (B/µs) for intra-node transfers.
+    pub memcpy_rate: f64,
+}
+
+impl CryptoCalibration {
+    /// Single-thread GCM rate (B/µs) for an `s`-byte segment.
+    pub fn gcm_rate(&self, s: usize, hw: bool) -> f64 {
+        let rates = if hw { &self.gcm_rate_hw } else { &self.gcm_rate_soft };
+        for (i, &max) in self.bucket_max.iter().enumerate() {
+            if s <= max {
+                return rates[i];
+            }
+        }
+        *rates.last().unwrap()
+    }
+}
+
+/// Size buckets matching the paper's small/moderate/large levels plus a
+/// finer ramp below 32 KB.
+const BUCKETS: &[usize] = &[
+    1024,
+    4 * 1024,
+    16 * 1024,
+    32 * 1024,
+    128 * 1024,
+    512 * 1024,
+    1024 * 1024,
+    usize::MAX,
+];
+
+fn measure_gcm(hw: bool) -> (Vec<f64>, f64) {
+    let key = [0x5au8; 16];
+    let gcm = Gcm::with_backend(&key, hw);
+    let nonce = [7u8; 12];
+    let mut rates = Vec::with_capacity(BUCKETS.len());
+    let mut alpha_us: f64 = 0.5;
+    for (i, &max) in BUCKETS.iter().enumerate() {
+        let size = if max == usize::MAX { 4 * 1024 * 1024 } else { max };
+        let mut buf = vec![0xa5u8; size];
+        // Warm up, then measure enough reps for ≥ ~10 ms of work.
+        let reps = (20_000_000 / size).clamp(3, 2000);
+        let _ = gcm.seal_in_place(&nonce, &[], &mut buf);
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            std::hint::black_box(gcm.seal_in_place(&nonce, &[], &mut buf));
+        }
+        let el = t0.elapsed().as_secs_f64() * 1e6; // µs
+        let per_call = el / reps as f64;
+        rates.push(size as f64 / per_call);
+        if i == 0 {
+            // Estimate fixed overhead from the smallest bucket: time not
+            // explained by the large-size asymptotic rate.
+            alpha_us = (per_call * 0.2).clamp(0.05, 10.0);
+        }
+    }
+    (rates, alpha_us)
+}
+
+fn measure_memcpy() -> f64 {
+    let src = vec![1u8; 4 * 1024 * 1024];
+    let mut dst = vec![0u8; 4 * 1024 * 1024];
+    let t0 = Instant::now();
+    let reps = 8;
+    for _ in 0..reps {
+        dst.copy_from_slice(&src);
+        std::hint::black_box(&dst);
+    }
+    let el = t0.elapsed().as_secs_f64() * 1e6;
+    (reps * src.len()) as f64 / el
+}
+
+static CALIB: OnceLock<CryptoCalibration> = OnceLock::new();
+
+/// The process-wide calibration (measured on first use).
+///
+/// Debug builds default to the deterministic [`synthetic`] calibration:
+/// unoptimized crypto measures ~100× slow, which would poison every
+/// virtual-time ratio in the test suite. Set `CRYPTMPI_REAL_CALIB=1` to
+/// force real measurement even in debug builds.
+pub fn get() -> &'static CryptoCalibration {
+    CALIB.get_or_init(|| {
+        let force_real = std::env::var_os("CRYPTMPI_REAL_CALIB").is_some_and(|v| v == "1");
+        if cfg!(debug_assertions) && !force_real {
+            return synthetic();
+        }
+        let (gcm_rate_hw, alpha_hw) = measure_gcm(true);
+        let (gcm_rate_soft, _) = measure_gcm(false);
+        CryptoCalibration {
+            bucket_max: BUCKETS.to_vec(),
+            gcm_rate_hw,
+            gcm_rate_soft,
+            alpha_enc_us: alpha_hw,
+            memcpy_rate: measure_memcpy(),
+        }
+    })
+}
+
+/// Override hook for tests and deterministic benches: install a synthetic
+/// calibration (no-op if already initialized — call early).
+pub fn install(c: CryptoCalibration) {
+    let _ = CALIB.set(c);
+}
+
+/// A deterministic calibration for tests: flat 5000 B/µs hardware GCM
+/// (≈ the paper's Noleland single-thread 5.2 GB/s), 1500 B/µs software,
+/// 20 GB/s memcpy.
+pub fn synthetic() -> CryptoCalibration {
+    let n = BUCKETS.len();
+    // Ramp below 32 KB: 30 %, 55 %, 75 %, 90 % of asymptotic, then flat —
+    // mirrors the measured shape of the paper's Fig 4 single-thread curve.
+    let ramp = [0.30, 0.55, 0.75, 0.90, 1.0, 1.0, 1.0, 1.0];
+    CryptoCalibration {
+        bucket_max: BUCKETS.to_vec(),
+        gcm_rate_hw: (0..n).map(|i| 5265.0 * ramp[i]).collect(),
+        gcm_rate_soft: (0..n).map(|i| 1500.0 * ramp[i]).collect(),
+        alpha_enc_us: 4.3,
+        memcpy_rate: 20_000.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_lookup_buckets() {
+        let c = synthetic();
+        assert!((c.gcm_rate(100, true) - 5265.0 * 0.30).abs() < 1e-6);
+        assert!((c.gcm_rate(32 * 1024, true) - 5265.0 * 0.90).abs() < 1e-6);
+        assert!((c.gcm_rate(8 * 1024 * 1024, true) - 5265.0).abs() < 1e-6);
+        assert!(c.gcm_rate(1 << 20, false) < c.gcm_rate(1 << 20, true));
+    }
+
+    #[test]
+    fn real_calibration_sane() {
+        let c = get();
+        // Large-message hardware GCM should beat 100 MB/s (=100 B/µs) on
+        // any remotely modern CPU — in optimized builds. Debug builds run
+        // unoptimized crypto, so only sanity-check positivity there.
+        let floor = if cfg!(debug_assertions) { 1.0 } else { 100.0 };
+        assert!(*c.gcm_rate_hw.last().unwrap() > floor, "{:?}", c.gcm_rate_hw);
+        assert!(c.memcpy_rate > *c.gcm_rate_hw.last().unwrap() * 0.5);
+        assert!(c.alpha_enc_us > 0.0);
+        // Soft path slower than hardware path (if HW available).
+        if crate::crypto::aesni::available() {
+            assert!(c.gcm_rate_soft.last().unwrap() < c.gcm_rate_hw.last().unwrap());
+        }
+    }
+}

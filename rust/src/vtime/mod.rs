@@ -1,0 +1,99 @@
+//! Virtual time — the clock substrate of the simulated cluster.
+//!
+//! The host has one core and no fabric, so wall-clock timing cannot exhibit
+//! the paper's multi-core / 100 Gb phenomena. Instead every rank carries a
+//! virtual clock (nanoseconds, `u64`): real work still executes (every byte
+//! is really encrypted, checked and copied), but *durations* are charged
+//! analytically from calibrated rates. See DESIGN.md §1 for the argument
+//! that this preserves the paper's evaluation shape.
+//!
+//! [`calib`] measures the real single-thread AES-GCM and memcpy rates of
+//! this host once per process; those feed the crypto cost model so that the
+//! "Noleland" profile's encryption speed is grounded in measured hardware,
+//! not copied from the paper.
+
+pub mod calib;
+
+/// A nanosecond-resolution virtual clock. One per rank thread; never shared
+/// (messages carry timestamps between clocks).
+#[derive(Debug, Clone, Default)]
+pub struct VClock {
+    now_ns: u64,
+}
+
+impl VClock {
+    pub fn new() -> Self {
+        VClock { now_ns: 0 }
+    }
+
+    #[inline]
+    pub fn now(&self) -> u64 {
+        self.now_ns
+    }
+
+    /// Advance by a duration.
+    #[inline]
+    pub fn advance(&mut self, ns: u64) {
+        self.now_ns += ns;
+    }
+
+    /// Jump forward to an absolute time (no-op if already past it) and
+    /// report the waiting time, if any.
+    #[inline]
+    pub fn wait_until(&mut self, t_ns: u64) -> u64 {
+        if t_ns > self.now_ns {
+            let waited = t_ns - self.now_ns;
+            self.now_ns = t_ns;
+            waited
+        } else {
+            0
+        }
+    }
+}
+
+/// Convert microseconds (f64, the unit of the paper's model parameters) to
+/// virtual nanoseconds.
+#[inline]
+pub fn us_to_ns(us: f64) -> u64 {
+    (us * 1e3).round().max(0.0) as u64
+}
+
+/// Convert virtual nanoseconds to microseconds.
+#[inline]
+pub fn ns_to_us(ns: u64) -> f64 {
+    ns as f64 / 1e3
+}
+
+/// Throughput helper: bytes over a virtual duration → MB/s.
+#[inline]
+pub fn mb_per_s(bytes: u64, ns: u64) -> f64 {
+    if ns == 0 {
+        return f64::INFINITY;
+    }
+    (bytes as f64 / 1e6) / (ns as f64 / 1e9)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clock_advances_and_waits() {
+        let mut c = VClock::new();
+        assert_eq!(c.now(), 0);
+        c.advance(100);
+        assert_eq!(c.now(), 100);
+        assert_eq!(c.wait_until(50), 0); // already past
+        assert_eq!(c.now(), 100);
+        assert_eq!(c.wait_until(250), 150);
+        assert_eq!(c.now(), 250);
+    }
+
+    #[test]
+    fn unit_conversions() {
+        assert_eq!(us_to_ns(1.5), 1500);
+        assert_eq!(ns_to_us(2500), 2.5);
+        // 1 MB in 1 ms = 1000 MB/s
+        assert!((mb_per_s(1_000_000, 1_000_000) - 1000.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,158 @@
+//! Integration: the Rust runtime loads the JAX/Pallas AOT artifacts via
+//! PJRT and the results cross-check against the independent Rust
+//! implementations — the strongest correctness signal in the repo: two
+//! from-scratch AES-GCM stacks (Rust AES-NI/soft and JAX/Pallas) written
+//! against the spec must agree bit-for-bit.
+
+use cryptmpi::crypto::aes::AesKey;
+use cryptmpi::crypto::rand::SimRng;
+use cryptmpi::crypto::Gcm;
+use cryptmpi::runtime::Runtime;
+use std::path::Path;
+
+fn runtime_or_skip() -> Option<Runtime> {
+    let dir = std::env::var("CRYPTMPI_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    if !Path::new(&dir).join("gcm_seal_256.hlo.txt").exists() {
+        eprintln!("artifacts not built (run `make artifacts`); skipping");
+        return None;
+    }
+    Some(Runtime::new(Some(Path::new(&dir))).expect("PJRT runtime"))
+}
+
+#[test]
+fn gcm_artifact_matches_rust_crypto() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut rng = SimRng::new(0xC0FFEE);
+    for trial in 0..3 {
+        let mut key = [0u8; 16];
+        let mut nonce = [0u8; 12];
+        rng.fill(&mut key);
+        rng.fill(&mut nonce);
+        let mut pt = vec![0u8; 4096];
+        rng.fill(&mut pt);
+
+        // Rust side.
+        let gcm = Gcm::new(&key);
+        let sealed = gcm.seal(&nonce, &[], &pt);
+        let (rust_ct, rust_tag) = sealed.split_at(4096);
+
+        // XLA side: pass the expanded schedule + J0 = nonce ‖ 0x00000001.
+        let schedule = AesKey::new(&key);
+        let mut rk = Vec::with_capacity(176);
+        for r in 0..11 {
+            rk.extend_from_slice(&schedule.round_key_bytes(r));
+        }
+        let mut j0 = [0u8; 16];
+        j0[..12].copy_from_slice(&nonce);
+        j0[15] = 1;
+        let (xla_ct, xla_tag) = rt.gcm_seal_256(&rk, &j0, &pt).expect("XLA GCM");
+
+        assert_eq!(rust_ct, &xla_ct[..], "ciphertext mismatch (trial {trial})");
+        assert_eq!(rust_tag, &xla_tag[..], "tag mismatch (trial {trial})");
+    }
+}
+
+#[test]
+fn stencil_artifact_matches_cpu_reference() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut rng = SimRng::new(42);
+    let n = 128;
+    let state: Vec<f32> = (0..n * n).map(|_| rng.f64() as f32 - 0.5).collect();
+    let w: Vec<f32> = (0..n * n).map(|_| (rng.f64() as f32 - 0.5) * 0.2).collect();
+    let got = rt.stencil_step(&state, &w).expect("stencil artifact");
+    // CPU reference: tanh(state @ w).
+    for i in 0..n {
+        for j in 0..n {
+            let mut acc = 0.0f64;
+            for k in 0..n {
+                acc += state[i * n + k] as f64 * w[k * n + j] as f64;
+            }
+            let want = acc.tanh() as f32;
+            let g = got[i * n + j];
+            assert!(
+                (g - want).abs() < 1e-3,
+                "({i},{j}): got {g}, want {want}"
+            );
+        }
+    }
+    // Bounded output (tanh).
+    assert!(got.iter().all(|x| x.abs() <= 1.0));
+}
+
+#[test]
+fn mlp_artifact_shapes_and_determinism() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut rng = SimRng::new(7);
+    let x: Vec<f32> = (0..8 * 128).map(|_| rng.f64() as f32).collect();
+    let w1: Vec<f32> = (0..128 * 256).map(|_| (rng.f64() as f32 - 0.5) * 0.1).collect();
+    let b1: Vec<f32> = (0..256).map(|_| 0.0).collect();
+    let w2: Vec<f32> = (0..256 * 128).map(|_| (rng.f64() as f32 - 0.5) * 0.1).collect();
+    let b2: Vec<f32> = (0..128).map(|_| 0.1).collect();
+    let out1 = rt.mlp_forward(&x, &w1, &b1, &w2, &b2).expect("mlp");
+    let out2 = rt.mlp_forward(&x, &w1, &b1, &w2, &b2).expect("mlp");
+    assert_eq!(out1.len(), 8 * 128);
+    assert_eq!(out1, out2, "deterministic execution");
+    assert!(out1.iter().any(|&v| v != 0.0));
+
+    // Spot-check one output element against a CPU reference.
+    let mut h = vec![0.0f32; 256];
+    for j in 0..256 {
+        let mut acc = 0.0f64;
+        for k in 0..128 {
+            acc += x[k] as f64 * w1[k * 256 + j] as f64;
+        }
+        h[j] = (acc as f32 + b1[j]).max(0.0);
+    }
+    let mut want = 0.0f64;
+    for k in 0..256 {
+        want += h[k] as f64 * w2[k * 128] as f64;
+    }
+    let want = want as f32 + b2[0];
+    assert!((out1[0] - want).abs() < 1e-2, "got {} want {}", out1[0], want);
+}
+
+#[test]
+fn multiseg_artifact_matches_stream_segments() {
+    // The vmapped 8×1KB artifact against the Rust Algorithm-1 segment
+    // seals (same subkey, positional nonces).
+    let Some(rt) = runtime_or_skip() else { return };
+    let art = match rt.load("gcm_seal_8x64") {
+        Ok(a) => a,
+        Err(e) => panic!("load: {e}"),
+    };
+    let mut rng = SimRng::new(99);
+    let mut sub = [0u8; 16];
+    rng.fill(&mut sub);
+    let schedule = AesKey::new(&sub);
+    let mut rk = Vec::with_capacity(176);
+    for r in 0..11 {
+        rk.extend_from_slice(&schedule.round_key_bytes(r));
+    }
+    // 8 segments of 1 KB with Algorithm-1 nonces.
+    let mut pts = vec![0u8; 8 * 1024];
+    rng.fill(&mut pts);
+    let mut j0s = Vec::with_capacity(8 * 16);
+    for i in 0..8u32 {
+        let nonce = cryptmpi::crypto::stream::segment_nonce(i + 1, i == 7);
+        let mut j0 = [0u8; 16];
+        j0[..12].copy_from_slice(&nonce);
+        j0[15] = 1;
+        j0s.extend_from_slice(&j0);
+    }
+    let out = art
+        .run(&[
+            (cryptmpi::runtime::HostBuf::U8(rk), vec![11, 16]),
+            (cryptmpi::runtime::HostBuf::U8(j0s), vec![8, 16]),
+            (cryptmpi::runtime::HostBuf::U8(pts.clone()), vec![8, 64, 16]),
+        ])
+        .expect("run multiseg");
+    let (cts, tags) = (&out[0], &out[1]);
+
+    let gcm = Gcm::new(&sub);
+    for i in 0..8usize {
+        let nonce = cryptmpi::crypto::stream::segment_nonce(i as u32 + 1, i == 7);
+        let sealed = gcm.seal(&nonce, &[], &pts[i * 1024..(i + 1) * 1024]);
+        assert_eq!(&cts[i * 1024..(i + 1) * 1024], &sealed[..1024], "segment {i} ct");
+        assert_eq!(&tags[i * 16..(i + 1) * 16], &sealed[1024..], "segment {i} tag");
+    }
+}
