@@ -6,7 +6,9 @@
 //! cross-times the RustCrypto `aes` crate block cipher as a reference
 //! point for the AES core.
 
+use cryptmpi::coordinator::BufferPool;
 use cryptmpi::crypto::rand::SimRng;
+use cryptmpi::crypto::stream::{chop_decrypt, chop_decrypt_wire, chop_encrypt, chop_encrypt_into};
 use cryptmpi::crypto::{Gcm, StreamOpener, StreamSealer};
 use std::time::Instant;
 
@@ -94,6 +96,59 @@ fn main() {
         });
     }
 
+    // Zero-copy pipelined engine: the legacy chop path clones every
+    // segment into a fresh Vec (O(segments) allocations per message); the
+    // wire path seals in place over one contiguous reused buffer
+    // (O(1) allocations per message). Acceptance: the zero-copy path must
+    // be no slower at any size, 1 MB – 16 MB.
+    println!("\n-- chop path: legacy O(segments) allocs vs zero-copy O(1) --");
+    {
+        let k1 = Gcm::new(&[9u8; 16]);
+        let mut pool = BufferPool::new();
+        for size in [1usize << 20, 4 << 20, 16 << 20] {
+            let mut msg = vec![0u8; size];
+            rng.fill(&mut msg);
+            let nsegs = 64u32;
+            bench(&format!("chop legacy seal {}B ({} allocs/msg)", size, nsegs), size, || {
+                std::hint::black_box(chop_encrypt(&k1, &msg, nsegs));
+            });
+            let mut wire = pool.acquire(size + nsegs as usize * 16);
+            bench(&format!("chop zero-copy seal {}B (0 allocs/msg)", size), size, || {
+                std::hint::black_box(chop_encrypt_into(&k1, &msg, nsegs, &mut wire));
+            });
+            // Decrypt side at 4 MB: per-segment Vec parse vs wire open.
+            if size == 4 << 20 {
+                let (lh, lsegs) = chop_encrypt(&k1, &msg, nsegs);
+                bench("chop legacy open 4MB", size, || {
+                    std::hint::black_box(chop_decrypt(&k1, &lh, &lsegs).expect("auth"));
+                });
+                let wh = chop_encrypt_into(&k1, &msg, nsegs, &mut wire);
+                bench("chop zero-copy open 4MB", size, || {
+                    std::hint::black_box(chop_decrypt_wire(&k1, &wh, &wire).expect("auth"));
+                });
+            }
+            pool.recycle(wire);
+        }
+        // Steady-state allocation behaviour across a message stream: the
+        // pool serves every wire buffer after the first.
+        let mut stream_pool = BufferPool::new();
+        let msg = vec![0x5au8; 1 << 20];
+        for _ in 0..32 {
+            let mut w = stream_pool.acquire(msg.len() + 64 * 16);
+            let h = chop_encrypt_into(&k1, &msg, 64, &mut w);
+            std::hint::black_box(&h);
+            stream_pool.recycle(w);
+        }
+        let s = stream_pool.stats();
+        println!(
+            "buffer pool over 32×1MB stream: {} fresh allocs, {} reuses (legacy path: {} allocs)",
+            s.allocs,
+            s.reuses,
+            32 * 64
+        );
+        assert_eq!(s.allocs, 1, "zero-copy path must allocate O(1) buffers per stream");
+    }
+
     // SHA-256 and RSA-OAEP (key-distribution path).
     let data = vec![0xaau8; 1 << 20];
     bench("sha256 1MB", data.len(), || {
@@ -111,16 +166,25 @@ fn main() {
         std::hint::black_box(kp.private.decrypt_oaep(&ct).unwrap());
     });
 
-    // RustCrypto oracle timing for perspective (AES block only).
-    {
-        use aes::cipher::{BlockEncrypt, KeyInit};
-        let oracle = aes::Aes128::new(&key.into());
-        let mut blocks = vec![aes::Block::from([0u8; 16]); 4096];
-        bench("rustcrypto aes128 64KB (reference)", 65536, || {
-            for b in blocks.iter_mut() {
-                oracle.encrypt_block(b);
-            }
-            std::hint::black_box(&blocks);
-        });
-    }
+    // RustCrypto oracle timing for perspective (AES block only; behind
+    // the `oracle` feature — the default build assumes no external crates).
+    rustcrypto_reference(&key);
+}
+
+#[cfg(feature = "oracle")]
+fn rustcrypto_reference(key: &[u8; 16]) {
+    use aes::cipher::{BlockEncrypt, KeyInit};
+    let oracle = aes::Aes128::new(&(*key).into());
+    let mut blocks = vec![aes::Block::from([0u8; 16]); 4096];
+    bench("rustcrypto aes128 64KB (reference)", 65536, || {
+        for b in blocks.iter_mut() {
+            oracle.encrypt_block(b);
+        }
+        std::hint::black_box(&blocks);
+    });
+}
+
+#[cfg(not(feature = "oracle"))]
+fn rustcrypto_reference(_key: &[u8; 16]) {
+    println!("rustcrypto reference skipped (build with --features oracle)");
 }

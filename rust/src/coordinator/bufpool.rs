@@ -1,0 +1,265 @@
+//! Reusable scratch-buffer pool for the zero-copy wire path.
+//!
+//! The chop hot path used to allocate one `Vec` per segment per message —
+//! O(segments) allocations whose cost dominates large-message encrypted
+//! sends once AES runs at hardware speed (Naser et al., arXiv:2010.06139,
+//! find the same on real MPI stacks). With the pool, each rank assembles a
+//! chunk in **one** contiguous wire buffer (segment bodies followed by the
+//! trailing tag block), seals it in place, and hands it to the transport;
+//! consumed receive buffers are recycled as the next send/recv scratch, so
+//! steady-state traffic allocates O(1) buffers per message.
+//!
+//! Security note: [`BufferPool::acquire`] always returns a fully zeroed
+//! buffer, so plaintext from an earlier message can never bleed into a
+//! shorter later one through a recycled allocation (tested below).
+//! [`BufferPool::acquire_for_overwrite`] trades that guarantee for speed
+//! and is reserved for paths that provably overwrite every byte.
+
+/// Maximum number of retained free buffers per pool.
+const MAX_POOLED: usize = 32;
+/// Buffers larger than this are dropped instead of retained (bounds the
+/// pool's memory footprint after a one-off huge message).
+const MAX_POOLED_BYTES: usize = 32 << 20;
+/// Buffers smaller than this are dropped instead of retained (header-sized
+/// vectors would otherwise crowd out useful chunk buffers).
+const MIN_POOLED_BYTES: usize = 4096;
+
+/// Counters exposed for tests and the allocation-behaviour benchmarks.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Fresh heap allocations (pool miss).
+    pub allocs: u64,
+    /// Acquisitions served from a retained buffer (pool hit).
+    pub reuses: u64,
+    /// Buffers accepted back into the pool.
+    pub recycled: u64,
+    /// Free buffers currently retained.
+    pub retained: usize,
+}
+
+/// A per-rank pool of recycled `Vec<u8>` scratch buffers.
+#[derive(Debug, Default)]
+pub struct BufferPool {
+    free: Vec<Vec<u8>>,
+    allocs: u64,
+    reuses: u64,
+    recycled: u64,
+}
+
+impl BufferPool {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Take a buffer of exactly `len` bytes, all zero. Reuses a retained
+    /// allocation when one with sufficient capacity is available
+    /// (preferring the smallest that fits), otherwise allocates fresh.
+    pub fn acquire(&mut self, len: usize) -> Vec<u8> {
+        match self.best_fit(len) {
+            Some(i) => {
+                let mut buf = self.free.swap_remove(i);
+                self.reuses += 1;
+                // clear + resize zeroes every byte the caller can see —
+                // no plaintext bleed from the buffer's previous life.
+                buf.clear();
+                buf.resize(len, 0);
+                buf
+            }
+            None => {
+                self.allocs += 1;
+                vec![0u8; len]
+            }
+        }
+    }
+
+    /// Take a buffer of exactly `len` bytes whose contents are
+    /// **unspecified** (recycled bytes from this pool's previous buffers,
+    /// or zeros when grown/fresh). For hot paths that provably overwrite
+    /// every byte before the buffer leaves the rank — skips the full-
+    /// buffer memset [`acquire`](Self::acquire) pays. Callers that might
+    /// transmit or expose any byte they did not write must use `acquire`.
+    pub fn acquire_for_overwrite(&mut self, len: usize) -> Vec<u8> {
+        match self.best_fit(len) {
+            Some(i) => {
+                let mut buf = self.free.swap_remove(i);
+                self.reuses += 1;
+                if buf.len() > len {
+                    buf.truncate(len);
+                } else {
+                    // Only the grown tail is written (with zeros).
+                    buf.resize(len, 0);
+                }
+                buf
+            }
+            None => {
+                self.allocs += 1;
+                vec![0u8; len]
+            }
+        }
+    }
+
+    /// Return a consumed buffer to the pool. Buffers outside the retention
+    /// size band (or beyond the retention cap) are simply dropped.
+    pub fn recycle(&mut self, buf: Vec<u8>) {
+        let cap = buf.capacity();
+        if !(MIN_POOLED_BYTES..=MAX_POOLED_BYTES).contains(&cap)
+            || self.free.len() >= MAX_POOLED
+        {
+            return;
+        }
+        self.recycled += 1;
+        self.free.push(buf);
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            allocs: self.allocs,
+            reuses: self.reuses,
+            recycled: self.recycled,
+            retained: self.free.len(),
+        }
+    }
+
+    /// Index of the smallest retained buffer whose capacity fits `len`.
+    /// A buffer that is too small is never returned: handing it out would
+    /// make `resize` allocate anyway while the stats recorded a "reuse",
+    /// corrupting the O(1)-allocation accounting.
+    fn best_fit(&self, len: usize) -> Option<usize> {
+        let mut fit: Option<(usize, usize)> = None; // (idx, cap), cap >= len
+        for (i, b) in self.free.iter().enumerate() {
+            let cap = b.capacity();
+            if cap >= len {
+                let better = match fit {
+                    None => true,
+                    Some((_, best_cap)) => cap < best_cap,
+                };
+                if better {
+                    fit = Some((i, cap));
+                }
+            }
+        }
+        fit.map(|(i, _)| i)
+    }
+}
+
+/// Split `buf` into consecutive disjoint mutable slices of the given
+/// lengths (which must sum to at most `buf.len()`). This is how the worker
+/// pool gets per-segment `&mut [u8]` jobs over one shared wire buffer.
+pub fn split_mut<'a>(buf: &'a mut [u8], lens: &[usize]) -> Vec<&'a mut [u8]> {
+    let mut rest = buf;
+    let mut out = Vec::with_capacity(lens.len());
+    for &len in lens {
+        let (head, tail) = std::mem::take(&mut rest).split_at_mut(len);
+        out.push(head);
+        rest = tail;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn acquire_recycle_reuses_allocation() {
+        let mut p = BufferPool::new();
+        let buf = p.acquire(8192);
+        assert_eq!(buf.len(), 8192);
+        let ptr = buf.as_ptr();
+        p.recycle(buf);
+        let again = p.acquire(8192);
+        assert_eq!(again.as_ptr(), ptr, "same allocation must come back");
+        let s = p.stats();
+        assert_eq!((s.allocs, s.reuses, s.recycled), (1, 1, 1));
+    }
+
+    #[test]
+    fn reused_buffers_never_leak_previous_contents() {
+        let mut p = BufferPool::new();
+        let mut secret = p.acquire(16 * 1024);
+        secret.fill(0xAA); // "plaintext" from message 1
+        p.recycle(secret);
+        // A shorter message 2 must not observe message 1's bytes.
+        let fresh = p.acquire(4 * 1024);
+        assert!(fresh.iter().all(|&b| b == 0), "recycled buffer must be zeroed");
+        // Even at the same size.
+        p.recycle(fresh);
+        let same = p.acquire(16 * 1024);
+        assert!(same.iter().all(|&b| b == 0));
+    }
+
+    #[test]
+    fn best_fit_prefers_smallest_sufficient_buffer() {
+        let mut p = BufferPool::new();
+        let small = p.acquire(8 * 1024);
+        let big = p.acquire(64 * 1024);
+        let small_ptr = small.as_ptr();
+        p.recycle(big);
+        p.recycle(small);
+        let got = p.acquire(8 * 1024);
+        assert_eq!(got.as_ptr(), small_ptr, "smallest sufficient buffer wins");
+    }
+
+    /// An undersized retained buffer must not masquerade as a reuse: the
+    /// request takes the alloc path and the small buffer stays pooled.
+    #[test]
+    fn undersized_buffers_are_not_reused() {
+        let mut p = BufferPool::new();
+        let small = p.acquire(8 * 1024);
+        p.recycle(small);
+        let big = p.acquire(1 << 20);
+        assert_eq!(big.len(), 1 << 20);
+        let s = p.stats();
+        assert_eq!(s.allocs, 2, "too-small buffer must not count as a reuse");
+        assert_eq!(s.reuses, 0);
+        assert_eq!(s.retained, 1, "small buffer stays available for small requests");
+    }
+
+    #[test]
+    fn acquire_for_overwrite_len_and_grown_tail() {
+        let mut p = BufferPool::new();
+        let mut buf = p.acquire(16 * 1024);
+        buf.fill(0xAA);
+        p.recycle(buf);
+        // Shrinking reuse: exact length, contents unspecified (no memset).
+        let shrunk = p.acquire_for_overwrite(4 * 1024);
+        assert_eq!(shrunk.len(), 4 * 1024);
+        p.recycle(shrunk);
+        // Growing reuse within capacity: the tail beyond the previous
+        // length is zero-filled.
+        let grown = p.acquire_for_overwrite(8 * 1024);
+        assert_eq!(grown.len(), 8 * 1024);
+        assert!(grown[4 * 1024..].iter().all(|&b| b == 0), "grown tail is zeroed");
+        // Fresh path still yields zeroed memory.
+        let mut q = BufferPool::new();
+        let fresh = q.acquire_for_overwrite(4096);
+        assert!(fresh.iter().all(|&b| b == 0));
+    }
+
+    #[test]
+    fn retention_band_enforced() {
+        let mut p = BufferPool::new();
+        p.recycle(vec![0u8; 16]); // below MIN_POOLED_BYTES
+        assert_eq!(p.stats().retained, 0);
+        p.recycle(Vec::new());
+        assert_eq!(p.stats().retained, 0);
+        for _ in 0..(MAX_POOLED + 10) {
+            p.recycle(vec![0u8; MIN_POOLED_BYTES]);
+        }
+        assert_eq!(p.stats().retained, MAX_POOLED, "retention cap enforced");
+    }
+
+    #[test]
+    fn split_mut_disjoint_and_writable() {
+        let mut buf = vec![0u8; 10];
+        let parts = split_mut(&mut buf, &[3, 4, 2]);
+        assert_eq!(parts.len(), 3);
+        assert_eq!((parts[0].len(), parts[1].len(), parts[2].len()), (3, 4, 2));
+        for (v, part) in parts.into_iter().enumerate() {
+            for b in part.iter_mut() {
+                *b = v as u8 + 1;
+            }
+        }
+        assert_eq!(buf, vec![1, 1, 1, 2, 2, 2, 2, 3, 3, 0]);
+    }
+}

@@ -3,16 +3,19 @@
 //! * [`rank`] — the per-rank communication API (send/recv/isend/irecv/
 //!   wait/waitall + collectives) with the paper's security modes.
 //! * [`pool`] — the multi-thread encryption worker pool (the OpenMP analog).
+//! * [`bufpool`] — recycled scratch buffers for the zero-copy wire path.
 //! * [`params`] — (k, t) parameter selection with the paper's constraints.
 //! * [`keydist`] — RSA-OAEP key distribution at init (paper §IV).
 //! * [`cluster`] — spawn a simulated cluster and run a rank function.
 
+pub mod bufpool;
 pub mod cluster;
 pub mod keydist;
 pub mod params;
 pub mod pool;
 pub mod rank;
 
+pub use bufpool::{BufferPool, PoolStats};
 pub use cluster::{run_cluster, ClusterConfig, KeyDistMode};
 pub use rank::{Rank, RecvReq, SendReq};
 

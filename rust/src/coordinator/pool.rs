@@ -5,7 +5,13 @@
 //! chunk is charged analytically by the caller (max-rate model); the pool
 //! does the *real* cryptographic work so the bytes and security properties
 //! are genuine, and so the structure is faithful on a multi-core host.
+//!
+//! Jobs typically operate on disjoint `&mut [u8]` slices of one shared
+//! wire buffer (see [`crate::coordinator::bufpool::split_mut`]): the
+//! zero-copy path seals/opens segments in place with no per-segment `Vec`.
 
+use std::any::Any;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -55,28 +61,46 @@ impl WorkerPool {
     /// Run the closures concurrently on the pool and wait for all of them.
     ///
     /// `scope_run` is structured concurrency: the jobs may borrow from the
-    /// caller's stack because we block until every job completes.
-    pub fn scope_run<'scope>(&self, jobs: Vec<Box<dyn FnOnce() + Send + 'scope>>) {
+    /// caller's stack because we block until every job has finished.
+    ///
+    /// Panic safety: each job runs under `catch_unwind` and reports its
+    /// outcome over the completion channel, so a panicking job can neither
+    /// kill its worker thread nor leave `scope_run` blocked forever.
+    /// After all jobs have completed, the first captured panic payload is
+    /// re-raised on the caller — the panic is observed, not swallowed.
+    pub fn scope_run<'scope, F>(&self, jobs: Vec<F>)
+    where
+        F: FnOnce() + Send + 'scope,
+    {
         if jobs.is_empty() {
             return;
         }
         let n = jobs.len();
-        let (done_tx, done_rx) = channel::<()>();
+        let (done_tx, done_rx) = channel::<Option<Box<dyn Any + Send>>>();
         for job in jobs {
             let done = done_tx.clone();
-            // SAFETY: we join all jobs below before returning, so borrows
-            // with lifetime 'scope outlive the job execution.
-            let job: Box<dyn FnOnce() + Send + 'static> =
-                unsafe { std::mem::transmute::<Box<dyn FnOnce() + Send + 'scope>, _>(job) };
-            self.tx
-                .send(Cmd::Run(Box::new(move || {
-                    job();
-                    let _ = done.send(());
-                })))
-                .expect("pool alive");
+            let wrapped: Box<dyn FnOnce() + Send + 'scope> = Box::new(move || {
+                let outcome = catch_unwind(AssertUnwindSafe(job));
+                let _ = done.send(outcome.err());
+            });
+            // SAFETY: we block below until every job has signalled
+            // completion (the wrapper sends even when the job panics), so
+            // borrows with lifetime 'scope outlive the job execution; the
+            // 'static cast never escapes this call.
+            let wrapped: Job = unsafe {
+                std::mem::transmute::<Box<dyn FnOnce() + Send + 'scope>, Job>(wrapped)
+            };
+            self.tx.send(Cmd::Run(wrapped)).expect("pool alive");
         }
+        let mut first_panic: Option<Box<dyn Any + Send>> = None;
         for _ in 0..n {
-            done_rx.recv().expect("worker completed");
+            let outcome = done_rx.recv().expect("worker completed");
+            if let Some(payload) = outcome {
+                first_panic.get_or_insert(payload);
+            }
+        }
+        if let Some(payload) = first_panic {
+            resume_unwind(payload);
         }
     }
 }
@@ -101,12 +125,12 @@ mod tests {
     fn runs_all_jobs() {
         let pool = WorkerPool::new(4);
         let counter = AtomicUsize::new(0);
-        let jobs: Vec<Box<dyn FnOnce() + Send>> = (0..100)
+        let jobs: Vec<_> = (0..100)
             .map(|_| {
                 let c = &counter;
-                Box::new(move || {
+                move || {
                     c.fetch_add(1, Ordering::SeqCst);
-                }) as Box<dyn FnOnce() + Send>
+                }
             })
             .collect();
         pool.scope_run(jobs);
@@ -118,15 +142,15 @@ mod tests {
         let pool = WorkerPool::new(3);
         let mut data = vec![0u64; 6];
         {
-            let jobs: Vec<Box<dyn FnOnce() + Send>> = data
+            let jobs: Vec<_> = data
                 .chunks_mut(2)
                 .enumerate()
                 .map(|(i, chunk)| {
-                    Box::new(move || {
+                    move || {
                         for (j, x) in chunk.iter_mut().enumerate() {
                             *x = (i * 2 + j) as u64 * 10;
                         }
-                    }) as Box<dyn FnOnce() + Send>
+                    }
                 })
                 .collect();
             pool.scope_run(jobs);
@@ -137,7 +161,7 @@ mod tests {
     #[test]
     fn empty_job_list_is_noop() {
         let pool = WorkerPool::new(2);
-        pool.scope_run(vec![]);
+        pool.scope_run(Vec::<fn()>::new());
     }
 
     #[test]
@@ -145,16 +169,78 @@ mod tests {
         let pool = WorkerPool::new(2);
         let counter = AtomicUsize::new(0);
         for _ in 0..50 {
-            let jobs: Vec<Box<dyn FnOnce() + Send>> = (0..4)
+            let jobs: Vec<_> = (0..4)
                 .map(|_| {
                     let c = &counter;
-                    Box::new(move || {
+                    move || {
                         c.fetch_add(1, Ordering::SeqCst);
-                    }) as Box<dyn FnOnce() + Send>
+                    }
                 })
                 .collect();
             pool.scope_run(jobs);
         }
         assert_eq!(counter.load(Ordering::SeqCst), 200);
+    }
+
+    /// Regression: a panicking job used to skip its completion signal and
+    /// kill the worker thread, deadlocking `scope_run` forever. It must now
+    /// return promptly, propagate the panic, and leave the pool usable.
+    #[test]
+    fn panicking_job_propagates_instead_of_hanging() {
+        let pool = WorkerPool::new(2);
+        let ran = AtomicUsize::new(0);
+        let observed = catch_unwind(AssertUnwindSafe(|| {
+            let jobs: Vec<_> = (0..4)
+                .map(|i| {
+                    let ran = &ran;
+                    move || {
+                        if i == 2 {
+                            panic!("job blew up");
+                        }
+                        ran.fetch_add(1, Ordering::SeqCst);
+                    }
+                })
+                .collect();
+            pool.scope_run(jobs);
+        }));
+        assert!(observed.is_err(), "caller must observe the job panic");
+        assert_eq!(ran.load(Ordering::SeqCst), 3, "non-panicking jobs still ran");
+        // The pool survives: all workers are alive for the next round.
+        let counter = AtomicUsize::new(0);
+        let jobs: Vec<_> = (0..8)
+            .map(|_| {
+                let c = &counter;
+                move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                }
+            })
+            .collect();
+        pool.scope_run(jobs);
+        assert_eq!(counter.load(Ordering::SeqCst), 8);
+    }
+
+    /// Multiple panicking jobs: still exactly one propagated panic, still
+    /// no hang, pool still fully operational afterwards.
+    #[test]
+    fn many_panicking_jobs_do_not_poison_pool() {
+        let pool = WorkerPool::new(3);
+        for round in 0..5 {
+            let observed = catch_unwind(AssertUnwindSafe(|| {
+                let jobs: Vec<_> = (0..6).map(|_| || panic!("boom")).collect();
+                pool.scope_run(jobs);
+            }));
+            assert!(observed.is_err(), "round {round}");
+        }
+        let counter = AtomicUsize::new(0);
+        let jobs: Vec<_> = (0..4)
+            .map(|_| {
+                let c = &counter;
+                move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                }
+            })
+            .collect();
+        pool.scope_run(jobs);
+        assert_eq!(counter.load(Ordering::SeqCst), 4);
     }
 }

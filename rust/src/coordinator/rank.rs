@@ -8,13 +8,24 @@
 //! chunk `i+1` overlaps transmission of chunk `i` exactly as in the paper.
 //! The receiver decrypts chunks as they arrive. Small messages use direct
 //! GCM under the separate key `K2`.
+//!
+//! Zero-copy engine: each chunk travels as one contiguous wire buffer,
+//! `body_a ‖ … ‖ body_b ‖ tag_a ‖ … ‖ tag_b`, drawn from the rank's
+//! [`BufferPool`]. The sender copies plaintext into the buffer once and
+//! seals the segments **in place** on disjoint slices via the worker pool;
+//! the receiver copies ciphertext bodies once — directly into their final
+//! offsets in the output message — and verifies/decrypts in place there.
+//! Consumed receive buffers are recycled as the next send/recv scratch, so
+//! steady-state traffic allocates O(1) buffers per message instead of the
+//! old path's O(segments) per-segment `Vec`s.
 
+use crate::coordinator::bufpool::{split_mut, BufferPool, PoolStats};
 use crate::coordinator::params::{select_k_constrained, select_t_threads};
 use crate::coordinator::pool::WorkerPool;
 use crate::coordinator::{Keys, SecurityMode};
 use crate::crypto::rand::secure_array;
 use crate::crypto::{
-    AuthError, Gcm, Header, Opcode, StreamOpener, StreamSealer, CHOP_THRESHOLD, HEADER_LEN,
+    AuthError, Header, Opcode, StreamOpener, StreamSealer, CHOP_THRESHOLD, HEADER_LEN,
     TAG_LEN,
 };
 use crate::mpi::{CommStats, Route, Transport};
@@ -26,6 +37,15 @@ use std::sync::Arc;
 
 /// Base tag for internal collective traffic (app tags must stay below).
 const COLL_TAG_BASE: u64 = 1 << 40;
+
+/// Upper bound on the message length a *chopped* header may claim. The
+/// header travels unauthenticated (its fields are only validated when the
+/// segment tags verify), and the receiver allocates the output buffer from
+/// `msg_len` before any tag has been checked — so an on-wire forgery could
+/// otherwise demand an absurd allocation and abort the process instead of
+/// producing a clean decryption failure. 1 GiB is far above anything the
+/// simulated workloads move in one message.
+const MAX_CHOPPED_MSG_LEN: u64 = 1 << 30;
 
 /// A pending non-blocking send.
 #[derive(Debug)]
@@ -50,6 +70,8 @@ pub struct Rank {
     mode: SecurityMode,
     keys: Option<Keys>,
     pool: Option<WorkerPool>,
+    /// Recycled send/recv scratch buffers (zero-copy wire path).
+    bufpool: BufferPool,
     clock: VClock,
     stats: CommStats,
     outstanding_sends: usize,
@@ -77,6 +99,7 @@ impl Rank {
             mode,
             keys,
             pool: None,
+            bufpool: BufferPool::new(),
             clock: VClock::new(),
             stats: CommStats::default(),
             outstanding_sends: 0,
@@ -121,6 +144,11 @@ impl Rank {
 
     pub fn stats(&self) -> &CommStats {
         &self.stats
+    }
+
+    /// Scratch-buffer pool counters (zero-copy engine instrumentation).
+    pub fn buffer_pool_stats(&self) -> PoolStats {
+        self.bufpool.stats()
     }
 
     pub(crate) fn set_keys(&mut self, keys: Keys) {
@@ -321,24 +349,37 @@ impl Rank {
         let mut max_wire = 0usize;
         while seg <= nsegs {
             let hi = (seg + t - 1).min(nsegs);
-            // Assemble the chunk: plaintext segments + space for tags.
-            let mut parts: Vec<(u32, Vec<u8>)> = (seg..=hi)
-                .map(|i| (i, data[sealer.segment_range(i)].to_vec()))
-                .collect();
-            let chunk_bytes: usize = parts.iter().map(|(_, p)| p.len()).sum();
-            // Real parallel encryption on the worker pool.
+            let nparts = (hi - seg + 1) as usize;
+            // The chunk's plaintext is one contiguous span of `data`.
+            let lo_off = sealer.segment_range(seg).start;
+            let hi_off = sealer.segment_range(hi).end;
+            let chunk_bytes = hi_off - lo_off;
+            // Zero-copy wire assembly: one pooled buffer holds the segment
+            // bodies followed by the trailing tag block. The single data
+            // copy is plaintext → wire buffer; sealing runs in place on
+            // disjoint slices of that buffer, tags land in their slots.
+            // Every byte is overwritten below (bodies by the plaintext
+            // copy, the tag block by the seal jobs), so the unzeroed
+            // acquire is safe and skips a dead full-chunk memset.
+            let mut body = self.bufpool.acquire_for_overwrite(chunk_bytes + nparts * TAG_LEN);
+            body[..chunk_bytes].copy_from_slice(&data[lo_off..hi_off]);
             {
                 let sealer_ref = &sealer;
+                let (bodies, tags) = body.split_at_mut(chunk_bytes);
+                let lens: Vec<usize> =
+                    (seg..=hi).map(|i| sealer_ref.segment_range(i).len()).collect();
+                let body_slices = split_mut(bodies, &lens);
                 let pool = self.pool(t);
-                let jobs: Vec<Box<dyn FnOnce() + Send>> = parts
-                    .iter_mut()
-                    .map(|(i, buf)| {
-                        let i = *i;
-                        let b: &mut Vec<u8> = buf;
-                        Box::new(move || {
-                            let tag = sealer_ref.seal_segment(i, &mut b[..]);
-                            b.extend_from_slice(&tag);
-                        }) as Box<dyn FnOnce() + Send>
+                let jobs: Vec<_> = body_slices
+                    .into_iter()
+                    .zip(tags.chunks_exact_mut(TAG_LEN))
+                    .enumerate()
+                    .map(|(j, (seg_body, tag_slot))| {
+                        let i = seg + j as u32;
+                        move || {
+                            let tag = sealer_ref.seal_segment(i, seg_body);
+                            tag_slot.copy_from_slice(&tag);
+                        }
                     })
                     .collect();
                 pool.scope_run(jobs);
@@ -347,11 +388,6 @@ impl Rank {
             let enc = self.profile.crypto.enc_ns(self.calib, chunk_bytes, t);
             self.clock.advance(enc);
             self.stats.crypto_ns += enc;
-            // Post the chunk as one wire message.
-            let mut body = Vec::with_capacity(chunk_bytes + parts.len() * TAG_LEN);
-            for (_, p) in &parts {
-                body.extend_from_slice(p);
-            }
             max_wire = max_wire.max(body.len());
             let info = self.tp.post(self.id, to, tag, seq, body, self.clock.now());
             local_complete = local_complete.max(info.local_complete_ns);
@@ -392,6 +428,9 @@ impl Rank {
             Opcode::Direct => self.recv_direct(&header, &hmsg.body),
             Opcode::Chopped => self.recv_chopped(&header, src, tag),
         };
+        // The consumed wire message becomes future send/recv scratch
+        // (header-sized vectors fall below the pool's retention floor).
+        self.bufpool.recycle(hmsg.body);
         let spent = self.clock.now() - start;
         match route {
             Route::InterNode => self.stats.inter_ns += spent,
@@ -426,6 +465,9 @@ impl Rank {
         src: usize,
         tag: u64,
     ) -> Result<Vec<u8>, AuthError> {
+        if header.msg_len > MAX_CHOPPED_MSG_LEN {
+            return Err(AuthError);
+        }
         let keys = self.keys_ref().clone();
         let mut opener = StreamOpener::new(&keys.k1, header)?;
         let nsegs = opener.num_segments();
@@ -441,46 +483,54 @@ impl Rank {
             }
             expect_seq += 1;
             self.clock.wait_until(cmsg.arrival_ns);
-            // Parse as many whole segments as the chunk contains.
-            let mut parts: Vec<(u32, Vec<u8>, [u8; TAG_LEN])> = Vec::new();
-            let mut off = 0usize;
-            let mut chunk_bytes = 0usize;
-            while off < cmsg.body.len() {
-                if next > nsegs {
+            // Derive how many whole segments this contiguous chunk
+            // (`bodies ‖ tags`) carries from its wire length.
+            let first = next;
+            let mut last = first - 1;
+            let mut wire_left = cmsg.body.len();
+            while wire_left > 0 {
+                if last >= nsegs {
                     return Err(AuthError); // trailing garbage
                 }
-                let body_len = opener.segment_len(next);
-                if cmsg.body.len() < off + body_len + TAG_LEN {
+                let need = opener.segment_len(last + 1) + TAG_LEN;
+                if wire_left < need {
                     return Err(AuthError); // truncated segment
                 }
-                let seg_body = cmsg.body[off..off + body_len].to_vec();
-                let tag_bytes: [u8; TAG_LEN] =
-                    cmsg.body[off + body_len..off + body_len + TAG_LEN].try_into().unwrap();
-                off += body_len + TAG_LEN;
-                chunk_bytes += body_len;
-                parts.push((next, seg_body, tag_bytes));
-                next += 1;
+                wire_left -= need;
+                last += 1;
             }
-            if parts.is_empty() {
-                return Err(AuthError);
+            if last < first {
+                return Err(AuthError); // empty chunk
             }
-            // Real parallel decryption.
+            let nparts = (last - first + 1) as usize;
+            let bodies_len = cmsg.body.len() - nparts * TAG_LEN;
+            // Zero-copy open: ciphertext bodies are copied once, straight
+            // into their final offsets in `out`, and verified + decrypted
+            // in place there by the worker pool on disjoint slices.
+            let out_lo = opener.segment_range(first).start;
+            let out_hi = opener.segment_range(last).end;
+            out[out_lo..out_hi].copy_from_slice(&cmsg.body[..bodies_len]);
+            let tags = &cmsg.body[bodies_len..];
             let failed = AtomicBool::new(false);
             {
                 let opener_ref = &opener;
                 let failed_ref = &failed;
+                let lens: Vec<usize> =
+                    (first..=last).map(|i| opener_ref.segment_len(i)).collect();
+                let out_slices = split_mut(&mut out[out_lo..out_hi], &lens);
                 let pool = self.pool(t);
-                let jobs: Vec<Box<dyn FnOnce() + Send>> = parts
-                    .iter_mut()
-                    .map(|(i, buf, tag_bytes)| {
-                        let i = *i;
-                        let tag_bytes = *tag_bytes;
-                        let b: &mut Vec<u8> = buf;
-                        Box::new(move || {
-                            if opener_ref.open_segment(i, &mut b[..], &tag_bytes).is_err() {
+                let jobs: Vec<_> = out_slices
+                    .into_iter()
+                    .zip(tags.chunks_exact(TAG_LEN))
+                    .enumerate()
+                    .map(|(j, (seg_body, tag_bytes))| {
+                        let i = first + j as u32;
+                        let tag_arr: [u8; TAG_LEN] = tag_bytes.try_into().unwrap();
+                        move || {
+                            if opener_ref.open_segment(i, seg_body, &tag_arr).is_err() {
                                 failed_ref.store(true, Ordering::SeqCst);
                             }
-                        }) as Box<dyn FnOnce() + Send>
+                        }
                     })
                     .collect();
                 pool.scope_run(jobs);
@@ -488,13 +538,16 @@ impl Rank {
             if failed.load(Ordering::SeqCst) {
                 return Err(AuthError);
             }
-            for (i, buf, _) in &parts {
-                out[opener.segment_range(*i)].copy_from_slice(buf);
+            for _ in first..=last {
                 opener.mark_received();
             }
-            let dec = self.profile.crypto.enc_ns(self.calib, chunk_bytes, t);
+            let dec = self.profile.crypto.enc_ns(self.calib, bodies_len, t);
             self.clock.advance(dec);
             self.stats.crypto_ns += dec;
+            // Recycle the consumed wire chunk: its allocation becomes the
+            // next send/recv scratch buffer.
+            self.bufpool.recycle(cmsg.body);
+            next = last + 1;
         }
         opener.finish()?;
         Ok(out)
@@ -652,4 +705,129 @@ fn f64s_to_bytes(v: &[f64]) -> Vec<u8> {
 
 fn bytes_to_f64s(b: &[u8]) -> Vec<f64> {
     b.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::rand::SimRng;
+    use crate::net::Topology;
+    use crate::vtime::calib;
+
+    /// Two directly constructed ranks on separate nodes of one transport
+    /// (no cluster threads — lets tests inspect the wire).
+    fn rank_pair(mode: SecurityMode) -> (Rank, Rank) {
+        let p = SystemProfile::noleland();
+        let topo = Topology::new(2, 1);
+        let tp = Arc::new(Transport::new(topo, p.net.clone(), None));
+        let profile = Arc::new(p);
+        let cal = calib::get();
+        let keys = Keys::from_bytes(&[1u8; 16], &[2u8; 16]);
+        let a = Rank::new(
+            0,
+            Arc::clone(&tp),
+            Arc::clone(&profile),
+            cal,
+            mode,
+            Some(keys.clone()),
+            32,
+        );
+        let b = Rank::new(1, tp, profile, cal, mode, Some(keys), 32);
+        (a, b)
+    }
+
+    fn payload(n: usize) -> Vec<u8> {
+        let mut v = vec![0u8; n];
+        SimRng::new(n as u64 + 1).fill(&mut v);
+        v
+    }
+
+    /// `CHOP_THRESHOLD` boundary: 65535 bytes goes direct, 65536 and 65537
+    /// go chopped — checked on the wire (first message's header opcode) and
+    /// end-to-end through `recv_checked`.
+    #[test]
+    fn chop_threshold_boundary_selects_opcode() {
+        for (n, expect) in [
+            (CHOP_THRESHOLD - 1, Opcode::Direct),
+            (CHOP_THRESHOLD, Opcode::Chopped),
+            (CHOP_THRESHOLD + 1, Opcode::Chopped),
+        ] {
+            let msg = payload(n);
+            // Wire inspection: what opcode does the first message carry?
+            let (mut a, _b) = rank_pair(SecurityMode::CryptMpi);
+            a.send(1, 9, &msg);
+            let first = a.tp.try_match(1, Some(0), 9).expect("posted message");
+            assert_eq!(first.seq, 0, "header/whole message travels first");
+            let header = Header::decode(&first.body).expect("valid header");
+            assert_eq!(header.opcode, expect, "n={n}");
+            assert_eq!(header.msg_len as usize, n);
+            // End-to-end delivery at the same size.
+            let (mut a, mut b) = rank_pair(SecurityMode::CryptMpi);
+            a.send(1, 9, &msg);
+            let got = b.recv_checked(Some(0), 9).expect("roundtrip");
+            assert_eq!(got, msg, "n={n}");
+        }
+    }
+
+    /// Ping-pong traffic recycles wire buffers: after the first exchange,
+    /// both sides serve chunk buffers from the pool instead of allocating.
+    #[test]
+    fn pingpong_recycles_wire_buffers() {
+        let (mut a, mut b) = rank_pair(SecurityMode::CryptMpi);
+        let msg = payload(256 * 1024);
+        for i in 0..4u64 {
+            a.send(1, i, &msg);
+            let echo = b.recv_checked(Some(0), i).expect("b recv");
+            assert_eq!(echo, msg);
+            b.send(0, 1000 + i, &echo);
+            let back = a.recv_checked(Some(1), 1000 + i).expect("a recv");
+            assert_eq!(back, msg);
+        }
+        let (sa, sb) = (a.buffer_pool_stats(), b.buffer_pool_stats());
+        assert!(sb.recycled > 0, "receiver must recycle consumed chunks: {sb:?}");
+        assert!(sa.recycled > 0, "echo receiver must recycle too: {sa:?}");
+        assert!(sa.reuses > 0, "sender must reuse recycled buffers: {sa:?}");
+        assert!(sb.reuses > 0, "echo sender must reuse recycled buffers: {sb:?}");
+        // Steady state: far fewer fresh allocations than chunks sent.
+        assert!(
+            sa.reuses + sb.reuses > sa.allocs + sb.allocs,
+            "pool hits must dominate after warmup: a={sa:?} b={sb:?}"
+        );
+    }
+
+    /// A forged chopped header claiming an absurd message length must be
+    /// rejected as a decryption failure, not abort the process by trying
+    /// to allocate the claimed size (the header is unauthenticated).
+    #[test]
+    fn forged_huge_header_rejected_without_allocation() {
+        let (a, mut b) = rank_pair(SecurityMode::CryptMpi);
+        let forged = Header {
+            opcode: Opcode::Chopped,
+            seed: [7u8; 16],
+            msg_len: u64::MAX / 2,
+            seg_size: u64::MAX / 2,
+        };
+        a.tp.post(0, 1, 3, 0, forged.encode().to_vec(), 0);
+        assert!(b.recv_checked(Some(0), 3).is_err(), "forged length must fail cleanly");
+    }
+
+    /// The zero-copy receive path still rejects a tampered chunk.
+    #[test]
+    fn tampered_chunk_rejected_end_to_end() {
+        let (mut a, mut b) = rank_pair(SecurityMode::CryptMpi);
+        let msg = payload(128 * 1024);
+        a.send(1, 5, &msg);
+        // Take the stream off the wire, flip one ciphertext byte in the
+        // first chunk, and repost everything in order.
+        let mut msgs = Vec::new();
+        while let Some(m) = a.tp.try_match(1, Some(0), 5) {
+            msgs.push(m);
+        }
+        assert!(msgs.len() >= 2, "header + at least one chunk");
+        msgs[1].body[100] ^= 1;
+        for m in msgs {
+            b.tp.post(0, 1, 5, m.seq, m.body, 0);
+        }
+        assert!(b.recv_checked(Some(0), 5).is_err(), "bit flip must be detected");
+    }
 }

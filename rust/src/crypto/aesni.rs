@@ -141,7 +141,7 @@ impl AesNiKey {
 #[derive(Clone)]
 pub struct AesNiKey;
 
-#[cfg(test)]
+#[cfg(all(test, target_arch = "x86_64"))]
 mod tests {
     use super::*;
     use crate::crypto::aes::{encrypt_block_soft, AesKey};

@@ -177,7 +177,7 @@ mod imp {
 #[cfg(target_arch = "x86_64")]
 pub use imp::GhashClmul;
 
-#[cfg(test)]
+#[cfg(all(test, target_arch = "x86_64"))]
 mod tests {
     use super::*;
     use crate::crypto::ghash::{block_to_elem, GhashSoft};

@@ -11,9 +11,10 @@
 //! * [`rand`] — ChaCha20 CSPRNG (keys/nonces/seeds) and xoshiro256**
 //!   deterministic PRNG (simulation workloads only).
 //!
-//! Oracles: NIST/FIPS/RFC test vectors inline; the RustCrypto `aes`/`sha2`
-//! crates as dev-dependency cross-checks; and the independently authored
-//! JAX/Pallas GCM (via PJRT) in the integration tests.
+//! Oracles: NIST/FIPS/RFC test vectors inline (always on); the RustCrypto
+//! `aes`/`sha2` cross-checks behind the `oracle` feature; and the
+//! independently authored JAX/Pallas GCM (via PJRT) in the integration
+//! tests behind the `pjrt` feature. The default build is dependency-free.
 
 pub mod aes;
 pub mod aesni;

@@ -78,6 +78,19 @@ impl Header {
         seed.copy_from_slice(&buf[1..17]);
         let msg_len = u64::from_le_bytes(buf[17..25].try_into().unwrap());
         let seg_size = u64::from_le_bytes(buf[25..33].try_into().unwrap());
+        // Structural validation: bytes an opcode leaves unused must be zero
+        // on the wire, so malformed headers are rejected before any
+        // decryption state is set up. Direct carries a 12-byte nonce with a
+        // zero 4-byte pad; Plain carries no seed at all; neither has a
+        // segment size.
+        let well_formed = match opcode {
+            Opcode::Chopped => true,
+            Opcode::Direct => seed[NONCE_LEN..].iter().all(|&b| b == 0) && seg_size == 0,
+            Opcode::Plain => seed.iter().all(|&b| b == 0) && seg_size == 0,
+        };
+        if !well_formed {
+            return Err(AuthError);
+        }
         Ok(Header { opcode, seed, msg_len, seg_size })
     }
 }
@@ -168,6 +181,36 @@ impl StreamSealer {
         let nonce = segment_nonce(index, index == self.nsegs);
         self.sub.seal_in_place(&nonce, &[], data)
     }
+
+    /// Wire length of the contiguous chunk covering segments `a..=b`
+    /// (1-based, inclusive): the segment bodies followed by the trailing
+    /// tag block, `body_a ‖ … ‖ body_b ‖ tag_a ‖ … ‖ tag_b`.
+    pub fn chunk_wire_len(&self, a: u32, b: u32) -> usize {
+        debug_assert!(a >= 1 && a <= b && b <= self.nsegs);
+        let bodies = self.segment_range(b).end - self.segment_range(a).start;
+        bodies + (b - a + 1) as usize * TAG_LEN
+    }
+
+    /// Seal segments `a..=b` in place over one contiguous wire buffer in
+    /// the [`chunk_wire_len`](Self::chunk_wire_len) layout. On entry the
+    /// body region holds plaintext; on return it holds ciphertext and the
+    /// tag region is filled. This is the sequential reference path — the
+    /// coordinator runs the identical layout through the worker pool over
+    /// disjoint slices of the same buffer.
+    pub fn seal_chunk(&self, a: u32, b: u32, wire: &mut [u8]) {
+        assert_eq!(wire.len(), self.chunk_wire_len(a, b), "wire buffer size");
+        let nparts = (b - a + 1) as usize;
+        let bodies_len = wire.len() - nparts * TAG_LEN;
+        let (bodies, tags) = wire.split_at_mut(bodies_len);
+        let mut bodies = bodies;
+        for (j, i) in (a..=b).enumerate() {
+            let len = self.segment_range(i).len();
+            let (body, rest) = std::mem::take(&mut bodies).split_at_mut(len);
+            bodies = rest;
+            let tag = self.seal_segment(i, body);
+            tags[j * TAG_LEN..(j + 1) * TAG_LEN].copy_from_slice(&tag);
+        }
+    }
 }
 
 /// Receiver-side state for one chopped message. Enforces the streaming-AE
@@ -227,11 +270,46 @@ impl StreamOpener {
         data: &mut [u8],
         tag: &[u8; TAG_LEN],
     ) -> Result<(), AuthError> {
-        if index < 1 || index > self.nsegs || data.len() != self.segment_len(index) {
+        if index == 0 || index > self.nsegs || data.len() != self.segment_len(index) {
             return Err(AuthError);
         }
         let nonce = segment_nonce(index, index == self.nsegs);
         self.sub.open_in_place(&nonce, &[], data, tag)
+    }
+
+    /// Verify-and-decrypt segments `a..=b` of a contiguous wire chunk
+    /// (`body_a ‖ … ‖ body_b ‖ tag_a ‖ … ‖ tag_b`) into `out`, which must
+    /// be exactly the plaintext region of those segments. Zero-copy: the
+    /// ciphertext bodies are copied once — directly into their final
+    /// position in `out` — and decrypted in place there. Marks every
+    /// successfully opened segment as received.
+    pub fn open_chunk_into(
+        &mut self,
+        a: u32,
+        b: u32,
+        wire: &[u8],
+        out: &mut [u8],
+    ) -> Result<(), AuthError> {
+        if a == 0 || a > b || b > self.nsegs {
+            return Err(AuthError);
+        }
+        let nparts = (b - a + 1) as usize;
+        let bodies_len: usize = (a..=b).map(|i| self.segment_len(i)).sum();
+        if wire.len() != bodies_len + nparts * TAG_LEN || out.len() != bodies_len {
+            return Err(AuthError);
+        }
+        out.copy_from_slice(&wire[..bodies_len]);
+        let tags = &wire[bodies_len..];
+        let mut rest: &mut [u8] = out;
+        for (j, i) in (a..=b).enumerate() {
+            let len = self.segment_len(i);
+            let (body, tail) = std::mem::take(&mut rest).split_at_mut(len);
+            rest = tail;
+            let tag: [u8; TAG_LEN] = tags[j * TAG_LEN..(j + 1) * TAG_LEN].try_into().unwrap();
+            self.open_segment(i, body, &tag)?;
+            self.mark_received();
+        }
+        Ok(())
     }
 
     /// Record one successfully opened segment.
@@ -251,8 +329,10 @@ impl StreamOpener {
 }
 
 /// One-shot convenience: chop `msg` into `nsegs` segments and encrypt
-/// (header, segments with trailing tags). Used by tests and the Naive-vs-
-/// CryptMPI harnesses; the coordinator uses the incremental API.
+/// (header, segments with trailing tags). This is the legacy O(segments)-
+/// allocation path, kept as the correctness reference and the "before"
+/// side of the zero-copy benchmarks; the coordinator hot path uses the
+/// contiguous wire layout ([`chop_encrypt_into`] / [`StreamSealer::seal_chunk`]).
 pub fn chop_encrypt(k1: &Gcm, msg: &[u8], nsegs: u32) -> (Header, Vec<Vec<u8>>) {
     let sealer = StreamSealer::new(k1, msg.len(), nsegs);
     let mut segs = Vec::with_capacity(sealer.num_segments() as usize);
@@ -265,10 +345,56 @@ pub fn chop_encrypt(k1: &Gcm, msg: &[u8], nsegs: u32) -> (Header, Vec<Vec<u8>>) 
     (sealer.header().clone(), segs)
 }
 
+/// One-shot zero-copy encrypt: chop `msg` into `nsegs` segments and write
+/// the single contiguous wire image `bodies ‖ tags` into `wire` (resized in
+/// place, reusing its allocation). Returns the header. With a recycled
+/// `wire` buffer this allocates O(1) buffers per message, vs the
+/// O(segments) `Vec`s of [`chop_encrypt`].
+pub fn chop_encrypt_into(k1: &Gcm, msg: &[u8], nsegs: u32, wire: &mut Vec<u8>) -> Header {
+    let sealer = StreamSealer::new(k1, msg.len(), nsegs);
+    let n = sealer.num_segments();
+    let total = sealer.chunk_wire_len(1, n);
+    // No clear+zero-fill: every byte is overwritten below (bodies by the
+    // plaintext copy, the tag block by seal_chunk), so only a grown tail
+    // ever needs initializing.
+    if wire.len() > total {
+        wire.truncate(total);
+    } else {
+        wire.resize(total, 0);
+    }
+    wire[..msg.len()].copy_from_slice(msg);
+    sealer.seal_chunk(1, n, &mut wire[..]);
+    sealer.header().clone()
+}
+
+/// One-shot decrypt of [`chop_encrypt_into`]'s contiguous wire layout.
+pub fn chop_decrypt_wire(k1: &Gcm, header: &Header, wire: &[u8]) -> Result<Vec<u8>, AuthError> {
+    let mut opener = StreamOpener::new(k1, header)?;
+    let n = opener.num_segments();
+    // Bound the claimed length by the actual wire bytes BEFORE allocating:
+    // the header is unauthenticated, so a forged msg_len must produce a
+    // clean failure, not an absurd allocation. u128 math — no overflow.
+    let expect = header.msg_len as u128 + n as u128 * TAG_LEN as u128;
+    if wire.len() as u128 != expect {
+        return Err(AuthError);
+    }
+    let mut out = vec![0u8; header.msg_len as usize];
+    opener.open_chunk_into(1, n, wire, &mut out)?;
+    opener.finish()?;
+    Ok(out)
+}
+
 /// One-shot convenience: decrypt a full chopped message.
 pub fn chop_decrypt(k1: &Gcm, header: &Header, segs: &[Vec<u8>]) -> Result<Vec<u8>, AuthError> {
     let mut opener = StreamOpener::new(k1, header)?;
     if segs.len() != opener.num_segments() as usize {
+        return Err(AuthError);
+    }
+    // Bound the claimed length by the bytes actually provided before
+    // allocating (the header is unauthenticated; see chop_decrypt_wire).
+    let provided: u128 = segs.iter().map(|s| s.len() as u128).sum();
+    let expect = header.msg_len as u128 + segs.len() as u128 * TAG_LEN as u128;
+    if provided != expect {
         return Err(AuthError);
     }
     let mut out = vec![0u8; header.msg_len as usize];
@@ -417,10 +543,11 @@ mod tests {
 
     /// The paper's §IV key-separation attack: with a single key K used for
     /// both direct GCM and Algorithm 1, an adversary that knows a 16-byte
-    /// direct-GCM plaintext can extract `L = AES_K(V)` (where `V = N‖[1]_4`
-    /// is the first counter block) from `C = AES_K(V) ⊕ X`, then forge a
-    /// valid chopped ciphertext using V as "seed" and L as subkey. With
-    /// separate keys the forged message must fail.
+    /// direct-GCM plaintext can extract `L = AES_K(V)` (where `V = N‖[2]_4`
+    /// is the first *data* counter block — GCM reserves counter 1 for the
+    /// tag mask, so CTR data blocks start at 2) from `C = AES_K(V) ⊕ X`,
+    /// then forge a valid chopped ciphertext using V as "seed" and L as
+    /// subkey. With separate keys the forged message must fail.
     #[test]
     fn key_separation_attack() {
         let k = Gcm::new(&[0x11u8; 16]);
@@ -470,6 +597,102 @@ mod tests {
         // Correct deployment: chopped messages use K1 ≠ K2; forgery fails.
         let k1_distinct = Gcm::new(&[0x22u8; 16]);
         assert!(chop_decrypt(&k1_distinct, &header, &segs).is_err());
+    }
+
+    #[test]
+    fn wire_roundtrip_various_shapes() {
+        let k1 = Gcm::new(&[21u8; 16]);
+        let mut wire = Vec::new();
+        for (len, nsegs) in
+            [(1usize, 1u32), (100, 3), (65535, 8), (65536, 8), (65537, 8), (1 << 20, 64), (5, 16)]
+        {
+            let m = msg(len, len as u64 + 7);
+            let h = chop_encrypt_into(&k1, &m, nsegs, &mut wire);
+            let actual_segs = segment_count(h.msg_len, h.seg_size).unwrap() as usize;
+            assert_eq!(wire.len(), len + actual_segs * TAG_LEN, "len={len} nsegs={nsegs}");
+            let out = chop_decrypt_wire(&k1, &h, &wire).expect("roundtrip");
+            assert_eq!(out, m, "len={len} nsegs={nsegs}");
+        }
+    }
+
+    /// The contiguous wire image must be byte-identical to the legacy
+    /// per-segment path under the same subkey: bodies in order, then tags
+    /// in order. (Receivers of either layout interoperate.)
+    #[test]
+    fn wire_layout_matches_legacy_segments() {
+        let k1 = Gcm::new(&[23u8; 16]);
+        let m = msg(200_000, 9);
+        let seed = [0x44u8; 16];
+        let sealer = StreamSealer::with_seed(&k1, m.len(), 6, seed);
+        let n = sealer.num_segments();
+        let mut legacy_bodies = Vec::new();
+        let mut legacy_tags = Vec::new();
+        for i in 1..=n {
+            let mut b = m[sealer.segment_range(i)].to_vec();
+            let tag = sealer.seal_segment(i, &mut b);
+            legacy_bodies.extend_from_slice(&b);
+            legacy_tags.extend_from_slice(&tag);
+        }
+        let sealer2 = StreamSealer::with_seed(&k1, m.len(), 6, seed);
+        let mut wire = vec![0u8; sealer2.chunk_wire_len(1, n)];
+        wire[..m.len()].copy_from_slice(&m);
+        sealer2.seal_chunk(1, n, &mut wire);
+        assert_eq!(&wire[..m.len()], &legacy_bodies[..]);
+        assert_eq!(&wire[m.len()..], &legacy_tags[..]);
+    }
+
+    #[test]
+    fn wire_tamper_and_truncation_detected() {
+        let k1 = Gcm::new(&[22u8; 16]);
+        let m = msg(128 * 1024, 11);
+        let mut wire = Vec::new();
+        let h = chop_encrypt_into(&k1, &m, 8, &mut wire);
+        for pos in [0usize, 1000, m.len() - 1, m.len(), wire.len() - 1] {
+            let mut bad = wire.clone();
+            bad[pos] ^= 1;
+            assert!(chop_decrypt_wire(&k1, &h, &bad).is_err(), "pos={pos}");
+        }
+        assert!(chop_decrypt_wire(&k1, &h, &wire[..wire.len() - 1]).is_err());
+        let mut longer = wire.clone();
+        longer.push(0);
+        assert!(chop_decrypt_wire(&k1, &h, &longer).is_err());
+    }
+
+    /// `Header::decode` must never panic, whatever bytes arrive.
+    #[test]
+    fn decode_random_inputs_never_panic() {
+        let mut rng = SimRng::new(0xfeed);
+        for _ in 0..2000 {
+            let mut buf = [0u8; HEADER_LEN];
+            rng.fill(&mut buf);
+            let _ = Header::decode(&buf);
+        }
+        for len in 0..HEADER_LEN {
+            assert!(Header::decode(&vec![0u8; len]).is_err(), "short input len={len}");
+        }
+    }
+
+    /// Direct headers carry a 12-byte nonce with a zero pad and no segment
+    /// size; Plain headers carry neither. Nonzero unused bytes are
+    /// malformed and must be rejected at decode time.
+    #[test]
+    fn unused_header_bytes_must_be_zero() {
+        let mut seed = [0u8; 16];
+        seed[..NONCE_LEN].copy_from_slice(&[7u8; NONCE_LEN]);
+        let direct = Header { opcode: Opcode::Direct, seed, msg_len: 10, seg_size: 0 };
+        assert!(Header::decode(&direct.encode()).is_ok());
+        let mut bad_pad = direct.clone();
+        bad_pad.seed[NONCE_LEN] = 1;
+        assert!(Header::decode(&bad_pad.encode()).is_err(), "nonzero nonce pad");
+        let mut bad_seg = direct.clone();
+        bad_seg.seg_size = 5;
+        assert!(Header::decode(&bad_seg.encode()).is_err(), "direct with seg_size");
+
+        let plain = Header { opcode: Opcode::Plain, seed: [0u8; 16], msg_len: 3, seg_size: 0 };
+        assert!(Header::decode(&plain.encode()).is_ok());
+        let mut bad_plain = plain.clone();
+        bad_plain.seed[0] = 1;
+        assert!(Header::decode(&bad_plain.encode()).is_err(), "plain with seed");
     }
 
     #[test]

@@ -7,9 +7,12 @@
 //! * [`net`] — simulated interconnect (Hockney + contention) and profiles.
 //! * [`mpi`] — message transport with MPI matching semantics.
 //! * [`coordinator`] — the paper's system: security modes, (k,t)-chopping,
-//!   worker pool, parameter selection, key distribution, cluster runner.
+//!   worker pool, zero-copy buffer pool, parameter selection, key
+//!   distribution, cluster runner.
 //! * [`model`] — the paper's performance model (fit + predict).
-//! * [`runtime`] — PJRT loader for the JAX/Pallas AOT artifacts.
+//! * `runtime` — PJRT loader for the JAX/Pallas AOT artifacts (behind the
+//!   `pjrt` feature: it needs the `xla`/`anyhow` crates, which the default
+//!   dependency-free build does not assume).
 //! * [`apps`] — ping-pong, OSU multi-pair, stencil kernels, NAS mini-apps.
 //! * [`bench`] — one runner per paper figure/table.
 
@@ -19,6 +22,7 @@ pub mod net;
 pub mod vtime;
 pub mod coordinator;
 pub mod model;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod apps;
 pub mod bench;
