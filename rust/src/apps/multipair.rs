@@ -2,7 +2,7 @@
 //! one-to-one flows between two nodes; each loop iteration the sender
 //! posts a 64-message non-blocking window and waits for a reply.
 
-use crate::coordinator::{run_cluster, ClusterConfig, KeyDistMode, SecurityMode};
+use crate::coordinator::{run_cluster, ClusterConfig, CollPolicy, KeyDistMode, SecurityMode};
 use crate::crypto::rand::SimRng;
 use crate::net::SystemProfile;
 
@@ -32,6 +32,7 @@ pub fn run_multipair(
         profile: profile.clone(),
         mode,
         keydist: KeyDistMode::Fast,
+        coll: CollPolicy::default(),
     };
     let (_, rep) = run_cluster(&cfg, move |rank| {
         let pairs = rank.size() / 2;

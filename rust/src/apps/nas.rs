@@ -1,8 +1,9 @@
 //! NAS-parallel-benchmark mini-apps (paper §V, Table III): CG, LU, SP, BT
 //! with the originals' communication patterns at reduced scale.
 //!
-//! * **CG** — conjugate gradient on a synthetic sparse SPD system; ring
-//!   allgather for the matvec (large p2p messages) + allreduce dot
+//! * **CG** — conjugate gradient on a synthetic sparse SPD system;
+//!   allgather for the matvec (large messages; the ring / two-level
+//!   algorithms of [`crate::coordinator::collectives`]) + allreduce dot
 //!   products. Requires a power-of-two rank count, as in the paper.
 //! * **LU** — SSOR wavefront on a 2-D rank grid: many smaller pipelined
 //!   north/west → south/east exchanges.
@@ -159,8 +160,11 @@ fn cg_rank(rank: &mut crate::coordinator::Rank, scale: &NasScale) {
     let mut rr = dot_allreduce(rank, &r, &r);
     let rr0 = rr;
     for _ in 0..scale.cg_iters {
-        // Ring allgather of p (large p2p messages), then local matvec.
-        let full_p = ring_allgather(rank, &pv, a.n);
+        // Allgather of p (large messages over the collectives subsystem:
+        // flat ring, or the two-level node-leader ring on multi-rank
+        // nodes), then local matvec.
+        let full_p = rank.allgather_f64(&pv);
+        assert_eq!(full_p.len(), a.n, "allgather must reassemble the full vector");
         rank.compute_ns((flops_matvec(&a) * FLOP_NS) as u64);
         let ap = matvec(&a, &full_p);
         let pap = dot_allreduce(rank, &pv, &ap);
@@ -202,36 +206,6 @@ fn dot_allreduce(rank: &mut crate::coordinator::Rank, a: &[f64], b: &[f64]) -> f
     let local: f64 = a.iter().zip(b).map(|(x, y)| x * y).sum();
     rank.compute_ns((2.0 * a.len() as f64 * FLOP_NS) as u64);
     rank.allreduce_sum(&[local])[0]
-}
-
-/// Ring allgather: P−1 steps; step s sends the block received at step s−1
-/// to the right neighbor. All blocks end up everywhere.
-fn ring_allgather(rank: &mut crate::coordinator::Rank, mine: &[f64], n: usize) -> Vec<f64> {
-    let p = rank.size();
-    let me = rank.id();
-    let block = mine.len();
-    assert_eq!(block * p, n);
-    let mut full = vec![0.0f64; n];
-    full[me * block..(me + 1) * block].copy_from_slice(mine);
-    let right = (me + 1) % p;
-    let left = (me + p - 1) % p;
-    let mut current = me; // block index we hold most recently
-    for s in 0..p - 1 {
-        let tag = 7000 + s as u64;
-        let send_block: Vec<u8> = full[current * block..(current + 1) * block]
-            .iter()
-            .flat_map(|x| x.to_le_bytes())
-            .collect();
-        let sreq = rank.isend(right, tag, &send_block);
-        let data = rank.recv(left, tag);
-        rank.wait_send(sreq);
-        let incoming = (current + p - 1) % p; // left neighbor's last block
-        for (i, c) in data.chunks_exact(8).enumerate() {
-            full[incoming * block + i] = f64::from_le_bytes(c.try_into().unwrap());
-        }
-        current = incoming;
-    }
-    full
 }
 
 // ---------------------------------------------------------------------

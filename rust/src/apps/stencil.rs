@@ -104,6 +104,8 @@ pub fn run_stencil(
         let nbrs = neighbors(me, side, d);
         let mut halo = vec![0u8; msg_bytes];
         SimRng::new(me as u64).fill(&mut halo);
+        // Start aligned, as the MPI original would after setup.
+        rank.barrier();
         for round in 0..rounds {
             // The "matrix multiplications" of the paper's kernel: charged
             // in virtual time (the real-PJRT variant lives in the
@@ -116,6 +118,18 @@ pub fn run_stencil(
             debug_assert!(msgs.iter().all(|m| m.len() == msg_bytes));
             rank.waitall_send(sends);
         }
+        // Close with a global halo checksum over the collectives layer:
+        // every rank must arrive at the bit-identical total (the
+        // broadcast phase distributes one root's bytes, so divergence
+        // here means a collective bug).
+        let local: f64 = halo.iter().map(|&b| b as f64).sum();
+        let total = rank.allreduce_sum(&[local])[0];
+        let totals = rank.allgather_f64(&[total]);
+        assert!(
+            totals.iter().all(|&t| t.to_bits() == total.to_bits()),
+            "ranks disagree on the reduced checksum: {totals:?}"
+        );
+        assert!(total >= local, "total must include every rank's addend");
     });
     StencilResult {
         comm_s: report.avg_comm_s(),

@@ -1,11 +1,22 @@
-//! The per-figure / per-table runners (see DESIGN.md §4 for the index).
+//! The per-figure / per-table benchmark runners.
+//!
+//! One runner per artifact of the paper's evaluation (`fig1`–`fig10`,
+//! `table1`–`table3`) plus this repo's own performance reports
+//! (`zerocopy`, `collectives`); DESIGN.md §4 is the index mapping each
+//! runner to the figure/table it reproduces and the acceptance shape it
+//! must show. Every runner sweeps its parameters on the simulated
+//! cluster, returns a [`Table`] (rendered to the console and written as
+//! `results/<name>.csv`), and is reachable by name through
+//! [`run_experiment`] — `cargo run --release -- bench --exp <name>` — or
+//! all at once via [`ALL_EXPERIMENTS`].
 
 use crate::apps::{
     calibrate_compute, run_multipair, run_nas, run_pingpong, run_stencil, NasKernel, NasScale,
     StencilDim,
 };
 use crate::bench::{f, size_label, Table};
-use crate::coordinator::SecurityMode;
+use crate::coordinator::{run_cluster, ClusterConfig, CollPolicy, SecurityMode};
+use crate::mpi::CollOp;
 use crate::model::{fit_max_rate, linear_lsq, r_squared, ChoppingModel, EncModel, EncSample,
     HockneyParams, MaxRateParams};
 use crate::net::SystemProfile;
@@ -380,6 +391,114 @@ pub fn zerocopy() -> Table {
     t
 }
 
+/// One collectives measurement: run `iters` rounds of `op` at `bytes`
+/// total payload on a `ranks`/`rpn` cluster and return (makespan s,
+/// cluster-wide inter-node payload bytes, intra-node payload bytes) for
+/// that op's stats counters.
+fn run_coll_workload(
+    p: &SystemProfile,
+    mode: SecurityMode,
+    policy: CollPolicy,
+    op: CollOp,
+    bytes: usize,
+    ranks: usize,
+    rpn: usize,
+) -> (f64, u64, u64) {
+    let mut cfg = ClusterConfig::new(ranks, rpn, p.clone(), mode);
+    cfg.coll = policy;
+    let iters = 3usize;
+    let (_, rep) = run_cluster(&cfg, move |rank| {
+        let n = rank.size();
+        match op {
+            CollOp::Allreduce => {
+                let v = vec![1.0f64; bytes / 8];
+                for _ in 0..iters {
+                    let r = rank.allreduce_sum(&v);
+                    assert_eq!(r[0], n as f64);
+                }
+            }
+            CollOp::Allgather => {
+                let mine = vec![rank.id() as u8; bytes / n];
+                for _ in 0..iters {
+                    let full = rank.allgather(&mine);
+                    assert_eq!(full.len(), bytes / n * n);
+                }
+            }
+            CollOp::Bcast => {
+                for _ in 0..iters {
+                    let d = if rank.id() == 0 { vec![7u8; bytes] } else { Vec::new() };
+                    let out = rank.bcast(0, d);
+                    assert_eq!(out.len(), bytes);
+                }
+            }
+            CollOp::Alltoall => {
+                let b = (bytes / n).max(1);
+                for _ in 0..iters {
+                    let blocks: Vec<Vec<u8>> = (0..n).map(|d| vec![d as u8; b]).collect();
+                    let out = rank.alltoall(blocks);
+                    assert_eq!(out.len(), n);
+                }
+            }
+            _ => unreachable!("unbenchmarked collective {op:?}"),
+        }
+    });
+    let totals = rep.coll_totals();
+    let s = totals.op(op);
+    (rep.max_exec_s(), s.inter_bytes, s.intra_bytes)
+}
+
+/// This repo's collectives report: flat (topology-blind) vs hierarchical
+/// (two-level node-leader) algorithms across all four security modes and
+/// message sizes on a multi-node profile, with the per-op stats counters
+/// proving the hierarchical algorithms move fewer encrypted inter-node
+/// bytes.
+pub fn collectives() -> Table {
+    let p = SystemProfile::noleland();
+    let (ranks, rpn) = (16usize, 4usize);
+    let mut t = Table::new(
+        "collectives",
+        "Flat vs hierarchical collectives, 16 ranks / 4 nodes (InfiniBand profile)",
+        &[
+            "op",
+            "size",
+            "mode",
+            "flat_ms",
+            "hier_ms",
+            "flat_inter_MB",
+            "hier_inter_MB",
+            "inter_saving_pct",
+        ],
+    );
+    for op in [CollOp::Allreduce, CollOp::Allgather, CollOp::Bcast, CollOp::Alltoall] {
+        for size in [64 * 1024usize, 1 << 20] {
+            for mode in [
+                SecurityMode::Unencrypted,
+                SecurityMode::IpsecSim,
+                SecurityMode::Naive,
+                SecurityMode::CryptMpi,
+            ] {
+                let (ft, fi, _) =
+                    run_coll_workload(&p, mode, CollPolicy::Flat, op, size, ranks, rpn);
+                let (ht, hi, _) =
+                    run_coll_workload(&p, mode, CollPolicy::Hierarchical, op, size, ranks, rpn);
+                t.row(vec![
+                    op.name().into(),
+                    size_label(size),
+                    mode.name().into(),
+                    f(ft * 1e3, 3),
+                    f(ht * 1e3, 3),
+                    f(fi as f64 / 1e6, 3),
+                    f(hi as f64 / 1e6, 3),
+                    f((1.0 - hi as f64 / (fi.max(1)) as f64) * 100.0, 1),
+                ]);
+            }
+        }
+    }
+    t.note("Hierarchical: intra-node aggregate (plaintext shared-memory route) → encrypted leader-to-leader exchange over the chopped wire path → intra-node fan-out.");
+    t.note("Acceptance: hier_inter_MB < flat_inter_MB for allreduce and allgather in every mode at every size — the counters prove only leader traffic crosses nodes.");
+    t
+}
+
 /// Run one experiment by name.
 pub fn run_experiment(name: &str) -> Option<Table> {
     Some(match name {
@@ -397,14 +516,15 @@ pub fn run_experiment(name: &str) -> Option<Table> {
         "table2" => table2(),
         "table3" => table3(),
         "zerocopy" => zerocopy(),
+        "collectives" => collectives(),
         _ => return None,
     })
 }
 
 /// All experiment names: paper order, then the repo's own perf reports.
-pub const ALL_EXPERIMENTS: [&str; 14] = [
+pub const ALL_EXPERIMENTS: [&str; 15] = [
     "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "table1",
-    "table2", "table3", "zerocopy",
+    "table2", "table3", "zerocopy", "collectives",
 ];
 
 #[cfg(test)]
@@ -416,11 +536,38 @@ mod tests {
         for name in ALL_EXPERIMENTS {
             // Registry lookup only (running them is the bench's job).
             assert!(
-                name.starts_with("fig") || name.starts_with("table") || name == "zerocopy",
+                name.starts_with("fig")
+                    || name.starts_with("table")
+                    || name == "zerocopy"
+                    || name == "collectives",
                 "unknown experiment family: {name}"
             );
         }
         assert!(run_experiment("nonexistent").is_none());
+    }
+
+    /// The `collectives` runner's acceptance shape, at reduced scale: the
+    /// hierarchical algorithms must move strictly fewer encrypted
+    /// inter-node bytes than the flat ones for allreduce and allgather.
+    #[test]
+    fn collectives_runner_inter_byte_shape() {
+        let p = SystemProfile::noleland();
+        for op in [CollOp::Allreduce, CollOp::Allgather] {
+            let (_, fi, _) =
+                run_coll_workload(&p, SecurityMode::CryptMpi, CollPolicy::Flat, op, 256 * 1024, 8, 4);
+            let (_, hi, h_intra) = run_coll_workload(
+                &p,
+                SecurityMode::CryptMpi,
+                CollPolicy::Hierarchical,
+                op,
+                256 * 1024,
+                8,
+                4,
+            );
+            assert!(hi > 0, "{op:?} still crosses nodes");
+            assert!(hi < fi, "{op:?}: hier {hi} must be < flat {fi}");
+            assert!(h_intra > 0, "{op:?} aggregates on-node first");
+        }
     }
 
     #[test]

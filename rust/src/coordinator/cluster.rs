@@ -3,7 +3,7 @@
 
 use crate::coordinator::keydist::distribute_keys;
 use crate::coordinator::rank::Rank;
-use crate::coordinator::{Keys, SecurityMode};
+use crate::coordinator::{CollPolicy, Keys, SecurityMode};
 use crate::crypto::rand::secure_array;
 use crate::mpi::{ClusterReport, RankReport, Transport};
 use crate::net::{SystemProfile, Topology};
@@ -32,12 +32,21 @@ pub struct ClusterConfig {
     pub profile: SystemProfile,
     pub mode: SecurityMode,
     pub keydist: KeyDistMode,
+    /// Collective algorithm family (flat vs two-level hierarchical).
+    pub coll: CollPolicy,
 }
 
 impl ClusterConfig {
     /// Two ranks on two nodes of the given profile — the ping-pong shape.
     pub fn pingpong(profile: SystemProfile, mode: SecurityMode) -> Self {
-        ClusterConfig { ranks: 2, ranks_per_node: 1, profile, mode, keydist: KeyDistMode::Fast }
+        ClusterConfig {
+            ranks: 2,
+            ranks_per_node: 1,
+            profile,
+            mode,
+            keydist: KeyDistMode::Fast,
+            coll: CollPolicy::default(),
+        }
     }
 
     pub fn new(
@@ -46,7 +55,14 @@ impl ClusterConfig {
         profile: SystemProfile,
         mode: SecurityMode,
     ) -> Self {
-        ClusterConfig { ranks, ranks_per_node, profile, mode, keydist: KeyDistMode::Fast }
+        ClusterConfig {
+            ranks,
+            ranks_per_node,
+            profile,
+            mode,
+            keydist: KeyDistMode::Fast,
+            coll: CollPolicy::default(),
+        }
     }
 }
 
@@ -88,6 +104,7 @@ where
             handles.push(s.spawn(move || {
                 let mut rank =
                     Rank::new(id, tp, profile, cal, cfg.mode, fast_keys, t0);
+                rank.set_coll_policy(cfg.coll);
                 if let KeyDistMode::RsaOaep { bits } = cfg.keydist {
                     let keys = distribute_keys(&mut rank, bits);
                     rank.set_keys(keys);
@@ -210,7 +227,7 @@ mod tests {
     #[test]
     fn collectives_work_over_cluster() {
         let cfg = ClusterConfig::new(6, 2, SystemProfile::noleland(), SecurityMode::CryptMpi);
-        let (outs, _) = run_cluster(&cfg, |rank| {
+        let (outs, rep) = run_cluster(&cfg, |rank| {
             let n = rank.size();
             // bcast
             let data =
@@ -242,9 +259,34 @@ mod tests {
             let expect: f64 = (0..n).map(|x| x as f64).sum();
             assert!((v[0] - expect).abs() < 1e-9);
             assert!((v[1] - n as f64).abs() < 1e-9);
+            // reduce at 2 (non-leader root)
+            let r = rank.reduce_sum(2, &[1.0]);
+            if rank.id() == 2 {
+                assert_eq!(r.unwrap(), vec![n as f64]);
+            } else {
+                assert!(r.is_none());
+            }
+            // allgather
+            let full = rank.allgather(&[rank.id() as u8; 2]);
+            let want: Vec<u8> = (0..n).flat_map(|r| vec![r as u8; 2]).collect();
+            assert_eq!(full, want);
+            // alltoall
+            let blocks: Vec<Vec<u8>> = (0..n).map(|d| vec![d as u8, rank.id() as u8]).collect();
+            let got = rank.alltoall(blocks);
+            for (src, blob) in got.iter().enumerate() {
+                assert_eq!(blob, &vec![rank.id() as u8, src as u8]);
+            }
             true
         });
         assert!(outs.iter().all(|&x| x));
+        // The per-op counters saw every collective once per rank, and on
+        // this 3-node topology the ops really crossed nodes.
+        let totals = rep.coll_totals();
+        for op in crate::mpi::COLL_OPS {
+            assert_eq!(totals.op(op).calls, 6, "{op:?} once per rank");
+        }
+        assert!(totals.total_inter_bytes() > 0);
+        assert!(totals.total_intra_bytes() > 0);
     }
 
     #[test]

@@ -1,0 +1,1170 @@
+//! Topology-aware collective operations with two-level (hierarchical)
+//! decomposition.
+//!
+//! Every collective here exists in two shapes:
+//!
+//! * **Flat** — the classic topology-blind algorithm over all ranks
+//!   (binomial trees for `bcast`/`reduce`, dissemination `barrier`, ring
+//!   `allgather`, pairwise `alltoall`, Rabenseifner or binomial
+//!   reduce+bcast for `allreduce`).
+//! * **Hierarchical** — a two-level decomposition around one *leader*
+//!   rank per node ([`crate::net::Topology::leader_of`]):
+//!
+//!   ```text
+//!         node 0                 node 1                 node 2
+//!   ┌────────────────┐    ┌────────────────┐    ┌────────────────┐
+//!   │ r0*  r1  r2 r3 │    │ r4*  r5  r6 r7 │    │ r8*  r9 r10 r11│
+//!   │  ▲───┴───┴──┘  │    │  ▲───┴───┴──┘  │    │  ▲───┴───┴──┘  │
+//!   │  │ intra-node  │    │  │ intra-node  │    │  │ intra-node  │
+//!   │  │ (plaintext) │    │  │ (plaintext) │    │  │ (plaintext) │
+//!   └──┼─────────────┘    └──┼─────────────┘    └──┼─────────────┘
+//!      └────── encrypted leader exchange (chopped wire path) ──────┘
+//!   ```
+//!
+//!   Phase 1 aggregates on each node over the shared-memory (plaintext,
+//!   threat model: nodes are trusted) route; phase 2 exchanges only
+//!   leader-to-leader traffic over the inter-node route — which under
+//!   `SecurityMode::CryptMpi` is the zero-copy (k,t)-chopped pipeline —
+//!   and phase 3 fans results back out inside each node. Only the
+//!   leaders' aggregated bytes ever cross the node boundary, so the
+//!   encrypted byte volume drops from `O(p)` to `O(nodes)` messages per
+//!   round (see DESIGN.md §7 for the per-algorithm cost model).
+//!
+//! [`CollPolicy`] selects the shape: `Auto` (default) uses the two-level
+//! decomposition whenever the cluster spans >1 node with >1 rank on some
+//! node, and falls back to the flat algorithms for single-node clusters;
+//! Rabenseifner `allreduce` additionally requires a power-of-two
+//! participant count and a large vector, otherwise binomial reduce+bcast
+//! is used.
+//!
+//! All functions return `Err(AuthError)` when an encrypted leg fails to
+//! authenticate (the [`Rank`] wrappers turn that into an abort, as MPI
+//! would). Before the AES master keys exist — key distribution itself
+//! runs over `gather`/`scatter` — the legs travel the plaintext wire
+//! path; their payloads are RSA-OAEP protected at the application layer
+//! (paper §IV).
+
+use crate::coordinator::rank::Rank;
+use crate::crypto::AuthError;
+use crate::mpi::CollOp;
+use crate::net::Topology;
+
+/// Algorithm-family selection for the collectives subsystem.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum CollPolicy {
+    /// Two-level whenever it can pay off: >1 node and >1 rank on some
+    /// node. Single-node clusters use the flat algorithms.
+    #[default]
+    Auto,
+    /// Always the flat (topology-blind) algorithms.
+    Flat,
+    /// Force the two-level decomposition on any multi-node topology.
+    Hierarchical,
+}
+
+/// Rabenseifner allreduce is only worth its 2·log2(L) rounds for large
+/// vectors (reduce-scatter + allgather beat a tree on bandwidth, not
+/// latency).
+const RABENSEIFNER_MIN_BYTES: usize = 32 * 1024;
+
+/// Tag sub-field shifts: a collective's base tag (from
+/// [`Rank::begin_coll`]) is decorated with a phase (level of the
+/// decomposition) and a round (step within a phase) so no two in-flight
+/// legs of one collective share a (source, tag) pair.
+const ROUND_SHIFT: u32 = 44;
+const PHASE_SHIFT: u32 = 56;
+
+fn phase(p: u64) -> u64 {
+    debug_assert!(p < 16);
+    p << PHASE_SHIFT
+}
+
+fn round(r: u64) -> u64 {
+    debug_assert!(r < 1 << (PHASE_SHIFT - ROUND_SHIFT));
+    r << ROUND_SHIFT
+}
+
+pub(crate) fn f64s_to_bytes(v: &[f64]) -> Vec<u8> {
+    v.iter().flat_map(|x| x.to_le_bytes()).collect()
+}
+
+pub(crate) fn bytes_to_f64s(b: &[u8]) -> Vec<f64> {
+    b.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect()
+}
+
+/// Should this rank run the two-level decomposition?
+fn hierarchical(rank: &Rank) -> bool {
+    let topo = rank.topo();
+    match rank.coll_policy() {
+        CollPolicy::Flat => false,
+        CollPolicy::Hierarchical => topo.nodes() > 1,
+        CollPolicy::Auto => topo.nodes() > 1 && topo.ranks > topo.nodes(),
+    }
+}
+
+/// The two-level view of the topology from one rank.
+struct TwoLevel {
+    /// My node index.
+    node: usize,
+    /// Ranks on my node, ascending (members[0] is the node leader).
+    members: Vec<usize>,
+    /// Leader rank of every node, by node index.
+    leaders: Vec<usize>,
+}
+
+impl TwoLevel {
+    fn of(rank: &Rank) -> TwoLevel {
+        let topo = rank.topo();
+        let node = topo.node_of(rank.id());
+        TwoLevel {
+            node,
+            members: topo.node_ranks(node).collect(),
+            leaders: (0..topo.nodes()).map(|nd| topo.leader_of(nd)).collect(),
+        }
+    }
+
+    fn leader(&self) -> usize {
+        self.members[0]
+    }
+}
+
+/// Per-node representatives for a rooted collective: the root stands in
+/// for its own node (so no extra root↔leader hop exists), every other
+/// node is represented by its leader.
+fn reps_for_root(rank: &Rank, tl: &TwoLevel, root: usize) -> (Vec<usize>, usize) {
+    let root_node = rank.topo().node_of(root);
+    let reps = tl
+        .leaders
+        .iter()
+        .enumerate()
+        .map(|(nd, &l)| if nd == root_node { root } else { l })
+        .collect();
+    (reps, root_node)
+}
+
+fn idx_in(group: &[usize], id: usize) -> usize {
+    group.iter().position(|&r| r == id).expect("rank not in collective group")
+}
+
+// -------------------------------------------------------------------
+// Group primitives: every algorithm below runs over an explicit
+// participant list (`group`), identical on all participants, so the same
+// code serves the flat case (group = all ranks), the intra-node level
+// (group = node members) and the inter-node level (group = leaders).
+// -------------------------------------------------------------------
+
+/// Binomial-tree broadcast of `buf` from `group[root_idx]`.
+fn group_bcast(
+    rank: &mut Rank,
+    group: &[usize],
+    root_idx: usize,
+    tag: u64,
+    buf: &mut Vec<u8>,
+) -> Result<(), AuthError> {
+    let n = group.len();
+    if n <= 1 {
+        return Ok(());
+    }
+    let vrank = (idx_in(group, rank.id()) + n - root_idx) % n;
+    if vrank != 0 {
+        let parent_v = vrank & (vrank - 1); // clear lowest set bit
+        let parent = group[(parent_v + root_idx) % n];
+        *buf = rank.coll_recv(parent, tag)?;
+    }
+    let mut bit = 1usize;
+    while bit < n {
+        if vrank & (bit - 1) == 0 && vrank & bit == 0 {
+            let child_v = vrank | bit;
+            if child_v < n {
+                let child = group[(child_v + root_idx) % n];
+                rank.coll_send(child, tag, buf);
+            }
+        }
+        bit <<= 1;
+    }
+    Ok(())
+}
+
+/// Binomial-tree sum-reduction of `acc` toward `group[root_idx]` (whose
+/// `acc` holds the group total afterwards; other ranks' `acc` holds
+/// partial sums).
+fn group_reduce_sum(
+    rank: &mut Rank,
+    group: &[usize],
+    root_idx: usize,
+    tag: u64,
+    acc: &mut [f64],
+) -> Result<(), AuthError> {
+    let n = group.len();
+    if n <= 1 {
+        return Ok(());
+    }
+    let vrank = (idx_in(group, rank.id()) + n - root_idx) % n;
+    let mut bit = 1usize;
+    let mut r = 0u64;
+    while bit < n {
+        if vrank & (bit - 1) == 0 {
+            if vrank & bit != 0 {
+                let dst = group[((vrank & !bit) + root_idx) % n];
+                rank.coll_send(dst, tag + round(r), &f64s_to_bytes(acc));
+                break;
+            } else if vrank | bit < n {
+                let src = group[((vrank | bit) + root_idx) % n];
+                let other = bytes_to_f64s(&rank.coll_recv(src, tag + round(r))?);
+                if other.len() != acc.len() {
+                    return Err(AuthError);
+                }
+                for (a, b) in acc.iter_mut().zip(other.iter()) {
+                    *a += *b;
+                }
+            }
+        }
+        bit <<= 1;
+        r += 1;
+    }
+    Ok(())
+}
+
+/// Dissemination barrier over `group`.
+fn group_barrier(rank: &mut Rank, group: &[usize], tag: u64) -> Result<(), AuthError> {
+    let n = group.len();
+    if n <= 1 {
+        return Ok(());
+    }
+    let me_idx = idx_in(group, rank.id());
+    let mut dist = 1usize;
+    let mut r = 0u64;
+    while dist < n {
+        let to = group[(me_idx + dist) % n];
+        let from = group[(me_idx + n - dist) % n];
+        rank.coll_send(to, tag + round(r), &[1]);
+        rank.coll_recv(from, tag + round(r))?;
+        dist <<= 1;
+        r += 1;
+    }
+    Ok(())
+}
+
+/// Rabenseifner allreduce over a power-of-two `group`: reduce-scatter by
+/// recursive halving, then allgather by recursive doubling (the reverse
+/// exchange). Bandwidth-optimal: each rank moves ~2·|acc| elements total
+/// regardless of the group size, vs ~2·log2(L)·|acc| for a tree.
+fn rabenseifner_allreduce(
+    rank: &mut Rank,
+    group: &[usize],
+    tag: u64,
+    acc: &mut [f64],
+) -> Result<(), AuthError> {
+    let l = group.len();
+    debug_assert!(l > 1 && l.is_power_of_two());
+    let me_idx = idx_in(group, rank.id());
+    let (mut lo, mut hi) = (0usize, acc.len());
+    // (keep, give, partner) per halving round, replayed in reverse below.
+    let mut steps: Vec<((usize, usize), (usize, usize), usize)> = Vec::new();
+    let mut dist = l / 2;
+    let mut r = 0u64;
+    while dist >= 1 {
+        let partner = group[me_idx ^ dist];
+        let mid = lo + (hi - lo) / 2;
+        let (keep, give) =
+            if me_idx & dist == 0 { ((lo, mid), (mid, hi)) } else { ((mid, hi), (lo, mid)) };
+        let sreq = rank.coll_isend(partner, tag + round(r), &f64s_to_bytes(&acc[give.0..give.1]));
+        let theirs = bytes_to_f64s(&rank.coll_recv(partner, tag + round(r))?);
+        rank.wait_send(sreq);
+        if theirs.len() != keep.1 - keep.0 {
+            return Err(AuthError);
+        }
+        for (i, v) in theirs.iter().enumerate() {
+            acc[keep.0 + i] += *v;
+        }
+        steps.push((keep, give, partner));
+        lo = keep.0;
+        hi = keep.1;
+        dist /= 2;
+        r += 1;
+    }
+    // Allgather: at the reverse of halving round j, my `keep_j` range is
+    // fully reduced (by induction over the later rounds) and my partner
+    // from round j owns exactly my `give_j` range.
+    for (keep, give, partner) in steps.into_iter().rev() {
+        let sreq = rank.coll_isend(partner, tag + round(r), &f64s_to_bytes(&acc[keep.0..keep.1]));
+        let theirs = bytes_to_f64s(&rank.coll_recv(partner, tag + round(r))?);
+        rank.wait_send(sreq);
+        if theirs.len() != give.1 - give.0 {
+            return Err(AuthError);
+        }
+        acc[give.0..give.1].copy_from_slice(&theirs);
+        r += 1;
+    }
+    Ok(())
+}
+
+/// Allreduce over `group`: Rabenseifner for large vectors on power-of-two
+/// groups, binomial reduce + broadcast otherwise. Uses the tag's round
+/// field and, for the fallback broadcast, phase offset +4.
+fn group_allreduce_sum(
+    rank: &mut Rank,
+    group: &[usize],
+    tag: u64,
+    acc: &mut Vec<f64>,
+) -> Result<(), AuthError> {
+    let l = group.len();
+    if l <= 1 {
+        return Ok(());
+    }
+    if l.is_power_of_two() && acc.len() >= l && acc.len() * 8 >= RABENSEIFNER_MIN_BYTES {
+        return rabenseifner_allreduce(rank, group, tag, acc);
+    }
+    group_reduce_sum(rank, group, 0, tag, acc)?;
+    let me_idx = idx_in(group, rank.id());
+    let mut buf = if me_idx == 0 { f64s_to_bytes(acc) } else { Vec::new() };
+    group_bcast(rank, group, 0, tag + phase(4), &mut buf)?;
+    if me_idx != 0 {
+        *acc = bytes_to_f64s(&buf);
+    }
+    Ok(())
+}
+
+// -------------------------------------------------------------------
+// Blob framing for gather/scatter transit through a leader.
+// -------------------------------------------------------------------
+
+fn pack_blobs(blobs: &[Vec<u8>]) -> Vec<u8> {
+    let total: usize = blobs.iter().map(|b| 4 + b.len()).sum();
+    let mut out = Vec::with_capacity(total);
+    for b in blobs {
+        out.extend_from_slice(&(b.len() as u32).to_le_bytes());
+        out.extend_from_slice(b);
+    }
+    out
+}
+
+fn unpack_blobs(buf: &[u8], expect: usize) -> Result<Vec<Vec<u8>>, AuthError> {
+    let mut out = Vec::with_capacity(expect);
+    let mut i = 0usize;
+    while out.len() < expect {
+        if i + 4 > buf.len() {
+            return Err(AuthError);
+        }
+        let len = u32::from_le_bytes(buf[i..i + 4].try_into().unwrap()) as usize;
+        i += 4;
+        if i + len > buf.len() {
+            return Err(AuthError);
+        }
+        out.push(buf[i..i + len].to_vec());
+        i += len;
+    }
+    if i != buf.len() {
+        return Err(AuthError);
+    }
+    Ok(out)
+}
+
+// -------------------------------------------------------------------
+// Public collectives.
+// -------------------------------------------------------------------
+
+/// Run `f` between [`Rank::begin_coll`] and [`Rank::end_coll`], so the
+/// per-op accounting window closes even when a leg fails to authenticate
+/// (otherwise later unrelated traffic would be attributed to the failed
+/// collective).
+fn with_coll<T>(
+    rank: &mut Rank,
+    op: CollOp,
+    f: impl FnOnce(&mut Rank, u64) -> Result<T, AuthError>,
+) -> Result<T, AuthError> {
+    let tag = rank.begin_coll(op);
+    let out = f(&mut *rank, tag);
+    rank.end_coll();
+    out
+}
+
+/// Barrier: intra-node fan-in to the leader, dissemination barrier over
+/// the leaders, intra-node release (flat: dissemination over all ranks).
+pub fn barrier(rank: &mut Rank) -> Result<(), AuthError> {
+    with_coll(rank, CollOp::Barrier, |rank, tag| {
+        if hierarchical(rank) {
+            let tl = TwoLevel::of(rank);
+            if rank.id() == tl.leader() {
+                for &m in &tl.members[1..] {
+                    rank.coll_recv(m, tag + phase(0))?;
+                }
+                group_barrier(rank, &tl.leaders, tag + phase(1))?;
+                for &m in &tl.members[1..] {
+                    rank.coll_send(m, tag + phase(2), &[1]);
+                }
+            } else {
+                let leader = tl.leader();
+                rank.coll_send(leader, tag + phase(0), &[1]);
+                rank.coll_recv(leader, tag + phase(2))?;
+            }
+        } else {
+            let group: Vec<usize> = (0..rank.size()).collect();
+            group_barrier(rank, &group, tag)?;
+        }
+        Ok(())
+    })
+}
+
+/// Broadcast from `root`: binomial over per-node representatives (the
+/// root for its own node, leaders elsewhere), then binomial inside each
+/// node.
+pub fn bcast(rank: &mut Rank, root: usize, data: Vec<u8>) -> Result<Vec<u8>, AuthError> {
+    with_coll(rank, CollOp::Bcast, |rank, tag| {
+        let mut buf = if rank.id() == root { data } else { Vec::new() };
+        if hierarchical(rank) {
+            let tl = TwoLevel::of(rank);
+            let (reps, root_node) = reps_for_root(rank, &tl, root);
+            let my_rep = reps[tl.node];
+            if rank.id() == my_rep {
+                group_bcast(rank, &reps, root_node, tag + phase(0), &mut buf)?;
+            }
+            let rep_idx = idx_in(&tl.members, my_rep);
+            group_bcast(rank, &tl.members, rep_idx, tag + phase(1), &mut buf)?;
+        } else {
+            let group: Vec<usize> = (0..rank.size()).collect();
+            group_bcast(rank, &group, root, tag, &mut buf)?;
+        }
+        Ok(buf)
+    })
+}
+
+/// Sum-reduction to `root`; returns `Some(total)` there, `None` elsewhere.
+pub fn reduce_sum(
+    rank: &mut Rank,
+    root: usize,
+    data: &[f64],
+) -> Result<Option<Vec<f64>>, AuthError> {
+    with_coll(rank, CollOp::Reduce, |rank, tag| {
+        let mut acc = data.to_vec();
+        if hierarchical(rank) {
+            let tl = TwoLevel::of(rank);
+            let (reps, root_node) = reps_for_root(rank, &tl, root);
+            let my_rep = reps[tl.node];
+            let rep_idx = idx_in(&tl.members, my_rep);
+            group_reduce_sum(rank, &tl.members, rep_idx, tag + phase(0), &mut acc)?;
+            if rank.id() == my_rep {
+                group_reduce_sum(rank, &reps, root_node, tag + phase(1), &mut acc)?;
+            }
+        } else {
+            let group: Vec<usize> = (0..rank.size()).collect();
+            group_reduce_sum(rank, &group, root, tag, &mut acc)?;
+        }
+        Ok((rank.id() == root).then_some(acc))
+    })
+}
+
+/// Allreduce (sum): intra-node reduce to the leader, allreduce over the
+/// leaders (Rabenseifner for large vectors on power-of-two leader
+/// counts), intra-node broadcast of the result.
+pub fn allreduce_sum(rank: &mut Rank, data: &[f64]) -> Result<Vec<f64>, AuthError> {
+    with_coll(rank, CollOp::Allreduce, |rank, tag| {
+        let mut acc = data.to_vec();
+        if hierarchical(rank) {
+            let tl = TwoLevel::of(rank);
+            group_reduce_sum(rank, &tl.members, 0, tag + phase(0), &mut acc)?;
+            let am_leader = rank.id() == tl.leader();
+            if am_leader {
+                group_allreduce_sum(rank, &tl.leaders, tag + phase(1), &mut acc)?;
+            }
+            let mut buf = if am_leader { f64s_to_bytes(&acc) } else { Vec::new() };
+            group_bcast(rank, &tl.members, 0, tag + phase(2), &mut buf)?;
+            if !am_leader {
+                acc = bytes_to_f64s(&buf);
+            }
+        } else {
+            let group: Vec<usize> = (0..rank.size()).collect();
+            group_allreduce_sum(rank, &group, tag, &mut acc)?;
+        }
+        Ok(acc)
+    })
+}
+
+/// Allgather of equal-size blocks; returns the concatenation in rank
+/// order. Hierarchical: intra-node gather at the leader, ring over the
+/// leaders moving whole node super-blocks, intra-node broadcast.
+pub fn allgather(rank: &mut Rank, mine: &[u8]) -> Result<Vec<u8>, AuthError> {
+    with_coll(rank, CollOp::Allgather, |rank, tag| {
+        if hierarchical(rank) {
+            let tl = TwoLevel::of(rank);
+            hier_allgather(rank, &tl, mine, tag)
+        } else {
+            flat_ring_allgather(rank, mine, tag)
+        }
+    })
+}
+
+/// [`allgather`] over f64 vectors (the NAS CG matvec shape).
+pub fn allgather_f64(rank: &mut Rank, mine: &[f64]) -> Result<Vec<f64>, AuthError> {
+    Ok(bytes_to_f64s(&allgather(rank, &f64s_to_bytes(mine))?))
+}
+
+/// Ring allgather: P−1 steps; step s forwards the block received at step
+/// s−1 to the right neighbor. All blocks end up everywhere.
+fn flat_ring_allgather(rank: &mut Rank, mine: &[u8], tag: u64) -> Result<Vec<u8>, AuthError> {
+    let p = rank.size();
+    let me = rank.id();
+    let block = mine.len();
+    let mut full = vec![0u8; block * p];
+    full[me * block..(me + 1) * block].copy_from_slice(mine);
+    let right = (me + 1) % p;
+    let left = (me + p - 1) % p;
+    let mut current = me; // block index we hold most recently
+    for s in 0..p.saturating_sub(1) {
+        let stag = tag + round(s as u64);
+        let sreq = rank.coll_isend(right, stag, &full[current * block..(current + 1) * block]);
+        let data = rank.coll_recv(left, stag)?;
+        rank.wait_send(sreq);
+        if data.len() != block {
+            return Err(AuthError);
+        }
+        let incoming = (current + p - 1) % p; // left neighbor's last block
+        full[incoming * block..(incoming + 1) * block].copy_from_slice(&data);
+        current = incoming;
+    }
+    Ok(full)
+}
+
+fn hier_allgather(
+    rank: &mut Rank,
+    tl: &TwoLevel,
+    mine: &[u8],
+    tag: u64,
+) -> Result<Vec<u8>, AuthError> {
+    let p = rank.size();
+    let me = rank.id();
+    let block = mine.len();
+    let leader = tl.leader();
+    if me != leader {
+        rank.coll_send(leader, tag + phase(0), mine);
+        let mut buf = Vec::new();
+        group_bcast(rank, &tl.members, 0, tag + phase(2), &mut buf)?;
+        return Ok(buf);
+    }
+    // Leader: assemble this node's super-block in place in `full`.
+    let mut full = vec![0u8; block * p];
+    full[me * block..(me + 1) * block].copy_from_slice(mine);
+    for &m in &tl.members[1..] {
+        let d = rank.coll_recv(m, tag + phase(0))?;
+        if d.len() != block {
+            return Err(AuthError);
+        }
+        full[m * block..(m + 1) * block].copy_from_slice(&d);
+    }
+    // Ring over node leaders, moving whole node super-blocks (sized per
+    // node — the last node may be ragged).
+    let nl = tl.leaders.len();
+    let li = tl.node;
+    let right = tl.leaders[(li + 1) % nl];
+    let left = tl.leaders[(li + nl - 1) % nl];
+    let ranges: Vec<(usize, usize)> = {
+        let topo = rank.topo();
+        (0..nl)
+            .map(|nd| {
+                let r = topo.node_ranks(nd);
+                (r.start * block, r.end * block)
+            })
+            .collect()
+    };
+    let mut current = li;
+    for s in 0..nl - 1 {
+        let stag = tag + phase(1) + round(s as u64);
+        let (clo, chi) = ranges[current];
+        let sreq = rank.coll_isend(right, stag, &full[clo..chi]);
+        let data = rank.coll_recv(left, stag)?;
+        rank.wait_send(sreq);
+        let incoming = (current + nl - 1) % nl;
+        let (ilo, ihi) = ranges[incoming];
+        if data.len() != ihi - ilo {
+            return Err(AuthError);
+        }
+        full[ilo..ihi].copy_from_slice(&data);
+        current = incoming;
+    }
+    // Fan the assembled vector out inside the node.
+    let mut buf = full;
+    group_bcast(rank, &tl.members, 0, tag + phase(2), &mut buf)?;
+    Ok(buf)
+}
+
+/// All-to-all of equal-size blocks (`blocks[d]` goes to rank `d`);
+/// returns `out[s]` = the block rank `s` sent here. Hierarchical: local
+/// blocks are exchanged directly on the intra-node route; remote blocks
+/// are aggregated at the leader, exchanged as one node-to-node message
+/// per peer node, and fanned back out.
+pub fn alltoall(rank: &mut Rank, blocks: Vec<Vec<u8>>) -> Result<Vec<Vec<u8>>, AuthError> {
+    let p = rank.size();
+    assert_eq!(blocks.len(), p, "alltoall needs one block per destination rank");
+    let b = blocks.first().map(|x| x.len()).unwrap_or(0);
+    assert!(blocks.iter().all(|x| x.len() == b), "alltoall requires equal block sizes");
+    with_coll(rank, CollOp::Alltoall, |rank, tag| {
+        if hierarchical(rank) {
+            let tl = TwoLevel::of(rank);
+            return hier_alltoall(rank, &tl, &blocks, b, tag);
+        }
+        let me = rank.id();
+        let mut out: Vec<Vec<u8>> = vec![Vec::new(); p];
+        out[me] = blocks[me].clone();
+        let mut reqs = Vec::with_capacity(p.saturating_sub(1));
+        for (peer, block) in blocks.iter().enumerate() {
+            if peer != me {
+                reqs.push(rank.coll_isend(peer, tag, block));
+            }
+        }
+        for (peer, slot) in out.iter_mut().enumerate() {
+            if peer != me {
+                let d = rank.coll_recv(peer, tag)?;
+                if d.len() != b {
+                    return Err(AuthError);
+                }
+                *slot = d;
+            }
+        }
+        for r in reqs {
+            rank.wait_send(r);
+        }
+        Ok(out)
+    })
+}
+
+/// Unpack a leader delivery (`for nd in rnodes, for src in
+/// node_ranks(nd): block(src→me)`) into `out`.
+fn unpack_remote(
+    out: &mut [Vec<u8>],
+    deliver: &[u8],
+    rnodes: &[usize],
+    topo: &Topology,
+    b: usize,
+) -> Result<(), AuthError> {
+    let mut i = 0usize;
+    for &nd in rnodes {
+        for src in topo.node_ranks(nd) {
+            if i + b > deliver.len() {
+                return Err(AuthError);
+            }
+            out[src] = deliver[i..i + b].to_vec();
+            i += b;
+        }
+    }
+    if i != deliver.len() {
+        return Err(AuthError);
+    }
+    Ok(())
+}
+
+fn hier_alltoall(
+    rank: &mut Rank,
+    tl: &TwoLevel,
+    blocks: &[Vec<u8>],
+    b: usize,
+    tag: u64,
+) -> Result<Vec<Vec<u8>>, AuthError> {
+    let p = rank.size();
+    let me = rank.id();
+    let leader = tl.leader();
+    let s = tl.members.len();
+    let topo = rank.topo().clone();
+    // Remote nodes ascending; every member of my node derives the same
+    // list, so pack offsets agree.
+    let rnodes: Vec<usize> = (0..topo.nodes()).filter(|&nd| nd != tl.node).collect();
+    let pack_off: Vec<usize> = rnodes
+        .iter()
+        .scan(0usize, |acc, &nd| {
+            let o = *acc;
+            *acc += topo.node_ranks(nd).len() * b;
+            Some(o)
+        })
+        .collect();
+    let pack_total: usize = rnodes.iter().map(|&nd| topo.node_ranks(nd).len() * b).sum();
+    // My remote-destined blocks: for nd in rnodes, for dst in members(nd).
+    let mut my_pack = Vec::with_capacity(pack_total);
+    for &nd in &rnodes {
+        for dst in topo.node_ranks(nd) {
+            my_pack.extend_from_slice(&blocks[dst]);
+        }
+    }
+
+    let mut out: Vec<Vec<u8>> = vec![Vec::new(); p];
+    out[me] = blocks[me].clone();
+
+    // Same-node blocks go rank-to-rank over the intra-node route.
+    let mut intra_reqs = Vec::with_capacity(s.saturating_sub(1));
+    for &m in &tl.members {
+        if m != me {
+            intra_reqs.push(rank.coll_isend(m, tag + phase(3), &blocks[m]));
+        }
+    }
+
+    if me == leader {
+        // Collect members' packs (member order; mine is index 0).
+        let mut packed: Vec<Vec<u8>> = Vec::with_capacity(s);
+        packed.push(my_pack);
+        for &m in &tl.members[1..] {
+            let q = rank.coll_recv(m, tag + phase(0))?;
+            if q.len() != pack_total {
+                return Err(AuthError);
+            }
+            packed.push(q);
+        }
+        // One aggregate per peer node: for dst in members(nd), for src in
+        // my members: block(src→dst).
+        let aggs: Vec<Vec<u8>> = rnodes
+            .iter()
+            .enumerate()
+            .map(|(k, &nd)| {
+                let dn = topo.node_ranks(nd).len();
+                let mut agg = Vec::with_capacity(dn * s * b);
+                for d_i in 0..dn {
+                    let start = pack_off[k] + d_i * b;
+                    for q in &packed {
+                        agg.extend_from_slice(&q[start..start + b]);
+                    }
+                }
+                agg
+            })
+            .collect();
+        let mut agg_reqs = Vec::with_capacity(rnodes.len());
+        for (k, &nd) in rnodes.iter().enumerate() {
+            agg_reqs.push(rank.coll_isend(topo.leader_of(nd), tag + phase(1), &aggs[k]));
+        }
+        // Receive peers' aggregates (rnodes order — matched by source).
+        let mut incoming: Vec<(usize, Vec<u8>)> = Vec::with_capacity(rnodes.len());
+        for &nd in &rnodes {
+            let sn = topo.node_ranks(nd).len();
+            let agg = rank.coll_recv(topo.leader_of(nd), tag + phase(1))?;
+            if agg.len() != sn * s * b {
+                return Err(AuthError);
+            }
+            incoming.push((nd, agg));
+        }
+        for r in agg_reqs {
+            rank.wait_send(r);
+        }
+        // Deliver each local member its slice of every aggregate.
+        for (d_i, &dst) in tl.members.iter().enumerate() {
+            let mut deliver = Vec::with_capacity(pack_total);
+            for (nd, agg) in &incoming {
+                let sn = topo.node_ranks(*nd).len();
+                let start = d_i * sn * b;
+                deliver.extend_from_slice(&agg[start..start + sn * b]);
+            }
+            if d_i == 0 {
+                unpack_remote(&mut out, &deliver, &rnodes, &topo, b)?;
+            } else {
+                rank.coll_send(dst, tag + phase(2), &deliver);
+            }
+        }
+    } else {
+        rank.coll_send(leader, tag + phase(0), &my_pack);
+        let deliver = rank.coll_recv(leader, tag + phase(2))?;
+        unpack_remote(&mut out, &deliver, &rnodes, &topo, b)?;
+    }
+
+    // Finish the intra-node exchange.
+    for &m in &tl.members {
+        if m != me {
+            let d = rank.coll_recv(m, tag + phase(3))?;
+            if d.len() != b {
+                return Err(AuthError);
+            }
+            out[m] = d;
+        }
+    }
+    for r in intra_reqs {
+        rank.wait_send(r);
+    }
+    Ok(out)
+}
+
+/// Gather byte blobs at `root` (`Some(all)` there, `None` elsewhere).
+/// Hierarchical: members hand their blob to the per-node representative,
+/// which forwards one length-prefixed pack per node to the root.
+pub fn gather(
+    rank: &mut Rank,
+    root: usize,
+    data: &[u8],
+) -> Result<Option<Vec<Vec<u8>>>, AuthError> {
+    with_coll(rank, CollOp::Gather, |rank, tag| gather_impl(rank, root, data, tag))
+}
+
+fn gather_impl(
+    rank: &mut Rank,
+    root: usize,
+    data: &[u8],
+    tag: u64,
+) -> Result<Option<Vec<Vec<u8>>>, AuthError> {
+    let me = rank.id();
+    let n = rank.size();
+    let out = if hierarchical(rank) {
+        let tl = TwoLevel::of(rank);
+        let (reps, _) = reps_for_root(rank, &tl, root);
+        let my_rep = reps[tl.node];
+        if me == root {
+            let mut all: Vec<Vec<u8>> = vec![Vec::new(); n];
+            all[me] = data.to_vec();
+            for &m in tl.members.iter().filter(|&&m| m != me) {
+                all[m] = rank.coll_recv(m, tag + phase(0))?;
+            }
+            for (nd, &rep) in reps.iter().enumerate() {
+                if nd == tl.node {
+                    continue;
+                }
+                let members: Vec<usize> = rank.topo().node_ranks(nd).collect();
+                let packed = rank.coll_recv(rep, tag + phase(1))?;
+                let blobs = unpack_blobs(&packed, members.len())?;
+                for (&m, blob) in members.iter().zip(blobs) {
+                    all[m] = blob;
+                }
+            }
+            Some(all)
+        } else if me == my_rep {
+            let mut blobs: Vec<Vec<u8>> = Vec::with_capacity(tl.members.len());
+            for &m in &tl.members {
+                blobs.push(if m == me {
+                    data.to_vec()
+                } else {
+                    rank.coll_recv(m, tag + phase(0))?
+                });
+            }
+            rank.coll_send(root, tag + phase(1), &pack_blobs(&blobs));
+            None
+        } else {
+            rank.coll_send(my_rep, tag + phase(0), data);
+            None
+        }
+    } else if me == root {
+        let mut all: Vec<Vec<u8>> = vec![Vec::new(); n];
+        all[me] = data.to_vec();
+        for (r, slot) in all.iter_mut().enumerate() {
+            if r != me {
+                *slot = rank.coll_recv(r, tag)?;
+            }
+        }
+        Some(all)
+    } else {
+        rank.coll_send(root, tag, data);
+        None
+    };
+    Ok(out)
+}
+
+/// Scatter byte blobs from `root`; returns this rank's part.
+/// Hierarchical: the root sends one length-prefixed pack per node to its
+/// representative, which fans the parts out locally.
+pub fn scatter(
+    rank: &mut Rank,
+    root: usize,
+    parts: Option<Vec<Vec<u8>>>,
+) -> Result<Vec<u8>, AuthError> {
+    with_coll(rank, CollOp::Scatter, |rank, tag| scatter_impl(rank, root, parts, tag))
+}
+
+fn scatter_impl(
+    rank: &mut Rank,
+    root: usize,
+    parts: Option<Vec<Vec<u8>>>,
+    tag: u64,
+) -> Result<Vec<u8>, AuthError> {
+    let me = rank.id();
+    let n = rank.size();
+    let out = if hierarchical(rank) {
+        let tl = TwoLevel::of(rank);
+        let (reps, _) = reps_for_root(rank, &tl, root);
+        let my_rep = reps[tl.node];
+        if me == root {
+            let parts = parts.expect("root must provide parts");
+            assert_eq!(parts.len(), n);
+            for &m in tl.members.iter().filter(|&&m| m != me) {
+                rank.coll_send(m, tag + phase(0), &parts[m]);
+            }
+            for (nd, &rep) in reps.iter().enumerate() {
+                if nd == tl.node {
+                    continue;
+                }
+                let node_parts: Vec<Vec<u8>> =
+                    rank.topo().node_ranks(nd).map(|m| parts[m].clone()).collect();
+                rank.coll_send(rep, tag + phase(1), &pack_blobs(&node_parts));
+            }
+            parts[me].clone()
+        } else if me == my_rep {
+            let packed = rank.coll_recv(root, tag + phase(1))?;
+            let blobs = unpack_blobs(&packed, tl.members.len())?;
+            let mut mine = Vec::new();
+            for (&m, blob) in tl.members.iter().zip(blobs) {
+                if m == me {
+                    mine = blob;
+                } else {
+                    rank.coll_send(m, tag + phase(0), &blob);
+                }
+            }
+            mine
+        } else {
+            rank.coll_recv(my_rep, tag + phase(0))?
+        }
+    } else if me == root {
+        let parts = parts.expect("root must provide parts");
+        assert_eq!(parts.len(), n);
+        for (r, part) in parts.iter().enumerate() {
+            if r != me {
+                rank.coll_send(r, tag, part);
+            }
+        }
+        parts[me].clone()
+    } else {
+        rank.coll_recv(root, tag)?
+    };
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::rank::COLL_TAG_BASE;
+    use crate::coordinator::{run_cluster, ClusterConfig, Keys, SecurityMode};
+    use crate::crypto::{Header, Opcode, TAG_LEN};
+    use crate::mpi::{CollOp, Transport};
+    use crate::net::SystemProfile;
+    use crate::vtime::calib;
+    use std::sync::Arc;
+
+    fn cfg_with(
+        ranks: usize,
+        rpn: usize,
+        mode: SecurityMode,
+        policy: CollPolicy,
+    ) -> ClusterConfig {
+        let mut cfg = ClusterConfig::new(ranks, rpn, SystemProfile::noleland(), mode);
+        cfg.coll = policy;
+        cfg
+    }
+
+    /// All collectives agree with their scalar reference on hierarchical
+    /// and flat policies, across node counts and ragged (non-power-of-two)
+    /// rank counts. Integer-valued f64 payloads make sums order-exact.
+    #[test]
+    fn hierarchical_matches_flat_reference() {
+        for (ranks, rpn) in [(4, 2), (6, 2), (5, 2), (8, 4), (7, 3)] {
+            for policy in [CollPolicy::Flat, CollPolicy::Hierarchical, CollPolicy::Auto] {
+                let cfg = cfg_with(ranks, rpn, SecurityMode::CryptMpi, policy);
+                let (outs, _) = run_cluster(&cfg, move |rank| {
+                    let n = rank.size();
+                    let me = rank.id();
+                    // allreduce
+                    let v = rank.allreduce_sum(&[me as f64, 2.0]);
+                    let expect: f64 = (0..n).map(|x| x as f64).sum();
+                    assert_eq!(v, vec![expect, 2.0 * n as f64], "allreduce {ranks}/{rpn}");
+                    // reduce at a non-leader root
+                    let root = n - 1;
+                    let r = rank.reduce_sum(root, &[1.0, me as f64]);
+                    if me == root {
+                        assert_eq!(r.unwrap(), vec![n as f64, expect], "reduce {ranks}/{rpn}");
+                    } else {
+                        assert!(r.is_none());
+                    }
+                    // bcast from a non-leader root
+                    let data = if me == root { vec![9u8, 8, 7] } else { Vec::new() };
+                    assert_eq!(rank.bcast(root, data), vec![9u8, 8, 7]);
+                    // allgather
+                    let mine = [me as u8; 5];
+                    let full = rank.allgather(&mine);
+                    let want: Vec<u8> = (0..n).flat_map(|r| vec![r as u8; 5]).collect();
+                    assert_eq!(full, want, "allgather {ranks}/{rpn} {policy:?}");
+                    // alltoall
+                    let blocks: Vec<Vec<u8>> =
+                        (0..n).map(|d| vec![(me * n + d) as u8; 3]).collect();
+                    let got = rank.alltoall(blocks);
+                    for (s, blob) in got.iter().enumerate() {
+                        assert_eq!(blob, &vec![(s * n + me) as u8; 3], "alltoall {ranks}/{rpn}");
+                    }
+                    // gather / scatter at a mid root
+                    let root2 = n / 2;
+                    let g = rank.gather(root2, &vec![me as u8; me + 1]);
+                    if me == root2 {
+                        let g = g.unwrap();
+                        for (r, blob) in g.iter().enumerate() {
+                            assert_eq!(blob, &vec![r as u8; r + 1], "gather {ranks}/{rpn}");
+                        }
+                    }
+                    let parts = (me == root2)
+                        .then(|| (0..n).map(|r| vec![r as u8 + 100; 2]).collect());
+                    assert_eq!(rank.scatter(root2, parts), vec![me as u8 + 100; 2]);
+                    rank.barrier();
+                    true
+                });
+                assert!(outs.iter().all(|&x| x));
+            }
+        }
+    }
+
+    /// Rabenseifner engages for large vectors on power-of-two groups and
+    /// still produces exact sums.
+    #[test]
+    fn rabenseifner_allreduce_exact() {
+        for len in [RABENSEIFNER_MIN_BYTES / 8, RABENSEIFNER_MIN_BYTES / 8 + 3] {
+            let cfg = cfg_with(4, 1, SecurityMode::CryptMpi, CollPolicy::Flat);
+            let (outs, _) = run_cluster(&cfg, move |rank| {
+                let me = rank.id();
+                let v: Vec<f64> = (0..len).map(|i| (me * len + i) as f64).collect();
+                let sum = rank.allreduce_sum(&v);
+                (0..len).all(|i| {
+                    let expect: f64 = (0..4).map(|r| (r * len + i) as f64).sum();
+                    sum[i] == expect
+                })
+            });
+            assert!(outs.iter().all(|&x| x), "len={len}");
+        }
+    }
+
+    /// The hierarchical decomposition must move strictly fewer inter-node
+    /// payload bytes than the flat algorithms for allreduce and allgather
+    /// on a multi-node topology — proven by the per-op stats counters.
+    #[test]
+    fn hierarchical_moves_fewer_inter_bytes() {
+        let elems = 16 * 1024; // 128 KB vectors → chopped wire path
+        let run = |policy: CollPolicy| {
+            let cfg = cfg_with(8, 4, SecurityMode::CryptMpi, policy);
+            let (_, rep) = run_cluster(&cfg, move |rank| {
+                let v = vec![1.0f64; elems];
+                let r = rank.allreduce_sum(&v);
+                assert_eq!(r[0], rank.size() as f64);
+                let mine = vec![rank.id() as u8; elems];
+                let full = rank.allgather(&mine);
+                assert_eq!(full.len(), elems * rank.size());
+            });
+            rep.coll_totals()
+        };
+        let flat = run(CollPolicy::Flat);
+        let hier = run(CollPolicy::Hierarchical);
+        for op in [CollOp::Allreduce, CollOp::Allgather] {
+            let (f, h) =
+                (flat.op(op).inter_bytes, hier.op(op).inter_bytes);
+            assert!(h > 0, "{op:?}: hierarchical still crosses nodes");
+            assert!(h < f, "{op:?}: hier {h} must be < flat {f}");
+            // And the saved traffic moved to the cheap intra-node route.
+            assert!(hier.op(op).intra_bytes > flat.op(op).intra_bytes, "{op:?}");
+        }
+    }
+
+    /// Tampering with an inter-node leader exchange is detected: a forged
+    /// wire message injected into the root's mailbox ahead of the real
+    /// leader pack makes the collective fail authentication.
+    #[test]
+    fn tampered_leader_exchange_detected() {
+        let p = SystemProfile::noleland();
+        let topo = crate::net::Topology::new(2, 1);
+        let tp = Arc::new(Transport::new(topo, p.net.clone(), None));
+        let profile = Arc::new(p);
+        let cal = calib::get();
+        let keys = Keys::from_bytes(&[1u8; 16], &[2u8; 16]);
+        let mut a = crate::coordinator::rank::Rank::new(
+            0,
+            Arc::clone(&tp),
+            Arc::clone(&profile),
+            cal,
+            SecurityMode::CryptMpi,
+            Some(keys.clone()),
+            32,
+        );
+        let mut b = crate::coordinator::rank::Rank::new(
+            1,
+            tp,
+            profile,
+            cal,
+            SecurityMode::CryptMpi,
+            Some(keys),
+            32,
+        );
+        // Forge a Direct-opcode message under the first collective's tag
+        // (flat gather on a 1-rank-per-node pair: rank 1 → rank 0, seq 0).
+        let msg_len = 8usize;
+        let header = Header {
+            opcode: Opcode::Direct,
+            seed: [0x5au8; 16],
+            msg_len: msg_len as u64,
+            seg_size: 0,
+        };
+        let mut forged = header.encode().to_vec();
+        forged.extend_from_slice(&[0u8; 8]);
+        forged.extend_from_slice(&[0u8; TAG_LEN]); // bogus GCM tag
+        a.transport().post(1, 0, COLL_TAG_BASE, 0, forged, 0);
+        // Rank 1 contributes its real (encrypted) blob — send-only, so it
+        // completes without waiting on the root.
+        assert!(gather(&mut b, 0, &[9u8; 8]).unwrap().is_none());
+        // The root hits the forged message first (FIFO) and must reject.
+        assert!(gather(&mut a, 0, &[7u8; 8]).is_err(), "forgery must be detected");
+    }
+
+    /// A downgrade forgery — an inter-node `Plain` frame injected where
+    /// an encrypted leader exchange is expected — must be rejected once
+    /// keys exist: plaintext opcodes are only legitimate intra-node or
+    /// during pre-key bootstrap.
+    #[test]
+    fn plain_downgrade_forgery_rejected() {
+        let p = SystemProfile::noleland();
+        let topo = crate::net::Topology::new(2, 1);
+        let tp = Arc::new(Transport::new(topo, p.net.clone(), None));
+        let profile = Arc::new(p);
+        let cal = calib::get();
+        let keys = Keys::from_bytes(&[1u8; 16], &[2u8; 16]);
+        let mut a = crate::coordinator::rank::Rank::new(
+            0,
+            Arc::clone(&tp),
+            Arc::clone(&profile),
+            cal,
+            SecurityMode::CryptMpi,
+            Some(keys.clone()),
+            32,
+        );
+        let mut b = crate::coordinator::rank::Rank::new(
+            1,
+            tp,
+            profile,
+            cal,
+            SecurityMode::CryptMpi,
+            Some(keys),
+            32,
+        );
+        // Attacker-chosen plaintext bytes under a Plain header: carries no
+        // GCM tag at all, so it would bypass authentication if accepted.
+        let header = Header {
+            opcode: Opcode::Plain,
+            seed: [0u8; 16],
+            msg_len: 8,
+            seg_size: 0,
+        };
+        let mut forged = header.encode().to_vec();
+        forged.extend_from_slice(&[0x41u8; 8]);
+        a.transport().post(1, 0, COLL_TAG_BASE, 0, forged, 0);
+        assert!(gather(&mut b, 0, &[9u8; 8]).unwrap().is_none());
+        assert!(
+            gather(&mut a, 0, &[7u8; 8]).is_err(),
+            "inter-node Plain frame must not bypass authentication"
+        );
+    }
+
+    /// Blob framing round-trips and rejects truncation/garbage.
+    #[test]
+    fn blob_framing() {
+        let blobs = vec![vec![1u8, 2, 3], Vec::new(), vec![9u8; 70000]];
+        let packed = pack_blobs(&blobs);
+        assert_eq!(unpack_blobs(&packed, 3).unwrap(), blobs);
+        assert!(unpack_blobs(&packed[..packed.len() - 1], 3).is_err());
+        assert!(unpack_blobs(&packed, 4).is_err());
+        let mut trailing = packed.clone();
+        trailing.push(0);
+        assert!(unpack_blobs(&trailing, 3).is_err());
+    }
+
+    /// Tag sub-fields never collide: phase and round occupy disjoint bits
+    /// above any realistic base tag.
+    #[test]
+    fn tag_fields_disjoint() {
+        let base = COLL_TAG_BASE + 12345;
+        let mut seen = std::collections::HashSet::new();
+        for p in 0..8u64 {
+            for r in 0..64u64 {
+                assert!(seen.insert(base + phase(p) + round(r)));
+            }
+        }
+    }
+}

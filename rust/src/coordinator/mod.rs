@@ -2,6 +2,8 @@
 //!
 //! * [`rank`] — the per-rank communication API (send/recv/isend/irecv/
 //!   wait/waitall + collectives) with the paper's security modes.
+//! * [`collectives`] — topology-aware collective algorithms with the
+//!   two-level (node-leader) decomposition; see DESIGN.md §7.
 //! * [`pool`] — the multi-thread encryption worker pool (the OpenMP analog).
 //! * [`bufpool`] — recycled scratch buffers for the zero-copy wire path.
 //! * [`params`] — (k, t) parameter selection with the paper's constraints.
@@ -10,6 +12,7 @@
 
 pub mod bufpool;
 pub mod cluster;
+pub mod collectives;
 pub mod keydist;
 pub mod params;
 pub mod pool;
@@ -17,6 +20,7 @@ pub mod rank;
 
 pub use bufpool::{BufferPool, PoolStats};
 pub use cluster::{run_cluster, ClusterConfig, KeyDistMode};
+pub use collectives::CollPolicy;
 pub use rank::{Rank, RecvReq, SendReq};
 
 use crate::crypto::Gcm;

@@ -20,6 +20,7 @@
 //! old path's O(segments) per-segment `Vec`s.
 
 use crate::coordinator::bufpool::{split_mut, BufferPool, PoolStats};
+use crate::coordinator::collectives::{self, CollPolicy};
 use crate::coordinator::params::{select_k_constrained, select_t_threads};
 use crate::coordinator::pool::WorkerPool;
 use crate::coordinator::{Keys, SecurityMode};
@@ -28,15 +29,15 @@ use crate::crypto::{
     AuthError, Header, Opcode, StreamOpener, StreamSealer, CHOP_THRESHOLD, HEADER_LEN,
     TAG_LEN,
 };
-use crate::mpi::{CommStats, Route, Transport};
-use crate::net::SystemProfile;
+use crate::mpi::{CollOp, CommStats, Route, Transport};
+use crate::net::{SystemProfile, Topology};
 use crate::vtime::calib::CryptoCalibration;
 use crate::vtime::VClock;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
 /// Base tag for internal collective traffic (app tags must stay below).
-const COLL_TAG_BASE: u64 = 1 << 40;
+pub(crate) const COLL_TAG_BASE: u64 = 1 << 40;
 
 /// Upper bound on the message length a *chopped* header may claim. The
 /// header travels unauthenticated (its fields are only validated when the
@@ -52,6 +53,9 @@ const MAX_CHOPPED_MSG_LEN: u64 = 1 << 30;
 pub struct SendReq {
     local_complete_ns: u64,
     needs_drain: bool,
+    /// Route of the posted message — drain time in [`Rank::wait_send`] is
+    /// charged to the matching intra/inter bucket.
+    route: Route,
 }
 
 /// A pending non-blocking receive (matching is deferred to `wait`).
@@ -78,6 +82,12 @@ pub struct Rank {
     /// Hyper-threads allocated to this rank (T0).
     t0: u32,
     coll_seq: u64,
+    /// Algorithm family for collectives (flat vs two-level hierarchical).
+    coll_policy: CollPolicy,
+    /// The collective currently executing on this rank, if any — sends
+    /// and receives issued while set are attributed to its counters.
+    coll_op: Option<CollOp>,
+    coll_start_ns: u64,
 }
 
 impl Rank {
@@ -105,6 +115,9 @@ impl Rank {
             outstanding_sends: 0,
             t0,
             coll_seq: 0,
+            coll_policy: CollPolicy::default(),
+            coll_op: None,
+            coll_start_ns: 0,
         }
     }
 
@@ -126,6 +139,26 @@ impl Rank {
 
     pub fn profile(&self) -> &SystemProfile {
         &self.profile
+    }
+
+    /// The cluster's rank→node placement.
+    pub fn topo(&self) -> &Topology {
+        self.tp.topo()
+    }
+
+    /// The shared transport fabric (crate-internal: tests and the
+    /// collectives module).
+    pub(crate) fn transport(&self) -> &Transport {
+        &self.tp
+    }
+
+    /// Which algorithm family collectives use on this rank.
+    pub fn coll_policy(&self) -> CollPolicy {
+        self.coll_policy
+    }
+
+    pub fn set_coll_policy(&mut self, policy: CollPolicy) {
+        self.coll_policy = policy;
     }
 
     /// Current virtual time (ns).
@@ -204,14 +237,33 @@ impl Rank {
         let route = self.tp.route(self.id, to);
         let req = self.send_impl(to, tag, data, route);
         let spent = self.clock.now() - start;
+        self.account_send(route, data.len() as u64, spent);
+        self.outstanding_sends += 1;
+        req
+    }
+
+    /// Send-side accounting: route time buckets, payload counters, and —
+    /// inside a collective — the per-operation split counters.
+    fn account_send(&mut self, route: Route, bytes: u64, spent: u64) {
         match route {
             Route::InterNode => self.stats.inter_ns += spent,
             Route::IntraNode => self.stats.intra_ns += spent,
         }
-        self.stats.bytes_sent += data.len() as u64;
+        self.stats.bytes_sent += bytes;
         self.stats.msgs_sent += 1;
-        self.outstanding_sends += 1;
-        req
+        if let Some(op) = self.coll_op {
+            let s = self.stats.coll.op_mut(op);
+            match route {
+                Route::InterNode => {
+                    s.inter_bytes += bytes;
+                    s.inter_ns += spent;
+                }
+                Route::IntraNode => {
+                    s.intra_bytes += bytes;
+                    s.intra_ns += spent;
+                }
+            }
+        }
     }
 
     /// Non-blocking receive (matching deferred to wait).
@@ -223,11 +275,22 @@ impl Rank {
         RecvReq { from: None, tag }
     }
 
-    /// Wait for a send request.
+    /// Wait for a send request. Rendezvous drain time is charged to the
+    /// request's route bucket (and, inside a collective, to its counters).
     pub fn wait_send(&mut self, req: SendReq) {
         if req.needs_drain {
             let waited = self.clock.wait_until(req.local_complete_ns);
-            self.stats.inter_ns += waited;
+            match req.route {
+                Route::InterNode => self.stats.inter_ns += waited,
+                Route::IntraNode => self.stats.intra_ns += waited,
+            }
+            if let Some(op) = self.coll_op {
+                let s = self.stats.coll.op_mut(op);
+                match req.route {
+                    Route::InterNode => s.inter_ns += waited,
+                    Route::IntraNode => s.intra_ns += waited,
+                }
+            }
         }
         self.outstanding_sends = self.outstanding_sends.saturating_sub(1);
     }
@@ -266,19 +329,21 @@ impl Rank {
             (_, m) => m,
         };
         match effective {
-            SecurityMode::Unencrypted | SecurityMode::IpsecSim => self.send_plain(to, tag, data),
-            SecurityMode::Naive => self.send_direct(to, tag, data, /*naive=*/ true),
+            SecurityMode::Unencrypted | SecurityMode::IpsecSim => {
+                self.send_plain(to, tag, data, route)
+            }
+            SecurityMode::Naive => self.send_direct(to, tag, data, route, /*naive=*/ true),
             SecurityMode::CryptMpi => {
                 if data.len() < CHOP_THRESHOLD {
-                    self.send_direct(to, tag, data, false)
+                    self.send_direct(to, tag, data, route, false)
                 } else {
-                    self.send_chopped(to, tag, data)
+                    self.send_chopped(to, tag, data, route)
                 }
             }
         }
     }
 
-    fn send_plain(&mut self, to: usize, tag: u64, data: &[u8]) -> SendReq {
+    fn send_plain(&mut self, to: usize, tag: u64, data: &[u8], route: Route) -> SendReq {
         let header = Header {
             opcode: Opcode::Plain,
             seed: [0u8; 16],
@@ -293,12 +358,20 @@ impl Rank {
         SendReq {
             local_complete_ns: info.local_complete_ns,
             needs_drain: wire > self.tp.net().eager_threshold,
+            route,
         }
     }
 
     /// Direct GCM of the whole message: the Naive library for any size, or
     /// CryptMPI's small-message path. One thread.
-    fn send_direct(&mut self, to: usize, tag: u64, data: &[u8], naive: bool) -> SendReq {
+    fn send_direct(
+        &mut self,
+        to: usize,
+        tag: u64,
+        data: &[u8],
+        route: Route,
+        naive: bool,
+    ) -> SendReq {
         let keys = self.keys_ref().clone();
         let nonce: [u8; 12] = secure_array();
         let mut seed = [0u8; 16];
@@ -324,12 +397,13 @@ impl Rank {
         SendReq {
             local_complete_ns: info.local_complete_ns,
             needs_drain: wire > self.tp.net().eager_threshold,
+            route,
         }
     }
 
     /// The (k,t)-chopping send (paper Algorithm 1 + §IV "Putting things
     /// together").
-    fn send_chopped(&mut self, to: usize, tag: u64, data: &[u8]) -> SendReq {
+    fn send_chopped(&mut self, to: usize, tag: u64, data: &[u8], route: Route) -> SendReq {
         let m = data.len();
         let t = select_t_threads(&self.profile, m, self.t0);
         let k = select_k_constrained(m, self.outstanding_sends);
@@ -397,6 +471,7 @@ impl Rank {
         SendReq {
             local_complete_ns: local_complete,
             needs_drain: max_wire > self.tp.net().eager_threshold,
+            route,
         }
     }
 
@@ -419,11 +494,21 @@ impl Rank {
         let header = Header::decode(&hmsg.body)?;
         let out = match header.opcode {
             Opcode::Plain => {
+                // Downgrade protection: once the AES keys exist, the
+                // encrypted modes never send plaintext across nodes — an
+                // inter-node Plain frame is a forgery trying to bypass
+                // authentication, not a legitimate message. (Intra-node
+                // Plain is the normal trusted-node path, and before key
+                // distribution the bootstrap collectives are Plain.)
+                let downgrade = route == Route::InterNode
+                    && self.keys.is_some()
+                    && matches!(self.mode, SecurityMode::Naive | SecurityMode::CryptMpi);
                 let m = header.msg_len as usize;
-                if hmsg.body.len() != HEADER_LEN + m {
-                    return Err(AuthError);
+                if downgrade || hmsg.body.len() != HEADER_LEN + m {
+                    Err(AuthError)
+                } else {
+                    Ok(hmsg.body[HEADER_LEN..].to_vec())
                 }
-                Ok(hmsg.body[HEADER_LEN..].to_vec())
             }
             Opcode::Direct => self.recv_direct(&header, &hmsg.body),
             Opcode::Chopped => self.recv_chopped(&header, src, tag),
@@ -435,6 +520,13 @@ impl Rank {
         match route {
             Route::InterNode => self.stats.inter_ns += spent,
             Route::IntraNode => self.stats.intra_ns += spent,
+        }
+        if let Some(op) = self.coll_op {
+            let s = self.stats.coll.op_mut(op);
+            match route {
+                Route::InterNode => s.inter_ns += spent,
+                Route::IntraNode => s.intra_ns += spent,
+            }
         }
         if let Ok(data) = &out {
             self.stats.bytes_recv += data.len() as u64;
@@ -554,7 +646,8 @@ impl Rank {
     }
 
     // ---------------------------------------------------------------
-    // Collectives (unencrypted, as in the paper's NAS experiments)
+    // Collectives: plumbing for `coordinator::collectives` (the
+    // topology-aware two-level algorithms) plus the public wrappers.
     // ---------------------------------------------------------------
 
     fn next_coll_tag(&mut self) -> u64 {
@@ -563,148 +656,110 @@ impl Rank {
         t
     }
 
-    fn coll_post(&mut self, to: usize, tag: u64, data: &[u8]) -> u64 {
-        let mut body = Vec::with_capacity(data.len());
-        body.extend_from_slice(data);
-        let info = self.tp.post(self.id, to, tag, 0, body, self.clock.now());
-        info.local_complete_ns
+    /// Open a collective: allocate its base tag, start its wall clock,
+    /// and direct send/receive accounting at its per-op counters.
+    pub(crate) fn begin_coll(&mut self, op: CollOp) -> u64 {
+        self.coll_op = Some(op);
+        self.coll_start_ns = self.clock.now();
+        self.stats.coll.op_mut(op).calls += 1;
+        self.next_coll_tag()
     }
 
-    fn coll_recv(&mut self, from: usize, tag: u64) -> Vec<u8> {
-        let msg = self.tp.recv_match(self.id, Some(from), tag);
-        self.clock.wait_until(msg.arrival_ns);
-        msg.body
+    /// Close the collective opened by [`Rank::begin_coll`]. `coll_ns` is
+    /// an overlapping view: the op's sends/receives were also charged to
+    /// the route buckets (see `mpi::stats`).
+    pub(crate) fn end_coll(&mut self) {
+        self.stats.coll_ns += self.clock.now() - self.coll_start_ns;
+        self.coll_op = None;
     }
 
-    /// Dissemination barrier.
+    /// Collective-internal non-blocking send. Identical to [`Rank::isend`]
+    /// except before key distribution has run (the bootstrap collectives
+    /// of `keydist` itself), where the encrypted modes fall back to the
+    /// plaintext wire path — those payloads are RSA-OAEP protected at the
+    /// application layer (paper §IV).
+    pub(crate) fn coll_isend(&mut self, to: usize, tag: u64, data: &[u8]) -> SendReq {
+        let bootstrap = self.keys.is_none()
+            && matches!(self.mode, SecurityMode::Naive | SecurityMode::CryptMpi);
+        if !bootstrap {
+            return self.isend(to, tag, data);
+        }
+        let start = self.clock.now();
+        let route = self.tp.route(self.id, to);
+        let req = self.send_plain(to, tag, data, route);
+        let spent = self.clock.now() - start;
+        self.account_send(route, data.len() as u64, spent);
+        self.outstanding_sends += 1;
+        req
+    }
+
+    /// Blocking variant of [`Rank::coll_isend`].
+    pub(crate) fn coll_send(&mut self, to: usize, tag: u64, data: &[u8]) {
+        let req = self.coll_isend(to, tag, data);
+        self.wait_send(req);
+    }
+
+    /// Collective-internal receive, surfacing authentication failures so
+    /// the collective can abort cleanly.
+    pub(crate) fn coll_recv(&mut self, from: usize, tag: u64) -> Result<Vec<u8>, AuthError> {
+        self.recv_checked(Some(from), tag)
+    }
+
+    /// Barrier across all ranks (hierarchical: intra-node fan-in, leader
+    /// dissemination, intra-node release).
     pub fn barrier(&mut self) {
-        let n = self.size();
-        let tag = self.next_coll_tag();
-        let start = self.clock.now();
-        let mut round = 1usize;
-        while round < n {
-            let to = (self.id + round) % n;
-            let from = (self.id + n - (round % n)) % n;
-            self.coll_post(to, tag + ((round as u64) << 50), &[1]);
-            let _ = self.coll_recv(from, tag + ((round as u64) << 50));
-            round <<= 1;
-        }
-        self.stats.coll_ns += self.clock.now() - start;
+        collectives::barrier(self).expect("collective decryption failure")
     }
 
-    /// Binomial-tree broadcast from `root`.
+    /// Broadcast from `root` (hierarchical: binomial over per-node
+    /// representatives, then binomial inside each node).
     pub fn bcast(&mut self, root: usize, data: Vec<u8>) -> Vec<u8> {
-        let n = self.size();
-        let tag = self.next_coll_tag();
-        let start = self.clock.now();
-        let vrank = (self.id + n - root) % n; // relative rank
-        let mut buf = if self.id == root { data } else { Vec::new() };
-        // Receive from parent (highest set bit), then forward to children.
-        if vrank != 0 {
-            let parent_v = vrank & (vrank - 1); // clear lowest set bit
-            let parent = (parent_v + root) % n;
-            buf = self.coll_recv(parent, tag);
-        }
-        let mut bit = 1usize;
-        while bit < n {
-            if vrank & (bit - 1) == 0 && vrank & bit == 0 {
-                let child_v = vrank | bit;
-                if child_v < n {
-                    let child = (child_v + root) % n;
-                    self.coll_post(child, tag, &buf);
-                }
-            }
-            bit <<= 1;
-        }
-        self.stats.coll_ns += self.clock.now() - start;
-        buf
+        collectives::bcast(self, root, data).expect("collective decryption failure")
     }
 
-    /// Gather byte blobs at `root` (linear, like small-cluster MPI).
+    /// Gather byte blobs at `root`; `Some(all)` there, `None` elsewhere.
     pub fn gather(&mut self, root: usize, data: &[u8]) -> Option<Vec<Vec<u8>>> {
-        let n = self.size();
-        let tag = self.next_coll_tag();
-        let start = self.clock.now();
-        let out = if self.id == root {
-            let mut all: Vec<Vec<u8>> = vec![Vec::new(); n];
-            all[root] = data.to_vec();
-            for r in 0..n {
-                if r != root {
-                    all[r] = self.coll_recv(r, tag);
-                }
-            }
-            Some(all)
-        } else {
-            self.coll_post(root, tag, data);
-            None
-        };
-        self.stats.coll_ns += self.clock.now() - start;
-        out
+        collectives::gather(self, root, data).expect("collective decryption failure")
     }
 
     /// Scatter byte blobs from `root`; returns this rank's part.
     pub fn scatter(&mut self, root: usize, parts: Option<Vec<Vec<u8>>>) -> Vec<u8> {
-        let n = self.size();
-        let tag = self.next_coll_tag();
-        let start = self.clock.now();
-        let out = if self.id == root {
-            let parts = parts.expect("root must provide parts");
-            assert_eq!(parts.len(), n);
-            for (r, p) in parts.iter().enumerate() {
-                if r != root {
-                    self.coll_post(r, tag, p);
-                }
-            }
-            parts[root].clone()
-        } else {
-            self.coll_recv(root, tag)
-        };
-        self.stats.coll_ns += self.clock.now() - start;
-        out
+        collectives::scatter(self, root, parts).expect("collective decryption failure")
     }
 
-    /// All-reduce (sum) of an f64 vector: binomial reduce to 0 + broadcast.
+    /// Sum-reduction of an f64 vector at `root`; `Some(total)` there.
+    pub fn reduce_sum(&mut self, root: usize, data: &[f64]) -> Option<Vec<f64>> {
+        collectives::reduce_sum(self, root, data).expect("collective decryption failure")
+    }
+
+    /// All-reduce (sum) of an f64 vector (hierarchical: intra-node reduce,
+    /// leader allreduce — Rabenseifner for large vectors — intra-node
+    /// broadcast).
     pub fn allreduce_sum(&mut self, data: &[f64]) -> Vec<f64> {
-        let n = self.size();
-        let tag = self.next_coll_tag();
-        let start = self.clock.now();
-        let mut acc = data.to_vec();
-        // Binomial reduction to rank 0.
-        let mut bit = 1usize;
-        while bit < n {
-            if self.id & (bit - 1) == 0 {
-                if self.id & bit != 0 {
-                    let dst = self.id & !bit;
-                    self.coll_post(dst, tag + ((bit as u64) << 50), &f64s_to_bytes(&acc));
-                    break;
-                } else if self.id | bit < n {
-                    let src = self.id | bit;
-                    let other = bytes_to_f64s(&self.coll_recv(src, tag + ((bit as u64) << 50)));
-                    for (a, b) in acc.iter_mut().zip(other.iter()) {
-                        *a += b;
-                    }
-                }
-            }
-            bit <<= 1;
-        }
-        self.stats.coll_ns += self.clock.now() - start;
-        // Broadcast the result.
-        let bytes = self.bcast(0, f64s_to_bytes(&acc));
-        bytes_to_f64s(&bytes)
+        collectives::allreduce_sum(self, data).expect("collective decryption failure")
+    }
+
+    /// Allgather of equal-size byte blocks, concatenated in rank order
+    /// (hierarchical: ring over node leaders moving node super-blocks).
+    pub fn allgather(&mut self, mine: &[u8]) -> Vec<u8> {
+        collectives::allgather(self, mine).expect("collective decryption failure")
+    }
+
+    /// [`Rank::allgather`] over f64 vectors (the NAS CG matvec shape).
+    pub fn allgather_f64(&mut self, mine: &[f64]) -> Vec<f64> {
+        collectives::allgather_f64(self, mine).expect("collective decryption failure")
+    }
+
+    /// All-to-all of equal-size blocks: `blocks[d]` goes to rank `d`;
+    /// returns `out[s]` = the block rank `s` sent here.
+    pub fn alltoall(&mut self, blocks: Vec<Vec<u8>>) -> Vec<Vec<u8>> {
+        collectives::alltoall(self, blocks).expect("collective decryption failure")
     }
 
     /// Finish: return (elapsed virtual ns, stats).
     pub(crate) fn finish(self) -> (u64, CommStats) {
         (self.clock.now(), self.stats)
     }
-}
-
-fn f64s_to_bytes(v: &[f64]) -> Vec<u8> {
-    v.iter().flat_map(|x| x.to_le_bytes()).collect()
-}
-
-fn bytes_to_f64s(b: &[u8]) -> Vec<f64> {
-    b.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect()
 }
 
 #[cfg(test)]

@@ -8,5 +8,5 @@
 pub mod stats;
 pub mod transport;
 
-pub use stats::{ClusterReport, CommStats, RankReport};
+pub use stats::{ClusterReport, CollOp, CollOpStats, CollStats, CommStats, RankReport, COLL_OPS};
 pub use transport::{PostInfo, Route, Transport, WireMsg};

@@ -1,15 +1,136 @@
 //! Per-rank instrumentation: the paper's Table III reports average
 //! inter-node communication time (T_i), total communication time (T_c) and
 //! total execution time (T_e); these counters produce them.
+//!
+//! Since the collectives subsystem ([`crate::coordinator::collectives`])
+//! routes every collective leg through the same send/receive machinery as
+//! point-to-point traffic, all communication time lands in
+//! [`CommStats::inter_ns`] / [`CommStats::intra_ns`] split by route, and
+//! `T_c = inter + intra` covers collectives too. [`CommStats::coll_ns`]
+//! is an *overlapping* view — wall time spent inside collective calls —
+//! and [`CollStats`] breaks that down per operation with byte and time
+//! counters split intra-/inter-node, which is what the `collectives`
+//! bench runner uses to prove the hierarchical algorithms move fewer
+//! encrypted bytes across the node boundary.
+
+/// The collective operations instrumented by [`CollStats`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CollOp {
+    Barrier,
+    Bcast,
+    Reduce,
+    Allreduce,
+    Allgather,
+    Alltoall,
+    Gather,
+    Scatter,
+}
+
+/// All instrumented collective operations, in display order.
+pub const COLL_OPS: [CollOp; 8] = [
+    CollOp::Barrier,
+    CollOp::Bcast,
+    CollOp::Reduce,
+    CollOp::Allreduce,
+    CollOp::Allgather,
+    CollOp::Alltoall,
+    CollOp::Gather,
+    CollOp::Scatter,
+];
+
+impl CollOp {
+    pub fn name(self) -> &'static str {
+        match self {
+            CollOp::Barrier => "barrier",
+            CollOp::Bcast => "bcast",
+            CollOp::Reduce => "reduce",
+            CollOp::Allreduce => "allreduce",
+            CollOp::Allgather => "allgather",
+            CollOp::Alltoall => "alltoall",
+            CollOp::Gather => "gather",
+            CollOp::Scatter => "scatter",
+        }
+    }
+
+    fn index(self) -> usize {
+        self as usize
+    }
+}
+
+/// Counters for one collective operation on one rank. Bytes are
+/// application payload sent by this rank inside the collective (wire
+/// framing and tags excluded), split by whether the peer is on the same
+/// node; time is virtual ns spent in the collective's sends/receives,
+/// split the same way.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct CollOpStats {
+    /// Number of times this collective was invoked.
+    pub calls: u64,
+    /// Payload bytes sent to peers on the same node (plaintext path).
+    pub intra_bytes: u64,
+    /// Payload bytes sent to peers on other nodes (encrypted under the
+    /// Naive / CryptMPI modes — the traffic the two-level decomposition
+    /// minimizes).
+    pub inter_bytes: u64,
+    /// Time in sends/receives whose peer is on the same node.
+    pub intra_ns: u64,
+    /// Time in sends/receives whose peer is on another node.
+    pub inter_ns: u64,
+}
+
+impl CollOpStats {
+    fn merge(&mut self, other: &CollOpStats) {
+        self.calls += other.calls;
+        self.intra_bytes += other.intra_bytes;
+        self.inter_bytes += other.inter_bytes;
+        self.intra_ns += other.intra_ns;
+        self.inter_ns += other.inter_ns;
+    }
+}
+
+/// Per-operation collective counters (one [`CollOpStats`] per [`CollOp`]).
+#[derive(Debug, Default, Clone)]
+pub struct CollStats {
+    ops: [CollOpStats; 8],
+}
+
+impl CollStats {
+    pub fn op(&self, op: CollOp) -> &CollOpStats {
+        &self.ops[op.index()]
+    }
+
+    pub fn op_mut(&mut self, op: CollOp) -> &mut CollOpStats {
+        &mut self.ops[op.index()]
+    }
+
+    /// Inter-node payload bytes summed over every collective operation.
+    pub fn total_inter_bytes(&self) -> u64 {
+        self.ops.iter().map(|s| s.inter_bytes).sum()
+    }
+
+    /// Intra-node payload bytes summed over every collective operation.
+    pub fn total_intra_bytes(&self) -> u64 {
+        self.ops.iter().map(|s| s.intra_bytes).sum()
+    }
+
+    pub fn merge(&mut self, other: &CollStats) {
+        for (a, b) in self.ops.iter_mut().zip(other.ops.iter()) {
+            a.merge(b);
+        }
+    }
+}
 
 /// Communication-time accounting for one rank (virtual nanoseconds).
 #[derive(Debug, Default, Clone)]
 pub struct CommStats {
-    /// Time in communication ops whose peer is on another node.
+    /// Time in communication ops whose peer is on another node
+    /// (point-to-point and collective legs alike).
     pub inter_ns: u64,
     /// Time in communication ops whose peer is on the same node.
     pub intra_ns: u64,
-    /// Time in collectives.
+    /// Wall time inside collective calls. Overlaps `inter_ns`/`intra_ns`
+    /// (a collective's sends/receives are charged there too), so it is a
+    /// *view*, not a third disjoint bucket.
     pub coll_ns: u64,
     /// Cryptographic cost charged (subset of inter_ns for encrypted modes).
     pub crypto_ns: u64,
@@ -19,12 +140,15 @@ pub struct CommStats {
     /// Messages sent / received.
     pub msgs_sent: u64,
     pub msgs_recv: u64,
+    /// Per-collective-operation counters.
+    pub coll: CollStats,
 }
 
 impl CommStats {
-    /// Total communication time T_c.
+    /// Total communication time T_c. Collective traffic rides the same
+    /// send/receive path as point-to-point, so the route buckets cover it.
     pub fn total_comm_ns(&self) -> u64 {
-        self.inter_ns + self.intra_ns + self.coll_ns
+        self.inter_ns + self.intra_ns
     }
 
     pub fn merge(&mut self, other: &CommStats) {
@@ -36,6 +160,7 @@ impl CommStats {
         self.bytes_recv += other.bytes_recv;
         self.msgs_sent += other.msgs_sent;
         self.msgs_recv += other.msgs_recv;
+        self.coll.merge(&other.coll);
     }
 }
 
@@ -75,6 +200,16 @@ impl ClusterReport {
         self.per_rank.iter().map(|r| r.elapsed_ns).max().unwrap_or(0) as f64 / 1e9
     }
 
+    /// Collective counters summed over every rank (the cluster-wide bytes
+    /// a collective algorithm moved per route).
+    pub fn coll_totals(&self) -> CollStats {
+        let mut total = CollStats::default();
+        for r in &self.per_rank {
+            total.merge(&r.stats.coll);
+        }
+        total
+    }
+
     fn avg(&self, f: impl Fn(&RankReport) -> u64) -> f64 {
         if self.per_rank.is_empty() {
             return 0.0;
@@ -90,9 +225,11 @@ mod tests {
 
     #[test]
     fn totals_and_averages() {
-        let mut a = CommStats::default();
-        a.inter_ns = 1_000_000_000;
-        a.intra_ns = 500_000_000;
+        let a = CommStats {
+            inter_ns: 1_000_000_000,
+            intra_ns: 500_000_000,
+            ..Default::default()
+        };
         assert_eq!(a.total_comm_ns(), 1_500_000_000);
 
         let rep = ClusterReport {
@@ -112,6 +249,15 @@ mod tests {
     }
 
     #[test]
+    fn coll_ns_overlaps_route_buckets() {
+        // A collective's send time is charged to the route bucket AND to
+        // coll_ns (the same ns seen through the collective view); T_c must
+        // not double-count it.
+        let s = CommStats { inter_ns: 100, coll_ns: 100, ..Default::default() };
+        assert_eq!(s.total_comm_ns(), 100);
+    }
+
+    #[test]
     fn merge_accumulates() {
         let mut a = CommStats { inter_ns: 5, bytes_sent: 10, ..Default::default() };
         let b = CommStats { inter_ns: 7, msgs_recv: 2, ..Default::default() };
@@ -119,5 +265,42 @@ mod tests {
         assert_eq!(a.inter_ns, 12);
         assert_eq!(a.bytes_sent, 10);
         assert_eq!(a.msgs_recv, 2);
+    }
+
+    #[test]
+    fn coll_stats_indexing_and_merge() {
+        let mut c = CollStats::default();
+        c.op_mut(CollOp::Allreduce).inter_bytes = 64;
+        c.op_mut(CollOp::Allreduce).calls = 1;
+        c.op_mut(CollOp::Allgather).intra_bytes = 32;
+        assert_eq!(c.op(CollOp::Allreduce).inter_bytes, 64);
+        assert_eq!(c.op(CollOp::Allgather).intra_bytes, 32);
+        assert_eq!(c.total_inter_bytes(), 64);
+        assert_eq!(c.total_intra_bytes(), 32);
+        let mut d = CollStats::default();
+        d.op_mut(CollOp::Allreduce).inter_bytes = 6;
+        d.merge(&c);
+        assert_eq!(d.op(CollOp::Allreduce).inter_bytes, 70);
+        assert_eq!(d.op(CollOp::Allreduce).calls, 1);
+        // Every op has a distinct slot and a name.
+        for (i, op) in COLL_OPS.iter().enumerate() {
+            assert_eq!(op.index(), i);
+            assert!(!op.name().is_empty());
+        }
+    }
+
+    #[test]
+    fn cluster_coll_totals_sum_ranks() {
+        let mut s0 = CommStats::default();
+        s0.coll.op_mut(CollOp::Allgather).inter_bytes = 100;
+        let mut s1 = CommStats::default();
+        s1.coll.op_mut(CollOp::Allgather).inter_bytes = 11;
+        let rep = ClusterReport {
+            per_rank: vec![
+                RankReport { rank: 0, elapsed_ns: 1, stats: s0 },
+                RankReport { rank: 1, elapsed_ns: 1, stats: s1 },
+            ],
+        };
+        assert_eq!(rep.coll_totals().op(CollOp::Allgather).inter_bytes, 111);
     }
 }

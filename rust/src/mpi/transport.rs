@@ -3,6 +3,21 @@
 //!
 //! Real blocking (condvars) drives program order; virtual timestamps carry
 //! the performance model. Every payload byte is really moved.
+//!
+//! Each rank owns one mailbox; [`Transport::post`] computes the
+//! message's arrival time from the route — intra-node at the shared-memory
+//! rate, inter-node through the per-node NIC [`crate::net::Channel`]s
+//! (which is where concurrent flows contend for bandwidth) and, in
+//! IPSec-simulation mode, through the per-node serial kernel-crypto
+//! context — then deposits it immediately. [`Transport::recv_match`]
+//! blocks (in real time) until a message matching `(source, tag)` exists;
+//! among matches, delivery is FIFO. Sequence numbers distinguish the
+//! header (`seq 0`) from the ciphertext chunks (`seq 1..=k`) of one
+//! chopped transfer.
+//!
+//! Everything above this layer — security modes, chopping, collectives —
+//! lives in [`crate::coordinator`]; everything below — link rates,
+//! topology, contention — in [`crate::net`].
 
 use crate::net::{NetConfig, NodeNics, Topology};
 use std::collections::VecDeque;

@@ -124,6 +124,19 @@ impl Topology {
         let r = self.ranks.min(self.ranks_per_node) as u32;
         (total_hyperthreads / r).max(1)
     }
+
+    /// The ranks living on `node` (block mapping; the last node may hold
+    /// fewer than `ranks_per_node`).
+    pub fn node_ranks(&self, node: usize) -> std::ops::Range<usize> {
+        let start = node * self.ranks_per_node;
+        start..(start + self.ranks_per_node).min(self.ranks)
+    }
+
+    /// The node-leader rank of `node`: its lowest rank. The hierarchical
+    /// collectives funnel all of a node's inter-node traffic through it.
+    pub fn leader_of(&self, node: usize) -> usize {
+        node * self.ranks_per_node
+    }
 }
 
 #[cfg(test)]
@@ -167,6 +180,21 @@ mod tests {
         assert!(!t.same_node(1, 2));
         // 32 hyperthreads, 2 ranks/node → T0 = 16.
         assert_eq!(t.threads_per_rank(32), 16);
+    }
+
+    #[test]
+    fn node_ranks_and_leaders() {
+        let t = Topology::new(8, 3); // nodes {0,1,2}, {3,4,5}, {6,7}
+        assert_eq!(t.nodes(), 3);
+        assert_eq!(t.node_ranks(0), 0..3);
+        assert_eq!(t.node_ranks(1), 3..6);
+        assert_eq!(t.node_ranks(2), 6..8); // ragged last node
+        assert_eq!(t.leader_of(0), 0);
+        assert_eq!(t.leader_of(2), 6);
+        // Every rank is in exactly its node's range.
+        for r in 0..8 {
+            assert!(t.node_ranks(t.node_of(r)).contains(&r));
+        }
     }
 
     #[test]

@@ -223,6 +223,79 @@ fn prop_collectives_match_reference() {
     }
 }
 
+/// Property: the collectives subsystem agrees with a scalar reference
+/// reduction over every `SecurityMode` × node counts {1,2,3,4} ×
+/// non-power-of-two rank counts (ragged last nodes included), under the
+/// default (Auto) policy that picks flat or two-level per topology.
+/// Integer-valued payloads make f64 sums order-exact, so flat and
+/// hierarchical summation orders must agree bit-for-bit.
+#[test]
+fn prop_collectives_modes_and_topologies_match_reference() {
+    // (ranks, ranks_per_node) → 1, 2, 3, 4 nodes; 5 and 7 ranks are
+    // non-powers-of-two, and (5,3)/(7,3)/(7,2) leave a ragged last node.
+    let topos = [(5usize, 5usize), (5, 3), (7, 3), (7, 2)];
+    for mode in [
+        SecurityMode::Unencrypted,
+        SecurityMode::Naive,
+        SecurityMode::CryptMpi,
+        SecurityMode::IpsecSim,
+    ] {
+        for (ranks, rpn) in topos {
+            let cfg = ClusterConfig::new(ranks, rpn, SystemProfile::noleland(), mode);
+            let vals: Vec<f64> = (0..ranks).map(|r| (3 * r + 1) as f64).collect();
+            let expect: f64 = vals.iter().sum();
+            let vals2 = vals.clone();
+            let (outs, rep) = run_cluster(&cfg, move |rank| {
+                let me = rank.id();
+                let n = rank.size();
+                let got = rank.allreduce_sum(&[vals2[me], 1.0]);
+                assert_eq!(got, vec![expect, n as f64], "allreduce {ranks}/{rpn}");
+                let r = rank.reduce_sum(0, &[vals2[me]]);
+                if me == 0 {
+                    assert_eq!(r.unwrap(), vec![expect], "reduce {ranks}/{rpn}");
+                } else {
+                    assert!(r.is_none());
+                }
+                let full = rank.allgather(&[me as u8, 0xAB]);
+                let want: Vec<u8> = (0..n).flat_map(|r| vec![r as u8, 0xAB]).collect();
+                assert_eq!(full, want, "allgather {ranks}/{rpn}");
+                rank.barrier();
+                true
+            });
+            assert!(outs.iter().all(|&x| x), "mode {mode:?} ranks {ranks} rpn {rpn}");
+            // The counters saw each collective once per rank.
+            let totals = rep.coll_totals();
+            assert_eq!(totals.op(cryptmpi::mpi::CollOp::Allreduce).calls, ranks as u64);
+            assert_eq!(totals.op(cryptmpi::mpi::CollOp::Barrier).calls, ranks as u64);
+        }
+    }
+}
+
+/// Property: multi-node hierarchical collectives whose leader exchanges
+/// are large enough for the (k,t)-chopped zero-copy wire path still
+/// produce exact results under CryptMPI.
+#[test]
+fn prop_hierarchical_chopped_leader_exchange_exact() {
+    let elems = 16 * 1024; // 128 KB vectors → leader legs are chopped
+    let cfg = ClusterConfig::new(6, 2, SystemProfile::noleland(), SecurityMode::CryptMpi);
+    let (outs, rep) = run_cluster(&cfg, move |rank| {
+        let me = rank.id();
+        let v = vec![(me + 1) as f64; elems];
+        let sum = rank.allreduce_sum(&v);
+        let expect: f64 = (1..=6).map(|x| x as f64).sum();
+        assert!(sum.iter().all(|&x| x == expect));
+        let mine = vec![me as u8; elems];
+        let full = rank.allgather(&mine);
+        assert_eq!(full.len(), 6 * elems);
+        assert!((0..6).all(|r| full[r * elems..(r + 1) * elems].iter().all(|&b| b == r as u8)));
+        true
+    });
+    assert!(outs.iter().all(|&x| x));
+    // Real crypto ran on the inter-node legs.
+    let crypto_ns: u64 = rep.per_rank.iter().map(|r| r.stats.crypto_ns).sum();
+    assert!(crypto_ns > 0, "leader exchanges must be encrypted");
+}
+
 /// Property: virtual elapsed time is stable across repeated runs of the
 /// same workload. Gap-filling reservation removes most scheduling
 /// sensitivity, but simultaneous-ready contenders are still served in real
