@@ -51,9 +51,15 @@ pub fn run_multipair(
         } else {
             let peer = me - pairs;
             for _ in 0..loops {
-                let reqs: Vec<_> = (0..WINDOW).map(|w| rank.irecv(peer, w as u64)).collect();
-                let msgs = rank.waitall_recv(reqs);
-                debug_assert!(msgs.iter().all(|m| m.len() == msg_bytes));
+                // Pre-post the whole window, then drain in completion
+                // order — the engine binds each message as it lands.
+                let mut reqs: Vec<_> =
+                    (0..WINDOW).map(|w| rank.irecv(peer, w as u64)).collect();
+                while !reqs.is_empty() {
+                    let (_, msg) = rank.waitany_recv(&mut reqs);
+                    debug_assert_eq!(msg.len(), msg_bytes);
+                    let _ = msg;
+                }
                 rank.send(peer, 999, &[1]);
             }
         }

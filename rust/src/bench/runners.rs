@@ -10,17 +10,21 @@
 //! [`run_experiment`] — `cargo run --release -- bench --exp <name>` — or
 //! all at once via [`ALL_EXPERIMENTS`].
 
+use crate::apps::multipair::WINDOW;
 use crate::apps::{
     calibrate_compute, run_multipair, run_nas, run_pingpong, run_stencil, NasKernel, NasScale,
     StencilDim,
 };
 use crate::bench::{f, size_label, Table};
 use crate::coordinator::{run_cluster, ClusterConfig, CollPolicy, SecurityMode};
-use crate::mpi::CollOp;
-use crate::model::{fit_max_rate, linear_lsq, r_squared, ChoppingModel, EncModel, EncSample,
-    HockneyParams, MaxRateParams};
-use crate::net::SystemProfile;
+use crate::mpi::{CollOp, MatchStats, Transport};
+use crate::model::{
+    fit_max_rate, linear_lsq, r_squared, ChoppingModel, EncModel, EncSample, HockneyParams,
+    MaxRateParams,
+};
+use crate::net::{SystemProfile, Topology};
 use crate::vtime::calib;
+use std::collections::VecDeque;
 
 /// Message-size sweep used by the ping-pong figures (4 KB – 16 MB).
 fn pingpong_sizes() -> Vec<usize> {
@@ -499,6 +503,211 @@ pub fn collectives() -> Table {
     t
 }
 
+/// The pre-engine transport mailbox — one deque per rank, linear scan per
+/// match — kept as the reference the `matching` experiment measures the
+/// hash-bucket engine against.
+#[derive(Default)]
+struct FlatMailbox {
+    q: VecDeque<(usize, u64)>,
+    cmp: u64,
+}
+
+impl FlatMailbox {
+    fn deposit(&mut self, src: usize, tag: u64) {
+        self.q.push_back((src, tag));
+    }
+
+    fn take(&mut self, src: Option<usize>, tag: u64) -> bool {
+        let mut pos = None;
+        for (i, &(s, t)) in self.q.iter().enumerate() {
+            self.cmp += 1;
+            if t == tag && src.map_or(true, |x| s == x) {
+                pos = Some(i);
+                break;
+            }
+        }
+        match pos {
+            Some(i) => {
+                self.q.remove(i);
+                true
+            }
+            None => false,
+        }
+    }
+}
+
+/// One `matching` sweep point: `backlog` pending messages from distinct
+/// `(src, tag)` pairs, matched in reverse deposit order (the worst case
+/// for a linear scan, the common case under multipair/alltoall load).
+/// Returns per-message (flat ns, engine ns, flat comparisons, engine scan
+/// steps); ns figures include the deposit.
+fn matching_point(backlog: usize, wildcard: bool, reps: usize) -> (f64, f64, f64, f64) {
+    use std::time::Instant;
+    let p = SystemProfile::noleland();
+    // All ranks on one node: deposit timing is pure arithmetic, so the
+    // measurement isolates matching cost.
+    let tp = Transport::new(Topology::new(backlog + 1, backlog + 1), p.net.clone(), None);
+    let n = (reps * backlog) as f64;
+
+    let mut flat = FlatMailbox::default();
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        for i in 1..=backlog {
+            flat.deposit(i, i as u64);
+        }
+        for i in (1..=backlog).rev() {
+            assert!(flat.take((!wildcard).then_some(i), i as u64));
+        }
+    }
+    let flat_ns = t0.elapsed().as_nanos() as f64 / n;
+    let flat_cmp = flat.cmp as f64 / n;
+
+    let base = tp.match_stats(0);
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        for i in 1..=backlog {
+            tp.post(i, 0, i as u64, 0, Vec::new(), 0);
+        }
+        for i in (1..=backlog).rev() {
+            assert!(tp.try_match(0, (!wildcard).then_some(i), i as u64).is_some());
+        }
+    }
+    let engine_ns = t0.elapsed().as_nanos() as f64 / n;
+    let s = tp.match_stats(0);
+    let engine_steps = if wildcard {
+        (s.wildcard_scan_steps - base.wildcard_scan_steps) as f64 / n
+    } else {
+        1.0 // an exact match is a single bucket pop
+    };
+    (flat_ns, engine_ns, flat_cmp, engine_steps)
+}
+
+/// Cluster-wide matching counters for the 64-pair OSU window workload —
+/// the backlog shape the engine was built for: every receiver pre-posts a
+/// full 64-message window, senders stream concurrently.
+fn osu_backlog_stats(pairs: usize, msg_bytes: usize) -> MatchStats {
+    let p = SystemProfile::noleland();
+    let cfg = ClusterConfig::new(2 * pairs, pairs, p, SecurityMode::CryptMpi);
+    let (_, rep) = run_cluster(&cfg, move |rank| {
+        let pairs = rank.size() / 2;
+        let me = rank.id();
+        if me < pairs {
+            let peer = me + pairs;
+            let payload = vec![me as u8; msg_bytes];
+            let _ = rank.recv(peer, 998); // receiver's window is posted
+            let reqs: Vec<_> =
+                (0..WINDOW).map(|w| rank.isend(peer, w as u64, &payload)).collect();
+            rank.waitall_send(reqs);
+            let _ = rank.recv(peer, 999);
+        } else {
+            let peer = me - pairs;
+            // Pre-post the full window, signal ready, drain in completion
+            // order: every window message binds to a posted receive.
+            let mut reqs: Vec<_> = (0..WINDOW).map(|w| rank.irecv(peer, w as u64)).collect();
+            rank.send(peer, 998, &[1]);
+            while !reqs.is_empty() {
+                let (_, msg) = rank.waitany_recv(&mut reqs);
+                assert_eq!(msg.len(), msg_bytes);
+            }
+            assert_eq!(rank.queue_depth(), 0, "engine must drain");
+            rank.send(peer, 999, &[1]);
+        }
+    });
+    let mut total = MatchStats::default();
+    for r in &rep.per_rank {
+        total.merge(&r.stats.matching);
+    }
+    total
+}
+
+/// This repo's matching-engine report: per-message match cost of the old
+/// flat mailbox (linear scan) vs the hash-bucket engine as the backlog
+/// grows, for exact and wildcard receives, plus the engine counters from
+/// a real 64-pair OSU window run. The acceptance shape is asserted, so a
+/// matching regression fails this runner — not just the charts.
+pub fn matching() -> Table {
+    let mut t = Table::new(
+        "matching",
+        "Flat O(n) mailbox vs hash-bucket matching engine, backlog sweep",
+        &[
+            "scenario",
+            "backlog",
+            "flat_ns_per_msg",
+            "engine_ns_per_msg",
+            "flat_cmp_per_match",
+            "engine_steps_per_match",
+        ],
+    );
+    for wildcard in [false, true] {
+        for backlog in [1usize, 4, 16, 64, 256] {
+            let reps = (4096 / backlog).max(8);
+            let (flat_ns, engine_ns, flat_cmp, engine_steps) =
+                matching_point(backlog, wildcard, reps);
+            t.row(vec![
+                if wildcard { "wildcard" } else { "exact" }.into(),
+                backlog.to_string(),
+                f(flat_ns, 1),
+                f(engine_ns, 1),
+                f(flat_cmp, 2),
+                f(engine_steps, 2),
+            ]);
+            // Enforced acceptance: engine per-match work stays flat while
+            // the reference grows with the backlog.
+            assert!(
+                engine_steps <= 2.0,
+                "engine must stay O(1): wildcard={wildcard} backlog={backlog} steps={engine_steps}"
+            );
+            if backlog >= 64 {
+                assert!(
+                    flat_cmp >= backlog as f64 / 4.0,
+                    "flat reference must scan: backlog={backlog} cmp={flat_cmp}"
+                );
+            }
+        }
+    }
+    let osu = osu_backlog_stats(64, 16 * 1024);
+    t.note(format!(
+        "osu-64pair (window {WINDOW}, 16K, cryptmpi): {} deposits, {:.1}% bound to pre-posted receives, max unexpected depth {}, max posted depth {}",
+        osu.deposits,
+        100.0 * osu.preposted_matches as f64 / osu.deposits.max(1) as f64,
+        osu.max_unexpected_depth,
+        osu.max_posted_depth,
+    ));
+    t.note("Acceptance: engine_steps_per_match stays ≤ 2 from backlog 1 to 256 while the flat mailbox scans ~backlog/2 (linear growth, quadratic over a drain).");
+    t
+}
+
+/// CI bench smoke: the OSU multipair shape at reduced sizes across all
+/// four security modes — quick enough for a PR gate, still end-to-end
+/// through the matching engine and the zero-copy wire path.
+pub fn smoke() -> Table {
+    let p = SystemProfile::noleland();
+    let mut t = Table::new(
+        "smoke",
+        "Reduced-size multipair smoke across security modes",
+        &["pairs", "size", "mode", "aggregate_MBps"],
+    );
+    for pairs in [1usize, 4] {
+        for mode in [
+            SecurityMode::Unencrypted,
+            SecurityMode::IpsecSim,
+            SecurityMode::Naive,
+            SecurityMode::CryptMpi,
+        ] {
+            let r = run_multipair(&p, mode, pairs, 64 * 1024, 1);
+            assert!(r.aggregate_mb_s > 0.0, "{mode:?} x{pairs} produced no throughput");
+            t.row(vec![
+                pairs.to_string(),
+                size_label(64 * 1024),
+                mode.name().into(),
+                f(r.aggregate_mb_s, 1),
+            ]);
+        }
+    }
+    t.note("CI gate: any engine or wire-path panic/assert fails the build here, before the full charts run.");
+    t
+}
+
 /// Run one experiment by name.
 pub fn run_experiment(name: &str) -> Option<Table> {
     Some(match name {
@@ -517,14 +726,16 @@ pub fn run_experiment(name: &str) -> Option<Table> {
         "table3" => table3(),
         "zerocopy" => zerocopy(),
         "collectives" => collectives(),
+        "matching" => matching(),
+        "smoke" => smoke(),
         _ => return None,
     })
 }
 
 /// All experiment names: paper order, then the repo's own perf reports.
-pub const ALL_EXPERIMENTS: [&str; 15] = [
+pub const ALL_EXPERIMENTS: [&str; 17] = [
     "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "table1",
-    "table2", "table3", "zerocopy", "collectives",
+    "table2", "table3", "zerocopy", "collectives", "matching", "smoke",
 ];
 
 #[cfg(test)]
@@ -539,11 +750,47 @@ mod tests {
                 name.starts_with("fig")
                     || name.starts_with("table")
                     || name == "zerocopy"
-                    || name == "collectives",
+                    || name == "collectives"
+                    || name == "matching"
+                    || name == "smoke",
                 "unknown experiment family: {name}"
             );
         }
         assert!(run_experiment("nonexistent").is_none());
+    }
+
+    /// The `matching` runner's acceptance shape at reduced scale: engine
+    /// per-match work stays flat while the flat-mailbox reference grows
+    /// linearly with the backlog (64× backlog → ≥16× comparisons).
+    #[test]
+    fn matching_engine_flat_vs_linear_shape() {
+        let (_, _, fcmp4, esteps4) = matching_point(4, true, 8);
+        let (_, _, fcmp256, esteps256) = matching_point(256, true, 4);
+        assert!(
+            esteps4 <= 2.0 && esteps256 <= 2.0,
+            "engine wildcard scan must stay O(1): {esteps4} vs {esteps256}"
+        );
+        assert!(
+            fcmp256 >= fcmp4 * 16.0,
+            "flat scan must grow linearly: {fcmp4} -> {fcmp256}"
+        );
+        let (_, _, flat_exact, engine_exact) = matching_point(64, false, 8);
+        assert!(flat_exact >= 16.0, "flat exact matching scans the backlog: {flat_exact}");
+        assert!(engine_exact <= 1.0);
+    }
+
+    /// The OSU backlog workload drains through pre-posted receives: most
+    /// deposits on the receiver side bind to a posted request, and the
+    /// posted high-water mark reflects the full pre-posted window.
+    #[test]
+    fn osu_backlog_mostly_preposted() {
+        let s = osu_backlog_stats(4, 4 * 1024);
+        assert!(s.deposits > 0);
+        assert!(
+            s.preposted_matches * 2 > s.deposits,
+            "most deposits should bind to pre-posted receives: {s:?}"
+        );
+        assert!(s.max_posted_depth as usize >= WINDOW, "window fully pre-posted: {s:?}");
     }
 
     /// The `collectives` runner's acceptance shape, at reduced scale: the

@@ -44,7 +44,7 @@
 //! path; their payloads are RSA-OAEP protected at the application layer
 //! (paper §IV).
 
-use crate::coordinator::rank::Rank;
+use crate::coordinator::rank::{Rank, RecvReq};
 use crate::crypto::AuthError;
 use crate::mpi::CollOp;
 use crate::net::Topology;
@@ -237,8 +237,11 @@ fn group_barrier(rank: &mut Rank, group: &[usize], tag: u64) -> Result<(), AuthE
     while dist < n {
         let to = group[(me_idx + dist) % n];
         let from = group[(me_idx + n - dist) % n];
+        // Pre-post the round's receive so the peer's token binds to it
+        // the moment it lands (the engine's pre-posted fast path).
+        let rreq = rank.irecv(from, tag + round(r));
         rank.coll_send(to, tag + round(r), &[1]);
-        rank.coll_recv(from, tag + round(r))?;
+        rank.wait_recv_checked(rreq)?;
         dist <<= 1;
         r += 1;
     }
@@ -268,8 +271,9 @@ fn rabenseifner_allreduce(
         let mid = lo + (hi - lo) / 2;
         let (keep, give) =
             if me_idx & dist == 0 { ((lo, mid), (mid, hi)) } else { ((mid, hi), (lo, mid)) };
+        let rreq = rank.irecv(partner, tag + round(r));
         let sreq = rank.coll_isend(partner, tag + round(r), &f64s_to_bytes(&acc[give.0..give.1]));
-        let theirs = bytes_to_f64s(&rank.coll_recv(partner, tag + round(r))?);
+        let theirs = bytes_to_f64s(&rank.wait_recv_checked(rreq)?);
         rank.wait_send(sreq);
         if theirs.len() != keep.1 - keep.0 {
             return Err(AuthError);
@@ -287,8 +291,9 @@ fn rabenseifner_allreduce(
     // fully reduced (by induction over the later rounds) and my partner
     // from round j owns exactly my `give_j` range.
     for (keep, give, partner) in steps.into_iter().rev() {
+        let rreq = rank.irecv(partner, tag + round(r));
         let sreq = rank.coll_isend(partner, tag + round(r), &f64s_to_bytes(&acc[keep.0..keep.1]));
-        let theirs = bytes_to_f64s(&rank.coll_recv(partner, tag + round(r))?);
+        let theirs = bytes_to_f64s(&rank.wait_recv_checked(rreq)?);
         rank.wait_send(sreq);
         if theirs.len() != give.1 - give.0 {
             return Err(AuthError);
@@ -512,8 +517,9 @@ fn flat_ring_allgather(rank: &mut Rank, mine: &[u8], tag: u64) -> Result<Vec<u8>
     let mut current = me; // block index we hold most recently
     for s in 0..p.saturating_sub(1) {
         let stag = tag + round(s as u64);
+        let rreq = rank.irecv(left, stag);
         let sreq = rank.coll_isend(right, stag, &full[current * block..(current + 1) * block]);
-        let data = rank.coll_recv(left, stag)?;
+        let data = rank.wait_recv_checked(rreq)?;
         rank.wait_send(sreq);
         if data.len() != block {
             return Err(AuthError);
@@ -570,8 +576,9 @@ fn hier_allgather(
     for s in 0..nl - 1 {
         let stag = tag + phase(1) + round(s as u64);
         let (clo, chi) = ranges[current];
+        let rreq = rank.irecv(left, stag);
         let sreq = rank.coll_isend(right, stag, &full[clo..chi]);
-        let data = rank.coll_recv(left, stag)?;
+        let data = rank.wait_recv_checked(rreq)?;
         rank.wait_send(sreq);
         let incoming = (current + nl - 1) % nl;
         let (ilo, ihi) = ranges[incoming];
@@ -605,20 +612,24 @@ pub fn alltoall(rank: &mut Rank, blocks: Vec<Vec<u8>>) -> Result<Vec<Vec<u8>>, A
         let me = rank.id();
         let mut out: Vec<Vec<u8>> = vec![Vec::new(); p];
         out[me] = blocks[me].clone();
+        // Pre-post every receive first: peers' blocks bind to them the
+        // moment they land instead of piling into the unexpected queue.
+        let rreqs: Vec<(usize, RecvReq)> = (0..p)
+            .filter(|&peer| peer != me)
+            .map(|peer| (peer, rank.irecv(peer, tag)))
+            .collect();
         let mut reqs = Vec::with_capacity(p.saturating_sub(1));
         for (peer, block) in blocks.iter().enumerate() {
             if peer != me {
                 reqs.push(rank.coll_isend(peer, tag, block));
             }
         }
-        for (peer, slot) in out.iter_mut().enumerate() {
-            if peer != me {
-                let d = rank.coll_recv(peer, tag)?;
-                if d.len() != b {
-                    return Err(AuthError);
-                }
-                *slot = d;
+        for (peer, rreq) in rreqs {
+            let d = rank.wait_recv_checked(rreq)?;
+            if d.len() != b {
+                return Err(AuthError);
             }
+            out[peer] = d;
         }
         for r in reqs {
             rank.wait_send(r);
@@ -687,7 +698,14 @@ fn hier_alltoall(
     let mut out: Vec<Vec<u8>> = vec![Vec::new(); p];
     out[me] = blocks[me].clone();
 
-    // Same-node blocks go rank-to-rank over the intra-node route.
+    // Same-node blocks go rank-to-rank over the intra-node route, with
+    // the receives pre-posted so they bind on arrival.
+    let intra_rreqs: Vec<(usize, RecvReq)> = tl
+        .members
+        .iter()
+        .filter(|&&m| m != me)
+        .map(|&m| (m, rank.irecv(m, tag + phase(3))))
+        .collect();
     let mut intra_reqs = Vec::with_capacity(s.saturating_sub(1));
     for &m in &tl.members {
         if m != me {
@@ -723,15 +741,20 @@ fn hier_alltoall(
                 agg
             })
             .collect();
+        // Pre-post peers' aggregates (rnodes order — matched by source),
+        // then send ours: each inbound aggregate binds on arrival.
+        let agg_rreqs: Vec<RecvReq> = rnodes
+            .iter()
+            .map(|&nd| rank.irecv(topo.leader_of(nd), tag + phase(1)))
+            .collect();
         let mut agg_reqs = Vec::with_capacity(rnodes.len());
         for (k, &nd) in rnodes.iter().enumerate() {
             agg_reqs.push(rank.coll_isend(topo.leader_of(nd), tag + phase(1), &aggs[k]));
         }
-        // Receive peers' aggregates (rnodes order — matched by source).
         let mut incoming: Vec<(usize, Vec<u8>)> = Vec::with_capacity(rnodes.len());
-        for &nd in &rnodes {
+        for (&nd, rreq) in rnodes.iter().zip(agg_rreqs) {
             let sn = topo.node_ranks(nd).len();
-            let agg = rank.coll_recv(topo.leader_of(nd), tag + phase(1))?;
+            let agg = rank.wait_recv_checked(rreq)?;
             if agg.len() != sn * s * b {
                 return Err(AuthError);
             }
@@ -761,14 +784,12 @@ fn hier_alltoall(
     }
 
     // Finish the intra-node exchange.
-    for &m in &tl.members {
-        if m != me {
-            let d = rank.coll_recv(m, tag + phase(3))?;
-            if d.len() != b {
-                return Err(AuthError);
-            }
-            out[m] = d;
+    for (m, rreq) in intra_rreqs {
+        let d = rank.wait_recv_checked(rreq)?;
+        if d.len() != b {
+            return Err(AuthError);
         }
+        out[m] = d;
     }
     for r in intra_reqs {
         rank.wait_send(r);

@@ -21,7 +21,7 @@ pub mod rank;
 pub use bufpool::{BufferPool, PoolStats};
 pub use cluster::{run_cluster, ClusterConfig, KeyDistMode};
 pub use collectives::CollPolicy;
-pub use rank::{Rank, RecvReq, SendReq};
+pub use rank::{ProbeInfo, Rank, RecvReq, SendReq};
 
 use crate::crypto::Gcm;
 

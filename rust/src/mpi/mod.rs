@@ -1,5 +1,6 @@
-//! The MPI-like message-passing substrate: transport with (source, tag)
-//! matching over the simulated network, plus per-rank instrumentation.
+//! The MPI-like message-passing substrate: a matching/progress engine
+//! (posted-receive + unexpected-message queues with `(source, tag)` hash
+//! buckets) over the simulated network, plus per-rank instrumentation.
 //!
 //! The public rank-level API (send/recv/isend/irecv/wait/collectives,
 //! with the security modes of the paper) lives in [`crate::coordinator`];
@@ -8,5 +9,7 @@
 pub mod stats;
 pub mod transport;
 
-pub use stats::{ClusterReport, CollOp, CollOpStats, CollStats, CommStats, RankReport, COLL_OPS};
-pub use transport::{PostInfo, Route, Transport, WireMsg};
+pub use stats::{
+    ClusterReport, CollOp, CollOpStats, CollStats, CommStats, MatchStats, RankReport, COLL_OPS,
+};
+pub use transport::{PostInfo, Route, Ticket, Transport, WireMsg};

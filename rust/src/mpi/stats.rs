@@ -120,6 +120,59 @@ impl CollStats {
     }
 }
 
+/// Counters from the transport's matching/progress engine — one set per
+/// receiving rank (see [`crate::mpi::transport`]). The match kinds are
+/// disjoint: a delivery is either bound to a pre-posted receive at deposit
+/// time, popped from an unexpected-queue bucket by an exact `(src, tag)`
+/// receive, or selected by an arrival-ordered wildcard scan.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct MatchStats {
+    /// Messages deposited into this rank's engine.
+    pub deposits: u64,
+    /// Deposits that bound directly to a pre-posted receive (never queued).
+    pub preposted_matches: u64,
+    /// O(1) bucket pops for a fully specified `(src, tag)`.
+    pub exact_matches: u64,
+    /// Arrival-ordered wildcard selections.
+    pub wildcard_matches: u64,
+    /// Bucket-head comparisons across all wildcard scans — the engine's
+    /// total matching work beyond O(1) pops (a flat mailbox pays one
+    /// comparison per *backlog entry* instead).
+    pub wildcard_scan_steps: u64,
+    /// High-water mark of the unexpected-message queue depth.
+    pub max_unexpected_depth: u64,
+    /// High-water mark of simultaneously posted receives.
+    pub max_posted_depth: u64,
+}
+
+impl MatchStats {
+    /// Total completed matches of any kind.
+    pub fn total_matches(&self) -> u64 {
+        self.preposted_matches + self.exact_matches + self.wildcard_matches
+    }
+
+    /// Average bucket-head comparisons per wildcard match (0 when no
+    /// wildcards ran). Flat-mailbox equivalents grow with backlog depth;
+    /// the engine's stays at the number of candidate sources.
+    pub fn avg_wildcard_scan(&self) -> f64 {
+        if self.wildcard_matches == 0 {
+            0.0
+        } else {
+            self.wildcard_scan_steps as f64 / self.wildcard_matches as f64
+        }
+    }
+
+    pub fn merge(&mut self, other: &MatchStats) {
+        self.deposits += other.deposits;
+        self.preposted_matches += other.preposted_matches;
+        self.exact_matches += other.exact_matches;
+        self.wildcard_matches += other.wildcard_matches;
+        self.wildcard_scan_steps += other.wildcard_scan_steps;
+        self.max_unexpected_depth = self.max_unexpected_depth.max(other.max_unexpected_depth);
+        self.max_posted_depth = self.max_posted_depth.max(other.max_posted_depth);
+    }
+}
+
 /// Communication-time accounting for one rank (virtual nanoseconds).
 #[derive(Debug, Default, Clone)]
 pub struct CommStats {
@@ -142,6 +195,9 @@ pub struct CommStats {
     pub msgs_recv: u64,
     /// Per-collective-operation counters.
     pub coll: CollStats,
+    /// Matching/progress-engine counters (snapshotted from the transport
+    /// when the rank finishes).
+    pub matching: MatchStats,
 }
 
 impl CommStats {
@@ -161,6 +217,7 @@ impl CommStats {
         self.msgs_sent += other.msgs_sent;
         self.msgs_recv += other.msgs_recv;
         self.coll.merge(&other.coll);
+        self.matching.merge(&other.matching);
     }
 }
 
@@ -255,6 +312,36 @@ mod tests {
         // not double-count it.
         let s = CommStats { inter_ns: 100, coll_ns: 100, ..Default::default() };
         assert_eq!(s.total_comm_ns(), 100);
+    }
+
+    #[test]
+    fn match_stats_merge_and_averages() {
+        let mut a = MatchStats {
+            deposits: 10,
+            preposted_matches: 4,
+            exact_matches: 5,
+            wildcard_matches: 1,
+            wildcard_scan_steps: 3,
+            max_unexpected_depth: 7,
+            max_posted_depth: 2,
+        };
+        assert_eq!(a.total_matches(), 10);
+        assert!((a.avg_wildcard_scan() - 3.0).abs() < 1e-12);
+        let b = MatchStats {
+            deposits: 2,
+            wildcard_matches: 3,
+            wildcard_scan_steps: 3,
+            max_unexpected_depth: 4,
+            max_posted_depth: 9,
+            ..Default::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.deposits, 12);
+        assert_eq!(a.wildcard_matches, 4);
+        // High-water marks take the max, counters add.
+        assert_eq!(a.max_unexpected_depth, 7);
+        assert_eq!(a.max_posted_depth, 9);
+        assert_eq!(MatchStats::default().avg_wildcard_scan(), 0.0);
     }
 
     #[test]

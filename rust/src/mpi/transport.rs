@@ -1,27 +1,58 @@
-//! Message transport: mailboxes with MPI-style (source, tag) matching and
+//! Message transport: an MPI-style matching/progress engine with
 //! virtual-time delivery over the simulated network.
 //!
 //! Real blocking (condvars) drives program order; virtual timestamps carry
 //! the performance model. Every payload byte is really moved.
 //!
-//! Each rank owns one mailbox; [`Transport::post`] computes the
-//! message's arrival time from the route — intra-node at the shared-memory
-//! rate, inter-node through the per-node NIC [`crate::net::Channel`]s
-//! (which is where concurrent flows contend for bandwidth) and, in
-//! IPSec-simulation mode, through the per-node serial kernel-crypto
-//! context — then deposits it immediately. [`Transport::recv_match`]
-//! blocks (in real time) until a message matching `(source, tag)` exists;
-//! among matches, delivery is FIFO. Sequence numbers distinguish the
-//! header (`seq 0`) from the ciphertext chunks (`seq 1..=k`) of one
-//! chopped transfer.
+//! ## The matching engine
+//!
+//! Each receiving rank owns one engine instance with two structures,
+//! mirroring a real MPI progress engine:
+//!
+//! * **Unexpected-message queue (UMQ)** — messages that arrived before a
+//!   matching receive, kept in `(src, tag)` hash buckets (FIFO within a
+//!   bucket, which is exactly the sender's program order, so MPI's
+//!   non-overtaking rule holds per pair). A fully specified receive is an
+//!   O(1)-amortized bucket pop; the chunk stream of one chopped transfer
+//!   lives in a single bucket and is consumed head-first by `(src, tag,
+//!   seq)` without rescanning unrelated backlog. A per-tag index of
+//!   non-empty buckets lets wildcard (`src = None`) receives scan **bucket
+//!   heads only**, never the whole backlog.
+//! * **Posted-receive queue (PRQ)** — receives pre-posted by
+//!   `irecv`/`irecv_any` as [`Ticket`]s. A deposit that finds a matching
+//!   exact ticket binds to it directly (never touching the UMQ); `wait`
+//!   then just claims the bound message. Message-start tickets
+//!   ([`Transport::post_recv`], matching `seq == 0`) and chunk-stream
+//!   tickets ([`Transport::post_recv_stream`], matching `seq != 0`) form
+//!   independent FIFO lanes over the same bucket, so a chunk can never
+//!   bind to a pre-posted message receive.
+//!
+//! **Wildcard ordering rule:** among matchable message *starts* (`seq ==
+//! 0`), a wildcard receive takes the one with the minimum `arrival_ns`
+//! (deposit order breaks ties) — virtual time, not host scheduling,
+//! decides who `recv_any` sees first. For the same reason wildcard
+//! tickets never bind at deposit time: they resolve when waited on, so a
+//! later-deposited message with an earlier virtual arrival still wins.
+//!
+//! [`Transport::post`] computes the message's arrival time from the route
+//! — intra-node at the shared-memory rate, inter-node through the
+//! per-node NIC [`crate::net::Channel`]s (where concurrent flows contend
+//! for bandwidth) and, in IPSec-simulation mode, through the per-node
+//! serial kernel-crypto context — then deposits it immediately.
+//!
+//! Mixing blocking receives with outstanding posted tickets on the *same*
+//! `(src, tag)` signature is an application error (the coordinator never
+//! does it); `probe` sees the UMQ only — a message already bound to a
+//! ticket is spoken for.
 //!
 //! Everything above this layer — security modes, chopping, collectives —
 //! lives in [`crate::coordinator`]; everything below — link rates,
 //! topology, contention — in [`crate::net`].
 
+use crate::mpi::stats::MatchStats;
 use crate::net::{NetConfig, NodeNics, Topology};
-use std::collections::VecDeque;
-use std::sync::{Arc, Condvar, Mutex};
+use std::collections::{BTreeSet, HashMap, VecDeque};
+use std::sync::{Condvar, Mutex};
 
 /// A message on the (virtual) wire.
 #[derive(Debug)]
@@ -37,10 +68,246 @@ pub struct WireMsg {
     pub arrival_ns: u64,
 }
 
+/// Handle to a pre-posted receive (namespaced per receiving rank).
+pub type Ticket = u64;
+
+/// One pre-posted receive. `msg` is filled by the depositing sender (the
+/// pre-posted fast path) or by the waiter claiming from the UMQ.
+#[derive(Debug)]
+struct PostedRecv {
+    src: Option<usize>,
+    tag: u64,
+    /// Which lane this ticket serves: `true` = message starts (`seq == 0`
+    /// — headers and whole messages, posted by `irecv`), `false` = chunk
+    /// stream (`seq != 0`, posted by the chopped receiver). The two lanes
+    /// are independent FIFOs over the same bucket, so a chunk can never
+    /// bind to a pre-posted *message* receive and corrupt its stream.
+    starts_only: bool,
+    /// Bound message, with its deposit id (so a cancel can re-queue it at
+    /// the right UMQ position).
+    msg: Option<(u64, WireMsg)>,
+}
+
+/// The matching state of one receiving rank.
+#[derive(Default)]
+struct MboxState {
+    /// Unexpected-message queue: `(src, tag)` → FIFO of (deposit id, msg).
+    umq: HashMap<(usize, u64), VecDeque<(u64, WireMsg)>>,
+    /// tag → sources with a non-empty UMQ bucket (wildcard scan set).
+    tags: HashMap<u64, BTreeSet<usize>>,
+    /// Live posted receives by ticket.
+    posted: HashMap<Ticket, PostedRecv>,
+    /// Unbound exact tickets per `(src, tag)`, in posting order.
+    posted_exact: HashMap<(usize, u64), VecDeque<Ticket>>,
+    /// Unbound wildcard tickets per tag, in posting order.
+    posted_wild: HashMap<u64, VecDeque<Ticket>>,
+    /// Messages resident in the UMQ.
+    depth: usize,
+    next_deposit: u64,
+    next_ticket: Ticket,
+    stats: MatchStats,
+}
+
 #[derive(Default)]
 struct Mailbox {
-    q: Mutex<VecDeque<WireMsg>>,
+    state: Mutex<MboxState>,
     cv: Condvar,
+}
+
+fn push_umq(st: &mut MboxState, id: u64, msg: WireMsg) {
+    st.tags.entry(msg.tag).or_default().insert(msg.src);
+    st.umq.entry((msg.src, msg.tag)).or_default().push_back((id, msg));
+    st.depth += 1;
+    st.stats.max_unexpected_depth = st.stats.max_unexpected_depth.max(st.depth as u64);
+}
+
+/// Re-insert a message (e.g. from a canceled ticket) at its original
+/// arrival position in its bucket.
+fn requeue_umq(st: &mut MboxState, id: u64, msg: WireMsg) {
+    st.tags.entry(msg.tag).or_default().insert(msg.src);
+    let q = st.umq.entry((msg.src, msg.tag)).or_default();
+    let pos = q.partition_point(|&(i, _)| i < id);
+    q.insert(pos, (id, msg));
+    st.depth += 1;
+}
+
+/// O(1) bucket pop for a fully specified `(src, tag)`.
+fn take_exact(st: &mut MboxState, src: usize, tag: u64) -> Option<(u64, WireMsg)> {
+    let q = st.umq.get_mut(&(src, tag))?;
+    let head = q.pop_front()?;
+    if q.is_empty() {
+        st.umq.remove(&(src, tag));
+        if let Some(set) = st.tags.get_mut(&tag) {
+            set.remove(&src);
+            if set.is_empty() {
+                st.tags.remove(&tag);
+            }
+        }
+    }
+    st.depth -= 1;
+    Some(head)
+}
+
+/// Arrival-ordered wildcard match: scan only the heads of this tag's
+/// buckets and take the message start (`seq == 0`) with the earliest
+/// virtual arrival; deposit order breaks ties.
+fn take_wild(st: &mut MboxState, tag: u64) -> Option<(u64, WireMsg)> {
+    let srcs: Vec<usize> = st.tags.get(&tag)?.iter().copied().collect();
+    let mut best: Option<(u64, u64, usize)> = None; // (arrival, deposit id, src)
+    let mut steps = 0u64;
+    for src in srcs {
+        if let Some((id, head)) = st.umq.get(&(src, tag)).and_then(|q| q.front()) {
+            steps += 1;
+            if head.seq == 0 {
+                let cand = (head.arrival_ns, *id, src);
+                if best.map_or(true, |b| (cand.0, cand.1) < (b.0, b.1)) {
+                    best = Some(cand);
+                }
+            }
+        }
+    }
+    st.stats.wildcard_scan_steps += steps;
+    let (_, _, src) = best?;
+    let out = take_exact(st, src, tag);
+    if out.is_some() {
+        st.stats.wildcard_matches += 1;
+    }
+    out
+}
+
+fn take_match(st: &mut MboxState, src: Option<usize>, tag: u64) -> Option<WireMsg> {
+    match src {
+        Some(s) => {
+            let out = take_exact(st, s, tag);
+            if out.is_some() {
+                st.stats.exact_matches += 1;
+            }
+            out.map(|(_, m)| m)
+        }
+        None => take_wild(st, tag).map(|(_, m)| m),
+    }
+}
+
+/// (src, wire bytes, arrival) of the message a matching receive would take
+/// next, without consuming it. Message starts only.
+fn peek(st: &MboxState, src: Option<usize>, tag: u64) -> Option<(usize, usize, u64)> {
+    match src {
+        Some(s) => st
+            .umq
+            .get(&(s, tag))
+            .and_then(|q| q.front())
+            .filter(|(_, m)| m.seq == 0)
+            .map(|(_, m)| (m.src, m.body.len(), m.arrival_ns)),
+        None => {
+            let srcs = st.tags.get(&tag)?;
+            let mut best: Option<(u64, u64, usize, usize)> = None;
+            for &s in srcs {
+                if let Some((id, m)) = st.umq.get(&(s, tag)).and_then(|q| q.front()) {
+                    if m.seq == 0 {
+                        let cand = (m.arrival_ns, *id, s, m.body.len());
+                        if best.map_or(true, |b| (cand.0, cand.1) < (b.0, b.1)) {
+                            best = Some(cand);
+                        }
+                    }
+                }
+            }
+            best.map(|(arr, _, s, len)| (s, len, arr))
+        }
+    }
+}
+
+/// Earliest unbound exact ticket of the given lane for this signature.
+fn first_of_lane(st: &MboxState, key: (usize, u64), starts_only: bool) -> Option<Ticket> {
+    st.posted_exact
+        .get(&key)?
+        .iter()
+        .copied()
+        .find(|t| st.posted.get(t).is_some_and(|e| e.starts_only == starts_only))
+}
+
+/// Does an earlier-posted unbound wildcard currently own the head of
+/// bucket `(src, tag)`? Only when its arrival-ordered pick *is* that very
+/// message — a wildcard never owns chunks or other buckets' heads.
+fn wild_owns_head(st: &MboxState, src: usize, tag: u64, before: Ticket) -> bool {
+    let earlier = st
+        .posted_wild
+        .get(&tag)
+        .and_then(|q| q.front())
+        .is_some_and(|&w| w < before);
+    earlier && peek(st, None, tag).is_some_and(|(psrc, _, _)| psrc == src)
+}
+
+fn unindex_exact(st: &mut MboxState, src: usize, tag: u64, ticket: Ticket) {
+    if let Some(q) = st.posted_exact.get_mut(&(src, tag)) {
+        q.retain(|&t| t != ticket);
+        if q.is_empty() {
+            st.posted_exact.remove(&(src, tag));
+        }
+    }
+}
+
+fn unindex_wild(st: &mut MboxState, tag: u64, ticket: Ticket) {
+    if let Some(q) = st.posted_wild.get_mut(&tag) {
+        q.retain(|&t| t != ticket);
+        if q.is_empty() {
+            st.posted_wild.remove(&tag);
+        }
+    }
+}
+
+/// Try to complete the posted receive `ticket`: a message bound by a
+/// deposit wins; otherwise claim from the UMQ — but only when this ticket
+/// is the next unbound candidate for its signature (an earlier-posted
+/// entry has first rights to the queued message, exactly as arrival-time
+/// binding would have given it).
+fn resolve_ticket(st: &mut MboxState, ticket: Ticket) -> Option<WireMsg> {
+    let bound = st.posted.get(&ticket).expect("unknown receive ticket").msg.is_some();
+    if bound {
+        let e = st.posted.remove(&ticket).unwrap();
+        return Some(e.msg.unwrap().1);
+    }
+    let (src, tag, starts) = {
+        let e = &st.posted[&ticket];
+        (e.src, e.tag, e.starts_only)
+    };
+    match src {
+        Some(s) => {
+            // Claim only when this ticket is the next one in its lane,
+            // the bucket head belongs to that lane, and (for message
+            // starts) no earlier wildcard's arrival-ordered pick is this
+            // very message.
+            let lane_front = first_of_lane(st, (s, tag), starts) == Some(ticket);
+            let head_matches = st
+                .umq
+                .get(&(s, tag))
+                .and_then(|q| q.front())
+                .is_some_and(|(_, m)| (m.seq == 0) == starts);
+            let wild_owns = starts && wild_owns_head(st, s, tag, ticket);
+            if lane_front && head_matches && !wild_owns {
+                if let Some((_, msg)) = take_exact(st, s, tag) {
+                    st.stats.exact_matches += 1;
+                    unindex_exact(st, s, tag, ticket);
+                    st.posted.remove(&ticket);
+                    return Some(msg);
+                }
+            }
+        }
+        None => {
+            let is_front = st
+                .posted_wild
+                .get(&tag)
+                .and_then(|q| q.front())
+                .is_some_and(|&f| f == ticket);
+            if is_front {
+                if let Some((_, msg)) = take_wild(st, tag) {
+                    unindex_wild(st, tag, ticket);
+                    st.posted.remove(&ticket);
+                    return Some(msg);
+                }
+            }
+        }
+    }
+    None
 }
 
 /// Delivery timing classes.
@@ -61,7 +328,7 @@ pub struct PostInfo {
 
 /// The shared transport fabric of one simulated cluster.
 pub struct Transport {
-    boxes: Vec<Arc<Mailbox>>,
+    boxes: Vec<Mailbox>,
     nics: Vec<NodeNics>,
     topo: Topology,
     net: NetConfig,
@@ -72,7 +339,7 @@ pub struct Transport {
 
 impl Transport {
     pub fn new(topo: Topology, net: NetConfig, ipsec_rate: Option<f64>) -> Self {
-        let boxes = (0..topo.ranks).map(|_| Arc::new(Mailbox::default())).collect();
+        let boxes = (0..topo.ranks).map(|_| Mailbox::default()).collect();
         let nics = (0..topo.nodes()).map(|_| NodeNics::new()).collect();
         Transport { boxes, nics, topo, net, ipsec_rate }
     }
@@ -132,39 +399,217 @@ impl Transport {
             }
             PostInfo { arrival_ns: arrival, local_complete_ns: tx_done }
         };
-        let mbox = &self.boxes[dst];
         let msg = WireMsg { src, tag, seq, body, arrival_ns: info.arrival_ns };
-        mbox.q.lock().unwrap().push_back(msg);
-        mbox.cv.notify_all();
+        self.deposit(dst, msg);
         info
     }
 
-    /// Blocking receive with (source, tag) matching; FIFO among matches.
+    /// Deposit a message into `dst`'s engine: bind it to the earliest
+    /// pre-posted exact receive of the matching lane (message starts bind
+    /// message-receive tickets, chunks bind chunk-stream tickets), unless
+    /// an earlier-posted wildcard covers the tag — wildcards resolve by
+    /// minimum arrival at wait time, so the message must stay visible in
+    /// the UMQ until then.
+    fn deposit(&self, dst: usize, msg: WireMsg) {
+        let mbox = &self.boxes[dst];
+        let mut st = mbox.state.lock().unwrap();
+        st.stats.deposits += 1;
+        let id = st.next_deposit;
+        st.next_deposit += 1;
+        let key = (msg.src, msg.tag);
+        let start = msg.seq == 0;
+        let exact_t = first_of_lane(&st, key, start);
+        let wild_head = if start {
+            st.posted_wild.get(&msg.tag).and_then(|q| q.front()).copied()
+        } else {
+            None
+        };
+        let bind = match (exact_t, wild_head) {
+            (Some(e), Some(w)) => (e < w).then_some(e),
+            (Some(e), None) => Some(e),
+            _ => None,
+        };
+        if let Some(ticket) = bind {
+            unindex_exact(&mut st, msg.src, msg.tag, ticket);
+            st.stats.preposted_matches += 1;
+            st.posted.get_mut(&ticket).expect("indexed ticket").msg = Some((id, msg));
+        } else {
+            push_umq(&mut st, id, msg);
+        }
+        drop(st);
+        mbox.cv.notify_all();
+    }
+
+    /// Blocking receive with (source, tag) matching. Exact matches pop
+    /// their bucket head (FIFO per pair); wildcard matches take the
+    /// earliest virtual arrival among message starts.
     pub fn recv_match(&self, me: usize, src: Option<usize>, tag: u64) -> WireMsg {
         let mbox = &self.boxes[me];
-        let mut q = mbox.q.lock().unwrap();
+        let mut st = mbox.state.lock().unwrap();
         loop {
-            if let Some(pos) = q
-                .iter()
-                .position(|m| m.tag == tag && src.map_or(true, |s| m.src == s))
-            {
-                return q.remove(pos).unwrap();
+            if let Some(msg) = take_match(&mut st, src, tag) {
+                return msg;
             }
-            q = mbox.cv.wait(q).unwrap();
+            st = mbox.cv.wait(st).unwrap();
         }
     }
 
     /// Non-blocking probe-and-take.
     pub fn try_match(&self, me: usize, src: Option<usize>, tag: u64) -> Option<WireMsg> {
-        let mut q = self.boxes[me].q.lock().unwrap();
-        q.iter()
-            .position(|m| m.tag == tag && src.map_or(true, |s| m.src == s))
-            .map(|pos| q.remove(pos).unwrap())
+        let mut st = self.boxes[me].state.lock().unwrap();
+        take_match(&mut st, src, tag)
     }
 
-    /// Number of messages pending for rank `me` (tests/metrics).
+    /// Pre-post a *message* receive (matches `seq == 0` starts); the
+    /// returned ticket is completed by [`Transport::wait_posted`] /
+    /// [`Transport::wait_any_posted`] or released by
+    /// [`Transport::cancel_recv`]. An already-deposited exact match is
+    /// claimed immediately; wildcard tickets always resolve at wait time
+    /// (arrival-order rule).
+    pub fn post_recv(&self, me: usize, src: Option<usize>, tag: u64) -> Ticket {
+        self.post_recv_lane(me, src, tag, true)
+    }
+
+    /// Pre-post a *chunk-stream* receive: matches the `seq != 0` chunks
+    /// of one chopped transfer from `src`, in a lane independent from any
+    /// pre-posted message receives on the same `(src, tag)`.
+    pub fn post_recv_stream(&self, me: usize, src: usize, tag: u64) -> Ticket {
+        self.post_recv_lane(me, Some(src), tag, false)
+    }
+
+    fn post_recv_lane(
+        &self,
+        me: usize,
+        src: Option<usize>,
+        tag: u64,
+        starts_only: bool,
+    ) -> Ticket {
+        let mbox = &self.boxes[me];
+        let mut st = mbox.state.lock().unwrap();
+        let ticket = st.next_ticket;
+        st.next_ticket += 1;
+        let mut entry = PostedRecv { src, tag, starts_only, msg: None };
+        match src {
+            Some(s) => {
+                // Claim eagerly only when this would be the lane's next
+                // ticket, the bucket head belongs to the lane, and no
+                // earlier wildcard's arrival-ordered pick is that head.
+                let older_same = first_of_lane(&st, (s, tag), starts_only).is_some();
+                let head_matches = st
+                    .umq
+                    .get(&(s, tag))
+                    .and_then(|q| q.front())
+                    .is_some_and(|(_, m)| (m.seq == 0) == starts_only);
+                let wild_owns = starts_only && wild_owns_head(&st, s, tag, ticket);
+                if !older_same && head_matches && !wild_owns {
+                    if let Some(found) = take_exact(&mut st, s, tag) {
+                        st.stats.exact_matches += 1;
+                        entry.msg = Some(found);
+                    }
+                }
+                if entry.msg.is_none() {
+                    st.posted_exact.entry((s, tag)).or_default().push_back(ticket);
+                }
+            }
+            None => {
+                st.posted_wild.entry(tag).or_default().push_back(ticket);
+            }
+        }
+        st.posted.insert(ticket, entry);
+        st.stats.max_posted_depth = st.stats.max_posted_depth.max(st.posted.len() as u64);
+        ticket
+    }
+
+    /// Block until the posted receive completes; consumes the ticket.
+    pub fn wait_posted(&self, me: usize, ticket: Ticket) -> WireMsg {
+        let mbox = &self.boxes[me];
+        let mut st = mbox.state.lock().unwrap();
+        loop {
+            if let Some(msg) = resolve_ticket(&mut st, ticket) {
+                return msg;
+            }
+            st = mbox.cv.wait(st).unwrap();
+        }
+    }
+
+    /// Block until any of the posted receives completes; returns the index
+    /// into `tickets` and the message, consuming that ticket (the others
+    /// stay live).
+    pub fn wait_any_posted(&self, me: usize, tickets: &[Ticket]) -> (usize, WireMsg) {
+        assert!(!tickets.is_empty(), "wait_any_posted on no tickets");
+        let mbox = &self.boxes[me];
+        let mut st = mbox.state.lock().unwrap();
+        loop {
+            for (i, &t) in tickets.iter().enumerate() {
+                if let Some(msg) = resolve_ticket(&mut st, t) {
+                    return (i, msg);
+                }
+            }
+            st = mbox.cv.wait(st).unwrap();
+        }
+    }
+
+    /// Release a posted receive. A message already bound to it returns to
+    /// the unexpected queue at its original arrival position (as if the
+    /// receive had never been posted).
+    pub fn cancel_recv(&self, me: usize, ticket: Ticket) {
+        let mbox = &self.boxes[me];
+        let mut st = mbox.state.lock().unwrap();
+        let Some(entry) = st.posted.remove(&ticket) else {
+            return;
+        };
+        match entry.src {
+            Some(s) => unindex_exact(&mut st, s, entry.tag, ticket),
+            None => unindex_wild(&mut st, entry.tag, ticket),
+        }
+        if let Some((id, msg)) = entry.msg {
+            requeue_umq(&mut st, id, msg);
+        }
+        drop(st);
+        mbox.cv.notify_all();
+    }
+
+    /// Blocking probe: (src, wire bytes, arrival_ns) of the message a
+    /// matching receive would take, without consuming it.
+    pub fn probe_match(&self, me: usize, src: Option<usize>, tag: u64) -> (usize, usize, u64) {
+        let mbox = &self.boxes[me];
+        let mut st = mbox.state.lock().unwrap();
+        loop {
+            if let Some(info) = peek(&st, src, tag) {
+                return info;
+            }
+            st = mbox.cv.wait(st).unwrap();
+        }
+    }
+
+    /// Non-blocking probe, honoring virtual time: only messages that have
+    /// arrived by `now_ns` are visible.
+    pub fn try_probe(
+        &self,
+        me: usize,
+        src: Option<usize>,
+        tag: u64,
+        now_ns: u64,
+    ) -> Option<(usize, usize, u64)> {
+        let st = self.boxes[me].state.lock().unwrap();
+        peek(&st, src, tag).filter(|&(_, _, arrival)| arrival <= now_ns)
+    }
+
+    /// Messages resident in rank `me`'s unexpected queue (tests/metrics).
+    /// Messages bound to pre-posted tickets are counted by
+    /// [`Transport::posted_depth`] instead.
     pub fn pending(&self, me: usize) -> usize {
-        self.boxes[me].q.lock().unwrap().len()
+        self.boxes[me].state.lock().unwrap().depth
+    }
+
+    /// Live pre-posted receives of rank `me` (bound or not).
+    pub fn posted_depth(&self, me: usize) -> usize {
+        self.boxes[me].state.lock().unwrap().posted.len()
+    }
+
+    /// Snapshot of rank `me`'s matching counters.
+    pub fn match_stats(&self, me: usize) -> MatchStats {
+        self.boxes[me].state.lock().unwrap().stats
     }
 }
 
@@ -199,6 +644,201 @@ mod tests {
         let m5 = t.recv_match(2, Some(0), 5);
         assert_eq!(m5.body, vec![10]);
         assert!(t.try_match(2, None, 5).is_none());
+    }
+
+    /// The satellite regression: a later-deposited message with an earlier
+    /// virtual arrival must win `recv_any` — deposit order must not decide.
+    #[test]
+    fn wildcard_matches_by_virtual_arrival_not_deposit_order() {
+        let t = transport(3, 1);
+        // src 0 departs late (arrives late) but is deposited first.
+        let a = t.post(0, 2, 9, 0, vec![1], 1_000_000);
+        // src 1 departs at t=0: earlier virtual arrival, deposited second.
+        let b = t.post(1, 2, 9, 0, vec![2], 0);
+        assert!(b.arrival_ns < a.arrival_ns, "test premise: b arrives first");
+        let first = t.recv_match(2, None, 9);
+        assert_eq!(first.src, 1, "earliest virtual arrival wins recv_any");
+        let second = t.recv_match(2, None, 9);
+        assert_eq!(second.src, 0);
+        let s = t.match_stats(2);
+        assert_eq!(s.wildcard_matches, 2);
+    }
+
+    /// Wildcards only match message starts, never mid-stream chunks.
+    #[test]
+    fn wildcard_only_matches_message_starts() {
+        let t = transport(3, 3);
+        t.post(0, 2, 6, 2, vec![1], 0); // stray chunk from src 0
+        t.post(1, 2, 6, 0, vec![2], 0); // real message start from src 1
+        let m = t.recv_match(2, None, 6);
+        assert_eq!((m.src, m.seq), (1, 0));
+        assert!(t.try_match(2, None, 6).is_none(), "chunk is not wildcard-visible");
+        // ... but an exact receive (the chopped consumer) still gets it.
+        assert_eq!(t.try_match(2, Some(0), 6).unwrap().seq, 2);
+    }
+
+    /// Interleaved chunk streams from two senders stay FIFO per source and
+    /// are matched without disturbing each other's buckets.
+    #[test]
+    fn chunk_streams_stay_fifo_per_source() {
+        let t = transport(3, 3);
+        t.post(0, 2, 1, 0, vec![0], 0);
+        t.post(1, 2, 1, 0, vec![0], 0);
+        for seq in 1..=3u32 {
+            t.post(0, 2, 1, seq, vec![seq as u8], 0);
+            t.post(1, 2, 1, seq, vec![seq as u8], 0);
+        }
+        for src in [0usize, 1] {
+            assert_eq!(t.recv_match(2, Some(src), 1).seq, 0);
+            for seq in 1..=3u32 {
+                assert_eq!(t.recv_match(2, Some(src), 1).seq, seq, "src {src}");
+            }
+        }
+        assert_eq!(t.pending(2), 0);
+    }
+
+    /// Exact matching against a deep backlog never scans: the engine's
+    /// wildcard scan counter stays at zero and every match is a bucket pop.
+    #[test]
+    fn exact_backlog_match_without_scans() {
+        let t = transport(65, 65);
+        for i in 1..=64usize {
+            t.post(i, 0, i as u64, 0, vec![i as u8], 0);
+        }
+        // Worst case for a flat mailbox: match in reverse deposit order.
+        for i in (1..=64usize).rev() {
+            let m = t.try_match(0, Some(i), i as u64).unwrap();
+            assert_eq!(m.body, vec![i as u8]);
+        }
+        let s = t.match_stats(0);
+        assert_eq!(s.exact_matches, 64);
+        assert_eq!(s.wildcard_scan_steps, 0);
+        assert_eq!(s.max_unexpected_depth, 64);
+        assert_eq!(t.pending(0), 0);
+    }
+
+    /// A deposit binds straight to a matching pre-posted receive — the UMQ
+    /// never sees it.
+    #[test]
+    fn preposted_receive_binds_on_deposit() {
+        let t = transport(2, 1);
+        let tk = t.post_recv(1, Some(0), 5);
+        assert_eq!(t.posted_depth(1), 1);
+        t.post(0, 1, 5, 0, vec![42], 0);
+        assert_eq!(t.pending(1), 0, "bound to the ticket, not queued");
+        let m = t.wait_posted(1, tk);
+        assert_eq!(m.body, vec![42]);
+        assert_eq!(t.posted_depth(1), 0);
+        let s = t.match_stats(1);
+        assert_eq!(s.preposted_matches, 1);
+        assert_eq!(s.max_posted_depth, 1);
+    }
+
+    /// Tickets bind in posting order even when waited out of order.
+    #[test]
+    fn posted_tickets_bind_in_posting_order() {
+        let t = transport(2, 1);
+        let t1 = t.post_recv(1, Some(0), 7);
+        let t2 = t.post_recv(1, Some(0), 7);
+        t.post(0, 1, 7, 0, vec![1], 0);
+        t.post(0, 1, 7, 0, vec![2], 0);
+        let m2 = t.wait_posted(1, t2);
+        let m1 = t.wait_posted(1, t1);
+        assert_eq!(
+            (m1.body[0], m2.body[0]),
+            (1, 2),
+            "first deposit belongs to first ticket"
+        );
+    }
+
+    /// Message-receive tickets and chunk-stream tickets are independent
+    /// lanes over the same `(src, tag)` bucket: a chunk deposit never
+    /// binds to a pre-posted message receive, and vice versa.
+    #[test]
+    fn ticket_lanes_keep_chunks_away_from_message_receives() {
+        let t = transport(2, 1);
+        let hdr2 = t.post_recv(1, Some(0), 6); // second message's header
+        // First message's stream is already consumed down to its chunks.
+        t.post(0, 1, 6, 1, vec![11], 0);
+        t.post(0, 1, 6, 2, vec![12], 0);
+        t.post(0, 1, 6, 0, vec![20], 0); // the second message start
+        // The chunks went to the UMQ, the start bound the ticket.
+        assert_eq!(t.pending(1), 2);
+        assert_eq!(t.wait_posted(1, hdr2).body, vec![20]);
+        // Chunk-stream tickets claim the chunks in order.
+        let c1 = t.post_recv_stream(1, 0, 6);
+        let c2 = t.post_recv_stream(1, 0, 6);
+        assert_eq!(t.wait_posted(1, c1).seq, 1);
+        assert_eq!(t.wait_posted(1, c2).seq, 2);
+        assert_eq!(t.pending(1), 0);
+    }
+
+    /// Waiting an exact ticket posted after a wildcard must not hang when
+    /// the wildcard's arrival-ordered pick is a different source.
+    #[test]
+    fn exact_wait_does_not_deadlock_behind_earlier_wildcard() {
+        let t = transport(3, 1);
+        let w = t.post_recv(2, None, 5);
+        let e = t.post_recv(2, Some(0), 5);
+        // src 0 arrives later; src 1 arrives earlier (the wildcard's pick).
+        t.post(0, 2, 5, 0, vec![10], 1_000_000);
+        t.post(1, 2, 5, 0, vec![20], 0);
+        let me = t.wait_posted(2, e);
+        assert_eq!(me.src, 0, "exact ticket claims its bucket");
+        let mw = t.wait_posted(2, w);
+        assert_eq!(mw.src, 1, "wildcard keeps its arrival-ordered pick");
+    }
+
+    /// A pre-posted wildcard resolves at wait time by minimum arrival, so
+    /// a later-deposited-but-earlier-arriving message still wins.
+    #[test]
+    fn wildcard_ticket_resolves_by_arrival_at_wait_time() {
+        let t = transport(3, 1);
+        let tk = t.post_recv(2, None, 3);
+        t.post(0, 2, 3, 0, vec![1], 1_000_000); // deposited first, arrives later
+        t.post(1, 2, 3, 0, vec![2], 0);
+        let m = t.wait_posted(2, tk);
+        assert_eq!(m.src, 1, "arrival order, not deposit order");
+        assert_eq!(t.pending(2), 1, "the late message stays queued");
+    }
+
+    /// A posted receive finds messages that were deposited before it.
+    #[test]
+    fn post_recv_claims_existing_backlog() {
+        let t = transport(2, 1);
+        t.post(0, 1, 4, 0, vec![7], 0);
+        let tk = t.post_recv(1, Some(0), 4);
+        assert_eq!(t.pending(1), 0, "claimed at post time");
+        assert_eq!(t.wait_posted(1, tk).body, vec![7]);
+    }
+
+    /// Canceling a ticket with a bound message returns the message to the
+    /// unexpected queue, still receivable.
+    #[test]
+    fn canceled_ticket_requeues_bound_message() {
+        let t = transport(2, 1);
+        let tk = t.post_recv(1, Some(0), 8);
+        t.post(0, 1, 8, 0, vec![5], 0);
+        assert_eq!(t.pending(1), 0);
+        t.cancel_recv(1, tk);
+        assert_eq!(t.posted_depth(1), 0);
+        assert_eq!(t.pending(1), 1);
+        assert_eq!(t.try_match(1, Some(0), 8).unwrap().body, vec![5]);
+    }
+
+    #[test]
+    fn probe_and_try_probe() {
+        let t = transport(2, 1);
+        assert!(t.try_probe(1, Some(0), 4, u64::MAX).is_none());
+        let info = t.post(0, 1, 4, 0, vec![9, 9, 9], 0);
+        let (src, bytes, arr) = t.probe_match(1, Some(0), 4);
+        assert_eq!((src, bytes, arr), (0, 3, info.arrival_ns));
+        // iprobe honors virtual time: before arrival, nothing to see.
+        assert!(t.try_probe(1, None, 4, info.arrival_ns - 1).is_none());
+        assert!(t.try_probe(1, None, 4, info.arrival_ns).is_some());
+        // Probe does not consume.
+        assert_eq!(t.pending(1), 1);
+        assert_eq!(t.recv_match(1, None, 4).body, vec![9, 9, 9]);
     }
 
     #[test]

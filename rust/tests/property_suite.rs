@@ -296,6 +296,98 @@ fn prop_hierarchical_chopped_leader_exchange_exact() {
     assert!(crypto_ns > 0, "leader exchanges must be encrypted");
 }
 
+/// Property (matching engine): many outstanding `irecv`/`irecv_any`
+/// interleaved across 2–4 nodes × all four security modes deliver intact
+/// payloads in any completion order, and every rank's engine queues
+/// (unexpected + posted) drain back to depth 0.
+#[test]
+fn prop_outstanding_irecv_interleaving_drains_engine() {
+    const WILD_TAG: u64 = 777_000;
+    // small-plain / chopped (≥ 64 KB under CryptMPI inter-node) / direct
+    let sizes = [900usize, 70_000, 4096];
+    for mode in [
+        SecurityMode::Unencrypted,
+        SecurityMode::IpsecSim,
+        SecurityMode::Naive,
+        SecurityMode::CryptMpi,
+    ] {
+        for (ranks, rpn) in [(2usize, 1usize), (4, 2), (6, 2), (8, 2)] {
+            let cfg = ClusterConfig::new(ranks, rpn, SystemProfile::noleland(), mode);
+            let (outs, rep) = run_cluster(&cfg, move |rank| {
+                let n = rank.size();
+                let me = rank.id();
+                let tag_of = |src: usize, w: usize| (src * 10 + w) as u64;
+                let pay = |src: usize, dst: usize, w: usize| {
+                    let mut v = vec![0u8; sizes[w]];
+                    SimRng::new((src * 1000 + dst * 10 + w) as u64).fill(&mut v);
+                    v
+                };
+                // Everyone streams to every peer: three exact-tagged
+                // messages plus one wildcard-tagged message.
+                let mut sends = Vec::new();
+                for q in 0..n {
+                    if q == me {
+                        continue;
+                    }
+                    for w in 0..sizes.len() {
+                        sends.push(rank.isend(q, tag_of(me, w), &pay(me, q, w)));
+                    }
+                    let wmsg = vec![me as u8; 2048];
+                    sends.push(rank.isend(q, WILD_TAG, &wmsg));
+                }
+                // Pre-post every receive before waiting on any of them.
+                let mut meta = Vec::new();
+                let mut reqs = Vec::new();
+                for q in 0..n {
+                    if q == me {
+                        continue;
+                    }
+                    for w in 0..sizes.len() {
+                        meta.push((q, w));
+                        reqs.push(rank.irecv(q, tag_of(q, w)));
+                    }
+                }
+                let mut wild: Vec<_> = (1..n).map(|_| rank.irecv_any(WILD_TAG)).collect();
+                // Wildcards complete in any order; each sender's id is its
+                // payload and every sender appears exactly once.
+                let mut seen = vec![false; n];
+                while !wild.is_empty() {
+                    let (_, m) = rank.waitany_recv(&mut wild);
+                    assert_eq!(m.len(), 2048);
+                    let s = m[0] as usize;
+                    assert!(s < n && s != me && !seen[s], "wildcard source {s}");
+                    assert!(m.iter().all(|&b| b == s as u8));
+                    seen[s] = true;
+                }
+                // Exact-tagged receives complete in any order, intact.
+                while !reqs.is_empty() {
+                    let (i, m) = rank.waitany_recv(&mut reqs);
+                    let (q, w) = meta.remove(i);
+                    assert_eq!(m, pay(q, me, w), "payload {q}->{me} w{w}");
+                }
+                rank.waitall_send(sends);
+                rank.queue_depth()
+            });
+            assert!(
+                outs.iter().all(|&depth| depth == 0),
+                "mode {mode:?} {ranks}/{rpn}: engine queues must drain: {outs:?}"
+            );
+            // Engine accounting closes: every deposit was consumed, and
+            // the wildcard traffic went through arrival-ordered matching.
+            let mut total = cryptmpi::mpi::MatchStats::default();
+            for r in &rep.per_rank {
+                total.merge(&r.stats.matching);
+            }
+            assert_eq!(
+                total.total_matches(),
+                total.deposits,
+                "mode {mode:?} {ranks}/{rpn}: unconsumed deposits"
+            );
+            assert!(total.wildcard_matches >= (ranks * (ranks - 1)) as u64);
+        }
+    }
+}
+
 /// Property: virtual elapsed time is stable across repeated runs of the
 /// same workload. Gap-filling reservation removes most scheduling
 /// sensitivity, but simultaneous-ready contenders are still served in real
