@@ -51,6 +51,30 @@ fn main() {
         }
     }
 
+    // Fused one-pass kernel vs the two-pass reference (CTR sweep + separate
+    // GHASH sweep) — the `gcm` bench runner measures the same comparison
+    // with its acceptance assertion; this is the quick interactive view.
+    println!("\n-- fused one-pass vs two-pass reference --");
+    for (label, hw) in [("hw", true), ("soft", false)] {
+        let gcm = Gcm::with_backend(&key, hw);
+        if hw && !gcm.is_hw() {
+            continue;
+        }
+        for size in [64 * 1024usize, 512 * 1024, 4 << 20] {
+            if !hw && size > 512 * 1024 {
+                break; // keep the soft sweep short
+            }
+            let mut buf = vec![0u8; size];
+            rng.fill(&mut buf);
+            bench(&format!("gcm seal two-pass {label} {}B", size), size, || {
+                std::hint::black_box(gcm.seal_in_place_two_pass(&nonce, &[], &mut buf));
+            });
+            bench(&format!("gcm seal fused    {label} {}B", size), size, || {
+                std::hint::black_box(gcm.seal_in_place(&nonce, &[], &mut buf));
+            });
+        }
+    }
+
     // Verified open (tag check + decrypt).
     let gcm = Gcm::new(&key);
     let size = 512 * 1024;

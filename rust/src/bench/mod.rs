@@ -18,6 +18,10 @@ pub struct Table {
     pub rows: Vec<Vec<String>>,
     /// Free-text notes (acceptance criteria, paper comparison).
     pub notes: Vec<String>,
+    /// Extra machine-readable files `(filename, content)` written next to
+    /// the CSV — e.g. the `gcm` runner's `BENCH_gcm.json`, which CI
+    /// uploads so the perf trajectory is recorded per commit.
+    pub artifacts: Vec<(String, String)>,
 }
 
 impl Table {
@@ -28,6 +32,7 @@ impl Table {
             header: header.iter().map(|s| s.to_string()).collect(),
             rows: Vec::new(),
             notes: Vec::new(),
+            artifacts: Vec::new(),
         }
     }
 
@@ -40,13 +45,22 @@ impl Table {
         self.notes.push(s.into());
     }
 
-    /// Write `results/<name>.csv`.
+    /// Attach a machine-readable sidecar file, written by
+    /// [`write_csv`](Self::write_csv) alongside the CSV.
+    pub fn artifact(&mut self, filename: impl Into<String>, content: impl Into<String>) {
+        self.artifacts.push((filename.into(), content.into()));
+    }
+
+    /// Write `results/<name>.csv` plus any attached artifacts.
     pub fn write_csv(&self, out_dir: &Path) -> std::io::Result<()> {
         std::fs::create_dir_all(out_dir)?;
         let mut f = std::fs::File::create(out_dir.join(format!("{}.csv", self.name)))?;
         writeln!(f, "{}", self.header.join(","))?;
         for r in &self.rows {
             writeln!(f, "{}", r.join(","))?;
+        }
+        for (name, content) in &self.artifacts {
+            std::fs::write(out_dir.join(name), content)?;
         }
         Ok(())
     }
@@ -110,12 +124,15 @@ mod tests {
         let mut t = Table::new("demo", "Demo table", &["a", "b"]);
         t.row(vec!["1".into(), "2.50".into()]);
         t.note("shape holds");
+        t.artifact("demo_sidecar.json", "{\"ok\": true}");
         let s = t.render();
         assert!(s.contains("demo") && s.contains("2.50") && s.contains("> shape holds"));
         let dir = std::env::temp_dir().join("cryptmpi_table_test");
         t.write_csv(&dir).unwrap();
         let csv = std::fs::read_to_string(dir.join("demo.csv")).unwrap();
         assert_eq!(csv, "a,b\n1,2.50\n");
+        let sidecar = std::fs::read_to_string(dir.join("demo_sidecar.json")).unwrap();
+        assert_eq!(sidecar, "{\"ok\": true}");
     }
 
     #[test]

@@ -68,47 +68,63 @@ impl AesNiKey {
         _mm_storeu_si128(block.as_mut_ptr() as *mut __m128i, b);
     }
 
+    /// Eight consecutive CTR keystream blocks (`counter .. counter+7`),
+    /// interleaved through the AESENC pipeline and returned in registers —
+    /// the fused GCM kernel XORs these into the payload and folds the
+    /// resulting ciphertext into GHASH without a second pass.
+    ///
+    /// # Safety
+    /// Caller must ensure AES-NI is available.
+    #[target_feature(enable = "aes", enable = "sse2")]
+    pub unsafe fn keystream8(&self, prefix: __m128i, counter: u32) -> [__m128i; 8] {
+        let rk = &self.rk;
+        let mut b: [__m128i; 8] =
+            core::array::from_fn(|i| ctr_block(prefix, counter.wrapping_add(i as u32)));
+        for x in b.iter_mut() {
+            *x = _mm_xor_si128(*x, rk[0]);
+        }
+        for r in 1..10 {
+            for x in b.iter_mut() {
+                *x = _mm_aesenc_si128(*x, rk[r]);
+            }
+        }
+        for x in b.iter_mut() {
+            *x = _mm_aesenclast_si128(*x, rk[10]);
+        }
+        b
+    }
+
+    /// One CTR keystream block (tail path of the fused kernel).
+    ///
+    /// # Safety
+    /// Caller must ensure AES-NI is available.
+    #[target_feature(enable = "aes", enable = "sse2")]
+    pub unsafe fn keystream1(&self, prefix: __m128i, counter: u32) -> __m128i {
+        let rk = &self.rk;
+        let mut ks = _mm_xor_si128(ctr_block(prefix, counter), rk[0]);
+        for r in 1..10 {
+            ks = _mm_aesenc_si128(ks, rk[r]);
+        }
+        _mm_aesenclast_si128(ks, rk[10])
+    }
+
     /// CTR-mode keystream XOR: `data ^= AES-CTR(counter_block, ...)`.
     ///
     /// `ctr0` is the first 16-byte counter block; the low 32 bits (bytes
     /// 12..16, big-endian per SP 800-38D inc32) increment per block.
-    /// Processes 8 blocks per iteration to fill the AESENC pipeline.
+    /// Processes 8 blocks per iteration to fill the AESENC pipeline. This
+    /// is the keystream pass of the *two-pass reference* path; the fused
+    /// kernel in `gcm.rs` drives [`keystream8`](Self::keystream8) itself.
     ///
     /// # Safety
     /// Caller must ensure AES-NI is available.
     #[target_feature(enable = "aes", enable = "sse2")]
     pub unsafe fn ctr_xor(&self, ctr0: &[u8; 16], mut counter: u32, data: &mut [u8]) {
-        let rk = &self.rk;
-        let base = _mm_loadu_si128(ctr0.as_ptr() as *const __m128i);
-        // Mask out the low-32 counter field; we splice the counter in per
-        // block. Counter bytes are big-endian in positions 12..16.
-        let prefix = _mm_and_si128(
-            base,
-            _mm_set_epi32(0, -1, -1, -1),
-        );
-
-        #[inline(always)]
-        unsafe fn ctr_block(prefix: __m128i, ctr: u32) -> __m128i {
-            _mm_or_si128(prefix, _mm_set_epi32(ctr.swap_bytes() as i32, 0, 0, 0))
-        }
-
+        let prefix = ctr_prefix(ctr0);
         let mut chunks = data.chunks_exact_mut(128);
         for chunk in &mut chunks {
-            let mut b: [__m128i; 8] = core::array::from_fn(|i| {
-                ctr_block(prefix, counter.wrapping_add(i as u32))
-            });
+            let b = self.keystream8(prefix, counter);
             counter = counter.wrapping_add(8);
-            for x in b.iter_mut() {
-                *x = _mm_xor_si128(*x, rk[0]);
-            }
-            for r in 1..10 {
-                for x in b.iter_mut() {
-                    *x = _mm_aesenc_si128(*x, rk[r]);
-                }
-            }
-            for x in b.iter_mut() {
-                *x = _mm_aesenclast_si128(*x, rk[10]);
-            }
             for (i, x) in b.iter().enumerate() {
                 let p = chunk.as_mut_ptr().add(16 * i) as *mut __m128i;
                 _mm_storeu_si128(p, _mm_xor_si128(_mm_loadu_si128(p), *x));
@@ -118,13 +134,8 @@ impl AesNiKey {
         if !rest.is_empty() {
             let nblocks = rest.len().div_ceil(16);
             for i in 0..nblocks {
-                let mut ks = ctr_block(prefix, counter);
+                let ks = self.keystream1(prefix, counter);
                 counter = counter.wrapping_add(1);
-                ks = _mm_xor_si128(ks, rk[0]);
-                for r in 1..10 {
-                    ks = _mm_aesenc_si128(ks, rk[r]);
-                }
-                ks = _mm_aesenclast_si128(ks, rk[10]);
                 let mut ksb = [0u8; 16];
                 _mm_storeu_si128(ksb.as_mut_ptr() as *mut __m128i, ks);
                 let start = 16 * i;
@@ -135,6 +146,29 @@ impl AesNiKey {
             }
         }
     }
+}
+
+/// The invariant 96 bits of a counter block (`J0` with the low-32 counter
+/// field masked out); [`ctr_block`] splices per-block counters back in.
+///
+/// # Safety
+/// Caller must ensure SSE2 intrinsics are safe to use (always on x86-64).
+#[cfg(target_arch = "x86_64")]
+#[inline]
+pub unsafe fn ctr_prefix(ctr0: &[u8; 16]) -> __m128i {
+    let base = _mm_loadu_si128(ctr0.as_ptr() as *const __m128i);
+    // Counter bytes are big-endian in positions 12..16.
+    _mm_and_si128(base, _mm_set_epi32(0, -1, -1, -1))
+}
+
+/// One counter block: prefix ‖ big-endian `ctr`.
+///
+/// # Safety
+/// Caller must ensure SSE2 intrinsics are safe to use (always on x86-64).
+#[cfg(target_arch = "x86_64")]
+#[inline]
+pub unsafe fn ctr_block(prefix: __m128i, ctr: u32) -> __m128i {
+    _mm_or_si128(prefix, _mm_set_epi32(ctr.swap_bytes() as i32, 0, 0, 0))
 }
 
 #[cfg(not(target_arch = "x86_64"))]

@@ -5,6 +5,17 @@
 //! Karatsuba clmul, shifted left one bit, and reduced modulo
 //! `x^128 + x^7 + x^2 + x + 1`. Verified against the bit-serial software
 //! GHASH in [`super::ghash`].
+//!
+//! The state is split in two so GCM key setup stays cheap and the fused
+//! one-pass kernel can fold ciphertext registers directly:
+//!
+//! * [`GhashClmulKey`] — per-key material: `H` eagerly (zero multiplies)
+//!   and the power table `H¹..H⁸` built lazily on first use of the 8-way
+//!   loop, so per-message subkeys that only ever see short segments never
+//!   pay the 7-`gfmul` schedule.
+//! * [`GhashClmul`] — a borrow-the-key accumulator whose 8-block
+//!   [`fold8`](GhashClmul::fold8) performs one aggregated reduction per
+//!   128 bytes: `Y' = reduce((Y⊕C₀)·H⁸ ⊕ C₁·H⁷ ⊕ … ⊕ C₇·H¹)`.
 
 #![allow(unsafe_code)]
 
@@ -27,6 +38,7 @@ pub fn available() -> bool {
 #[cfg(target_arch = "x86_64")]
 mod imp {
     use super::*;
+    use std::sync::OnceLock;
 
     #[inline(always)]
     unsafe fn bswap_mask() -> __m128i {
@@ -92,67 +104,112 @@ mod imp {
         shift_reduce(lo, hi)
     }
 
-    /// Incremental GHASH accumulator (CLMUL path) with 4-block aggregated
-    /// reduction: Y' = ((Y^C0)·H⁴ ^ C1·H³ ^ C2·H² ^ C3·H) reduced once.
+    /// Per-key GHASH material: `H` in the reflected domain plus the
+    /// lazily built aggregation powers `H¹..H⁸`.
+    ///
+    /// Construction does **zero** field multiplies; the 7-`gfmul` power
+    /// schedule is paid once, on the first absorb of a ≥128-byte run, and
+    /// cached for the key's lifetime (`OnceLock`, so a `Gcm` shared
+    /// across worker threads races benignly).
     #[derive(Clone)]
-    pub struct GhashClmul {
-        /// h_pow[k] = H^(k+1) in the reflected domain.
-        h_pow: [__m128i; 4],
-        y: __m128i,
+    pub struct GhashClmulKey {
+        h1: __m128i,
+        pow: OnceLock<[__m128i; 8]>,
     }
 
-    impl GhashClmul {
+    impl GhashClmulKey {
         /// # Safety
         /// Caller must ensure PCLMULQDQ+SSSE3 are available.
         #[target_feature(enable = "pclmulqdq", enable = "ssse3")]
         pub unsafe fn new(h_block: &[u8; 16]) -> Self {
-            let h = _mm_shuffle_epi8(
+            let h1 = _mm_shuffle_epi8(
                 _mm_loadu_si128(h_block.as_ptr() as *const __m128i),
                 bswap_mask(),
             );
-            let h2 = gfmul(h, h);
-            let h3 = gfmul(h2, h);
-            let h4 = gfmul(h3, h);
-            GhashClmul { h_pow: [h, h2, h3, h4], y: _mm_setzero_si128() }
+            GhashClmulKey { h1, pow: OnceLock::new() }
+        }
+
+        /// `pow[k] = H^(k+1)` — built on first call.
+        ///
+        /// # Safety: see `new`.
+        #[inline]
+        unsafe fn pow8(&self) -> &[__m128i; 8] {
+            self.pow.get_or_init(|| {
+                // SAFETY: constructing self required the CPU features.
+                unsafe {
+                    let mut p = [self.h1; 8];
+                    for k in 1..8 {
+                        p[k] = gfmul(p[k - 1], self.h1);
+                    }
+                    p
+                }
+            })
+        }
+    }
+
+    /// Incremental GHASH accumulator (CLMUL path) borrowing a
+    /// [`GhashClmulKey`], with 8-block aggregated reduction:
+    /// `Y' = ((Y^C0)·H⁸ ^ C1·H⁷ ^ … ^ C7·H¹)` reduced once per 128 bytes.
+    pub struct GhashClmul<'k> {
+        key: &'k GhashClmulKey,
+        y: __m128i,
+    }
+
+    impl<'k> GhashClmul<'k> {
+        /// # Safety
+        /// Caller must ensure PCLMULQDQ+SSSE3 are available.
+        #[target_feature(enable = "pclmulqdq", enable = "ssse3")]
+        pub unsafe fn new(key: &'k GhashClmulKey) -> Self {
+            GhashClmul { key, y: _mm_setzero_si128() }
+        }
+
+        /// Fold 8 blocks already in registers (wire byte order) with one
+        /// aggregated reduction — the fused kernel's per-128-byte step.
+        ///
+        /// # Safety: see `new`.
+        #[target_feature(enable = "pclmulqdq", enable = "ssse3")]
+        pub unsafe fn fold8(&mut self, blocks: &[__m128i; 8]) {
+            let pow = self.key.pow8();
+            let mask = bswap_mask();
+            let x0 = _mm_shuffle_epi8(blocks[0], mask);
+            let (mut lo, mut hi) = clmul_nored(_mm_xor_si128(self.y, x0), pow[7]);
+            for i in 1..8 {
+                let xi = _mm_shuffle_epi8(blocks[i], mask);
+                let (l, h) = clmul_nored(xi, pow[7 - i]);
+                lo = _mm_xor_si128(lo, l);
+                hi = _mm_xor_si128(hi, h);
+            }
+            self.y = shift_reduce(lo, hi);
+        }
+
+        /// Fold one block already in a register (wire byte order) — the
+        /// fused kernel's tail step.
+        ///
+        /// # Safety: see `new`.
+        #[target_feature(enable = "pclmulqdq", enable = "ssse3")]
+        pub unsafe fn fold1(&mut self, block: __m128i) {
+            let x = _mm_shuffle_epi8(block, bswap_mask());
+            self.y = gfmul(_mm_xor_si128(self.y, x), self.key.h1);
         }
 
         /// # Safety: see `new`.
         #[target_feature(enable = "pclmulqdq", enable = "ssse3")]
         pub unsafe fn update(&mut self, data: &[u8]) {
-            let mask = bswap_mask();
-            let [h1, h2, h3, h4] = self.h_pow;
-            let mut quads = data.chunks_exact(64);
-            for quad in &mut quads {
-                let p = quad.as_ptr() as *const __m128i;
-                let x0 = _mm_shuffle_epi8(_mm_loadu_si128(p), mask);
-                let x1 = _mm_shuffle_epi8(_mm_loadu_si128(p.add(1)), mask);
-                let x2 = _mm_shuffle_epi8(_mm_loadu_si128(p.add(2)), mask);
-                let x3 = _mm_shuffle_epi8(_mm_loadu_si128(p.add(3)), mask);
-                let (l0, hh0) = clmul_nored(_mm_xor_si128(self.y, x0), h4);
-                let (l1, hh1) = clmul_nored(x1, h3);
-                let (l2, hh2) = clmul_nored(x2, h2);
-                let (l3, hh3) = clmul_nored(x3, h1);
-                let lo = _mm_xor_si128(_mm_xor_si128(l0, l1), _mm_xor_si128(l2, l3));
-                let hi = _mm_xor_si128(_mm_xor_si128(hh0, hh1), _mm_xor_si128(hh2, hh3));
-                self.y = shift_reduce(lo, hi);
+            let mut octs = data.chunks_exact(128);
+            for oct in &mut octs {
+                let p = oct.as_ptr() as *const __m128i;
+                let blocks: [__m128i; 8] = core::array::from_fn(|i| _mm_loadu_si128(p.add(i)));
+                self.fold8(&blocks);
             }
-            let mut chunks = quads.remainder().chunks_exact(16);
+            let mut chunks = octs.remainder().chunks_exact(16);
             for chunk in &mut chunks {
-                let x = _mm_shuffle_epi8(
-                    _mm_loadu_si128(chunk.as_ptr() as *const __m128i),
-                    mask,
-                );
-                self.y = gfmul(_mm_xor_si128(self.y, x), h1);
+                self.fold1(_mm_loadu_si128(chunk.as_ptr() as *const __m128i));
             }
             let rest = chunks.remainder();
             if !rest.is_empty() {
                 let mut pad = [0u8; 16];
                 pad[..rest.len()].copy_from_slice(rest);
-                let x = _mm_shuffle_epi8(
-                    _mm_loadu_si128(pad.as_ptr() as *const __m128i),
-                    mask,
-                );
-                self.y = gfmul(_mm_xor_si128(self.y, x), h1);
+                self.fold1(_mm_loadu_si128(pad.as_ptr() as *const __m128i));
             }
         }
 
@@ -160,7 +217,7 @@ mod imp {
         #[target_feature(enable = "pclmulqdq", enable = "ssse3")]
         pub unsafe fn update_lengths(&mut self, aad_bytes: u64, ct_bytes: u64) {
             let block = _mm_set_epi64x((aad_bytes * 8) as i64, (ct_bytes * 8) as i64);
-            self.y = gfmul(_mm_xor_si128(self.y, block), self.h_pow[0]);
+            self.y = gfmul(_mm_xor_si128(self.y, block), self.key.h1);
         }
 
         /// # Safety: see `new`.
@@ -175,7 +232,7 @@ mod imp {
 }
 
 #[cfg(target_arch = "x86_64")]
-pub use imp::GhashClmul;
+pub use imp::{GhashClmul, GhashClmulKey};
 
 #[cfg(all(test, target_arch = "x86_64"))]
 mod tests {
@@ -200,7 +257,20 @@ mod tests {
             eprintln!("PCLMULQDQ unavailable; skipping");
             return;
         }
-        for (seed, len) in [(1u64, 16usize), (2, 32), (3, 15), (4, 17), (5, 160), (6, 4096), (7, 1)] {
+        // Lengths straddle the 8-wide loop boundary (127/128/129) so both
+        // the aggregated fold and the serial tail are exercised.
+        for (seed, len) in [
+            (1u64, 16usize),
+            (2, 32),
+            (3, 15),
+            (4, 17),
+            (5, 127),
+            (6, 128),
+            (7, 129),
+            (8, 160),
+            (9, 4096),
+            (10, 1),
+        ] {
             let h: [u8; 16] = rand_bytes(16, seed * 77)[..].try_into().unwrap();
             let data = rand_bytes(len, seed);
             let mut soft = GhashSoft::new(block_to_elem(&h));
@@ -208,7 +278,8 @@ mod tests {
             soft.update_lengths(0, len as u64);
 
             unsafe {
-                let mut fast = GhashClmul::new(&h);
+                let key = GhashClmulKey::new(&h);
+                let mut fast = GhashClmul::new(&key);
                 fast.update(&data);
                 fast.update_lengths(0, len as u64);
                 assert_eq!(fast.finalize(), soft.finalize(), "len={len}");
@@ -222,14 +293,19 @@ mod tests {
             return;
         }
         let h: [u8; 16] = rand_bytes(16, 99)[..].try_into().unwrap();
-        let data = rand_bytes(256, 123);
+        let data = rand_bytes(512, 123);
         unsafe {
-            let mut a = GhashClmul::new(&h);
+            let key = GhashClmulKey::new(&h);
+            let mut a = GhashClmul::new(&key);
             a.update(&data);
-            let mut b = GhashClmul::new(&h);
+            // A fresh key (powers not yet built) absorbing the same data in
+            // ragged pieces — mixing serial and 8-wide folds — must agree.
+            let key2 = GhashClmulKey::new(&h);
+            let mut b = GhashClmul::new(&key2);
             b.update(&data[..64]);
             b.update(&data[64..192]);
-            b.update(&data[192..]);
+            b.update(&data[192..448]);
+            b.update(&data[448..]);
             assert_eq!(a.finalize(), b.finalize());
         }
     }

@@ -5,15 +5,34 @@
 //! PCLMULQDQ) are selected at key-setup time when the CPU supports them;
 //! the portable paths are bit-for-bit equivalent (tested).
 //!
+//! **Fused one-pass kernels.** [`seal_in_place`](Gcm::seal_in_place) and
+//! [`open_in_place`](Gcm::open_in_place) make exactly one pass over the
+//! payload: on the hardware path, 8 keystream blocks come out of the
+//! AES-NI pipeline, are XORed into the buffer, and the just-produced
+//! ciphertext is folded into GHASH with one aggregated reduction per 128
+//! bytes — while the data is still in registers. Decrypt fuses the mirror
+//! order (hash the ciphertext block, *then* overwrite it with plaintext),
+//! and on tag mismatch re-applies the keystream so the buffer is restored
+//! to the untouched ciphertext — a forgery never leaves attacker-chosen
+//! plaintext behind. The portable path interleaves the T-table CTR 4
+//! blocks at a time and hashes through Shoup 4-bit tables. The original
+//! two-pass code remains as [`Gcm::seal_in_place_two_pass`] /
+//! [`Gcm::open_in_place_two_pass`] — the correctness reference the fused
+//! kernels are tested against and the "before" side of the `gcm` bench.
+//!
 //! Only 12-byte nonces are supported — that is all GCM deployments use in
 //! practice and all CryptMPI needs (the paper's Algorithm 1 nonces are
 //! `[0]_7 ‖ [last]_1 ‖ [i]_4`, and the small-message path uses random
 //! 12-byte nonces).
 
-use super::aes::{encrypt_block_soft, AesKey};
+#![allow(unsafe_code)]
+
+use super::aes::{encrypt_block_soft, encrypt_blocks_soft, AesKey};
 use super::aesni;
+#[cfg(target_arch = "x86_64")]
 use super::clmul;
-use super::ghash::{block_to_elem, GhashSoft};
+use super::ghash::{block_to_elem, GhashTable, GhashTableKey};
+use std::sync::OnceLock;
 
 /// Byte length of the GCM authentication tag.
 pub const TAG_LEN: usize = 16;
@@ -36,63 +55,80 @@ impl std::error::Error for AuthError {}
 #[cfg(target_arch = "x86_64")]
 #[derive(Clone)]
 enum Backend {
-    /// AES-NI + PCLMULQDQ.
-    Hw(aesni::AesNiKey),
-    /// Portable.
-    Soft,
+    /// AES-NI + PCLMULQDQ, with the per-key GHASH power table.
+    Hw { ni: aesni::AesNiKey, gk: clmul::GhashClmulKey },
+    /// Portable: Shoup 4-bit GHASH tables + interleaved T-table CTR.
+    Soft { gt: GhashTableKey },
 }
 
 #[cfg(not(target_arch = "x86_64"))]
 #[derive(Clone)]
 enum Backend {
-    Soft,
+    Soft { gt: GhashTableKey },
+}
+
+/// Whether `CRYPTMPI_SOFT_CRYPTO=1` forces the portable backend. Read from
+/// the environment once per process: `stream.rs` builds a fresh subkey
+/// `Gcm` per chopped message, and an env lookup per message is measurable.
+fn force_soft() -> bool {
+    static FORCE: OnceLock<bool> = OnceLock::new();
+    *FORCE.get_or_init(|| std::env::var_os("CRYPTMPI_SOFT_CRYPTO").is_some_and(|v| v == "1"))
 }
 
 /// An AES-128-GCM key, ready for sealing/opening.
 #[derive(Clone)]
 pub struct Gcm {
     key: AesKey,
-    /// Hash subkey `H = AES_K(0^128)` as a field element (soft GHASH form).
-    h: u128,
-    /// `H` as raw bytes (CLMUL form).
-    h_block: [u8; 16],
     backend: Backend,
 }
 
 impl Gcm {
     /// Derive a GCM context from a 16-byte key. Picks the hardware path if
-    /// available unless `CRYPTMPI_SOFT_CRYPTO=1` forces the portable one.
+    /// available unless `CRYPTMPI_SOFT_CRYPTO=1` forces the portable one
+    /// (the flag is cached process-wide on first use).
     pub fn new(key_bytes: &[u8; 16]) -> Self {
-        let force_soft = std::env::var_os("CRYPTMPI_SOFT_CRYPTO").is_some_and(|v| v == "1");
-        Self::with_backend(key_bytes, !force_soft)
+        Self::with_backend(key_bytes, !force_soft())
+    }
+
+    /// Derive a subkey context that inherits `parent`'s backend choice
+    /// instead of re-consulting the environment and CPU feature detection.
+    /// This is the per-message constructor of the streaming scheme: one
+    /// subkey `Gcm` is built per chopped message, so its setup cost is on
+    /// the hot path.
+    pub fn subkey_like(parent: &Self, key_bytes: &[u8; 16]) -> Self {
+        Self::with_backend(key_bytes, parent.is_hw())
     }
 
     /// Explicit backend choice (used by tests and the Bridges crypto
     /// profile, which models a slower node with software crypto).
     pub fn with_backend(key_bytes: &[u8; 16], allow_hw: bool) -> Self {
         let key = AesKey::new(key_bytes);
+        // Hash subkey H = AES_K(0^128).
         let mut h_block = [0u8; 16];
         encrypt_block_soft(&key, &mut h_block);
-        let h = block_to_elem(&h_block);
         #[cfg(target_arch = "x86_64")]
         let backend = if allow_hw && aesni::available() && clmul::available() {
-            Backend::Hw(aesni::AesNiKey::from_schedule(&key))
+            Backend::Hw {
+                ni: aesni::AesNiKey::from_schedule(&key),
+                // SAFETY: clmul::available() just held.
+                gk: unsafe { clmul::GhashClmulKey::new(&h_block) },
+            }
         } else {
-            Backend::Soft
+            Backend::Soft { gt: GhashTableKey::new(block_to_elem(&h_block)) }
         };
         #[cfg(not(target_arch = "x86_64"))]
         let backend = {
             let _ = allow_hw;
-            Backend::Soft
+            Backend::Soft { gt: GhashTableKey::new(block_to_elem(&h_block)) }
         };
-        Gcm { key, h, h_block, backend }
+        Gcm { key, backend }
     }
 
     /// Whether this context uses the hardware path.
     pub fn is_hw(&self) -> bool {
         #[cfg(target_arch = "x86_64")]
         {
-            matches!(self.backend, Backend::Hw(_))
+            matches!(self.backend, Backend::Hw { .. })
         }
         #[cfg(not(target_arch = "x86_64"))]
         {
@@ -100,11 +136,20 @@ impl Gcm {
         }
     }
 
+    /// The portable GHASH table key (panics on the hardware backend).
+    fn soft_table(&self) -> &GhashTableKey {
+        match &self.backend {
+            #[cfg(target_arch = "x86_64")]
+            Backend::Hw { .. } => unreachable!("soft_table on hardware backend"),
+            Backend::Soft { gt } => gt,
+        }
+    }
+
     /// Raw AES forward permutation under this key — used by the streaming
     /// scheme's subkey derivation `L = AES_K(V)` (paper Algorithm 1 line 4).
     pub fn aes_encrypt_block(&self, block: &mut [u8; 16]) {
         #[cfg(target_arch = "x86_64")]
-        if let Backend::Hw(ni) = &self.backend {
+        if let Backend::Hw { ni, .. } = &self.backend {
             // SAFETY: Hw variant only constructed when AES-NI is available.
             unsafe { ni.encrypt_block(block) };
             return;
@@ -120,41 +165,90 @@ impl Gcm {
         j0
     }
 
+    /// Four consecutive CTR keystream blocks (`counter .. counter+3`)
+    /// through the interleaved T-table path — the portable sweep step
+    /// shared by the fused kernels and the two-pass/restore pass.
+    fn soft_keystream4(&self, j0: &[u8; 16], counter: u32) -> [[u8; 16]; 4] {
+        let mut ks = [[0u8; 16]; 4];
+        for (i, blk) in ks.iter_mut().enumerate() {
+            *blk = *j0;
+            blk[12..16].copy_from_slice(&counter.wrapping_add(i as u32).to_be_bytes());
+        }
+        encrypt_blocks_soft(&self.key, &mut ks);
+        ks
+    }
+
+    /// One CTR keystream block (portable tail step).
+    fn soft_keystream1(&self, j0: &[u8; 16], counter: u32) -> [u8; 16] {
+        let mut blk = *j0;
+        blk[12..16].copy_from_slice(&counter.to_be_bytes());
+        encrypt_block_soft(&self.key, &mut blk);
+        blk
+    }
+
+    /// Lengths block, final GHASH output, tag mask `E_K(J0)` — the shared
+    /// tail of both portable fused kernels (mirrors `fused_hw::finish_tag`).
+    fn soft_finish_tag(
+        &self,
+        g: &mut GhashTable<'_>,
+        j0: &[u8; 16],
+        aad: usize,
+        ct: usize,
+    ) -> [u8; 16] {
+        let mut s = g.finalize_tag(aad as u64, ct as u64);
+        let mut ek_j0 = *j0;
+        encrypt_block_soft(&self.key, &mut ek_j0);
+        for (t, m) in s.iter_mut().zip(ek_j0.iter()) {
+            *t ^= m;
+        }
+        s
+    }
+
     /// CTR-mode transform starting at counter value `ctr` of `J0`'s counter
     /// field (GCM data starts at 2; `1` is reserved for the tag mask).
+    /// This is the keystream pass of the two-pass reference path — and the
+    /// restore pass of a failed fused open.
     fn ctr_xor(&self, j0: &[u8; 16], ctr: u32, data: &mut [u8]) {
         #[cfg(target_arch = "x86_64")]
-        if let Backend::Hw(ni) = &self.backend {
+        if let Backend::Hw { ni, .. } = &self.backend {
             // SAFETY: Hw variant only constructed when AES-NI is available.
             unsafe { ni.ctr_xor(j0, ctr, data) };
             return;
         }
         let mut counter = ctr;
-        for chunk in data.chunks_mut(16) {
-            let mut blk = *j0;
-            blk[12..16].copy_from_slice(&counter.to_be_bytes());
+        let mut chunks = data.chunks_exact_mut(64);
+        for chunk in &mut chunks {
+            let ks = self.soft_keystream4(j0, counter);
+            counter = counter.wrapping_add(4);
+            for (seg, blk) in chunk.chunks_exact_mut(16).zip(ks.iter()) {
+                for (b, k) in seg.iter_mut().zip(blk.iter()) {
+                    *b ^= k;
+                }
+            }
+        }
+        for chunk in chunks.into_remainder().chunks_mut(16) {
+            let blk = self.soft_keystream1(j0, counter);
             counter = counter.wrapping_add(1);
-            encrypt_block_soft(&self.key, &mut blk);
             for (b, k) in chunk.iter_mut().zip(blk.iter()) {
                 *b ^= k;
             }
         }
     }
 
-    /// GHASH(A, C) ‖ lengths, dispatching to CLMUL or soft.
+    /// GHASH(A, C) ‖ lengths, dispatching to CLMUL or the 4-bit tables.
     fn ghash(&self, aad: &[u8], ct: &[u8]) -> [u8; 16] {
         #[cfg(target_arch = "x86_64")]
-        if matches!(self.backend, Backend::Hw(_)) {
+        if let Backend::Hw { gk, .. } = &self.backend {
             // SAFETY: Hw implies clmul::available() held at construction.
             unsafe {
-                let mut g = clmul::GhashClmul::new(&self.h_block);
+                let mut g = clmul::GhashClmul::new(gk);
                 g.update(aad);
                 g.update(ct);
                 g.update_lengths(aad.len() as u64, ct.len() as u64);
                 return g.finalize();
             }
         }
-        let mut g = GhashSoft::new(self.h);
+        let mut g = GhashTable::new(self.soft_table());
         g.update(aad);
         g.update(ct);
         g.update_lengths(aad.len() as u64, ct.len() as u64);
@@ -174,8 +268,128 @@ impl Gcm {
     /// Encrypt `plaintext` in place and return the 16-byte tag.
     ///
     /// This is the zero-copy hot-path primitive: the coordinator encrypts
-    /// segment buffers in place and appends the tag itself.
+    /// segment buffers in place and appends the tag itself. It runs the
+    /// fused one-pass kernel: CTR keystream generation, the XOR into the
+    /// buffer, and the GHASH fold over the resulting ciphertext happen in
+    /// a single sweep (bit-for-bit equal to
+    /// [`seal_in_place_two_pass`](Self::seal_in_place_two_pass), tested).
     pub fn seal_in_place(
+        &self,
+        nonce: &[u8; NONCE_LEN],
+        aad: &[u8],
+        data: &mut [u8],
+    ) -> [u8; 16] {
+        let j0 = Self::j0(nonce);
+        #[cfg(target_arch = "x86_64")]
+        if let Backend::Hw { ni, gk } = &self.backend {
+            // SAFETY: Hw variant implies AES-NI + PCLMULQDQ + SSSE3.
+            return unsafe { fused_hw::seal(ni, gk, &j0, aad, data) };
+        }
+        self.seal_fused_soft(&j0, aad, data)
+    }
+
+    /// Decrypt `data` (ciphertext without tag) in place after verifying
+    /// `tag`. Runs the fused one-pass kernel in hash-then-decrypt order:
+    /// each ciphertext block is folded into GHASH *before* it is
+    /// overwritten with plaintext. If the tag does not verify, the
+    /// keystream is re-applied so the buffer again holds the untouched
+    /// ciphertext — a tampered message never yields attacker-controlled
+    /// plaintext to the caller (same observable behaviour as the two-pass
+    /// verify-before-decrypt reference).
+    pub fn open_in_place(
+        &self,
+        nonce: &[u8; NONCE_LEN],
+        aad: &[u8],
+        data: &mut [u8],
+        tag: &[u8; TAG_LEN],
+    ) -> Result<(), AuthError> {
+        let j0 = Self::j0(nonce);
+        #[cfg(target_arch = "x86_64")]
+        let expect = if let Backend::Hw { ni, gk } = &self.backend {
+            // SAFETY: Hw variant implies AES-NI + PCLMULQDQ + SSSE3.
+            unsafe { fused_hw::open_tag(ni, gk, &j0, aad, data) }
+        } else {
+            self.open_fused_soft(&j0, aad, data)
+        };
+        #[cfg(not(target_arch = "x86_64"))]
+        let expect = self.open_fused_soft(&j0, aad, data);
+        if !ct_eq(&expect, tag) {
+            // Restore: XOR the keystream back so the buffer holds the
+            // original ciphertext, exactly as if it had never been touched.
+            self.ctr_xor(&j0, 2, data);
+            return Err(AuthError);
+        }
+        Ok(())
+    }
+
+    /// Fused portable seal: 4 interleaved T-table CTR blocks per sweep
+    /// step, each ciphertext block folded into the 4-bit-table GHASH as
+    /// it is produced.
+    fn seal_fused_soft(&self, j0: &[u8; 16], aad: &[u8], data: &mut [u8]) -> [u8; 16] {
+        let gt = self.soft_table();
+        let mut g = GhashTable::new(gt);
+        g.update(aad);
+        let mut counter = 2u32;
+        let total = data.len();
+        let mut chunks = data.chunks_exact_mut(64);
+        for chunk in &mut chunks {
+            let ks = self.soft_keystream4(j0, counter);
+            counter = counter.wrapping_add(4);
+            for (seg, blk) in chunk.chunks_exact_mut(16).zip(ks.iter()) {
+                let mut ct = [0u8; 16];
+                for (c, (b, k)) in ct.iter_mut().zip(seg.iter().zip(blk.iter())) {
+                    *c = b ^ k;
+                }
+                seg.copy_from_slice(&ct);
+                g.absorb_block(&ct);
+            }
+        }
+        for chunk in chunks.into_remainder().chunks_mut(16) {
+            let blk = self.soft_keystream1(j0, counter);
+            counter = counter.wrapping_add(1);
+            for (b, k) in chunk.iter_mut().zip(blk.iter()) {
+                *b ^= k;
+            }
+            g.update(chunk);
+        }
+        self.soft_finish_tag(&mut g, j0, aad.len(), total)
+    }
+
+    /// Fused portable open: mirror order — fold each ciphertext block into
+    /// GHASH, then overwrite it with plaintext. Returns the expected tag;
+    /// the caller compares and restores on mismatch.
+    fn open_fused_soft(&self, j0: &[u8; 16], aad: &[u8], data: &mut [u8]) -> [u8; 16] {
+        let gt = self.soft_table();
+        let mut g = GhashTable::new(gt);
+        g.update(aad);
+        let mut counter = 2u32;
+        let total = data.len();
+        let mut chunks = data.chunks_exact_mut(64);
+        for chunk in &mut chunks {
+            let ks = self.soft_keystream4(j0, counter);
+            counter = counter.wrapping_add(4);
+            for (seg, blk) in chunk.chunks_exact_mut(16).zip(ks.iter()) {
+                g.absorb_block(seg[..].try_into().unwrap());
+                for (b, k) in seg.iter_mut().zip(blk.iter()) {
+                    *b ^= k;
+                }
+            }
+        }
+        for chunk in chunks.into_remainder().chunks_mut(16) {
+            g.update(chunk);
+            let blk = self.soft_keystream1(j0, counter);
+            counter = counter.wrapping_add(1);
+            for (b, k) in chunk.iter_mut().zip(blk.iter()) {
+                *b ^= k;
+            }
+        }
+        self.soft_finish_tag(&mut g, j0, aad.len(), total)
+    }
+
+    /// The original two-pass seal (CTR sweep, then a separate GHASH
+    /// sweep). Kept as the correctness reference for the fused kernel and
+    /// as the "before" side of the `gcm` bench runner.
+    pub fn seal_in_place_two_pass(
         &self,
         nonce: &[u8; NONCE_LEN],
         aad: &[u8],
@@ -186,11 +400,9 @@ impl Gcm {
         self.tag(&j0, aad, data)
     }
 
-    /// Decrypt `data` (ciphertext without tag) in place after verifying
-    /// `tag`. On failure the buffer is left *undecrypted garbage-free*:
-    /// the tag is checked over the ciphertext before any decryption, so a
-    /// tampered message never yields attacker-controlled plaintext.
-    pub fn open_in_place(
+    /// The original two-pass open: verify the tag over the ciphertext,
+    /// then decrypt. See [`seal_in_place_two_pass`](Self::seal_in_place_two_pass).
+    pub fn open_in_place_two_pass(
         &self,
         nonce: &[u8; NONCE_LEN],
         aad: &[u8],
@@ -230,6 +442,132 @@ impl Gcm {
         let tag: [u8; TAG_LEN] = ct_and_tag[split..].try_into().unwrap();
         self.open_in_place(nonce, aad, &mut data, &tag)?;
         Ok(data)
+    }
+}
+
+/// The fused one-pass hardware kernel: 8-block AES-NI CTR interleave with
+/// the ciphertext folded into the 8-way aggregated CLMUL GHASH while the
+/// blocks are still in registers. One load and one store per payload block
+/// — the buffer is traversed exactly once.
+#[cfg(target_arch = "x86_64")]
+mod fused_hw {
+    use super::super::aesni::{self, AesNiKey};
+    use super::super::clmul::{GhashClmul, GhashClmulKey};
+    use core::arch::x86_64::*;
+
+    /// Seal: keystream → XOR (plaintext becomes ciphertext) → fold.
+    ///
+    /// # Safety
+    /// Caller must ensure AES-NI, PCLMULQDQ and SSSE3 are available.
+    #[target_feature(enable = "aes", enable = "pclmulqdq", enable = "ssse3", enable = "sse2")]
+    pub unsafe fn seal(
+        ni: &AesNiKey,
+        gk: &GhashClmulKey,
+        j0: &[u8; 16],
+        aad: &[u8],
+        data: &mut [u8],
+    ) -> [u8; 16] {
+        let mut g = GhashClmul::new(gk);
+        g.update(aad);
+        let prefix = aesni::ctr_prefix(j0);
+        let mut counter = 2u32;
+        let total = data.len();
+        let mut chunks = data.chunks_exact_mut(128);
+        for chunk in &mut chunks {
+            let ks = ni.keystream8(prefix, counter);
+            counter = counter.wrapping_add(8);
+            let mut ct = [_mm_setzero_si128(); 8];
+            for (i, (slot, k)) in ct.iter_mut().zip(ks.iter()).enumerate() {
+                let p = chunk.as_mut_ptr().add(16 * i) as *mut __m128i;
+                let c = _mm_xor_si128(_mm_loadu_si128(p), *k);
+                _mm_storeu_si128(p, c);
+                *slot = c;
+            }
+            g.fold8(&ct);
+        }
+        let rest = chunks.into_remainder();
+        for part in rest.chunks_mut(16) {
+            let ks = ni.keystream1(prefix, counter);
+            counter = counter.wrapping_add(1);
+            let mut ksb = [0u8; 16];
+            _mm_storeu_si128(ksb.as_mut_ptr() as *mut __m128i, ks);
+            let mut pad = [0u8; 16];
+            for (j, byte) in part.iter_mut().enumerate() {
+                *byte ^= ksb[j];
+                pad[j] = *byte;
+            }
+            g.fold1(_mm_loadu_si128(pad.as_ptr() as *const __m128i));
+        }
+        finish_tag(ni, &mut g, j0, aad.len() as u64, total as u64)
+    }
+
+    /// Open: fold the ciphertext block, *then* overwrite it with
+    /// plaintext — the mirror order that keeps the single pass sound when
+    /// hashing and decrypting in place. Returns the expected tag; the
+    /// caller compares (and restores the buffer on mismatch).
+    ///
+    /// # Safety
+    /// Caller must ensure AES-NI, PCLMULQDQ and SSSE3 are available.
+    #[target_feature(enable = "aes", enable = "pclmulqdq", enable = "ssse3", enable = "sse2")]
+    pub unsafe fn open_tag(
+        ni: &AesNiKey,
+        gk: &GhashClmulKey,
+        j0: &[u8; 16],
+        aad: &[u8],
+        data: &mut [u8],
+    ) -> [u8; 16] {
+        let mut g = GhashClmul::new(gk);
+        g.update(aad);
+        let prefix = aesni::ctr_prefix(j0);
+        let mut counter = 2u32;
+        let total = data.len();
+        let mut chunks = data.chunks_exact_mut(128);
+        for chunk in &mut chunks {
+            let p = chunk.as_mut_ptr() as *mut __m128i;
+            let ct: [__m128i; 8] = core::array::from_fn(|i| _mm_loadu_si128(p.add(i)));
+            g.fold8(&ct);
+            let ks = ni.keystream8(prefix, counter);
+            counter = counter.wrapping_add(8);
+            for (i, (c, k)) in ct.iter().zip(ks.iter()).enumerate() {
+                _mm_storeu_si128(p.add(i), _mm_xor_si128(*c, *k));
+            }
+        }
+        let rest = chunks.into_remainder();
+        for part in rest.chunks_mut(16) {
+            let mut pad = [0u8; 16];
+            pad[..part.len()].copy_from_slice(part);
+            g.fold1(_mm_loadu_si128(pad.as_ptr() as *const __m128i));
+            let ks = ni.keystream1(prefix, counter);
+            counter = counter.wrapping_add(1);
+            let mut ksb = [0u8; 16];
+            _mm_storeu_si128(ksb.as_mut_ptr() as *mut __m128i, ks);
+            for (j, byte) in part.iter_mut().enumerate() {
+                *byte ^= ksb[j];
+            }
+        }
+        finish_tag(ni, &mut g, j0, aad.len() as u64, total as u64)
+    }
+
+    /// Lengths block, final GHASH output, tag mask `E_K(J0)`.
+    ///
+    /// # Safety
+    /// Caller must ensure AES-NI, PCLMULQDQ and SSSE3 are available.
+    #[target_feature(enable = "aes", enable = "pclmulqdq", enable = "ssse3", enable = "sse2")]
+    unsafe fn finish_tag(
+        ni: &AesNiKey,
+        g: &mut GhashClmul<'_>,
+        j0: &[u8; 16],
+        aad_bytes: u64,
+        ct_bytes: u64,
+    ) -> [u8; 16] {
+        g.update_lengths(aad_bytes, ct_bytes);
+        let mut tag = g.finalize();
+        let mut ek_j0 = *j0;
+        ni.encrypt_block(&mut ek_j0);
+        for (t, m) in tag.iter_mut().zip(ek_j0.iter()) {
+            *t ^= m;
+        }
+        tag
     }
 }
 
@@ -299,6 +637,13 @@ mod tests {
         },
     ];
 
+    /// The awkward payload shapes the fused kernels must handle: empty,
+    /// sub-block, block-aligned, one past, both sides of the 64-byte
+    /// (portable 4-wide) and 128-byte (hardware 8-wide) sweep widths, and
+    /// a segment larger than the paper's 512 KB chopping size.
+    const AWKWARD_LENS: &[usize] =
+        &[0, 1, 15, 16, 17, 63, 64, 65, 100, 127, 128, 129, 1024, 65536, 520 * 1024 + 7];
+
     fn check_vectors(hw: bool) {
         for (i, tv) in VECTORS.iter().enumerate() {
             let key: [u8; 16] = hex(tv.key)[..].try_into().unwrap();
@@ -314,6 +659,13 @@ mod tests {
             assert_eq!(sealed[pt.len()..], hex(tv.tag)[..], "tc{i} tag (hw={hw})");
             let opened = gcm.open(&nonce, &aad, &sealed).expect("valid ct must open");
             assert_eq!(opened, pt, "tc{i} roundtrip");
+            // The two-pass reference must hit the same known answers.
+            let mut buf = pt.clone();
+            let tag = gcm.seal_in_place_two_pass(&nonce, &aad, &mut buf);
+            assert_eq!(buf[..], hex(tv.ct)[..], "tc{i} two-pass ct");
+            assert_eq!(tag[..], hex(tv.tag)[..], "tc{i} two-pass tag");
+            gcm.open_in_place_two_pass(&nonce, &aad, &mut buf, &tag).expect("two-pass open");
+            assert_eq!(buf, pt, "tc{i} two-pass roundtrip");
         }
     }
 
@@ -327,6 +679,17 @@ mod tests {
         check_vectors(true);
     }
 
+    fn xorshift_bytes(len: usize, st: &mut u64) -> Vec<u8> {
+        (0..len)
+            .map(|_| {
+                *st ^= *st << 13;
+                *st ^= *st >> 7;
+                *st ^= *st << 17;
+                *st as u8
+            })
+            .collect()
+    }
+
     #[test]
     fn hw_and_soft_agree_on_random_messages() {
         let key = [0x3cu8; 16];
@@ -336,17 +699,84 @@ mod tests {
             return;
         }
         let mut st = 7u64;
-        for len in [0usize, 1, 15, 16, 17, 100, 1024, 65536] {
-            let data: Vec<u8> = (0..len)
-                .map(|_| {
-                    st ^= st << 13;
-                    st ^= st >> 7;
-                    st ^= st << 17;
-                    st as u8
-                })
-                .collect();
+        for &len in AWKWARD_LENS {
+            let data = xorshift_bytes(len, &mut st);
             let nonce = [9u8; 12];
             assert_eq!(hw.seal(&nonce, b"aad", &data), soft.seal(&nonce, b"aad", &data), "len={len}");
+        }
+    }
+
+    /// Property: on both backends, the fused one-pass kernels are
+    /// bit-for-bit equivalent to the two-pass reference — same ciphertext,
+    /// same tag, same accepted plaintext — across every awkward shape and
+    /// varying AAD lengths.
+    #[test]
+    fn fused_matches_two_pass_reference() {
+        let mut st = 0xfeedu64;
+        for hw in [true, false] {
+            let gcm = Gcm::with_backend(&[0x77u8; 16], hw);
+            if hw && !gcm.is_hw() {
+                continue;
+            }
+            for (i, &len) in AWKWARD_LENS.iter().enumerate() {
+                let pt = xorshift_bytes(len, &mut st);
+                let aad = xorshift_bytes(i * 7 % 40, &mut st);
+                let nonce: [u8; 12] = xorshift_bytes(12, &mut st)[..].try_into().unwrap();
+
+                let mut fused = pt.clone();
+                let tag_fused = gcm.seal_in_place(&nonce, &aad, &mut fused);
+                let mut twopass = pt.clone();
+                let tag_two = gcm.seal_in_place_two_pass(&nonce, &aad, &mut twopass);
+                assert_eq!(fused, twopass, "ct hw={hw} len={len}");
+                assert_eq!(tag_fused, tag_two, "tag hw={hw} len={len}");
+
+                gcm.open_in_place(&nonce, &aad, &mut fused, &tag_fused).expect("fused open");
+                assert_eq!(fused, pt, "fused roundtrip hw={hw} len={len}");
+                gcm.open_in_place_two_pass(&nonce, &aad, &mut twopass, &tag_two)
+                    .expect("two-pass open");
+                assert_eq!(twopass, pt, "two-pass roundtrip hw={hw} len={len}");
+            }
+        }
+    }
+
+    /// A failed fused open must restore the buffer to the untouched
+    /// ciphertext (the same observable state the verify-before-decrypt
+    /// two-pass reference leaves behind) — never attacker-chosen plaintext.
+    #[test]
+    fn failed_open_restores_ciphertext() {
+        for hw in [true, false] {
+            let gcm = Gcm::with_backend(&[0x55u8; 16], hw);
+            if hw && !gcm.is_hw() {
+                continue;
+            }
+            for len in [1usize, 16, 65, 129, 1000] {
+                let nonce = [3u8; 12];
+                let pt = vec![0xc3u8; len];
+                let mut buf = pt.clone();
+                let mut tag = gcm.seal_in_place(&nonce, b"a", &mut buf);
+                let ct = buf.clone();
+                tag[0] ^= 1;
+                assert!(gcm.open_in_place(&nonce, b"a", &mut buf, &tag).is_err());
+                assert_eq!(buf, ct, "must restore ciphertext (hw={hw} len={len})");
+            }
+        }
+    }
+
+    /// `subkey_like` inherits the parent's backend and produces the same
+    /// bytes as an explicitly constructed context for that backend.
+    #[test]
+    fn subkey_like_inherits_backend() {
+        let sub_key = [0x42u8; 16];
+        let nonce = [1u8; 12];
+        for hw in [true, false] {
+            let parent = Gcm::with_backend(&[0x10u8; 16], hw);
+            let sub = Gcm::subkey_like(&parent, &sub_key);
+            assert_eq!(sub.is_hw(), parent.is_hw(), "backend must be inherited");
+            let explicit = Gcm::with_backend(&sub_key, hw);
+            assert_eq!(
+                sub.seal(&nonce, b"", b"subkey message"),
+                explicit.seal(&nonce, b"", b"subkey message")
+            );
         }
     }
 

@@ -1,12 +1,53 @@
 //! GHASH — the GF(2^128) universal hash of GCM (NIST SP 800-38D §6.3/§6.4).
 //!
-//! This module holds the portable software path: field elements are `u128`
-//! values loaded big-endian from 16-byte blocks, multiplied with the
-//! bit-serial right-shift algorithm of SP 800-38D Algorithm 1. It is the
-//! correctness reference for the PCLMULQDQ path in [`super::clmul`].
+//! Two portable implementations live here: field elements are `u128`
+//! values loaded big-endian from 16-byte blocks.
+//!
+//! * [`GhashSoft`] — the bit-serial right-shift algorithm of SP 800-38D
+//!   Algorithm 1 (128 iterations per block). It is the *correctness
+//!   reference* for everything else: the PCLMULQDQ path in
+//!   [`super::clmul`] and the table-driven path below.
+//! * [`GhashTableKey`] / [`GhashTable`] — Shoup-style 4-bit precomputed
+//!   tables: 16 multiples of `H` plus a key-independent reduction table,
+//!   32 table lookups per block instead of 128 shift/xor rounds. This is
+//!   the portable *hot* path used by the fused GCM kernel; its setup is a
+//!   handful of shifts and xors, cheap enough for per-message subkeys.
 
 /// The GCM reduction polynomial constant `R = 11100001 ‖ 0^120`.
 const R: u128 = 0xE1u128 << 120;
+
+/// Multiply a field element by `x` (one right shift with conditional
+/// reduction — SP 800-38D's `V` update step).
+#[inline]
+const fn mul_x(v: u128) -> u128 {
+    let shifted = v >> 1;
+    if v & 1 == 1 {
+        shifted ^ R
+    } else {
+        shifted
+    }
+}
+
+/// Key-independent reduction table for the 4-bit Shoup walk:
+/// `RED4[b] = e(b) · x^4` where `e(b)` is the element whose four lowest
+/// representation bits are `b` (coefficients `x^124..x^127`). Shifting the
+/// accumulator right by a nibble pushes those coefficients past `x^127`;
+/// this table folds them back per the GCM polynomial.
+static RED4: [u128; 16] = {
+    let mut t = [0u128; 16];
+    let mut b = 0usize;
+    while b < 16 {
+        let mut z = b as u128;
+        let mut i = 0;
+        while i < 4 {
+            z = mul_x(z);
+            i += 1;
+        }
+        t[b] = z;
+        b += 1;
+    }
+    t
+};
 
 /// Multiply two field elements per SP 800-38D Algorithm 1 (`X • Y`).
 pub fn gf128_mul(x: u128, y: u128) -> u128 {
@@ -74,6 +115,93 @@ impl GhashSoft {
     }
 }
 
+/// Precomputed 4-bit Shoup table for one hash subkey `H`: `m[b] = e(b)·H`
+/// where `e(b)` places the four bits of `b` at coefficients `x^0..x^3`
+/// (so `e(8)` is the multiplicative identity and `m[8] = H`).
+///
+/// Setup is 3 `mul_x` shifts plus a dozen xors — per-message subkey
+/// construction stays cheap (the whole table is 256 bytes).
+#[derive(Clone)]
+pub struct GhashTableKey {
+    m: [u128; 16],
+}
+
+impl GhashTableKey {
+    pub fn new(h: u128) -> Self {
+        let mut m = [0u128; 16];
+        // Single-bit entries by repeated multiply-by-x from H = e(8)·H …
+        m[8] = h;
+        m[4] = mul_x(m[8]);
+        m[2] = mul_x(m[4]);
+        m[1] = mul_x(m[2]);
+        // … composite entries by linearity.
+        for b in [3usize, 5, 6, 7, 9, 10, 11, 12, 13, 14, 15] {
+            let low = b & b.wrapping_neg(); // lowest set bit
+            m[b] = m[low] ^ m[b ^ low];
+        }
+        GhashTableKey { m }
+    }
+
+    /// `x · H` via the 4-bit table walk: Horner over the 32 nibbles of `x`
+    /// from the lowest representation nibble (highest power of `x^4`) up,
+    /// each step one reduction lookup and one multiple lookup.
+    #[inline]
+    pub fn mul(&self, x: u128) -> u128 {
+        let mut z = 0u128;
+        let mut shift = 0u32;
+        while shift < 128 {
+            z = (z >> 4) ^ RED4[(z & 0xF) as usize];
+            z ^= self.m[((x >> shift) & 0xF) as usize];
+            shift += 4;
+        }
+        z
+    }
+}
+
+/// Incremental GHASH accumulator over a precomputed [`GhashTableKey`] —
+/// same API shape as [`GhashSoft`], used by the fused portable GCM kernel.
+pub struct GhashTable<'k> {
+    key: &'k GhashTableKey,
+    y: u128,
+}
+
+impl<'k> GhashTable<'k> {
+    pub fn new(key: &'k GhashTableKey) -> Self {
+        GhashTable { key, y: 0 }
+    }
+
+    /// Absorb one full 16-byte block (no padding needed — hot path).
+    #[inline]
+    pub fn absorb_block(&mut self, block: &[u8; 16]) {
+        self.y = self.key.mul(self.y ^ u128::from_be_bytes(*block));
+    }
+
+    /// Absorb `data` with the final partial block zero-padded (same
+    /// contract as [`GhashSoft::update`]).
+    pub fn update(&mut self, data: &[u8]) {
+        for chunk in data.chunks(16) {
+            self.y = self.key.mul(self.y ^ block_to_elem(chunk));
+        }
+    }
+
+    /// Absorb the GCM length block `[len(A)]_64 ‖ [len(C)]_64` (bit lengths).
+    pub fn update_lengths(&mut self, aad_bytes: u64, ct_bytes: u64) {
+        let block = ((aad_bytes as u128 * 8) << 64) | (ct_bytes as u128 * 8);
+        self.y = self.key.mul(self.y ^ block);
+    }
+
+    pub fn finalize(&self) -> [u8; 16] {
+        self.y.to_be_bytes()
+    }
+
+    /// Absorb the length block and finalize in one step (the tail of every
+    /// fused-kernel sweep).
+    pub fn finalize_tag(&mut self, aad_bytes: u64, ct_bytes: u64) -> [u8; 16] {
+        self.update_lengths(aad_bytes, ct_bytes);
+        self.finalize()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -128,6 +256,61 @@ mod tests {
             0xf8, 0x85,
         ];
         assert_eq!(g.finalize(), expect);
+    }
+
+    /// The 4-bit table multiply must agree with the bit-serial reference
+    /// for random elements (including the identity and all-ones edges).
+    #[test]
+    fn table_mul_matches_bit_serial() {
+        let mut st = 0xA076_1D64_78BD_642Fu128;
+        let mut next = move || {
+            st = st.wrapping_mul(0x2545F4914F6CDD1D).wrapping_add(0x9E3779B9);
+            st ^ (st << 64) ^ (st >> 17)
+        };
+        for _ in 0..200 {
+            let (h, x) = (next(), next());
+            let key = GhashTableKey::new(h);
+            assert_eq!(key.mul(x), gf128_mul(x, h), "h={h:032x} x={x:032x}");
+        }
+        let one = 1u128 << 127;
+        let key = GhashTableKey::new(one);
+        for x in [0u128, 1, one, u128::MAX] {
+            assert_eq!(key.mul(x), x, "x·1 == x");
+        }
+    }
+
+    /// The table-driven accumulator produces the same digest as GhashSoft
+    /// over awkward byte lengths (partial tails, empty input).
+    #[test]
+    fn table_accumulator_matches_soft() {
+        let h = 0x66e94bd4_ef8a2c3b_884cfa59_ca342b2eu128;
+        let key = GhashTableKey::new(h);
+        for len in [0usize, 1, 15, 16, 17, 63, 64, 65, 127, 128, 129, 1000] {
+            let data: Vec<u8> = (0..len).map(|i| (i * 31 + 7) as u8).collect();
+            let mut soft = GhashSoft::new(h);
+            soft.update(b"aad bytes");
+            soft.update(&data);
+            soft.update_lengths(9, len as u64);
+            let mut tab = GhashTable::new(&key);
+            tab.update(b"aad bytes");
+            tab.update(&data);
+            tab.update_lengths(9, len as u64);
+            assert_eq!(tab.finalize(), soft.finalize(), "len={len}");
+        }
+    }
+
+    /// `absorb_block` is the block-aligned fast path of `update`.
+    #[test]
+    fn absorb_block_matches_update() {
+        let key = GhashTableKey::new(0x1234_5678_9abc_def0_0fed_cba9_8765_4321u128);
+        let data = [0x5au8; 64];
+        let mut a = GhashTable::new(&key);
+        a.update(&data);
+        let mut b = GhashTable::new(&key);
+        for chunk in data.chunks_exact(16) {
+            b.absorb_block(chunk.try_into().unwrap());
+        }
+        assert_eq!(a.finalize(), b.finalize());
     }
 
     #[test]

@@ -1,8 +1,11 @@
 //! Cryptographic substrate — everything CryptMPI needs, from scratch.
 //!
-//! * [`aes`] / [`aesni`] — AES-128 block cipher (portable + AES-NI).
-//! * [`ghash`] / [`clmul`] — GHASH in GF(2^128) (portable + PCLMULQDQ).
-//! * [`gcm`] — AES-128-GCM authenticated encryption (SP 800-38D).
+//! * [`aes`] / [`aesni`] — AES-128 block cipher (portable T-tables with
+//!   N-wide interleave + AES-NI).
+//! * [`ghash`] / [`clmul`] — GHASH in GF(2^128) (bit-serial reference,
+//!   Shoup 4-bit tables, PCLMULQDQ with 8-wide aggregated reduction).
+//! * [`gcm`] — AES-128-GCM authenticated encryption (SP 800-38D) with
+//!   fused one-pass seal/open kernels (two-pass kept as the reference).
 //! * [`stream`] — the paper's Algorithm 1: chopped streaming AE with
 //!   Tink-style subkey derivation, plus the wire header codec.
 //! * [`sha256`] — SHA-256 and MGF1 (for OAEP).

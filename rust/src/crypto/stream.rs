@@ -8,6 +8,12 @@
 //! Small messages are sealed directly under `K2` with a random 12-byte
 //! nonce (key separation — see the module tests for the §IV forgery that
 //! breaks the single-key variant).
+//!
+//! Every segment seal/open here rides the fused one-pass GCM kernels
+//! (`Gcm::seal_in_place` / `Gcm::open_in_place`): the zero-copy chopped
+//! pipeline — `seal_segment`/`seal_chunk` on the sender,
+//! `open_segment`/`open_chunk_into` on the receiver — therefore touches
+//! each payload byte exactly once per crypto operation.
 
 use super::gcm::{AuthError, Gcm, NONCE_LEN, TAG_LEN};
 use super::rand::secure_array;
@@ -149,7 +155,10 @@ impl StreamSealer {
         // final segments empty for adversarial (m, nsegs) combinations;
         // the receiver derives count from (m, s), so the sender must too.
         let nsegs = segment_count(msg_len as u64, seg_size).expect("nonempty");
-        let sub = Gcm::new(&derive_subkey(k1, &seed));
+        // Subkey setup is per-message: inherit the parent's backend choice
+        // (no env lookup, no CPU re-detection) and let the GHASH power
+        // schedule build lazily on the first ≥128-byte segment.
+        let sub = Gcm::subkey_like(k1, &derive_subkey(k1, &seed));
         let header =
             Header { opcode: Opcode::Chopped, seed, msg_len: msg_len as u64, seg_size };
         StreamSealer { sub, header, nsegs }
@@ -231,7 +240,8 @@ impl StreamOpener {
             return Err(AuthError);
         }
         let nsegs = segment_count(header.msg_len, header.seg_size)?;
-        let sub = Gcm::new(&derive_subkey(k1, &header.seed));
+        // Same cheap per-message subkey construction as the sealer.
+        let sub = Gcm::subkey_like(k1, &derive_subkey(k1, &header.seed));
         Ok(StreamOpener {
             sub,
             msg_len: header.msg_len,

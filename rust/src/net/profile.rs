@@ -4,9 +4,11 @@
 //! Network constants for Noleland come from the paper's own fitted Table I;
 //! the multi-thread encryption scaling ratios (B/A in the max-rate model)
 //! come from Table II. Single-thread crypto *rates* are not copied from the
-//! paper — they are calibrated from real measurements on this host
-//! ([`crate::vtime::calib`]) so the simulation stays grounded in real
-//! hardware; the profile only stores scaling shape and relative factors.
+//! paper — they are calibrated from real measurements of the fused
+//! one-pass AES-GCM kernel on this host ([`crate::vtime::calib`]) so the
+//! simulation stays grounded in the hardware and the code path the
+//! cluster actually runs; the profile only stores scaling shape and
+//! relative factors.
 
 use crate::vtime::calib::CryptoCalibration;
 
