@@ -3,10 +3,18 @@
 //! m-byte halos with its 2·D neighbors via non-blocking sends, and closes
 //! the round with `MPI_Waitall`. The compute load is tuned so that for
 //! unencrypted MPI it is about p% of total time, exactly as in the paper.
+//!
+//! The 2-D kernel owns a **real byte grid** and exchanges its halos as
+//! derived datatypes (DESIGN.md §10): row bands are `Contiguous` views,
+//! column halos are `Vector{count: rows, blocklen, stride: row_pitch}`
+//! views straight over the grid — gathered into the seal sweep and
+//! scattered out of the open sweep with no pack buffer, exactly the
+//! NAS BT/SP-style strided exchange the datatype engine exists for. The
+//! 3-D/4-D kernels keep the flat contiguous halo buffers.
 
 use crate::coordinator::{run_cluster, ClusterConfig, SecurityMode};
 use crate::crypto::rand::SimRng;
-use crate::mpi::ClusterReport;
+use crate::mpi::{ClusterReport, Datatype};
 use crate::net::SystemProfile;
 
 /// Stencil dimensionality (5-point / 7-point / 9-point patterns).
@@ -69,6 +77,20 @@ fn neighbors(rank: usize, side: usize, d: usize) -> Vec<usize> {
     out
 }
 
+/// Geometry of the 2-D byte grid a rank owns, for halo size `m`:
+/// `(rows, row_pitch, halo_width)`. The grid is `rows × row_pitch` bytes
+/// (= 2·m); a row band of `rows/2` rows (= the first/last m bytes, a
+/// contiguous view) is exchanged along axis 0, a column of `halo_width`
+/// bytes × `rows` (a strided `Vector` view) along axis 1 — every halo is
+/// exactly `m` logical bytes, whichever axis it crosses. Halo sizes not
+/// divisible by 64 degrade to a single-row grid whose "column" is one
+/// contiguous run (the degenerate-vector path).
+fn grid_2d(m: usize) -> (usize, usize, usize) {
+    let rows = if m >= 64 && m % 64 == 0 { 64 } else { 1 };
+    let width = m / rows;
+    (rows, 2 * width, width)
+}
+
 #[derive(Debug, Clone)]
 pub struct StencilResult {
     /// Average per-rank communication time, seconds.
@@ -101,28 +123,72 @@ pub fn run_stencil(
     let cfg = ClusterConfig::new(ranks, ranks_per_node, profile.clone(), mode);
     let (_, report) = run_cluster(&cfg, move |rank| {
         let me = rank.id();
-        let nbrs = neighbors(me, side, d);
-        let mut halo = vec![0u8; msg_bytes];
-        SimRng::new(me as u64).fill(&mut halo);
         // Start aligned, as the MPI original would after setup.
         rank.barrier();
-        for round in 0..rounds {
-            // The "matrix multiplications" of the paper's kernel: charged
-            // in virtual time (the real-PJRT variant lives in the
-            // stencil_app example).
-            rank.compute_ns(compute_ns_per_round);
-            let tag = (round % 1024) as u64;
-            let sends: Vec<_> = nbrs.iter().map(|&nb| rank.isend(nb, tag, &halo)).collect();
-            let recvs: Vec<_> = nbrs.iter().map(|&nb| rank.irecv(nb, tag)).collect();
-            let msgs = rank.waitall_recv(recvs);
-            debug_assert!(msgs.iter().all(|m| m.len() == msg_bytes));
-            rank.waitall_send(sends);
-        }
-        // Close with a global halo checksum over the collectives layer:
-        // every rank must arrive at the bit-identical total (the
-        // broadcast phase distributes one root's bytes, so divergence
-        // here means a collective bug).
-        let local: f64 = halo.iter().map(|&b| b as f64).sum();
+        let local: f64 = if dim == StencilDim::D2 {
+            // The real 2-D grid: halos are datatype views over it.
+            let (rows, pitch, width) = grid_2d(msg_bytes);
+            let glen = rows * pitch;
+            let mut grid = vec![0u8; glen];
+            SimRng::new(me as u64).fill(&mut grid);
+            let mut ghost = vec![0u8; glen];
+            let row_dt = Datatype::Contiguous(msg_bytes);
+            let col_dt = Datatype::vector(rows, width, pitch);
+            let c = coords(me, side, 2);
+            // (neighbor, halo offset into grid/ghost, datatype) per side:
+            // north/south exchange the top/bottom row bands, west/east
+            // the first/last columns.
+            let mut dirs: Vec<(usize, usize, &Datatype)> = Vec::new();
+            if c[0] > 0 {
+                dirs.push((rank_of(&[c[0] - 1, c[1]], side), 0, &row_dt));
+            }
+            if c[0] + 1 < side {
+                dirs.push((rank_of(&[c[0] + 1, c[1]], side), glen - msg_bytes, &row_dt));
+            }
+            if c[1] > 0 {
+                dirs.push((rank_of(&[c[0], c[1] - 1], side), 0, &col_dt));
+            }
+            if c[1] + 1 < side {
+                dirs.push((rank_of(&[c[0], c[1] + 1], side), pitch - width, &col_dt));
+            }
+            for round in 0..rounds {
+                // The "matrix multiplications" of the paper's kernel:
+                // charged in virtual time (the real-PJRT variant lives in
+                // the stencil_app example).
+                rank.compute_ns(compute_ns_per_round);
+                let tag = (round % 1024) as u64;
+                let sends: Vec<_> = dirs
+                    .iter()
+                    .map(|&(nb, off, dt)| rank.isend_dt(nb, tag, &grid[off..], dt))
+                    .collect();
+                let recvs: Vec<_> = dirs.iter().map(|&(nb, _, _)| rank.irecv_dt(nb, tag)).collect();
+                for (req, &(_, off, dt)) in recvs.into_iter().zip(dirs.iter()) {
+                    let got = rank.wait_recv_dt_into(req, &mut ghost[off..], dt);
+                    debug_assert_eq!(got, msg_bytes);
+                }
+                rank.waitall_send(sends);
+            }
+            grid.iter().map(|&b| b as f64).sum()
+        } else {
+            let nbrs = neighbors(me, side, d);
+            let mut halo = vec![0u8; msg_bytes];
+            SimRng::new(me as u64).fill(&mut halo);
+            for round in 0..rounds {
+                rank.compute_ns(compute_ns_per_round);
+                let tag = (round % 1024) as u64;
+                let sends: Vec<_> =
+                    nbrs.iter().map(|&nb| rank.isend(nb, tag, &halo)).collect();
+                let recvs: Vec<_> = nbrs.iter().map(|&nb| rank.irecv(nb, tag)).collect();
+                let msgs = rank.waitall_recv(recvs);
+                debug_assert!(msgs.iter().all(|m| m.len() == msg_bytes));
+                rank.waitall_send(sends);
+            }
+            halo.iter().map(|&b| b as f64).sum()
+        };
+        // Close with a global checksum over the collectives layer: every
+        // rank must arrive at the bit-identical total (the broadcast
+        // phase distributes one root's bytes, so divergence here means a
+        // collective bug).
         let total = rank.allreduce_sum(&[local])[0];
         let totals = rank.allgather_f64(&[total]);
         assert!(
@@ -207,6 +273,57 @@ mod tests {
         // Compute calibration: compute should be near half the plain total.
         let comm_frac = plain.comm_s / plain.total_s;
         assert!(comm_frac > 0.3 && comm_frac < 0.7, "comm fraction {comm_frac:.2}");
+    }
+
+    /// Acceptance: the vector-datatype column-halo exchange roundtrips
+    /// byte-identical to the old contiguous pack-and-copy path, in all
+    /// four security modes. The sender ships its east column both ways —
+    /// as a `Vector` view over the real grid and as a manually packed
+    /// contiguous buffer — and the receiver cross-decodes each with the
+    /// other method: both must reproduce the same column bytes.
+    #[test]
+    fn vector_halo_matches_contiguous_pack_all_modes() {
+        let p = SystemProfile::noleland();
+        for mode in [
+            SecurityMode::Unencrypted,
+            SecurityMode::IpsecSim,
+            SecurityMode::Naive,
+            SecurityMode::CryptMpi,
+        ] {
+            let m = 96 * 1024; // chopped in CryptMpi mode
+            let (rows, pitch, width) = grid_2d(m);
+            let col_dt = Datatype::vector(rows, width, pitch);
+            let cfg = ClusterConfig::new(2, 1, p.clone(), mode);
+            run_cluster(&cfg, move |rank| {
+                // Both sides reconstruct the sender's grid deterministically
+                // so the receiver can check content, not just consistency.
+                let mut grid = vec![0u8; rows * pitch];
+                SimRng::new(1234).fill(&mut grid);
+                let east = &grid[pitch - width..];
+                let mut packed = vec![0u8; m];
+                crate::mpi::pack(&col_dt, east, &mut packed);
+                if rank.id() == 0 {
+                    rank.send_dt(1, 1, east, &col_dt); // new path
+                    rank.send(1, 2, &packed); // old contiguous-copy path
+                } else {
+                    // dt-sent message decodes with a plain receive ...
+                    let got = rank.recv(0, 1);
+                    assert_eq!(got, packed, "mode={mode:?}: send_dt wire == packed wire");
+                    // ... and a pack-sent message scatters back through
+                    // the same datatype into a fresh grid column.
+                    let mut ghost = vec![0u8; col_dt.extent()];
+                    let n = rank.recv_dt_into(Some(0), 2, &mut ghost, &col_dt);
+                    assert_eq!(n, m);
+                    for &(off, len) in &col_dt.extents() {
+                        assert_eq!(
+                            &ghost[off..off + len],
+                            &east[off..off + len],
+                            "mode={mode:?}: scattered column bytes"
+                        );
+                    }
+                }
+            });
+        }
     }
 
     #[test]

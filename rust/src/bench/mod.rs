@@ -51,7 +51,11 @@ impl Table {
         self.artifacts.push((filename.into(), content.into()));
     }
 
-    /// Write `results/<name>.csv` plus any attached artifacts.
+    /// Write `results/<name>.csv` plus any attached artifacts. Every
+    /// `BENCH_*.json` artifact is additionally mirrored to the enclosing
+    /// repository root (the nearest ancestor holding a `.git`), so the
+    /// committed perf-trajectory snapshots at the repo root refresh on
+    /// every release bench run instead of going stale.
     pub fn write_csv(&self, out_dir: &Path) -> std::io::Result<()> {
         std::fs::create_dir_all(out_dir)?;
         let mut f = std::fs::File::create(out_dir.join(format!("{}.csv", self.name)))?;
@@ -59,8 +63,14 @@ impl Table {
         for r in &self.rows {
             writeln!(f, "{}", r.join(","))?;
         }
+        let root = repo_root_of(out_dir);
         for (name, content) in &self.artifacts {
             std::fs::write(out_dir.join(name), content)?;
+            if name.starts_with("BENCH_") && name.ends_with(".json") {
+                if let Some(root) = &root {
+                    std::fs::write(root.join(name), content)?;
+                }
+            }
         }
         Ok(())
     }
@@ -99,6 +109,21 @@ impl Table {
     }
 }
 
+/// Nearest ancestor of `dir` that is a repository root (holds `.git`);
+/// `None` outside a checkout (e.g. a bare temp directory), in which case
+/// no mirror copy is written.
+fn repo_root_of(dir: &Path) -> Option<std::path::PathBuf> {
+    let mut d = std::fs::canonicalize(dir).ok()?;
+    loop {
+        if d.join(".git").exists() {
+            return Some(d);
+        }
+        if !d.pop() {
+            return None;
+        }
+    }
+}
+
 /// Round helper for table cells.
 pub fn f(v: f64, digits: usize) -> String {
     format!("{v:.digits$}")
@@ -133,6 +158,32 @@ mod tests {
         assert_eq!(csv, "a,b\n1,2.50\n");
         let sidecar = std::fs::read_to_string(dir.join("demo_sidecar.json")).unwrap();
         assert_eq!(sidecar, "{\"ok\": true}");
+    }
+
+    /// `BENCH_*.json` artifacts are mirrored to the enclosing repo root
+    /// (nearest ancestor with `.git`); other artifacts are not.
+    #[test]
+    fn bench_artifacts_mirror_to_repo_root() {
+        let root = std::env::temp_dir().join("cryptmpi_mirror_test");
+        let _ = std::fs::remove_dir_all(&root);
+        std::fs::create_dir_all(root.join(".git")).unwrap();
+        let out = root.join("rust").join("results");
+        let mut t = Table::new("mirror_demo", "t", &["a"]);
+        t.row(vec!["1".into()]);
+        t.artifact("BENCH_demo.json", "{\"bench\": \"demo\"}");
+        t.artifact("not_a_bench.json", "{}");
+        t.write_csv(&out).unwrap();
+        assert_eq!(
+            std::fs::read_to_string(root.join("BENCH_demo.json")).unwrap(),
+            "{\"bench\": \"demo\"}",
+            "BENCH_*.json must be mirrored at the repo root"
+        );
+        assert!(std::fs::read_to_string(out.join("BENCH_demo.json")).is_ok());
+        assert!(
+            !root.join("not_a_bench.json").exists(),
+            "only BENCH_*.json artifacts are mirrored"
+        );
+        let _ = std::fs::remove_dir_all(&root);
     }
 
     #[test]

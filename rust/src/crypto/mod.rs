@@ -31,4 +31,7 @@ pub mod sha256;
 pub mod stream;
 
 pub use gcm::{AuthError, Gcm, NONCE_LEN, TAG_LEN};
-pub use stream::{Header, Opcode, StreamOpener, StreamSealer, CHOP_THRESHOLD, HEADER_LEN};
+pub use stream::{
+    chop_decrypt_wire_scatter, chop_encrypt_gather_into, GatherCursor, Header, Opcode,
+    ScatterCursor, StreamOpener, StreamSealer, CHOP_THRESHOLD, HEADER_LEN,
+};

@@ -129,6 +129,133 @@ pub fn segment_count(msg_len: u64, seg_size: u64) -> Result<u32, AuthError> {
     u32::try_from(n).map_err(|_| AuthError)
 }
 
+/// Sequential reader over the non-contiguous extents of a source buffer
+/// (the lowered iov form of a derived datatype — see `mpi::datatype`).
+///
+/// `copy_next` hands out the next `dst.len()` *logical* bytes, walking
+/// the `(offset, len)` runs in order. This is what lets the gather-seal
+/// path copy strided plaintext **directly into the wire buffer** — the
+/// one copy the contiguous zero-copy pipeline already pays — instead of
+/// packing into an intermediate buffer first and copying again.
+pub struct GatherCursor<'a> {
+    buf: &'a [u8],
+    ext: &'a [(usize, usize)],
+    /// Current extent index and byte offset within it.
+    idx: usize,
+    off: usize,
+    remaining: usize,
+}
+
+impl<'a> GatherCursor<'a> {
+    /// Walk `ext` over `buf`. Every extent must lie inside `buf`.
+    pub fn new(buf: &'a [u8], ext: &'a [(usize, usize)]) -> Self {
+        let remaining = ext.iter().map(|e| e.1).sum();
+        debug_assert!(ext.iter().all(|&(o, l)| o + l <= buf.len()), "extent out of bounds");
+        GatherCursor { buf, ext, idx: 0, off: 0, remaining }
+    }
+
+    /// Logical bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.remaining
+    }
+
+    /// Copy the next `dst.len()` logical bytes into `dst`.
+    /// Panics if fewer remain.
+    pub fn copy_next(&mut self, dst: &mut [u8]) {
+        assert!(dst.len() <= self.remaining, "gather cursor exhausted");
+        let mut at = 0;
+        while at < dst.len() {
+            let (off, len) = self.ext[self.idx];
+            if self.off == len {
+                // Zero-length extent (a hand-built iov may contain them;
+                // `Datatype::extents` never emits one).
+                self.idx += 1;
+                self.off = 0;
+                continue;
+            }
+            let take = (len - self.off).min(dst.len() - at);
+            dst[at..at + take].copy_from_slice(&self.buf[off + self.off..off + self.off + take]);
+            at += take;
+            self.off += take;
+        }
+        self.remaining -= dst.len();
+    }
+
+    /// Append the next `n` logical bytes to `out` — the push-style mirror
+    /// of [`copy_next`](Self::copy_next) for paths that build a `Vec`
+    /// frame incrementally (no dead zero-fill of the body region).
+    /// Panics if fewer than `n` bytes remain.
+    pub fn append_to(&mut self, out: &mut Vec<u8>, n: usize) {
+        assert!(n <= self.remaining, "gather cursor exhausted");
+        let mut left = n;
+        while left > 0 {
+            let (off, len) = self.ext[self.idx];
+            if self.off == len {
+                self.idx += 1;
+                self.off = 0;
+                continue;
+            }
+            let take = (len - self.off).min(left);
+            out.extend_from_slice(&self.buf[off + self.off..off + self.off + take]);
+            left -= take;
+            self.off += take;
+        }
+        self.remaining -= n;
+    }
+}
+
+/// Sequential writer over the non-contiguous extents of a destination
+/// buffer — the receive-side mirror of [`GatherCursor`]. `copy_next`
+/// scatters the next `src.len()` logical bytes out to their strided
+/// positions; the open-scatter path calls it only with plaintext whose
+/// tag already verified, so unauthenticated bytes never reach the user
+/// buffer.
+pub struct ScatterCursor<'a> {
+    buf: &'a mut [u8],
+    ext: &'a [(usize, usize)],
+    idx: usize,
+    off: usize,
+    remaining: usize,
+}
+
+impl<'a> ScatterCursor<'a> {
+    /// Walk `ext` over `buf`. Extents must lie inside `buf`; for a
+    /// well-defined scatter they must also be disjoint and in increasing
+    /// order (`Datatype::is_monotonic_disjoint`), which the coordinator
+    /// validates before building a cursor.
+    pub fn new(buf: &'a mut [u8], ext: &'a [(usize, usize)]) -> Self {
+        let remaining = ext.iter().map(|e| e.1).sum();
+        debug_assert!(ext.iter().all(|&(o, l)| o + l <= buf.len()), "extent out of bounds");
+        ScatterCursor { buf, ext, idx: 0, off: 0, remaining }
+    }
+
+    /// Logical bytes of destination capacity not yet written.
+    pub fn remaining(&self) -> usize {
+        self.remaining
+    }
+
+    /// Scatter the next `src.len()` logical bytes from `src`.
+    /// Panics if less capacity remains.
+    pub fn copy_next(&mut self, src: &[u8]) {
+        assert!(src.len() <= self.remaining, "scatter cursor exhausted");
+        let mut at = 0;
+        while at < src.len() {
+            let (off, len) = self.ext[self.idx];
+            if self.off == len {
+                // Zero-length extent — see `GatherCursor::copy_next`.
+                self.idx += 1;
+                self.off = 0;
+                continue;
+            }
+            let take = (len - self.off).min(src.len() - at);
+            self.buf[off + self.off..off + self.off + take].copy_from_slice(&src[at..at + take]);
+            at += take;
+            self.off += take;
+        }
+        self.remaining -= src.len();
+    }
+}
+
 /// Sender-side state for one chopped message: knows the subkey and hands out
 /// per-segment seals. Segments may be sealed from multiple worker threads
 /// (the context is `Sync`; each seal only needs the immutable subkey).
@@ -191,6 +318,23 @@ impl StreamSealer {
         self.sub.seal_in_place(&nonce, &[], data)
     }
 
+    /// Fused gather-seal of segment `index` (1-based): gather the
+    /// segment's plaintext from the source cursor straight into its wire
+    /// slot `body`, then run the one-pass seal kernel in place there.
+    /// No intermediate pack buffer exists — the gather *is* the
+    /// plaintext→wire copy the contiguous pipeline already performs, so a
+    /// strided payload costs exactly the same passes as a contiguous one.
+    pub fn seal_segment_gather(
+        &self,
+        index: u32,
+        src: &mut GatherCursor,
+        body: &mut [u8],
+    ) -> [u8; TAG_LEN] {
+        debug_assert_eq!(body.len(), self.segment_range(index).len());
+        src.copy_next(body);
+        self.seal_segment(index, body)
+    }
+
     /// Wire length of the contiguous chunk covering segments `a..=b`
     /// (1-based, inclusive): the segment bodies followed by the trailing
     /// tag block, `body_a ‖ … ‖ body_b ‖ tag_a ‖ … ‖ tag_b`.
@@ -217,6 +361,27 @@ impl StreamSealer {
             let (body, rest) = std::mem::take(&mut bodies).split_at_mut(len);
             bodies = rest;
             let tag = self.seal_segment(i, body);
+            tags[j * TAG_LEN..(j + 1) * TAG_LEN].copy_from_slice(&tag);
+        }
+    }
+
+    /// Gather-seal segments `a..=b` over one contiguous wire buffer in
+    /// the [`chunk_wire_len`](Self::chunk_wire_len) layout, drawing the
+    /// plaintext from `src`'s extents. The strided counterpart of
+    /// [`seal_chunk`](Self::seal_chunk): segment-by-segment, each body is
+    /// gathered into its wire slot and sealed while still hot — one sweep,
+    /// zero pack buffer.
+    pub fn seal_chunk_gather(&self, a: u32, b: u32, src: &mut GatherCursor, wire: &mut [u8]) {
+        assert_eq!(wire.len(), self.chunk_wire_len(a, b), "wire buffer size");
+        let nparts = (b - a + 1) as usize;
+        let bodies_len = wire.len() - nparts * TAG_LEN;
+        let (bodies, tags) = wire.split_at_mut(bodies_len);
+        let mut bodies = bodies;
+        for (j, i) in (a..=b).enumerate() {
+            let len = self.segment_range(i).len();
+            let (body, rest) = std::mem::take(&mut bodies).split_at_mut(len);
+            bodies = rest;
+            let tag = self.seal_segment_gather(i, src, body);
             tags[j * TAG_LEN..(j + 1) * TAG_LEN].copy_from_slice(&tag);
         }
     }
@@ -322,6 +487,45 @@ impl StreamOpener {
         Ok(())
     }
 
+    /// Verify-and-decrypt segments `a..=b` of a contiguous wire chunk
+    /// (`body_a ‖ … ‖ body_b ‖ tag_a ‖ … ‖ tag_b`), scattering the
+    /// plaintext out through `out`'s extents — the fused open-scatter
+    /// mirror of the gather-seal path. Decryption runs **in place in the
+    /// wire buffer** (which is consumed scratch anyway), so the scatter
+    /// copy is the only data movement besides the one crypto sweep: no
+    /// intermediate contiguous plaintext buffer exists. Each segment is
+    /// scattered only after its own tag verified; on error, segments
+    /// before the failure have already been delivered (the caller treats
+    /// the whole receive as failed, as MPI would).
+    pub fn open_chunk_scatter(
+        &mut self,
+        a: u32,
+        b: u32,
+        wire: &mut [u8],
+        out: &mut ScatterCursor,
+    ) -> Result<(), AuthError> {
+        if a == 0 || a > b || b > self.nsegs {
+            return Err(AuthError);
+        }
+        let nparts = (b - a + 1) as usize;
+        let bodies_len: usize = (a..=b).map(|i| self.segment_len(i)).sum();
+        if wire.len() != bodies_len + nparts * TAG_LEN || out.remaining() < bodies_len {
+            return Err(AuthError);
+        }
+        let (bodies, tags) = wire.split_at_mut(bodies_len);
+        let mut rest: &mut [u8] = bodies;
+        for (j, i) in (a..=b).enumerate() {
+            let len = self.segment_len(i);
+            let (body, tail) = std::mem::take(&mut rest).split_at_mut(len);
+            rest = tail;
+            let tag: [u8; TAG_LEN] = tags[j * TAG_LEN..(j + 1) * TAG_LEN].try_into().unwrap();
+            self.open_segment(i, body, &tag)?;
+            out.copy_next(body);
+            self.mark_received();
+        }
+        Ok(())
+    }
+
     /// Record one successfully opened segment.
     pub fn mark_received(&mut self) {
         self.received += 1;
@@ -392,6 +596,58 @@ pub fn chop_decrypt_wire(k1: &Gcm, header: &Header, wire: &[u8]) -> Result<Vec<u
     opener.open_chunk_into(1, n, wire, &mut out)?;
     opener.finish()?;
     Ok(out)
+}
+
+/// One-shot fused gather-seal: chop the strided message selected by `ext`
+/// over `src` into `nsegs` segments and write the contiguous wire image
+/// `bodies ‖ tags` into `wire` (resized in place, reusing its
+/// allocation). The wire image is byte-identical to what
+/// [`chop_encrypt_into`] produces for the packed equivalent under the
+/// same seed — receivers cannot tell a gathered message from a packed
+/// one — but no pack buffer and no second plaintext pass ever exist.
+pub fn chop_encrypt_gather_into(
+    k1: &Gcm,
+    src: &[u8],
+    ext: &[(usize, usize)],
+    nsegs: u32,
+    wire: &mut Vec<u8>,
+) -> Header {
+    let msg_len: usize = ext.iter().map(|e| e.1).sum();
+    let sealer = StreamSealer::new(k1, msg_len, nsegs);
+    let n = sealer.num_segments();
+    let total = sealer.chunk_wire_len(1, n);
+    // Every byte is overwritten (bodies by the gather, tags by the seal),
+    // so only a grown tail needs initializing — same as chop_encrypt_into.
+    if wire.len() > total {
+        wire.truncate(total);
+    } else {
+        wire.resize(total, 0);
+    }
+    let mut cur = GatherCursor::new(src, ext);
+    sealer.seal_chunk_gather(1, n, &mut cur, &mut wire[..]);
+    sealer.header().clone()
+}
+
+/// One-shot fused open-scatter of the contiguous wire layout: decrypt in
+/// place in `wire` and scatter the plaintext out to `ext` over `dst`.
+/// The receive-side mirror of [`chop_encrypt_gather_into`].
+pub fn chop_decrypt_wire_scatter(
+    k1: &Gcm,
+    header: &Header,
+    wire: &mut [u8],
+    dst: &mut [u8],
+    ext: &[(usize, usize)],
+) -> Result<(), AuthError> {
+    let mut opener = StreamOpener::new(k1, header)?;
+    let n = opener.num_segments();
+    let cap: usize = ext.iter().map(|e| e.1).sum();
+    let expect = header.msg_len as u128 + n as u128 * TAG_LEN as u128;
+    if wire.len() as u128 != expect || (header.msg_len as u128) > cap as u128 {
+        return Err(AuthError);
+    }
+    let mut cur = ScatterCursor::new(dst, ext);
+    opener.open_chunk_scatter(1, n, wire, &mut cur)?;
+    opener.finish()
 }
 
 /// One-shot convenience: decrypt a full chopped message.
@@ -703,6 +959,131 @@ mod tests {
         let mut bad_plain = plain.clone();
         bad_plain.seed[0] = 1;
         assert!(Header::decode(&bad_plain.encode()).is_err(), "plain with seed");
+    }
+
+    /// Cursors hand out logical bytes across extent boundaries in any
+    /// request granularity.
+    #[test]
+    fn cursors_walk_extents_in_any_granularity() {
+        let src: Vec<u8> = (0u8..=99).collect();
+        let ext = [(2usize, 3usize), (10, 5), (40, 4)];
+        let logical: Vec<u8> = ext
+            .iter()
+            .flat_map(|&(o, l)| src[o..o + l].iter().copied())
+            .collect();
+        for chunk in [1usize, 2, 5, 12] {
+            let mut cur = GatherCursor::new(&src, &ext);
+            assert_eq!(cur.remaining(), 12);
+            let mut got = Vec::new();
+            while cur.remaining() > 0 {
+                let n = chunk.min(cur.remaining());
+                let mut buf = vec![0u8; n];
+                cur.copy_next(&mut buf);
+                got.extend_from_slice(&buf);
+            }
+            assert_eq!(got, logical, "gather chunk={chunk}");
+
+            // The push-style walk yields the identical byte stream.
+            let mut cur = GatherCursor::new(&src, &ext);
+            let mut pushed = Vec::new();
+            while cur.remaining() > 0 {
+                let n = chunk.min(cur.remaining());
+                cur.append_to(&mut pushed, n);
+            }
+            assert_eq!(pushed, logical, "append chunk={chunk}");
+
+            let mut dst = vec![0xEEu8; 100];
+            let mut cur = ScatterCursor::new(&mut dst, &ext);
+            let mut at = 0;
+            while cur.remaining() > 0 {
+                let n = chunk.min(cur.remaining());
+                cur.copy_next(&logical[at..at + n]);
+                at += n;
+            }
+            for &(o, l) in &ext {
+                assert_eq!(&dst[o..o + l], &src[o..o + l], "scatter chunk={chunk}");
+            }
+            let touched: usize = ext.iter().map(|e| e.1).sum();
+            assert_eq!(dst.iter().filter(|&&b| b != 0xEE).count(), touched);
+        }
+    }
+
+    /// The fused gather-seal wire image must be byte-identical to the
+    /// pack-then-seal reference under the same seed — for a genuinely
+    /// strided layout AND for the degenerate contiguous one — on both
+    /// crypto backends. Receivers cannot tell the paths apart.
+    #[test]
+    fn gather_seal_wire_image_matches_pack_then_seal() {
+        for hw in [true, false] {
+            let k1 = Gcm::with_backend(&[0x51u8; 16], hw);
+            for (name, ext, span) in [
+                ("strided", vec![(0usize, 4096usize), (8192, 4096), (20000, 120_000)], 140_192),
+                ("degenerate", vec![(0usize, 128_192usize)], 128_192),
+            ] {
+                let src = msg(span, 77);
+                let packed: Vec<u8> =
+                    ext.iter().flat_map(|&(o, l)| src[o..o + l].iter().copied()).collect();
+                let seed = [0x66u8; 16];
+                let sealer = StreamSealer::with_seed(&k1, packed.len(), 6, seed);
+                let n = sealer.num_segments();
+                let mut wire_pack = vec![0u8; sealer.chunk_wire_len(1, n)];
+                wire_pack[..packed.len()].copy_from_slice(&packed);
+                sealer.seal_chunk(1, n, &mut wire_pack);
+
+                let sealer2 = StreamSealer::with_seed(&k1, packed.len(), 6, seed);
+                let mut wire_gather = vec![0u8; sealer2.chunk_wire_len(1, n)];
+                let mut cur = GatherCursor::new(&src, &ext);
+                sealer2.seal_chunk_gather(1, n, &mut cur, &mut wire_gather);
+                assert_eq!(wire_gather, wire_pack, "hw={hw} {name}");
+            }
+        }
+    }
+
+    /// Gather-seal → open-scatter roundtrips a strided message; bytes
+    /// outside the destination extents are never touched; any wire
+    /// tamper is rejected. Both backends.
+    #[test]
+    fn gather_seal_open_scatter_roundtrip_and_tamper() {
+        for hw in [true, false] {
+            let k1 = Gcm::with_backend(&[0x52u8; 16], hw);
+            let ext = [(16usize, 30_000usize), (40_000, 50_000), (100_000, 40_000)];
+            let span = 140_016;
+            let src = msg(span, 5 + hw as u64);
+            let mut wire = Vec::new();
+            let h = chop_encrypt_gather_into(&k1, &src, &ext, 8, &mut wire);
+            assert_eq!(h.msg_len, 120_000);
+
+            let mut dst = vec![0xEEu8; span];
+            let mut scratch = wire.clone();
+            chop_decrypt_wire_scatter(&k1, &h, &mut scratch, &mut dst, &ext)
+                .expect("roundtrip hw={hw}");
+            for &(o, l) in &ext {
+                assert_eq!(&dst[o..o + l], &src[o..o + l], "hw={hw}");
+            }
+            let sel: usize = ext.iter().map(|e| e.1).sum();
+            assert!(dst.iter().filter(|&&b| b != 0xEE).count() <= sel);
+            assert!(dst[..16].iter().all(|&b| b == 0xEE), "gap before first extent");
+
+            // Tamper anywhere in the wire -> clean failure.
+            for pos in [0usize, 60_000, wire.len() - 1] {
+                let mut bad = wire.clone();
+                bad[pos] ^= 0x40;
+                let mut dst2 = vec![0u8; span];
+                assert!(
+                    chop_decrypt_wire_scatter(&k1, &h, &mut bad, &mut dst2, &ext).is_err(),
+                    "hw={hw} pos={pos}"
+                );
+            }
+            // Truncated wire / wrong-capacity extents -> clean failure.
+            let mut short = wire[..wire.len() - 1].to_vec();
+            assert!(chop_decrypt_wire_scatter(&k1, &h, &mut short, &mut dst, &ext).is_err());
+            let tiny = [(0usize, 100usize)];
+            let mut scratch = wire.clone();
+            assert!(
+                chop_decrypt_wire_scatter(&k1, &h, &mut scratch, &mut dst, &tiny).is_err(),
+                "hw={hw}: capacity smaller than msg_len must fail"
+            );
+        }
     }
 
     #[test]

@@ -1,0 +1,342 @@
+//! MPI-style derived datatypes: describing non-contiguous message layouts
+//! (stencil column halos, NAS BT/SP-style strided exchanges) so they can
+//! ride the encrypted pipeline without a separate pack pass.
+//!
+//! A [`Datatype`] is a byte-granularity type map — [`Contiguous`] runs,
+//! strided [`Vector`]s, explicit-displacement [`Indexed`] blocks, each
+//! nestable inside the other — with the two standard measures:
+//! [`size`](Datatype::size) (payload bytes the type selects) and
+//! [`extent`](Datatype::extent) (the span of buffer it covers, lower
+//! bound 0).
+//!
+//! The **flattening engine** ([`Datatype::extents`]) lowers any datatype
+//! to its iov form: an ordered run of `(offset, len)` extents with
+//! adjacent runs coalesced, so a degenerate layout (`stride == blocklen`
+//! vector, single-block indexed) collapses to the one extent the plain
+//! contiguous path would use. Everything downstream — the
+//! [`pack`]/[`unpack`] reference paths here, the fused gather-seal /
+//! open-scatter kernels in [`crate::crypto::stream`], and the
+//! `Rank::{send_dt, recv_dt_into}` wire paths — consumes only that
+//! lowered form, so a new datatype constructor never touches the crypto
+//! or transport layers.
+//!
+//! [`Contiguous`]: Datatype::Contiguous
+//! [`Vector`]: Datatype::Vector
+//! [`Indexed`]: Datatype::Indexed
+
+/// A derived datatype over a byte buffer (lower bound 0; anchor it at an
+/// arbitrary offset by slicing the buffer you apply it to).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Datatype {
+    /// `n` contiguous bytes.
+    Contiguous(usize),
+    /// `count` blocks of `blocklen` consecutive `inner` elements, with
+    /// consecutive block *starts* `stride` inner-extents apart (the MPI
+    /// `MPI_Type_vector` shape; `stride` is in elements, not bytes,
+    /// unless `inner` is a single byte).
+    Vector { count: usize, blocklen: usize, stride: usize, inner: Box<Datatype> },
+    /// Blocks at explicit `(displacement, blocklen)` positions, both in
+    /// units of `inner` extents (the MPI `MPI_Type_indexed` shape).
+    Indexed { blocks: Vec<(usize, usize)>, inner: Box<Datatype> },
+}
+
+impl Datatype {
+    /// A vector of `count` blocks of `blocklen` bytes, block starts
+    /// `stride` bytes apart (the common stencil-halo constructor).
+    pub fn vector(count: usize, blocklen: usize, stride: usize) -> Self {
+        Datatype::Vector { count, blocklen, stride, inner: Box::new(Datatype::Contiguous(1)) }
+    }
+
+    /// Indexed byte blocks at explicit `(offset, len)` positions.
+    pub fn indexed(blocks: Vec<(usize, usize)>) -> Self {
+        Datatype::Indexed { blocks, inner: Box::new(Datatype::Contiguous(1)) }
+    }
+
+    /// Payload bytes this type selects (the logical message length).
+    pub fn size(&self) -> usize {
+        match self {
+            Datatype::Contiguous(n) => *n,
+            Datatype::Vector { count, blocklen, inner, .. } => {
+                count * blocklen * inner.size()
+            }
+            Datatype::Indexed { blocks, inner } => {
+                blocks.iter().map(|&(_, bl)| bl).sum::<usize>() * inner.size()
+            }
+        }
+    }
+
+    /// Span of buffer the type covers: the least `n` such that every
+    /// selected byte lies in `buf[..n]`. Zero for empty types.
+    pub fn extent(&self) -> usize {
+        match self {
+            Datatype::Contiguous(n) => *n,
+            Datatype::Vector { count, blocklen, stride, inner } => {
+                if *count == 0 || *blocklen == 0 || inner.extent() == 0 {
+                    return 0;
+                }
+                ((count - 1) * stride + blocklen - 1) * inner.extent() + inner.span_last()
+            }
+            Datatype::Indexed { blocks, inner } => {
+                if inner.extent() == 0 {
+                    return 0;
+                }
+                blocks
+                    .iter()
+                    .filter(|&&(_, bl)| bl > 0)
+                    .map(|&(disp, bl)| (disp + bl - 1) * inner.extent() + inner.span_last())
+                    .max()
+                    .unwrap_or(0)
+            }
+        }
+    }
+
+    /// Bytes covered by one trailing element (== `extent()` here, since
+    /// the lower bound is pinned at 0; kept separate so the recursion in
+    /// [`extent`](Self::extent) reads as span arithmetic).
+    fn span_last(&self) -> usize {
+        self.extent()
+    }
+
+    /// Lower the type to its iov form: ordered `(offset, len)` extents,
+    /// adjacent runs coalesced. Zero-length runs never appear.
+    pub fn extents(&self) -> Vec<(usize, usize)> {
+        let mut out = Vec::new();
+        self.lower(0, &mut out);
+        out
+    }
+
+    fn lower(&self, base: usize, out: &mut Vec<(usize, usize)>) {
+        match self {
+            Datatype::Contiguous(n) => push_run(out, base, *n),
+            Datatype::Vector { count, blocklen, stride, inner } => {
+                let ie = inner.extent();
+                for c in 0..*count {
+                    let start = base + c * stride * ie;
+                    for b in 0..*blocklen {
+                        inner.lower(start + b * ie, out);
+                    }
+                }
+            }
+            Datatype::Indexed { blocks, inner } => {
+                let ie = inner.extent();
+                for &(disp, bl) in blocks {
+                    for b in 0..bl {
+                        inner.lower(base + (disp + b) * ie, out);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Whether the lowered extents are strictly increasing and disjoint —
+    /// the precondition for using this type as a *receive* layout (MPI
+    /// likewise forbids overlapping entries on the receive side).
+    pub fn is_monotonic_disjoint(&self) -> bool {
+        let ext = self.extents();
+        ext.windows(2).all(|w| w[0].0 + w[0].1 <= w[1].0)
+    }
+}
+
+/// Append a run, merging with the previous one when contiguous.
+fn push_run(out: &mut Vec<(usize, usize)>, start: usize, len: usize) {
+    if len == 0 {
+        return;
+    }
+    if let Some(last) = out.last_mut() {
+        if last.0 + last.1 == start {
+            last.1 += len;
+            return;
+        }
+    }
+    out.push((start, len));
+}
+
+/// Reference pack: gather the bytes `dt` selects from `src` into the
+/// contiguous `dst` (which must be exactly `dt.size()` bytes). This is
+/// the two-pass baseline the fused gather-seal path is measured against.
+pub fn pack(dt: &Datatype, src: &[u8], dst: &mut [u8]) {
+    assert_eq!(dst.len(), dt.size(), "pack destination size");
+    let mut at = 0;
+    for (off, len) in dt.extents() {
+        dst[at..at + len].copy_from_slice(&src[off..off + len]);
+        at += len;
+    }
+    debug_assert_eq!(at, dst.len());
+}
+
+/// Reference unpack: scatter the contiguous `src` (exactly `dt.size()`
+/// bytes) out to the positions `dt` selects in `dst`.
+pub fn unpack(dt: &Datatype, src: &[u8], dst: &mut [u8]) {
+    assert_eq!(src.len(), dt.size(), "unpack source size");
+    let mut at = 0;
+    for (off, len) in dt.extents() {
+        dst[off..off + len].copy_from_slice(&src[at..at + len]);
+        at += len;
+    }
+    debug_assert_eq!(at, src.len());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::rand::SimRng;
+
+    #[test]
+    fn contiguous_measures() {
+        let d = Datatype::Contiguous(100);
+        assert_eq!(d.size(), 100);
+        assert_eq!(d.extent(), 100);
+        assert_eq!(d.extents(), vec![(0, 100)]);
+        let z = Datatype::Contiguous(0);
+        assert_eq!(z.size(), 0);
+        assert_eq!(z.extents(), Vec::<(usize, usize)>::new());
+    }
+
+    #[test]
+    fn vector_measures_and_lowering() {
+        // 3 blocks of 4 bytes, starts 10 apart: |xxxx......|xxxx......|xxxx
+        let d = Datatype::vector(3, 4, 10);
+        assert_eq!(d.size(), 12);
+        assert_eq!(d.extent(), 24);
+        assert_eq!(d.extents(), vec![(0, 4), (10, 4), (20, 4)]);
+        assert!(d.is_monotonic_disjoint());
+    }
+
+    /// stride == blocklen is degenerate contiguous: the lowering must
+    /// coalesce to ONE extent, indistinguishable from `Contiguous`.
+    #[test]
+    fn degenerate_vector_coalesces_to_contiguous() {
+        let d = Datatype::vector(8, 16, 16);
+        assert_eq!(d.extents(), vec![(0, 128)]);
+        assert_eq!(d.size(), 128);
+        assert_eq!(d.extent(), 128);
+    }
+
+    /// Zero-count and zero-blocklen vectors are empty types: size 0, no
+    /// extents, extent 0 — and must not panic anywhere.
+    #[test]
+    fn zero_count_and_zero_blocklen_are_empty() {
+        for d in [Datatype::vector(0, 16, 32), Datatype::vector(4, 0, 32)] {
+            assert_eq!(d.size(), 0, "{d:?}");
+            assert_eq!(d.extent(), 0, "{d:?}");
+            assert!(d.extents().is_empty(), "{d:?}");
+            assert!(d.is_monotonic_disjoint());
+            let mut dst = [0u8; 0];
+            pack(&d, &[1, 2, 3], &mut dst);
+            unpack(&d, &dst, &mut [9u8; 3]);
+        }
+    }
+
+    #[test]
+    fn indexed_measures_and_order() {
+        let d = Datatype::indexed(vec![(5, 3), (0, 2), (20, 1)]);
+        assert_eq!(d.size(), 6);
+        assert_eq!(d.extent(), 21);
+        // Lowering preserves the declared (send) order.
+        assert_eq!(d.extents(), vec![(5, 3), (0, 2), (20, 1)]);
+        assert!(!d.is_monotonic_disjoint(), "out-of-order blocks are send-only");
+        assert!(Datatype::indexed(vec![(0, 2), (5, 3)]).is_monotonic_disjoint());
+    }
+
+    /// Nested Indexed-of-Vector: each indexed element is itself a strided
+    /// vector; displacements are in units of the inner extent.
+    #[test]
+    fn nested_indexed_of_vector_lowers_correctly() {
+        // inner: 2 blocks of 2 bytes, starts 4 apart -> extent 6, size 4.
+        let inner = Datatype::vector(2, 2, 4);
+        assert_eq!(inner.extent(), 6);
+        let d = Datatype::Indexed {
+            blocks: vec![(0, 1), (2, 1)],
+            inner: Box::new(inner),
+        };
+        assert_eq!(d.size(), 8);
+        // Element 0 at byte 0: (0,2),(4,2); element 1 at byte 12: (12,2),(16,2).
+        assert_eq!(d.extents(), vec![(0, 2), (4, 2), (12, 2), (16, 2)]);
+        assert_eq!(d.extent(), 18);
+        assert!(d.is_monotonic_disjoint());
+    }
+
+    /// Vector-of-vector nesting: the outer stride steps in inner extents.
+    #[test]
+    fn nested_vector_of_vector() {
+        let inner = Datatype::vector(2, 1, 2); // (0,1),(2,1) — extent 3
+        let d = Datatype::Vector {
+            count: 2,
+            blocklen: 1,
+            stride: 2,
+            inner: Box::new(inner),
+        };
+        // Outer block 1 starts at 2*3 = byte 6.
+        assert_eq!(d.extents(), vec![(0, 1), (2, 1), (6, 1), (8, 1)]);
+        assert_eq!(d.size(), 4);
+        assert_eq!(d.extent(), 9);
+    }
+
+    /// size() must always equal the sum of lowered extent lengths, and
+    /// extent() must bound every lowered run — randomized over nested
+    /// shapes.
+    #[test]
+    fn prop_measures_agree_with_lowering() {
+        let mut rng = SimRng::new(0xda7a);
+        for case in 0..200 {
+            let inner = if rng.below(2) == 0 {
+                Datatype::Contiguous((rng.below(4) + 1) as usize)
+            } else {
+                Datatype::vector(
+                    (rng.below(3) + 1) as usize,
+                    (rng.below(3) + 1) as usize,
+                    (rng.below(6) + 1) as usize,
+                )
+            };
+            let d = match rng.below(3) {
+                0 => Datatype::Vector {
+                    count: rng.below(5) as usize,
+                    blocklen: rng.below(4) as usize,
+                    stride: (rng.below(8) + 1) as usize,
+                    inner: Box::new(inner),
+                },
+                1 => Datatype::Indexed {
+                    blocks: (0..rng.below(4))
+                        .map(|i| ((i * 7 + rng.below(3)) as usize, rng.below(3) as usize))
+                        .collect(),
+                    inner: Box::new(inner),
+                },
+                _ => inner,
+            };
+            let ext = d.extents();
+            let total: usize = ext.iter().map(|e| e.1).sum();
+            assert_eq!(total, d.size(), "case {case}: {d:?}");
+            for &(off, len) in &ext {
+                assert!(len > 0 && off + len <= d.extent(), "case {case}: {d:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip_strided() {
+        let mut rng = SimRng::new(42);
+        let d = Datatype::vector(16, 32, 100);
+        let mut src = vec![0u8; d.extent()];
+        rng.fill(&mut src);
+        let mut packed = vec![0u8; d.size()];
+        pack(&d, &src, &mut packed);
+        let mut dst = vec![0xEEu8; d.extent()];
+        unpack(&d, &packed, &mut dst);
+        // Selected bytes roundtrip; unselected bytes untouched.
+        for &(off, len) in &d.extents() {
+            assert_eq!(&dst[off..off + len], &src[off..off + len]);
+        }
+        let sel: Vec<bool> = {
+            let mut s = vec![false; d.extent()];
+            for (off, len) in d.extents() {
+                s[off..off + len].iter_mut().for_each(|b| *b = true);
+            }
+            s
+        };
+        for (i, &byte) in dst.iter().enumerate() {
+            if !sel[i] {
+                assert_eq!(byte, 0xEE, "gap byte {i} touched");
+            }
+        }
+    }
+}

@@ -1,15 +1,18 @@
 //! The MPI-like message-passing substrate: a matching/progress engine
 //! (posted-receive + unexpected-message queues with `(source, tag)` hash
-//! buckets) over the simulated network, plus per-rank instrumentation.
+//! buckets) over the simulated network, derived datatypes describing
+//! non-contiguous message layouts, plus per-rank instrumentation.
 //!
 //! The public rank-level API (send/recv/isend/irecv/wait/collectives,
 //! with the security modes of the paper) lives in [`crate::coordinator`];
 //! this module is the raw layer beneath it.
 
+pub mod datatype;
 pub mod stats;
 pub mod transport;
 
+pub use datatype::{pack, unpack, Datatype};
 pub use stats::{
     ClusterReport, CollOp, CollOpStats, CollStats, CommStats, MatchStats, RankReport, COLL_OPS,
 };
-pub use transport::{PostInfo, Route, Ticket, Transport, WireMsg};
+pub use transport::{PostInfo, ProbePeek, Route, Ticket, Transport, WireMsg};

@@ -188,32 +188,60 @@ fn take_match(st: &mut MboxState, src: Option<usize>, tag: u64) -> Option<WireMs
     }
 }
 
-/// (src, wire bytes, arrival) of the message a matching receive would take
-/// next, without consuming it. Message starts only.
-fn peek(st: &MboxState, src: Option<usize>, tag: u64) -> Option<(usize, usize, u64)> {
-    match src {
-        Some(s) => st
-            .umq
-            .get(&(s, tag))
-            .and_then(|q| q.front())
-            .filter(|(_, m)| m.seq == 0)
-            .map(|(_, m)| (m.src, m.body.len(), m.arrival_ns)),
-        None => {
-            let srcs = st.tags.get(&tag)?;
-            let mut best: Option<(u64, u64, usize, usize)> = None;
-            for &s in srcs {
-                if let Some((id, m)) = st.umq.get(&(s, tag)).and_then(|q| q.front()) {
-                    if m.seq == 0 {
-                        let cand = (m.arrival_ns, *id, s, m.body.len());
-                        if best.map_or(true, |b| (cand.0, cand.1) < (b.0, b.1)) {
-                            best = Some(cand);
-                        }
-                    }
+/// How many leading frame bytes a probe copies out for the layer above
+/// to decode its framing header (the 33-byte wire header fits with room
+/// to spare). The transport itself never interprets them.
+pub const PEEK_HEAD_BYTES: usize = 64;
+
+/// Envelope of the message a matching receive would take next, as seen
+/// by a probe: origin, on-wire frame length, virtual arrival, and a copy
+/// of the frame's leading bytes so the coordinator can decode the
+/// *logical* message length from the framing header without consuming
+/// the frame (a chopped stream's first frame is a 33-byte header whose
+/// wire length says nothing about the payload).
+#[derive(Debug, Clone)]
+pub struct ProbePeek {
+    pub src: usize,
+    pub wire_bytes: usize,
+    pub arrival_ns: u64,
+    pub head: Vec<u8>,
+}
+
+/// Source whose bucket head an arrival-ordered wildcard would take next
+/// (message starts only; earliest `arrival_ns`, deposit id breaks ties).
+fn wild_pick(st: &MboxState, tag: u64) -> Option<usize> {
+    let srcs = st.tags.get(&tag)?;
+    let mut best: Option<(u64, u64, usize)> = None;
+    for &s in srcs {
+        if let Some((id, m)) = st.umq.get(&(s, tag)).and_then(|q| q.front()) {
+            if m.seq == 0 {
+                let cand = (m.arrival_ns, *id, s);
+                if best.map_or(true, |b| (cand.0, cand.1) < (b.0, b.1)) {
+                    best = Some(cand);
                 }
             }
-            best.map(|(arr, _, s, len)| (s, len, arr))
         }
     }
+    best.map(|(_, _, s)| s)
+}
+
+/// The message a matching receive would take next, without consuming it.
+/// Message starts only.
+fn peek(st: &MboxState, src: Option<usize>, tag: u64) -> Option<ProbePeek> {
+    let s = match src {
+        Some(s) => s,
+        None => wild_pick(st, tag)?,
+    };
+    st.umq
+        .get(&(s, tag))
+        .and_then(|q| q.front())
+        .filter(|(_, m)| m.seq == 0)
+        .map(|(_, m)| ProbePeek {
+            src: m.src,
+            wire_bytes: m.body.len(),
+            arrival_ns: m.arrival_ns,
+            head: m.body[..m.body.len().min(PEEK_HEAD_BYTES)].to_vec(),
+        })
 }
 
 /// Earliest unbound exact ticket of the given lane for this signature.
@@ -234,7 +262,7 @@ fn wild_owns_head(st: &MboxState, src: usize, tag: u64, before: Ticket) -> bool 
         .get(&tag)
         .and_then(|q| q.front())
         .is_some_and(|&w| w < before);
-    earlier && peek(st, None, tag).is_some_and(|(psrc, _, _)| psrc == src)
+    earlier && wild_pick(st, tag) == Some(src)
 }
 
 fn unindex_exact(st: &mut MboxState, src: usize, tag: u64, ticket: Ticket) {
@@ -569,9 +597,9 @@ impl Transport {
         mbox.cv.notify_all();
     }
 
-    /// Blocking probe: (src, wire bytes, arrival_ns) of the message a
-    /// matching receive would take, without consuming it.
-    pub fn probe_match(&self, me: usize, src: Option<usize>, tag: u64) -> (usize, usize, u64) {
+    /// Blocking probe: the envelope of the message a matching receive
+    /// would take, without consuming it.
+    pub fn probe_match(&self, me: usize, src: Option<usize>, tag: u64) -> ProbePeek {
         let mbox = &self.boxes[me];
         let mut st = mbox.state.lock().unwrap();
         loop {
@@ -590,9 +618,9 @@ impl Transport {
         src: Option<usize>,
         tag: u64,
         now_ns: u64,
-    ) -> Option<(usize, usize, u64)> {
+    ) -> Option<ProbePeek> {
         let st = self.boxes[me].state.lock().unwrap();
-        peek(&st, src, tag).filter(|&(_, _, arrival)| arrival <= now_ns)
+        peek(&st, src, tag).filter(|p| p.arrival_ns <= now_ns)
     }
 
     /// Messages resident in rank `me`'s unexpected queue (tests/metrics).
@@ -831,14 +859,27 @@ mod tests {
         let t = transport(2, 1);
         assert!(t.try_probe(1, Some(0), 4, u64::MAX).is_none());
         let info = t.post(0, 1, 4, 0, vec![9, 9, 9], 0);
-        let (src, bytes, arr) = t.probe_match(1, Some(0), 4);
-        assert_eq!((src, bytes, arr), (0, 3, info.arrival_ns));
+        let p = t.probe_match(1, Some(0), 4);
+        assert_eq!((p.src, p.wire_bytes, p.arrival_ns), (0, 3, info.arrival_ns));
+        // The peeked head is a copy of the frame's leading bytes.
+        assert_eq!(p.head, vec![9, 9, 9]);
         // iprobe honors virtual time: before arrival, nothing to see.
         assert!(t.try_probe(1, None, 4, info.arrival_ns - 1).is_none());
         assert!(t.try_probe(1, None, 4, info.arrival_ns).is_some());
         // Probe does not consume.
         assert_eq!(t.pending(1), 1);
         assert_eq!(t.recv_match(1, None, 4).body, vec![9, 9, 9]);
+    }
+
+    /// A frame longer than the peek window only yields its leading bytes.
+    #[test]
+    fn probe_head_is_bounded() {
+        let t = transport(2, 1);
+        t.post(0, 1, 4, 0, vec![7u8; 1000], 0);
+        let p = t.probe_match(1, Some(0), 4);
+        assert_eq!(p.wire_bytes, 1000);
+        assert_eq!(p.head.len(), PEEK_HEAD_BYTES);
+        assert!(p.head.iter().all(|&b| b == 7));
     }
 
     #[test]
