@@ -8,4 +8,6 @@ pub mod stencil;
 pub use multipair::{run_multipair, MultiPairResult};
 pub use nas::{run_nas, NasKernel, NasResult, NasScale};
 pub use pingpong::{run_pingpong, PingPongResult};
-pub use stencil::{calibrate_compute, run_stencil, StencilDim, StencilResult};
+pub use stencil::{
+    calibrate_compute, run_stencil, run_stencil_overlap, StencilDim, StencilResult,
+};

@@ -13,8 +13,8 @@
 
 use crate::apps::multipair::WINDOW;
 use crate::apps::{
-    calibrate_compute, run_multipair, run_nas, run_pingpong, run_stencil, NasKernel, NasScale,
-    StencilDim,
+    calibrate_compute, run_multipair, run_nas, run_pingpong, run_stencil, run_stencil_overlap,
+    NasKernel, NasScale, StencilDim,
 };
 use crate::bench::{f, size_label, Table};
 use crate::coordinator::{run_cluster, ClusterConfig, CollPolicy, SecurityMode};
@@ -1003,6 +1003,120 @@ pub fn smoke() -> Table {
     t
 }
 
+/// Every nonblocking collective must produce results identical — byte-
+/// for byte-payloads, bit-for-bit for f64 reductions — to its blocking
+/// counterpart from the same inputs: the blocking calls are thin
+/// `wait()` wrappers over the same compiled schedules, and this check
+/// keeps them that way.
+fn nonblocking_equivalence(p: &SystemProfile, mode: SecurityMode) -> bool {
+    let cfg = ClusterConfig::new(6, 2, p.clone(), mode);
+    let (outs, _) = run_cluster(&cfg, move |rank| {
+        let n = rank.size();
+        let me = rank.id();
+        // ibcast vs bcast, driven by a test() poll loop.
+        let data = if me == 1 { vec![0xabu8; 32 * 1024] } else { Vec::new() };
+        let mut req = rank.ibcast(1, data.clone());
+        while !req.test(rank).expect("ibcast") {
+            std::thread::yield_now();
+        }
+        let nb = req.wait(rank).expect("ibcast").into_bytes();
+        let eq_bcast = nb == rank.bcast(1, data);
+        // iallreduce vs allreduce: identical reduction order, so the
+        // sums must agree to the bit even for non-integer values.
+        let v: Vec<f64> = (0..512).map(|i| 0.1 * (me * 512 + i) as f64).collect();
+        let nb = rank.iallreduce_sum(&v).wait(rank).expect("iallreduce").into_f64s();
+        let bl = rank.allreduce_sum(&v);
+        let eq_allreduce =
+            nb.len() == bl.len() && nb.iter().zip(&bl).all(|(a, b)| a.to_bits() == b.to_bits());
+        // ialltoall vs alltoall.
+        let blocks: Vec<Vec<u8>> = (0..n).map(|d| vec![(me * n + d) as u8; 2048]).collect();
+        let nb = rank.ialltoall(blocks.clone()).wait(rank).expect("ialltoall").into_blocks();
+        let eq_alltoall = nb == rank.alltoall(blocks);
+        // ibarrier completes against blocking barriers around it.
+        rank.ibarrier().wait(rank).expect("ibarrier");
+        rank.barrier();
+        eq_bcast && eq_allreduce && eq_alltoall
+    });
+    outs.iter().all(|&x| x)
+}
+
+fn overlap_with(sizes: &[usize], rounds: usize, enforce: bool) -> Table {
+    let p = SystemProfile::noleland();
+    let (ranks, rpn) = (4usize, 2usize);
+    let mut t = Table::new(
+        "overlap",
+        "Blocking vs overlapped (ineighbor_alltoallw) 2-D halo exchange, 4 ranks / 2 nodes",
+        &["mode", "halo", "blocking_ms", "overlap_ms", "saving_pct", "results_equal"],
+    );
+    let mut json_rows: Vec<String> = Vec::new();
+    for mode in [
+        SecurityMode::Unencrypted,
+        SecurityMode::IpsecSim,
+        SecurityMode::Naive,
+        SecurityMode::CryptMpi,
+    ] {
+        // Satellite check, every run: nonblocking == blocking results.
+        let equal = nonblocking_equivalence(&p, mode);
+        assert!(equal, "{mode:?}: nonblocking collectives diverged from blocking results");
+        for &size in sizes {
+            let compute = calibrate_compute(&p, StencilDim::D2, ranks, rpn, size, 50.0);
+            let b = run_stencil(&p, mode, StencilDim::D2, ranks, rpn, size, rounds, compute);
+            let o =
+                run_stencil_overlap(&p, mode, StencilDim::D2, ranks, rpn, size, rounds, compute);
+            let saving = (1.0 - o.total_s / b.total_s) * 100.0;
+            t.row(vec![
+                mode.name().into(),
+                size_label(size),
+                f(b.total_s * 1e3, 3),
+                f(o.total_s * 1e3, 3),
+                f(saving, 1),
+                if equal { "yes".into() } else { "NO".into() },
+            ]);
+            json_rows.push(format!(
+                "    {{\"mode\": \"{}\", \"halo\": {size}, \"blocking_ms\": {:.3}, \
+                 \"overlap_ms\": {:.3}, \"results_equal\": {equal}}}",
+                mode.name(),
+                b.total_s * 1e3,
+                o.total_s * 1e3,
+            ));
+            // Acceptance: with the request posted before the compute
+            // charge, halo flight time hides behind compute — the
+            // overlapped kernel must never lose to the blocking one at
+            // chopped-pipeline halo sizes (1% timing tolerance).
+            if enforce && size >= 64 * 1024 {
+                assert!(
+                    o.total_s <= b.total_s * 1.01,
+                    "overlapped halo exchange slower than blocking: mode={} size={size} \
+                     overlap={:.6}s blocking={:.6}s",
+                    mode.name(),
+                    o.total_s,
+                    b.total_s
+                );
+            }
+        }
+    }
+    t.artifact(
+        "BENCH_overlap.json",
+        format!(
+            "{{\n  \"bench\": \"overlap\",\n  \"unit\": \"ms\",\n  \"results\": [\n{}\n  ]\n}}\n",
+            json_rows.join(",\n")
+        ),
+    );
+    t.note("Overlapped kernel: ineighbor_alltoallw posted before the round's compute charge; receives pre-posted, Vector column halos on the fused gather-seal path.");
+    t.note("Acceptance (enforced in release runs): overlap_ms <= blocking_ms at >= 64 KB halos in all four modes; nonblocking collectives byte/bit-identical to blocking in every run.");
+    t.note("Machine-readable BENCH_overlap.json is written next to the CSV and mirrored to the repo root (CI uploads it as a perf-trajectory artifact).");
+    t
+}
+
+/// This repo's communication-overlap report: the 2-D stencil's blocking
+/// halo exchange vs the schedule-driven neighborhood collective
+/// ([`crate::coordinator::Rank::ineighbor_alltoallw`]) overlapped with
+/// compute, across all four security modes, plus the
+/// nonblocking-vs-blocking collective equivalence gate.
+pub fn overlap() -> Table {
+    overlap_with(&[64 * 1024, 256 * 1024, 1 << 20], 10, !cfg!(debug_assertions))
+}
+
 /// Run one experiment by name.
 pub fn run_experiment(name: &str) -> Option<Table> {
     Some(match name {
@@ -1025,14 +1139,16 @@ pub fn run_experiment(name: &str) -> Option<Table> {
         "smoke" => smoke(),
         "gcm" => gcm(),
         "datatype" => datatype(),
+        "overlap" => overlap(),
         _ => return None,
     })
 }
 
 /// All experiment names: paper order, then the repo's own perf reports.
-pub const ALL_EXPERIMENTS: [&str; 19] = [
+pub const ALL_EXPERIMENTS: [&str; 20] = [
     "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "table1",
     "table2", "table3", "zerocopy", "collectives", "matching", "smoke", "gcm", "datatype",
+    "overlap",
 ];
 
 #[cfg(test)]
@@ -1051,11 +1167,27 @@ mod tests {
                     || name == "matching"
                     || name == "smoke"
                     || name == "gcm"
-                    || name == "datatype",
+                    || name == "datatype"
+                    || name == "overlap",
                 "unknown experiment family: {name}"
             );
         }
         assert!(run_experiment("nonexistent").is_none());
+    }
+
+    /// The `overlap` runner's table + artifact structure at tiny scale
+    /// (no timing enforcement — debug timings are meaningless), with the
+    /// nonblocking-vs-blocking equivalence gate still active.
+    #[test]
+    fn overlap_runner_structure() {
+        let t = overlap_with(&[4096], 2, false);
+        assert_eq!(t.header.len(), 6);
+        assert_eq!(t.rows.len(), 4, "one row per security mode");
+        assert!(t.rows.iter().all(|r| r[5] == "yes"), "results must be equal");
+        let (name, json) = &t.artifacts[0];
+        assert_eq!(name, "BENCH_overlap.json");
+        assert!(json.contains("\"bench\": \"overlap\""));
+        assert_eq!(json.matches("\"results_equal\": true").count(), t.rows.len());
     }
 
     /// The `gcm` runner's table + artifact structure at tiny scale (no

@@ -37,6 +37,19 @@
 //! participant count and a large vector, otherwise binomial reduce+bcast
 //! is used.
 //!
+//! **Schedule-driven nonblocking collectives** (DESIGN.md §11): the
+//! `barrier`/`bcast`/`allreduce`/`alltoall` families are compiled into a
+//! [`CollRequest`] — a sequence of stages, each a set of pre-posted
+//! receives, nonblocking sends, and a reduction/unpack step — advanced by
+//! `test()`/`progress()` polls or finished by `wait()`. Entering stage
+//! *k* pre-posts stage *k+1*'s receives (phase interleaving), so frames
+//! for the next phase bind to the matching engine while the current one
+//! seals. The blocking collectives are thin `wait()` wrappers over the
+//! same schedules, so both paths produce byte-identical results, tags,
+//! and message sequences. [`ineighbor_alltoallw`] adds a Cartesian
+//! neighborhood exchange ([`CartTopo`]) whose derived-datatype halos ride
+//! the fused gather-seal / open-scatter pipeline.
+//!
 //! All functions return `Err(AuthError)` when an encrypted leg fails to
 //! authenticate (the [`Rank`] wrappers turn that into an abort, as MPI
 //! would). Before the AES master keys exist — key distribution itself
@@ -44,10 +57,11 @@
 //! path; their payloads are RSA-OAEP protected at the application layer
 //! (paper §IV).
 
-use crate::coordinator::rank::{Rank, RecvReq};
+use crate::coordinator::rank::{Rank, RecvReq, SendReq};
 use crate::crypto::AuthError;
-use crate::mpi::CollOp;
+use crate::mpi::{CollOp, Datatype};
 use crate::net::Topology;
+use std::collections::VecDeque;
 
 /// Algorithm-family selection for the collectives subsystem.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -225,111 +239,6 @@ fn group_reduce_sum(
     Ok(())
 }
 
-/// Dissemination barrier over `group`.
-fn group_barrier(rank: &mut Rank, group: &[usize], tag: u64) -> Result<(), AuthError> {
-    let n = group.len();
-    if n <= 1 {
-        return Ok(());
-    }
-    let me_idx = idx_in(group, rank.id());
-    let mut dist = 1usize;
-    let mut r = 0u64;
-    while dist < n {
-        let to = group[(me_idx + dist) % n];
-        let from = group[(me_idx + n - dist) % n];
-        // Pre-post the round's receive so the peer's token binds to it
-        // the moment it lands (the engine's pre-posted fast path).
-        let rreq = rank.irecv(from, tag + round(r));
-        rank.coll_send(to, tag + round(r), &[1]);
-        rank.wait_recv_checked(rreq)?;
-        dist <<= 1;
-        r += 1;
-    }
-    Ok(())
-}
-
-/// Rabenseifner allreduce over a power-of-two `group`: reduce-scatter by
-/// recursive halving, then allgather by recursive doubling (the reverse
-/// exchange). Bandwidth-optimal: each rank moves ~2·|acc| elements total
-/// regardless of the group size, vs ~2·log2(L)·|acc| for a tree.
-fn rabenseifner_allreduce(
-    rank: &mut Rank,
-    group: &[usize],
-    tag: u64,
-    acc: &mut [f64],
-) -> Result<(), AuthError> {
-    let l = group.len();
-    debug_assert!(l > 1 && l.is_power_of_two());
-    let me_idx = idx_in(group, rank.id());
-    let (mut lo, mut hi) = (0usize, acc.len());
-    // (keep, give, partner) per halving round, replayed in reverse below.
-    let mut steps: Vec<((usize, usize), (usize, usize), usize)> = Vec::new();
-    let mut dist = l / 2;
-    let mut r = 0u64;
-    while dist >= 1 {
-        let partner = group[me_idx ^ dist];
-        let mid = lo + (hi - lo) / 2;
-        let (keep, give) =
-            if me_idx & dist == 0 { ((lo, mid), (mid, hi)) } else { ((mid, hi), (lo, mid)) };
-        let rreq = rank.irecv(partner, tag + round(r));
-        let sreq = rank.coll_isend(partner, tag + round(r), &f64s_to_bytes(&acc[give.0..give.1]));
-        let theirs = bytes_to_f64s(&rank.wait_recv_checked(rreq)?);
-        rank.wait_send(sreq);
-        if theirs.len() != keep.1 - keep.0 {
-            return Err(AuthError);
-        }
-        for (i, v) in theirs.iter().enumerate() {
-            acc[keep.0 + i] += *v;
-        }
-        steps.push((keep, give, partner));
-        lo = keep.0;
-        hi = keep.1;
-        dist /= 2;
-        r += 1;
-    }
-    // Allgather: at the reverse of halving round j, my `keep_j` range is
-    // fully reduced (by induction over the later rounds) and my partner
-    // from round j owns exactly my `give_j` range.
-    for (keep, give, partner) in steps.into_iter().rev() {
-        let rreq = rank.irecv(partner, tag + round(r));
-        let sreq = rank.coll_isend(partner, tag + round(r), &f64s_to_bytes(&acc[keep.0..keep.1]));
-        let theirs = bytes_to_f64s(&rank.wait_recv_checked(rreq)?);
-        rank.wait_send(sreq);
-        if theirs.len() != give.1 - give.0 {
-            return Err(AuthError);
-        }
-        acc[give.0..give.1].copy_from_slice(&theirs);
-        r += 1;
-    }
-    Ok(())
-}
-
-/// Allreduce over `group`: Rabenseifner for large vectors on power-of-two
-/// groups, binomial reduce + broadcast otherwise. Uses the tag's round
-/// field and, for the fallback broadcast, phase offset +4.
-fn group_allreduce_sum(
-    rank: &mut Rank,
-    group: &[usize],
-    tag: u64,
-    acc: &mut Vec<f64>,
-) -> Result<(), AuthError> {
-    let l = group.len();
-    if l <= 1 {
-        return Ok(());
-    }
-    if l.is_power_of_two() && acc.len() >= l && acc.len() * 8 >= RABENSEIFNER_MIN_BYTES {
-        return rabenseifner_allreduce(rank, group, tag, acc);
-    }
-    group_reduce_sum(rank, group, 0, tag, acc)?;
-    let me_idx = idx_in(group, rank.id());
-    let mut buf = if me_idx == 0 { f64s_to_bytes(acc) } else { Vec::new() };
-    group_bcast(rank, group, 0, tag + phase(4), &mut buf)?;
-    if me_idx != 0 {
-        *acc = bytes_to_f64s(&buf);
-    }
-    Ok(())
-}
-
 // -------------------------------------------------------------------
 // Blob framing for gather/scatter transit through a leader.
 // -------------------------------------------------------------------
@@ -384,54 +293,934 @@ fn with_coll<T>(
     out
 }
 
-/// Barrier: intra-node fan-in to the leader, dissemination barrier over
-/// the leaders, intra-node release (flat: dissemination over all ranks).
-pub fn barrier(rank: &mut Rank) -> Result<(), AuthError> {
-    with_coll(rank, CollOp::Barrier, |rank, tag| {
-        if hierarchical(rank) {
-            let tl = TwoLevel::of(rank);
-            if rank.id() == tl.leader() {
-                for &m in &tl.members[1..] {
-                    rank.coll_recv(m, tag + phase(0))?;
+// -------------------------------------------------------------------
+// Schedule-driven nonblocking collectives (DESIGN.md §11).
+//
+// A collective is *compiled* — from the same binomial / dissemination /
+// Rabenseifner / node-leader decompositions as the blocking algorithms,
+// with the same tags and payload bytes — into a list of stages. Each
+// stage holds the receives it depends on, the sends it launches, and a
+// finish step (reduction, store, unpack) that runs once every receive of
+// the stage has authenticated. The CollRequest state machine advances
+// stages under `test`/`progress`/`wait`; entering stage k pre-posts
+// stage k+1's receives, so the next phase's frames bind in the matching
+// engine while this phase is still sealing.
+// -------------------------------------------------------------------
+
+/// Where a compiled broadcast reads/writes its payload: the byte buffer
+/// (`bcast`) or the f64 accumulator (the allreduce fallback's result
+/// distribution).
+#[derive(Debug, Clone, Copy)]
+enum Medium {
+    Buf,
+    Acc,
+}
+
+impl Medium {
+    fn render(self, st: &mut SchedState) -> Vec<u8> {
+        match self {
+            Medium::Buf => st.buf.clone(),
+            Medium::Acc => f64s_to_bytes(&st.acc),
+        }
+    }
+
+    fn store(self, st: &mut SchedState, d: Vec<u8>) {
+        match self {
+            Medium::Buf => st.buf = d,
+            Medium::Acc => st.acc = bytes_to_f64s(&d),
+        }
+    }
+}
+
+/// Mutable state a schedule threads through its stages.
+#[derive(Debug, Default)]
+struct SchedState {
+    /// f64 accumulator (reduce/allreduce).
+    acc: Vec<f64>,
+    /// Byte buffer (bcast).
+    buf: Vec<u8>,
+    /// Alltoall input blocks, consumed as their sends launch.
+    blocks: Vec<Vec<u8>>,
+    /// Alltoall output blocks.
+    out: Vec<Vec<u8>>,
+    /// Intermediate storage a finish step leaves for a later stage's
+    /// sends (leader aggregates / member deliveries).
+    slots: Vec<Vec<u8>>,
+}
+
+/// Renders a stage's send payload from the schedule state at launch
+/// time (data that does not exist until an earlier stage finished).
+type LazyFn = Box<dyn FnOnce(&mut SchedState) -> Vec<u8>>;
+
+/// Runs when every receive of a stage has authenticated: reduction,
+/// store, or unpack. Payloads arrive in the stage's receive order.
+type FinishFn = Box<dyn FnOnce(&mut SchedState, Vec<Vec<u8>>) -> Result<(), AuthError>>;
+
+enum SendData {
+    /// Payload known at compile time.
+    Ready(Vec<u8>),
+    /// Payload rendered from the state when the stage launches.
+    Lazy(LazyFn),
+}
+
+struct SendSpec {
+    to: usize,
+    tag: u64,
+    data: SendData,
+}
+
+/// One compiled step of a collective schedule.
+struct Stage {
+    /// `(source, tag)` of every receive this stage depends on.
+    recvs: Vec<(usize, u64)>,
+    /// Sends launched when the stage is entered.
+    sends: Vec<SendSpec>,
+    finish: Option<FinishFn>,
+}
+
+/// A stage in flight: its posted receives, the payloads collected so
+/// far, and the send requests awaiting drain.
+struct ActiveStage {
+    reqs: Vec<Option<RecvReq>>,
+    payloads: Vec<Option<Vec<u8>>>,
+    sends: Vec<SendReq>,
+    finish: Option<FinishFn>,
+}
+
+/// The completed value of a nonblocking collective.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CollOutput {
+    /// Barrier: no payload.
+    Unit,
+    /// Broadcast bytes.
+    Bytes(Vec<u8>),
+    /// Allreduce vector.
+    F64s(Vec<f64>),
+    /// Alltoall blocks (`out[s]` = the block rank `s` sent here).
+    Blocks(Vec<Vec<u8>>),
+}
+
+impl CollOutput {
+    /// The broadcast payload; panics if this is not a `bcast` result.
+    pub fn into_bytes(self) -> Vec<u8> {
+        match self {
+            CollOutput::Bytes(b) => b,
+            other => panic!("expected Bytes output, got {other:?}"),
+        }
+    }
+
+    /// The reduced vector; panics if this is not an `allreduce` result.
+    pub fn into_f64s(self) -> Vec<f64> {
+        match self {
+            CollOutput::F64s(v) => v,
+            other => panic!("expected F64s output, got {other:?}"),
+        }
+    }
+
+    /// The exchanged blocks; panics if this is not an `alltoall` result.
+    pub fn into_blocks(self) -> Vec<Vec<u8>> {
+        match self {
+            CollOutput::Blocks(b) => b,
+            other => panic!("expected Blocks output, got {other:?}"),
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+enum OutputKind {
+    Unit,
+    Bytes,
+    F64s,
+    Blocks,
+}
+
+/// A nonblocking collective in flight: a compiled schedule advanced by
+/// [`CollRequest::test`] / [`CollRequest::progress`] polls (never
+/// blocking the rank's thread) and finished by [`CollRequest::wait`].
+///
+/// Dropping an unfinished request cancels its posted receives (the
+/// engine returns bound frames to the unexpected queue); like an
+/// abandoned `MPI_Request`, the collective's result is then undefined
+/// for the whole communicator.
+pub struct CollRequest {
+    op: CollOp,
+    stages: VecDeque<Stage>,
+    active: Option<ActiveStage>,
+    /// Receives pre-posted for the stage at `stages.front()` (phase
+    /// interleaving: posted while the previous stage was sealing).
+    prefetched: Option<Vec<Option<RecvReq>>>,
+    state: SchedState,
+    output: OutputKind,
+    done: bool,
+    failed: bool,
+}
+
+impl CollRequest {
+    /// Build the request and enter its first stage immediately —
+    /// i-collective semantics: receives post and sends launch at call
+    /// time, before the caller ever polls.
+    fn start(
+        rank: &mut Rank,
+        op: CollOp,
+        output: OutputKind,
+        stages: Vec<Stage>,
+        state: SchedState,
+    ) -> CollRequest {
+        let mut req = CollRequest {
+            op,
+            stages: stages.into(),
+            active: None,
+            prefetched: None,
+            state,
+            output,
+            done: false,
+            failed: false,
+        };
+        // An authentication failure here is latched into `failed` and
+        // surfaced by the next test()/wait().
+        let _ = req.advance(rank, false);
+        req
+    }
+
+    /// Has the schedule run to completion?
+    pub fn done(&self) -> bool {
+        self.done
+    }
+
+    /// Advance the schedule as far as currently possible without
+    /// blocking; `Ok(true)` once the collective has completed. Safe to
+    /// call after completion.
+    pub fn test(&mut self, rank: &mut Rank) -> Result<bool, AuthError> {
+        self.advance(rank, false)
+    }
+
+    /// Alias of [`CollRequest::test`] for progress-loop call sites.
+    pub fn progress(&mut self, rank: &mut Rank) -> Result<bool, AuthError> {
+        self.advance(rank, false)
+    }
+
+    /// Drive the schedule to completion (blocking on its receives) and
+    /// return the collective's output.
+    pub fn wait(mut self, rank: &mut Rank) -> Result<CollOutput, AuthError> {
+        let done = self.advance(rank, true)?;
+        debug_assert!(done, "blocking advance must finish the schedule");
+        Ok(match self.output {
+            OutputKind::Unit => CollOutput::Unit,
+            OutputKind::Bytes => CollOutput::Bytes(std::mem::take(&mut self.state.buf)),
+            OutputKind::F64s => CollOutput::F64s(std::mem::take(&mut self.state.acc)),
+            OutputKind::Blocks => CollOutput::Blocks(std::mem::take(&mut self.state.out)),
+        })
+    }
+
+    /// One progress slice, bracketed so the time it spends is attributed
+    /// to the collective's counters (and never the compute between
+    /// polls). On failure the schedule is torn down: posted receives are
+    /// cancelled and every later call reports the error.
+    fn advance(&mut self, rank: &mut Rank, block: bool) -> Result<bool, AuthError> {
+        if self.done {
+            return Ok(true);
+        }
+        if self.failed {
+            return Err(AuthError);
+        }
+        rank.coll_bracket_start(self.op);
+        let res = self.drive(rank, block);
+        rank.coll_bracket_end();
+        match res {
+            Ok(done) => {
+                self.done = done;
+                Ok(done)
+            }
+            Err(e) => {
+                self.failed = true;
+                // Dropping the outstanding requests cancels their
+                // tickets; frames already bound return to the
+                // unexpected queue.
+                self.stages.clear();
+                self.active = None;
+                self.prefetched = None;
+                Err(e)
+            }
+        }
+    }
+
+    fn drive(&mut self, rank: &mut Rank, block: bool) -> Result<bool, AuthError> {
+        loop {
+            if self.active.is_none() {
+                let Some(stage) = self.stages.pop_front() else {
+                    return Ok(true);
+                };
+                // This stage's receives: pre-posted when the previous
+                // stage was entered, or posted now for the first stage.
+                let reqs: Vec<Option<RecvReq>> = match self.prefetched.take() {
+                    Some(r) => r,
+                    None => stage
+                        .recvs
+                        .iter()
+                        .map(|&(from, tag)| Some(rank.irecv(from, tag)))
+                        .collect(),
+                };
+                // Phase interleaving: post the *next* stage's receives
+                // before this stage's sends and reductions, so its
+                // frames bind on arrival instead of queueing unexpected.
+                if let Some(next) = self.stages.front() {
+                    self.prefetched = Some(
+                        next.recvs
+                            .iter()
+                            .map(|&(from, tag)| Some(rank.irecv(from, tag)))
+                            .collect(),
+                    );
                 }
-                group_barrier(rank, &tl.leaders, tag + phase(1))?;
-                for &m in &tl.members[1..] {
-                    rank.coll_send(m, tag + phase(2), &[1]);
+                let mut sends = Vec::with_capacity(stage.sends.len());
+                for s in stage.sends {
+                    let data = match s.data {
+                        SendData::Ready(v) => v,
+                        SendData::Lazy(f) => f(&mut self.state),
+                    };
+                    sends.push(rank.coll_isend(s.to, s.tag, &data));
                 }
-            } else {
-                let leader = tl.leader();
-                rank.coll_send(leader, tag + phase(0), &[1]);
-                rank.coll_recv(leader, tag + phase(2))?;
+                let payloads = vec![None; reqs.len()];
+                self.active =
+                    Some(ActiveStage { reqs, payloads, sends, finish: stage.finish });
+            }
+            // Sweep the active stage's receives.
+            let act = self.active.as_mut().expect("active stage");
+            let mut complete = true;
+            for (req, slot) in act.reqs.iter_mut().zip(act.payloads.iter_mut()) {
+                if slot.is_some() || req.is_none() {
+                    continue;
+                }
+                match rank.test_recv_checked(req) {
+                    Some(Ok(d)) => *slot = Some(d),
+                    Some(Err(e)) => return Err(e),
+                    None if block => {
+                        let r = req.take().expect("unresolved receive has a request");
+                        *slot = Some(rank.wait_recv_checked(r)?);
+                    }
+                    None => complete = false,
+                }
+            }
+            if !complete {
+                return Ok(false);
+            }
+            // Stage sealed: drain its sends, run the reduction step.
+            let act = self.active.take().expect("active stage");
+            rank.waitall_send(act.sends);
+            let payloads: Vec<Vec<u8>> =
+                act.payloads.into_iter().map(|p| p.expect("sealed payload")).collect();
+            if let Some(f) = act.finish {
+                f(&mut self.state, payloads)?;
+            }
+        }
+    }
+}
+
+// -------------------------------------------------------------------
+// Schedule compilers: group primitives. Each mirrors its blocking
+// predecessor exactly — same participant maths, same tags, same payload
+// bytes — so the nonblocking collectives are byte-equivalent to the
+// blocking wrappers built on them.
+// -------------------------------------------------------------------
+
+/// Dissemination barrier over `group`, one stage per round.
+fn sched_group_barrier(stages: &mut Vec<Stage>, group: &[usize], me: usize, tag: u64) {
+    let n = group.len();
+    if n <= 1 {
+        return;
+    }
+    let me_idx = idx_in(group, me);
+    let mut dist = 1usize;
+    let mut r = 0u64;
+    while dist < n {
+        let to = group[(me_idx + dist) % n];
+        let from = group[(me_idx + n - dist) % n];
+        stages.push(Stage {
+            recvs: vec![(from, tag + round(r))],
+            sends: vec![SendSpec {
+                to,
+                tag: tag + round(r),
+                data: SendData::Ready(vec![1]),
+            }],
+            finish: None,
+        });
+        dist <<= 1;
+        r += 1;
+    }
+}
+
+/// Binomial-tree broadcast from `group[root_idx]` through `medium`: a
+/// receive stage (non-roots) whose finish stores the payload, then one
+/// send stage fanning it to the children in bit order.
+fn sched_group_bcast(
+    stages: &mut Vec<Stage>,
+    group: &[usize],
+    me: usize,
+    root_idx: usize,
+    tag: u64,
+    medium: Medium,
+) {
+    let n = group.len();
+    if n <= 1 {
+        return;
+    }
+    let vrank = (idx_in(group, me) + n - root_idx) % n;
+    if vrank != 0 {
+        let parent_v = vrank & (vrank - 1); // clear lowest set bit
+        let parent = group[(parent_v + root_idx) % n];
+        stages.push(Stage {
+            recvs: vec![(parent, tag)],
+            sends: Vec::new(),
+            finish: Some(Box::new(move |st, mut payloads| {
+                let d = payloads.pop().expect("bcast payload");
+                medium.store(st, d);
+                Ok(())
+            })),
+        });
+    }
+    let mut children = Vec::new();
+    let mut bit = 1usize;
+    while bit < n {
+        if vrank & (bit - 1) == 0 && vrank & bit == 0 {
+            let child_v = vrank | bit;
+            if child_v < n {
+                children.push(group[(child_v + root_idx) % n]);
+            }
+        }
+        bit <<= 1;
+    }
+    if !children.is_empty() {
+        stages.push(Stage {
+            recvs: Vec::new(),
+            sends: children
+                .into_iter()
+                .map(|child| SendSpec {
+                    to: child,
+                    tag,
+                    data: SendData::Lazy(Box::new(move |st| medium.render(st))),
+                })
+                .collect(),
+            finish: None,
+        });
+    }
+}
+
+/// Binomial-tree sum-reduction of `state.acc` toward `group[root_idx]`.
+fn sched_group_reduce(
+    stages: &mut Vec<Stage>,
+    group: &[usize],
+    me: usize,
+    root_idx: usize,
+    tag: u64,
+) {
+    let n = group.len();
+    if n <= 1 {
+        return;
+    }
+    let vrank = (idx_in(group, me) + n - root_idx) % n;
+    let mut bit = 1usize;
+    let mut r = 0u64;
+    while bit < n {
+        if vrank & (bit - 1) == 0 {
+            if vrank & bit != 0 {
+                let dst = group[((vrank & !bit) + root_idx) % n];
+                stages.push(Stage {
+                    recvs: Vec::new(),
+                    sends: vec![SendSpec {
+                        to: dst,
+                        tag: tag + round(r),
+                        data: SendData::Lazy(Box::new(|st| f64s_to_bytes(&st.acc))),
+                    }],
+                    finish: None,
+                });
+                break;
+            } else if vrank | bit < n {
+                let src = group[((vrank | bit) + root_idx) % n];
+                stages.push(Stage {
+                    recvs: vec![(src, tag + round(r))],
+                    sends: Vec::new(),
+                    finish: Some(Box::new(|st, mut payloads| {
+                        let other =
+                            bytes_to_f64s(&payloads.pop().expect("reduce payload"));
+                        if other.len() != st.acc.len() {
+                            return Err(AuthError);
+                        }
+                        for (a, b) in st.acc.iter_mut().zip(other.iter()) {
+                            *a += *b;
+                        }
+                        Ok(())
+                    })),
+                });
+            }
+        }
+        bit <<= 1;
+        r += 1;
+    }
+}
+
+/// Rabenseifner allreduce over a power-of-two `group` (`state.acc` of
+/// `acc_len` elements): reduce-scatter by recursive halving, then
+/// allgather by recursive doubling — one stage per exchange, each
+/// sending its half while receiving the partner's.
+fn sched_rabenseifner(
+    stages: &mut Vec<Stage>,
+    group: &[usize],
+    me: usize,
+    tag: u64,
+    acc_len: usize,
+) {
+    let l = group.len();
+    debug_assert!(l > 1 && l.is_power_of_two());
+    let me_idx = idx_in(group, me);
+    let (mut lo, mut hi) = (0usize, acc_len);
+    // (keep, give, partner) per halving round, replayed in reverse below.
+    let mut steps: Vec<((usize, usize), (usize, usize), usize)> = Vec::new();
+    let mut dist = l / 2;
+    let mut r = 0u64;
+    while dist >= 1 {
+        let partner = group[me_idx ^ dist];
+        let mid = lo + (hi - lo) / 2;
+        let (keep, give) =
+            if me_idx & dist == 0 { ((lo, mid), (mid, hi)) } else { ((mid, hi), (lo, mid)) };
+        stages.push(Stage {
+            recvs: vec![(partner, tag + round(r))],
+            sends: vec![SendSpec {
+                to: partner,
+                tag: tag + round(r),
+                data: SendData::Lazy(Box::new(move |st| {
+                    f64s_to_bytes(&st.acc[give.0..give.1])
+                })),
+            }],
+            finish: Some(Box::new(move |st, mut payloads| {
+                let theirs = bytes_to_f64s(&payloads.pop().expect("halving payload"));
+                if theirs.len() != keep.1 - keep.0 {
+                    return Err(AuthError);
+                }
+                for (i, v) in theirs.iter().enumerate() {
+                    st.acc[keep.0 + i] += *v;
+                }
+                Ok(())
+            })),
+        });
+        steps.push((keep, give, partner));
+        lo = keep.0;
+        hi = keep.1;
+        dist /= 2;
+        r += 1;
+    }
+    // Allgather: at the reverse of halving round j, my `keep_j` range is
+    // fully reduced (by induction over the later rounds) and my partner
+    // from round j owns exactly my `give_j` range.
+    for (keep, give, partner) in steps.into_iter().rev() {
+        stages.push(Stage {
+            recvs: vec![(partner, tag + round(r))],
+            sends: vec![SendSpec {
+                to: partner,
+                tag: tag + round(r),
+                data: SendData::Lazy(Box::new(move |st| {
+                    f64s_to_bytes(&st.acc[keep.0..keep.1])
+                })),
+            }],
+            finish: Some(Box::new(move |st, mut payloads| {
+                let theirs = bytes_to_f64s(&payloads.pop().expect("doubling payload"));
+                if theirs.len() != give.1 - give.0 {
+                    return Err(AuthError);
+                }
+                st.acc[give.0..give.1].copy_from_slice(&theirs);
+                Ok(())
+            })),
+        });
+        r += 1;
+    }
+}
+
+/// Allreduce over `group`: Rabenseifner for large vectors on
+/// power-of-two groups, binomial reduce + broadcast (phase offset +4)
+/// otherwise — the same selection rule as the old blocking algorithm.
+fn sched_group_allreduce(
+    stages: &mut Vec<Stage>,
+    group: &[usize],
+    me: usize,
+    tag: u64,
+    acc_len: usize,
+) {
+    let l = group.len();
+    if l <= 1 {
+        return;
+    }
+    if l.is_power_of_two() && acc_len >= l && acc_len * 8 >= RABENSEIFNER_MIN_BYTES {
+        sched_rabenseifner(stages, group, me, tag, acc_len);
+        return;
+    }
+    sched_group_reduce(stages, group, me, 0, tag);
+    sched_group_bcast(stages, group, me, 0, tag + phase(4), Medium::Acc);
+}
+
+// -------------------------------------------------------------------
+// Schedule compilers: whole collectives (flat + two-level forms).
+// -------------------------------------------------------------------
+
+fn compile_barrier(rank: &Rank, tag: u64) -> Vec<Stage> {
+    let mut stages = Vec::new();
+    let me = rank.id();
+    if hierarchical(rank) {
+        let tl = TwoLevel::of(rank);
+        if me == tl.leader() {
+            if tl.members.len() > 1 {
+                stages.push(Stage {
+                    recvs: tl.members[1..].iter().map(|&m| (m, tag + phase(0))).collect(),
+                    sends: Vec::new(),
+                    finish: None,
+                });
+            }
+            sched_group_barrier(&mut stages, &tl.leaders, me, tag + phase(1));
+            if tl.members.len() > 1 {
+                stages.push(Stage {
+                    recvs: Vec::new(),
+                    sends: tl.members[1..]
+                        .iter()
+                        .map(|&m| SendSpec {
+                            to: m,
+                            tag: tag + phase(2),
+                            data: SendData::Ready(vec![1]),
+                        })
+                        .collect(),
+                    finish: None,
+                });
             }
         } else {
-            let group: Vec<usize> = (0..rank.size()).collect();
-            group_barrier(rank, &group, tag)?;
+            let leader = tl.leader();
+            stages.push(Stage {
+                recvs: vec![(leader, tag + phase(2))],
+                sends: vec![SendSpec {
+                    to: leader,
+                    tag: tag + phase(0),
+                    data: SendData::Ready(vec![1]),
+                }],
+                finish: None,
+            });
         }
-        Ok(())
+    } else {
+        let group: Vec<usize> = (0..rank.size()).collect();
+        sched_group_barrier(&mut stages, &group, me, tag);
+    }
+    stages
+}
+
+fn compile_bcast(rank: &Rank, root: usize, tag: u64) -> Vec<Stage> {
+    let mut stages = Vec::new();
+    let me = rank.id();
+    if hierarchical(rank) {
+        let tl = TwoLevel::of(rank);
+        let (reps, root_node) = reps_for_root(rank, &tl, root);
+        let my_rep = reps[tl.node];
+        if me == my_rep {
+            sched_group_bcast(&mut stages, &reps, me, root_node, tag + phase(0), Medium::Buf);
+        }
+        let rep_idx = idx_in(&tl.members, my_rep);
+        sched_group_bcast(&mut stages, &tl.members, me, rep_idx, tag + phase(1), Medium::Buf);
+    } else {
+        let group: Vec<usize> = (0..rank.size()).collect();
+        sched_group_bcast(&mut stages, &group, me, root, tag, Medium::Buf);
+    }
+    stages
+}
+
+fn compile_allreduce(rank: &Rank, acc_len: usize, tag: u64) -> Vec<Stage> {
+    let mut stages = Vec::new();
+    let me = rank.id();
+    if hierarchical(rank) {
+        let tl = TwoLevel::of(rank);
+        sched_group_reduce(&mut stages, &tl.members, me, 0, tag + phase(0));
+        if me == tl.leader() {
+            sched_group_allreduce(&mut stages, &tl.leaders, me, tag + phase(1), acc_len);
+        }
+        sched_group_bcast(&mut stages, &tl.members, me, 0, tag + phase(2), Medium::Acc);
+    } else {
+        let group: Vec<usize> = (0..rank.size()).collect();
+        sched_group_allreduce(&mut stages, &group, me, tag, acc_len);
+    }
+    stages
+}
+
+/// The intra-node block exchange every rank of a node runs in the
+/// hierarchical alltoall (phase 3): pairwise, pre-posted.
+fn alltoall_intra_stage(members: &[usize], me: usize, b: usize, tag: u64) -> Option<Stage> {
+    let others: Vec<usize> = members.iter().copied().filter(|&m| m != me).collect();
+    if others.is_empty() {
+        return None;
+    }
+    let recvs = others.iter().map(|&m| (m, tag)).collect();
+    let sends = others
+        .iter()
+        .map(|&m| SendSpec {
+            to: m,
+            tag,
+            data: SendData::Lazy(Box::new(move |st| std::mem::take(&mut st.blocks[m]))),
+        })
+        .collect();
+    Some(Stage {
+        recvs,
+        sends,
+        finish: Some(Box::new(move |st, payloads| {
+            for (&m, d) in others.iter().zip(payloads) {
+                if d.len() != b {
+                    return Err(AuthError);
+                }
+                st.out[m] = d;
+            }
+            Ok(())
+        })),
     })
+}
+
+fn compile_alltoall(rank: &Rank, blocks: &[Vec<u8>], b: usize, tag: u64) -> Vec<Stage> {
+    let p = rank.size();
+    let me = rank.id();
+    let mut stages = Vec::new();
+    if !hierarchical(rank) {
+        if p <= 1 {
+            return stages;
+        }
+        // Flat pairwise: every receive pre-posted, every block launched,
+        // one finish collecting the peers' blocks in ascending order.
+        let peers: Vec<usize> = (0..p).filter(|&x| x != me).collect();
+        let recvs = peers.iter().map(|&x| (x, tag)).collect();
+        let sends = peers
+            .iter()
+            .map(|&x| SendSpec {
+                to: x,
+                tag,
+                data: SendData::Lazy(Box::new(move |st| std::mem::take(&mut st.blocks[x]))),
+            })
+            .collect();
+        stages.push(Stage {
+            recvs,
+            sends,
+            finish: Some(Box::new(move |st, payloads| {
+                for (&peer, d) in peers.iter().zip(payloads) {
+                    if d.len() != b {
+                        return Err(AuthError);
+                    }
+                    st.out[peer] = d;
+                }
+                Ok(())
+            })),
+        });
+        return stages;
+    }
+
+    // Two-level: aggregate remote-destined blocks at the node leader,
+    // exchange one aggregate per peer node, fan deliveries back out, and
+    // run the intra-node pairwise exchange as the closing stage.
+    let tl = TwoLevel::of(rank);
+    let topo = rank.topo().clone();
+    let leader = tl.leader();
+    let s = tl.members.len();
+    // Remote nodes ascending; every member of my node derives the same
+    // list, so pack offsets agree.
+    let rnodes: Vec<usize> = (0..topo.nodes()).filter(|&nd| nd != tl.node).collect();
+    let pack_off: Vec<usize> = rnodes
+        .iter()
+        .scan(0usize, |acc, &nd| {
+            let o = *acc;
+            *acc += topo.node_ranks(nd).len() * b;
+            Some(o)
+        })
+        .collect();
+    let pack_total: usize = rnodes.iter().map(|&nd| topo.node_ranks(nd).len() * b).sum();
+    // My remote-destined blocks: for nd in rnodes, for dst in members(nd).
+    let mut my_pack = Vec::with_capacity(pack_total);
+    for &nd in &rnodes {
+        for dst in topo.node_ranks(nd) {
+            my_pack.extend_from_slice(&blocks[dst]);
+        }
+    }
+
+    if me != leader {
+        // Ship my pack up, unpack the leader's delivery of every remote
+        // rank's block for me.
+        let (rn, tp) = (rnodes.clone(), topo.clone());
+        stages.push(Stage {
+            recvs: vec![(leader, tag + phase(2))],
+            sends: vec![SendSpec {
+                to: leader,
+                tag: tag + phase(0),
+                data: SendData::Ready(my_pack),
+            }],
+            finish: Some(Box::new(move |st, mut payloads| {
+                let deliver = payloads.pop().expect("leader delivery");
+                unpack_remote(&mut st.out, &deliver, &rn, &tp, b)
+            })),
+        });
+    } else {
+        // Stage L0: collect the members' packs and build one aggregate
+        // per peer node (`for dst in members(nd), for src in my members:
+        // block(src→dst)`), left in `slots` for the exchange stage.
+        {
+            let (rn, tp, po) = (rnodes.clone(), topo.clone(), pack_off);
+            stages.push(Stage {
+                recvs: tl.members[1..].iter().map(|&m| (m, tag + phase(0))).collect(),
+                sends: Vec::new(),
+                finish: Some(Box::new(move |st, payloads| {
+                    let mut packed: Vec<Vec<u8>> = Vec::with_capacity(s);
+                    packed.push(my_pack);
+                    for q in payloads {
+                        if q.len() != pack_total {
+                            return Err(AuthError);
+                        }
+                        packed.push(q);
+                    }
+                    st.slots = rn
+                        .iter()
+                        .enumerate()
+                        .map(|(k, &nd)| {
+                            let dn = tp.node_ranks(nd).len();
+                            let mut agg = Vec::with_capacity(dn * s * b);
+                            for d_i in 0..dn {
+                                let start = po[k] + d_i * b;
+                                for q in &packed {
+                                    agg.extend_from_slice(&q[start..start + b]);
+                                }
+                            }
+                            agg
+                        })
+                        .collect();
+                    Ok(())
+                })),
+            });
+        }
+        // Stage L1: exchange aggregates with the other leaders (rnodes
+        // order, matched by source), then slice each member's delivery
+        // out of the incoming aggregates — mine unpacks straight into
+        // `out`, the rest wait in `slots` for stage L2.
+        {
+            let (rn, tp) = (rnodes.clone(), topo.clone());
+            let members_len = s;
+            stages.push(Stage {
+                recvs: rnodes.iter().map(|&nd| (topo.leader_of(nd), tag + phase(1))).collect(),
+                sends: rnodes
+                    .iter()
+                    .enumerate()
+                    .map(|(k, &nd)| SendSpec {
+                        to: topo.leader_of(nd),
+                        tag: tag + phase(1),
+                        data: SendData::Lazy(Box::new(move |st| {
+                            std::mem::take(&mut st.slots[k])
+                        })),
+                    })
+                    .collect(),
+                finish: Some(Box::new(move |st, payloads| {
+                    let mut incoming: Vec<(usize, Vec<u8>)> =
+                        Vec::with_capacity(rn.len());
+                    for (&nd, agg) in rn.iter().zip(payloads) {
+                        let sn = tp.node_ranks(nd).len();
+                        if agg.len() != sn * members_len * b {
+                            return Err(AuthError);
+                        }
+                        incoming.push((nd, agg));
+                    }
+                    let mut delivers = Vec::with_capacity(members_len.saturating_sub(1));
+                    for d_i in 0..members_len {
+                        let mut deliver = Vec::with_capacity(pack_total);
+                        for (nd, agg) in &incoming {
+                            let sn = tp.node_ranks(*nd).len();
+                            let start = d_i * sn * b;
+                            deliver.extend_from_slice(&agg[start..start + sn * b]);
+                        }
+                        if d_i == 0 {
+                            unpack_remote(&mut st.out, &deliver, &rn, &tp, b)?;
+                        } else {
+                            delivers.push(deliver);
+                        }
+                    }
+                    st.slots = delivers;
+                    Ok(())
+                })),
+            });
+        }
+        // Stage L2: fan the deliveries out to the node's members.
+        if s > 1 {
+            stages.push(Stage {
+                recvs: Vec::new(),
+                sends: tl.members[1..]
+                    .iter()
+                    .enumerate()
+                    .map(|(j, &m)| SendSpec {
+                        to: m,
+                        tag: tag + phase(2),
+                        data: SendData::Lazy(Box::new(move |st| {
+                            std::mem::take(&mut st.slots[j])
+                        })),
+                    })
+                    .collect(),
+                finish: None,
+            });
+        }
+    }
+    // Closing stage for everyone: the intra-node pairwise exchange.
+    if let Some(stage) = alltoall_intra_stage(&tl.members, me, b, tag + phase(3)) {
+        stages.push(stage);
+    }
+    stages
+}
+
+// -------------------------------------------------------------------
+// Public nonblocking collectives.
+// -------------------------------------------------------------------
+
+/// Nonblocking barrier.
+pub fn ibarrier(rank: &mut Rank) -> CollRequest {
+    let tag = rank.coll_open(CollOp::Barrier);
+    let stages = compile_barrier(rank, tag);
+    CollRequest::start(rank, CollOp::Barrier, OutputKind::Unit, stages, SchedState::default())
+}
+
+/// Nonblocking broadcast from `root`; output is the broadcast bytes.
+pub fn ibcast(rank: &mut Rank, root: usize, data: Vec<u8>) -> CollRequest {
+    let tag = rank.coll_open(CollOp::Bcast);
+    let stages = compile_bcast(rank, root, tag);
+    let buf = if rank.id() == root { data } else { Vec::new() };
+    let state = SchedState { buf, ..Default::default() };
+    CollRequest::start(rank, CollOp::Bcast, OutputKind::Bytes, stages, state)
+}
+
+/// Nonblocking all-reduce (sum); output is the reduced f64 vector.
+pub fn iallreduce_sum(rank: &mut Rank, data: &[f64]) -> CollRequest {
+    let tag = rank.coll_open(CollOp::Allreduce);
+    let stages = compile_allreduce(rank, data.len(), tag);
+    let state = SchedState { acc: data.to_vec(), ..Default::default() };
+    CollRequest::start(rank, CollOp::Allreduce, OutputKind::F64s, stages, state)
+}
+
+/// Nonblocking all-to-all of equal-size blocks; output is the exchanged
+/// blocks in source-rank order.
+pub fn ialltoall(rank: &mut Rank, mut blocks: Vec<Vec<u8>>) -> CollRequest {
+    let p = rank.size();
+    assert_eq!(blocks.len(), p, "alltoall needs one block per destination rank");
+    let b = blocks.first().map(|x| x.len()).unwrap_or(0);
+    assert!(blocks.iter().all(|x| x.len() == b), "alltoall requires equal block sizes");
+    let tag = rank.coll_open(CollOp::Alltoall);
+    let stages = compile_alltoall(rank, &blocks, b, tag);
+    let me = rank.id();
+    let mut out = vec![Vec::new(); p];
+    out[me] = std::mem::take(&mut blocks[me]);
+    let state = SchedState { blocks, out, ..Default::default() };
+    CollRequest::start(rank, CollOp::Alltoall, OutputKind::Blocks, stages, state)
+}
+
+/// Barrier: intra-node fan-in to the leader, dissemination barrier over
+/// the leaders, intra-node release (flat: dissemination over all ranks).
+/// Thin wrapper: compiles the same schedule as [`ibarrier`] and waits.
+pub fn barrier(rank: &mut Rank) -> Result<(), AuthError> {
+    ibarrier(rank).wait(rank)?;
+    Ok(())
 }
 
 /// Broadcast from `root`: binomial over per-node representatives (the
 /// root for its own node, leaders elsewhere), then binomial inside each
-/// node.
+/// node. Thin wrapper over [`ibcast`].
 pub fn bcast(rank: &mut Rank, root: usize, data: Vec<u8>) -> Result<Vec<u8>, AuthError> {
-    with_coll(rank, CollOp::Bcast, |rank, tag| {
-        let mut buf = if rank.id() == root { data } else { Vec::new() };
-        if hierarchical(rank) {
-            let tl = TwoLevel::of(rank);
-            let (reps, root_node) = reps_for_root(rank, &tl, root);
-            let my_rep = reps[tl.node];
-            if rank.id() == my_rep {
-                group_bcast(rank, &reps, root_node, tag + phase(0), &mut buf)?;
-            }
-            let rep_idx = idx_in(&tl.members, my_rep);
-            group_bcast(rank, &tl.members, rep_idx, tag + phase(1), &mut buf)?;
-        } else {
-            let group: Vec<usize> = (0..rank.size()).collect();
-            group_bcast(rank, &group, root, tag, &mut buf)?;
-        }
-        Ok(buf)
-    })
+    Ok(ibcast(rank, root, data).wait(rank)?.into_bytes())
 }
 
 /// Sum-reduction to `root`; returns `Some(total)` there, `None` elsewhere.
@@ -461,28 +1250,10 @@ pub fn reduce_sum(
 
 /// Allreduce (sum): intra-node reduce to the leader, allreduce over the
 /// leaders (Rabenseifner for large vectors on power-of-two leader
-/// counts), intra-node broadcast of the result.
+/// counts), intra-node broadcast of the result. Thin wrapper over
+/// [`iallreduce_sum`].
 pub fn allreduce_sum(rank: &mut Rank, data: &[f64]) -> Result<Vec<f64>, AuthError> {
-    with_coll(rank, CollOp::Allreduce, |rank, tag| {
-        let mut acc = data.to_vec();
-        if hierarchical(rank) {
-            let tl = TwoLevel::of(rank);
-            group_reduce_sum(rank, &tl.members, 0, tag + phase(0), &mut acc)?;
-            let am_leader = rank.id() == tl.leader();
-            if am_leader {
-                group_allreduce_sum(rank, &tl.leaders, tag + phase(1), &mut acc)?;
-            }
-            let mut buf = if am_leader { f64s_to_bytes(&acc) } else { Vec::new() };
-            group_bcast(rank, &tl.members, 0, tag + phase(2), &mut buf)?;
-            if !am_leader {
-                acc = bytes_to_f64s(&buf);
-            }
-        } else {
-            let group: Vec<usize> = (0..rank.size()).collect();
-            group_allreduce_sum(rank, &group, tag, &mut acc)?;
-        }
-        Ok(acc)
-    })
+    Ok(iallreduce_sum(rank, data).wait(rank)?.into_f64s())
 }
 
 /// Allgather of equal-size blocks; returns the concatenation in rank
@@ -599,43 +1370,9 @@ fn hier_allgather(
 /// blocks are exchanged directly on the intra-node route; remote blocks
 /// are aggregated at the leader, exchanged as one node-to-node message
 /// per peer node, and fanned back out.
+/// Thin wrapper over [`ialltoall`].
 pub fn alltoall(rank: &mut Rank, blocks: Vec<Vec<u8>>) -> Result<Vec<Vec<u8>>, AuthError> {
-    let p = rank.size();
-    assert_eq!(blocks.len(), p, "alltoall needs one block per destination rank");
-    let b = blocks.first().map(|x| x.len()).unwrap_or(0);
-    assert!(blocks.iter().all(|x| x.len() == b), "alltoall requires equal block sizes");
-    with_coll(rank, CollOp::Alltoall, |rank, tag| {
-        if hierarchical(rank) {
-            let tl = TwoLevel::of(rank);
-            return hier_alltoall(rank, &tl, &blocks, b, tag);
-        }
-        let me = rank.id();
-        let mut out: Vec<Vec<u8>> = vec![Vec::new(); p];
-        out[me] = blocks[me].clone();
-        // Pre-post every receive first: peers' blocks bind to them the
-        // moment they land instead of piling into the unexpected queue.
-        let rreqs: Vec<(usize, RecvReq)> = (0..p)
-            .filter(|&peer| peer != me)
-            .map(|peer| (peer, rank.irecv(peer, tag)))
-            .collect();
-        let mut reqs = Vec::with_capacity(p.saturating_sub(1));
-        for (peer, block) in blocks.iter().enumerate() {
-            if peer != me {
-                reqs.push(rank.coll_isend(peer, tag, block));
-            }
-        }
-        for (peer, rreq) in rreqs {
-            let d = rank.wait_recv_checked(rreq)?;
-            if d.len() != b {
-                return Err(AuthError);
-            }
-            out[peer] = d;
-        }
-        for r in reqs {
-            rank.wait_send(r);
-        }
-        Ok(out)
-    })
+    Ok(ialltoall(rank, blocks).wait(rank)?.into_blocks())
 }
 
 /// Unpack a leader delivery (`for nd in rnodes, for src in
@@ -661,140 +1398,6 @@ fn unpack_remote(
         return Err(AuthError);
     }
     Ok(())
-}
-
-fn hier_alltoall(
-    rank: &mut Rank,
-    tl: &TwoLevel,
-    blocks: &[Vec<u8>],
-    b: usize,
-    tag: u64,
-) -> Result<Vec<Vec<u8>>, AuthError> {
-    let p = rank.size();
-    let me = rank.id();
-    let leader = tl.leader();
-    let s = tl.members.len();
-    let topo = rank.topo().clone();
-    // Remote nodes ascending; every member of my node derives the same
-    // list, so pack offsets agree.
-    let rnodes: Vec<usize> = (0..topo.nodes()).filter(|&nd| nd != tl.node).collect();
-    let pack_off: Vec<usize> = rnodes
-        .iter()
-        .scan(0usize, |acc, &nd| {
-            let o = *acc;
-            *acc += topo.node_ranks(nd).len() * b;
-            Some(o)
-        })
-        .collect();
-    let pack_total: usize = rnodes.iter().map(|&nd| topo.node_ranks(nd).len() * b).sum();
-    // My remote-destined blocks: for nd in rnodes, for dst in members(nd).
-    let mut my_pack = Vec::with_capacity(pack_total);
-    for &nd in &rnodes {
-        for dst in topo.node_ranks(nd) {
-            my_pack.extend_from_slice(&blocks[dst]);
-        }
-    }
-
-    let mut out: Vec<Vec<u8>> = vec![Vec::new(); p];
-    out[me] = blocks[me].clone();
-
-    // Same-node blocks go rank-to-rank over the intra-node route, with
-    // the receives pre-posted so they bind on arrival.
-    let intra_rreqs: Vec<(usize, RecvReq)> = tl
-        .members
-        .iter()
-        .filter(|&&m| m != me)
-        .map(|&m| (m, rank.irecv(m, tag + phase(3))))
-        .collect();
-    let mut intra_reqs = Vec::with_capacity(s.saturating_sub(1));
-    for &m in &tl.members {
-        if m != me {
-            intra_reqs.push(rank.coll_isend(m, tag + phase(3), &blocks[m]));
-        }
-    }
-
-    if me == leader {
-        // Collect members' packs (member order; mine is index 0).
-        let mut packed: Vec<Vec<u8>> = Vec::with_capacity(s);
-        packed.push(my_pack);
-        for &m in &tl.members[1..] {
-            let q = rank.coll_recv(m, tag + phase(0))?;
-            if q.len() != pack_total {
-                return Err(AuthError);
-            }
-            packed.push(q);
-        }
-        // One aggregate per peer node: for dst in members(nd), for src in
-        // my members: block(src→dst).
-        let aggs: Vec<Vec<u8>> = rnodes
-            .iter()
-            .enumerate()
-            .map(|(k, &nd)| {
-                let dn = topo.node_ranks(nd).len();
-                let mut agg = Vec::with_capacity(dn * s * b);
-                for d_i in 0..dn {
-                    let start = pack_off[k] + d_i * b;
-                    for q in &packed {
-                        agg.extend_from_slice(&q[start..start + b]);
-                    }
-                }
-                agg
-            })
-            .collect();
-        // Pre-post peers' aggregates (rnodes order — matched by source),
-        // then send ours: each inbound aggregate binds on arrival.
-        let agg_rreqs: Vec<RecvReq> = rnodes
-            .iter()
-            .map(|&nd| rank.irecv(topo.leader_of(nd), tag + phase(1)))
-            .collect();
-        let mut agg_reqs = Vec::with_capacity(rnodes.len());
-        for (k, &nd) in rnodes.iter().enumerate() {
-            agg_reqs.push(rank.coll_isend(topo.leader_of(nd), tag + phase(1), &aggs[k]));
-        }
-        let mut incoming: Vec<(usize, Vec<u8>)> = Vec::with_capacity(rnodes.len());
-        for (&nd, rreq) in rnodes.iter().zip(agg_rreqs) {
-            let sn = topo.node_ranks(nd).len();
-            let agg = rank.wait_recv_checked(rreq)?;
-            if agg.len() != sn * s * b {
-                return Err(AuthError);
-            }
-            incoming.push((nd, agg));
-        }
-        for r in agg_reqs {
-            rank.wait_send(r);
-        }
-        // Deliver each local member its slice of every aggregate.
-        for (d_i, &dst) in tl.members.iter().enumerate() {
-            let mut deliver = Vec::with_capacity(pack_total);
-            for (nd, agg) in &incoming {
-                let sn = topo.node_ranks(*nd).len();
-                let start = d_i * sn * b;
-                deliver.extend_from_slice(&agg[start..start + sn * b]);
-            }
-            if d_i == 0 {
-                unpack_remote(&mut out, &deliver, &rnodes, &topo, b)?;
-            } else {
-                rank.coll_send(dst, tag + phase(2), &deliver);
-            }
-        }
-    } else {
-        rank.coll_send(leader, tag + phase(0), &my_pack);
-        let deliver = rank.coll_recv(leader, tag + phase(2))?;
-        unpack_remote(&mut out, &deliver, &rnodes, &topo, b)?;
-    }
-
-    // Finish the intra-node exchange.
-    for (m, rreq) in intra_rreqs {
-        let d = rank.wait_recv_checked(rreq)?;
-        if d.len() != b {
-            return Err(AuthError);
-        }
-        out[m] = d;
-    }
-    for r in intra_reqs {
-        rank.wait_send(r);
-    }
-    Ok(out)
 }
 
 /// Gather byte blobs at `root` (`Some(all)` there, `None` elsewhere).
@@ -935,6 +1538,206 @@ fn scatter_impl(
         rank.coll_recv(root, tag)?
     };
     Ok(out)
+}
+
+// -------------------------------------------------------------------
+// Cartesian topology + neighborhood alltoallw (DESIGN.md §11).
+// -------------------------------------------------------------------
+
+/// A Cartesian process grid (row-major, no periodic wraparound): the
+/// communicator-topology object behind [`ineighbor_alltoallw`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CartTopo {
+    dims: Vec<usize>,
+}
+
+impl CartTopo {
+    /// A grid with the given per-axis extents.
+    pub fn new(dims: &[usize]) -> Self {
+        assert!(!dims.is_empty(), "cartesian topology needs at least one axis");
+        assert!(dims.iter().all(|&d| d > 0), "cartesian axis extents must be positive");
+        Self { dims: dims.to_vec() }
+    }
+
+    /// Total number of ranks in the grid.
+    pub fn ranks(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    /// Number of axes.
+    pub fn ndims(&self) -> usize {
+        self.dims.len()
+    }
+
+    /// Row-major coordinates of `rank`.
+    pub fn coords(&self, rank: usize) -> Vec<usize> {
+        assert!(rank < self.ranks());
+        let mut c = vec![0usize; self.dims.len()];
+        let mut r = rank;
+        for i in (0..self.dims.len()).rev() {
+            c[i] = r % self.dims[i];
+            r /= self.dims[i];
+        }
+        c
+    }
+
+    /// Rank at the given coordinates.
+    pub fn rank_of(&self, coords: &[usize]) -> usize {
+        assert_eq!(coords.len(), self.dims.len());
+        coords.iter().zip(&self.dims).fold(0usize, |acc, (&c, &d)| {
+            assert!(c < d);
+            acc * d + c
+        })
+    }
+
+    /// The (minus, plus) neighbors of `rank` along `axis`; `None` past a
+    /// grid edge.
+    pub fn shift(&self, rank: usize, axis: usize) -> (Option<usize>, Option<usize>) {
+        let c = self.coords(rank);
+        let minus = (c[axis] > 0).then(|| {
+            let mut m = c.clone();
+            m[axis] -= 1;
+            self.rank_of(&m)
+        });
+        let plus = (c[axis] + 1 < self.dims[axis]).then(|| {
+            let mut p = c.clone();
+            p[axis] += 1;
+            self.rank_of(&p)
+        });
+        (minus, plus)
+    }
+
+    /// All existing neighbors of `rank`, per axis minus-then-plus — the
+    /// canonical neighborhood order for [`ineighbor_alltoallw`].
+    pub fn neighbors(&self, rank: usize) -> Vec<usize> {
+        let mut out = Vec::with_capacity(2 * self.dims.len());
+        for axis in 0..self.dims.len() {
+            let (minus, plus) = self.shift(rank, axis);
+            out.extend(minus);
+            out.extend(plus);
+        }
+        out
+    }
+}
+
+/// One edge of a neighborhood exchange: what to send to `nbr` (a
+/// datatype view anchored at `send_off` into the send buffer) and where
+/// the matching inbound data lands (a view at `recv_off` into the
+/// receive buffer).
+#[derive(Debug, Clone)]
+pub struct NeighborHalo {
+    /// Peer rank for this edge.
+    pub nbr: usize,
+    /// Byte offset into the send buffer where `send_dt` is anchored.
+    pub send_off: usize,
+    /// Byte offset into the receive buffer where `recv_dt` is anchored.
+    pub recv_off: usize,
+    /// Layout of the outbound data (e.g. a [`Datatype::vector`] column).
+    pub send_dt: Datatype,
+    /// Layout of the inbound data.
+    pub recv_dt: Datatype,
+}
+
+/// One in-flight inbound halo edge.
+struct PendingNbr {
+    req: Option<RecvReq>,
+    off: usize,
+    dt: Datatype,
+}
+
+/// Handle for an in-flight [`ineighbor_alltoallw`]: all receives are
+/// pre-posted and all sends launched at start; [`NeighborRequest::test`]
+/// drains whichever edges have arrived and [`NeighborRequest::wait`]
+/// blocks for the rest.
+pub struct NeighborRequest {
+    sends: Vec<SendReq>,
+    recvs: Vec<PendingNbr>,
+    bytes: usize,
+}
+
+/// Nonblocking neighborhood all-to-all over derived datatypes on a
+/// process topology such as [`CartTopo`]: one send and one receive per
+/// [`NeighborHalo`], with non-contiguous views (stencil columns) riding
+/// the fused gather-seal path of [`Rank::isend_dt`]. All ranks must
+/// call with halo lists that agree edge-for-edge (if A lists B, B lists
+/// A), in the same collective-call order.
+pub fn ineighbor_alltoallw(
+    rank: &mut Rank,
+    halos: &[NeighborHalo],
+    sendbuf: &[u8],
+) -> NeighborRequest {
+    let tag = rank.coll_open(CollOp::Neighbor);
+    rank.coll_bracket_start(CollOp::Neighbor);
+    // Pre-post every receive before the first send so inbound edges bind
+    // to tickets instead of queueing unexpected.
+    let recvs: Vec<PendingNbr> = halos
+        .iter()
+        .map(|h| PendingNbr {
+            req: Some(rank.irecv_dt(h.nbr, tag)),
+            off: h.recv_off,
+            dt: h.recv_dt.clone(),
+        })
+        .collect();
+    let sends: Vec<SendReq> = halos
+        .iter()
+        .map(|h| rank.isend_dt(h.nbr, tag, &sendbuf[h.send_off..], &h.send_dt))
+        .collect();
+    rank.coll_bracket_end();
+    NeighborRequest { sends, recvs, bytes: 0 }
+}
+
+impl NeighborRequest {
+    /// Whether every inbound edge has been received.
+    pub fn done(&self) -> bool {
+        self.recvs.iter().all(|p| p.req.is_none())
+    }
+
+    /// Drain whichever inbound edges have arrived into `ghost` without
+    /// blocking; returns `Ok(true)` once all edges (and sends) are
+    /// complete.
+    pub fn test(&mut self, rank: &mut Rank, ghost: &mut [u8]) -> Result<bool, AuthError> {
+        rank.coll_bracket_start(CollOp::Neighbor);
+        let mut complete = true;
+        for p in &mut self.recvs {
+            if p.req.is_none() {
+                continue;
+            }
+            match rank.test_recv_dt_into_checked(&mut p.req, &mut ghost[p.off..], &p.dt) {
+                Some(Ok(n)) => self.bytes += n,
+                Some(Err(e)) => {
+                    rank.coll_bracket_end();
+                    return Err(e);
+                }
+                None => complete = false,
+            }
+        }
+        if complete && !self.sends.is_empty() {
+            rank.waitall_send(std::mem::take(&mut self.sends));
+        }
+        rank.coll_bracket_end();
+        Ok(complete)
+    }
+
+    /// Block until every edge has landed in `ghost`; returns the total
+    /// unpacked byte count.
+    pub fn wait(mut self, rank: &mut Rank, ghost: &mut [u8]) -> Result<usize, AuthError> {
+        rank.coll_bracket_start(CollOp::Neighbor);
+        let mut res = Ok(());
+        for p in &mut self.recvs {
+            let Some(req) = p.req.take() else { continue };
+            if res.is_err() {
+                drop(req); // cancels the ticket
+                continue;
+            }
+            match rank.wait_recv_dt_into_checked(req, &mut ghost[p.off..], &p.dt) {
+                Ok(n) => self.bytes += n,
+                Err(e) => res = Err(e),
+            }
+        }
+        rank.waitall_send(std::mem::take(&mut self.sends));
+        rank.coll_bracket_end();
+        res.map(|()| self.bytes)
+    }
 }
 
 #[cfg(test)]
@@ -1187,5 +1990,150 @@ mod tests {
                 assert!(seen.insert(base + phase(p) + round(r)));
             }
         }
+    }
+
+    /// Row-major Cartesian geometry: coords/rank round-trip, edge-aware
+    /// shifts, canonical neighbor order (per axis minus-then-plus).
+    #[test]
+    fn cart_topo_geometry() {
+        let cart = CartTopo::new(&[3, 4]);
+        assert_eq!(cart.ranks(), 12);
+        assert_eq!(cart.ndims(), 2);
+        for r in 0..cart.ranks() {
+            assert_eq!(cart.rank_of(&cart.coords(r)), r);
+        }
+        assert_eq!(cart.coords(7), vec![1, 3]);
+        // Interior rank 5 = (1,1): full neighborhood.
+        assert_eq!(cart.shift(5, 0), (Some(1), Some(9)));
+        assert_eq!(cart.shift(5, 1), (Some(4), Some(6)));
+        assert_eq!(cart.neighbors(5), vec![1, 9, 4, 6]);
+        // Corner rank 0 = (0,0): no wraparound.
+        assert_eq!(cart.shift(0, 0), (None, Some(4)));
+        assert_eq!(cart.shift(0, 1), (None, Some(1)));
+        assert_eq!(cart.neighbors(0), vec![4, 1]);
+        // 1-D degenerate grid.
+        let line = CartTopo::new(&[1]);
+        assert_eq!(line.neighbors(0), Vec::<usize>::new());
+    }
+
+    /// Regression for the reserved-tag namespace: a user wildcard posted
+    /// while an `iallreduce` is in flight must not steal any of its
+    /// frames. The Rabenseifner-size vector keeps several collective
+    /// rounds outstanding while the wildcard sits posted; the collective
+    /// must still finish exact and the wildcard must bind only the user
+    /// message.
+    #[test]
+    fn wildcard_posted_mid_iallreduce_cannot_steal_frames() {
+        let len = RABENSEIFNER_MIN_BYTES / 8;
+        let cfg = cfg_with(2, 1, SecurityMode::CryptMpi, CollPolicy::Flat);
+        let (outs, _) = run_cluster(&cfg, move |rank| {
+            let me = rank.id();
+            let peer = 1 - me;
+            let v: Vec<f64> = (0..len).map(|i| (me * len + i) as f64).collect();
+            let mut req = rank.iallreduce_sum(&v);
+            // Wildcard receive posted mid-collective, plus the user
+            // message it is meant for.
+            let wild = rank.irecv_any(7);
+            rank.send(peer, 7, &[me as u8; 3]);
+            while !req.test(rank).unwrap() {
+                std::thread::yield_now();
+            }
+            let out = req.wait(rank).unwrap().into_f64s();
+            for (i, x) in out.iter().enumerate() {
+                let expect: f64 = (0..2).map(|r| (r * len + i) as f64).sum();
+                assert_eq!(*x, expect, "allreduce corrupted at {i}");
+            }
+            let msg = rank.wait_recv_checked(wild).unwrap();
+            assert_eq!(msg, vec![peer as u8; 3], "wildcard got a stolen frame");
+            assert_eq!(rank.queue_depth(), 0);
+            true
+        });
+        assert!(outs.iter().all(|&x| x));
+    }
+
+    /// Every nonblocking collective driven by a `test()` poll loop gives
+    /// the same result as its blocking counterpart computed from the same
+    /// inputs, on both flat and hierarchical policies.
+    #[test]
+    fn nonblocking_collectives_match_blocking() {
+        for policy in [CollPolicy::Flat, CollPolicy::Hierarchical] {
+            let cfg = cfg_with(6, 2, SecurityMode::CryptMpi, policy);
+            let (outs, _) = run_cluster(&cfg, move |rank| {
+                let n = rank.size();
+                let me = rank.id();
+                let drive = |rank: &mut crate::coordinator::Rank, mut req: CollRequest| {
+                    while !req.test(rank).unwrap() {
+                        std::thread::yield_now();
+                    }
+                    req.wait(rank).unwrap()
+                };
+                // ibcast vs bcast (same root, same payload).
+                let data = if me == 2 { vec![5u8; 9000] } else { Vec::new() };
+                let req = rank.ibcast(2, data.clone());
+                let nb = drive(rank, req).into_bytes();
+                assert_eq!(nb, rank.bcast(2, data), "bcast {policy:?}");
+                // iallreduce vs allreduce (exact integer-valued sums).
+                let v = [me as f64, 1.5 * 2.0, (me * me) as f64];
+                let req = rank.iallreduce_sum(&v);
+                let nb = drive(rank, req).into_f64s();
+                assert_eq!(nb, rank.allreduce_sum(&v), "allreduce {policy:?}");
+                // ialltoall vs alltoall.
+                let blocks: Vec<Vec<u8>> =
+                    (0..n).map(|d| vec![(me * n + d) as u8; 4]).collect();
+                let req = rank.ialltoall(blocks.clone());
+                let nb = drive(rank, req).into_blocks();
+                assert_eq!(nb, rank.alltoall(blocks), "alltoall {policy:?}");
+                // ibarrier completes.
+                let req = rank.ibarrier();
+                drive(rank, req);
+                assert_eq!(rank.queue_depth(), 0, "{policy:?} leaves queued traffic");
+                true
+            });
+            assert!(outs.iter().all(|&x| x));
+        }
+    }
+
+    /// A 2-D halo exchange as one neighborhood collective: `Vector`
+    /// column views on the send side land in the right ghost slots on
+    /// the receive side, across edge and interior ranks.
+    #[test]
+    fn neighbor_alltoallw_exchanges_column_halos() {
+        let cfg = cfg_with(4, 2, SecurityMode::CryptMpi, CollPolicy::Auto);
+        let (outs, _) = run_cluster(&cfg, move |rank| {
+            let me = rank.id();
+            let cart = CartTopo::new(&[2, 2]);
+            // Each rank owns a 4-row × 8-byte grid; exchange the first
+            // column (a strided vector) with every neighbor.
+            let (rows, pitch, col_w) = (4usize, 8usize, 2usize);
+            let grid: Vec<u8> = (0..rows * pitch).map(|i| (me * 64 + i) as u8).collect();
+            let col = Datatype::vector(rows, col_w, pitch);
+            let nbrs = cart.neighbors(me);
+            let halos: Vec<NeighborHalo> = nbrs
+                .iter()
+                .enumerate()
+                .map(|(i, &nb)| NeighborHalo {
+                    nbr: nb,
+                    send_off: 0,
+                    recv_off: i * rows * pitch,
+                    send_dt: col.clone(),
+                    recv_dt: col.clone(),
+                })
+                .collect();
+            let req = rank.ineighbor_alltoallw(&halos, &grid);
+            let mut ghost = vec![0u8; nbrs.len() * rows * pitch];
+            let got = req.wait(rank, &mut ghost).unwrap();
+            assert_eq!(got, nbrs.len() * rows * col_w);
+            for (i, &nb) in nbrs.iter().enumerate() {
+                for r in 0..rows {
+                    let base = i * rows * pitch + r * pitch;
+                    let want: Vec<u8> =
+                        (0..col_w).map(|k| (nb * 64 + r * pitch + k) as u8).collect();
+                    assert_eq!(&ghost[base..base + col_w], &want[..], "nbr {nb} row {r}");
+                }
+            }
+            assert_eq!(rank.queue_depth(), 0);
+            true
+        });
+        assert!(outs.iter().all(|&x| x));
     }
 }

@@ -3,7 +3,8 @@
 //! * [`rank`] — the per-rank communication API (send/recv/isend/irecv/
 //!   wait/waitall + collectives) with the paper's security modes.
 //! * [`collectives`] — topology-aware collective algorithms with the
-//!   two-level (node-leader) decomposition; see DESIGN.md §7.
+//!   two-level (node-leader) decomposition (DESIGN.md §7), compiled to
+//!   schedules driven nonblocking by [`CollRequest`] (DESIGN.md §11).
 //! * [`pool`] — the multi-thread encryption worker pool (the OpenMP analog).
 //! * [`bufpool`] — recycled scratch buffers for the zero-copy wire path.
 //! * [`params`] — (k, t) parameter selection with the paper's constraints.
@@ -20,7 +21,9 @@ pub mod rank;
 
 pub use bufpool::{BufferPool, PoolStats};
 pub use cluster::{run_cluster, ClusterConfig, KeyDistMode};
-pub use collectives::CollPolicy;
+pub use collectives::{
+    CartTopo, CollOutput, CollPolicy, CollRequest, NeighborHalo, NeighborRequest,
+};
 pub use rank::{ProbeInfo, Rank, RecvReq, SendReq};
 
 use crate::crypto::Gcm;

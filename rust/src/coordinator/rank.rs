@@ -53,7 +53,9 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
 /// Base tag for internal collective traffic (app tags must stay below).
-pub(crate) const COLL_TAG_BASE: u64 = 1 << 40;
+/// Defined by the transport, which excludes the whole namespace from
+/// wildcard matching; re-exported here for the collective layer.
+pub(crate) use crate::mpi::transport::COLL_TAG_BASE;
 
 /// Upper bound on the message length a *chopped* header may claim. The
 /// header travels unauthenticated (its fields are only validated when the
@@ -445,6 +447,42 @@ impl Rank {
         let start = self.clock.now();
         let hmsg = self.tp.wait_posted(self.id, req.ticket);
         self.finish_recv_dt(hmsg, start, buf, dt)
+    }
+
+    /// Non-blocking completion test for a pre-posted receive. If the
+    /// engine has already bound a message to the ticket, the message is
+    /// consumed exactly as [`Rank::wait_recv_checked`] would (including
+    /// the virtual wait to its arrival time), the request is taken out of
+    /// the option, and the result is returned; otherwise `None` and the
+    /// request stays posted. The collective state machines poll this to
+    /// advance schedules without blocking the rank's thread.
+    pub fn test_recv_checked(
+        &mut self,
+        req: &mut Option<RecvReq>,
+    ) -> Option<Result<Vec<u8>, AuthError>> {
+        let ticket = req.as_ref()?.ticket;
+        let hmsg = self.tp.try_resolve_posted(self.id, ticket)?;
+        // Consumed: dropping the taken request is a no-op cancel (ticket
+        // ids are never reused).
+        *req = None;
+        let start = self.clock.now();
+        Some(self.finish_recv(hmsg, start))
+    }
+
+    /// [`Rank::test_recv_checked`] with a derived-datatype scatter
+    /// destination, the nonblocking mirror of
+    /// [`Rank::wait_recv_dt_into_checked`].
+    pub fn test_recv_dt_into_checked(
+        &mut self,
+        req: &mut Option<RecvReq>,
+        buf: &mut [u8],
+        dt: &Datatype,
+    ) -> Option<Result<usize, AuthError>> {
+        let ticket = req.as_ref()?.ticket;
+        let hmsg = self.tp.try_resolve_posted(self.id, ticket)?;
+        *req = None;
+        let start = self.clock.now();
+        Some(self.finish_recv_dt(hmsg, start, buf, dt))
     }
 
     /// Wait for whichever outstanding receive completes first; returns
@@ -1105,21 +1143,41 @@ impl Rank {
         t
     }
 
-    /// Open a collective: allocate its base tag, start its wall clock,
-    /// and direct send/receive accounting at its per-op counters.
-    pub(crate) fn begin_coll(&mut self, op: CollOp) -> u64 {
-        self.coll_op = Some(op);
-        self.coll_start_ns = self.clock.now();
+    /// Open a collective: count the call and allocate its base tag —
+    /// without starting an accounting bracket. The blocking wrappers
+    /// bracket the whole call ([`Rank::begin_coll`]); nonblocking
+    /// schedules bracket each `progress`/`test`/`wait` slice instead, so
+    /// time the app spends computing between polls is never attributed
+    /// to the collective.
+    pub(crate) fn coll_open(&mut self, op: CollOp) -> u64 {
         self.stats.coll.op_mut(op).calls += 1;
         self.next_coll_tag()
     }
 
-    /// Close the collective opened by [`Rank::begin_coll`]. `coll_ns` is
-    /// an overlapping view: the op's sends/receives were also charged to
-    /// the route buckets (see `mpi::stats`).
-    pub(crate) fn end_coll(&mut self) {
+    /// Start attributing send/receive time to `op`'s counters.
+    pub(crate) fn coll_bracket_start(&mut self, op: CollOp) {
+        self.coll_op = Some(op);
+        self.coll_start_ns = self.clock.now();
+    }
+
+    /// Close the bracket opened by [`Rank::coll_bracket_start`].
+    /// `coll_ns` is an overlapping view: the op's sends/receives were
+    /// also charged to the route buckets (see `mpi::stats`).
+    pub(crate) fn coll_bracket_end(&mut self) {
         self.stats.coll_ns += self.clock.now() - self.coll_start_ns;
         self.coll_op = None;
+    }
+
+    /// Open a collective and bracket it in one step (the blocking path).
+    pub(crate) fn begin_coll(&mut self, op: CollOp) -> u64 {
+        let tag = self.coll_open(op);
+        self.coll_bracket_start(op);
+        tag
+    }
+
+    /// Close the collective opened by [`Rank::begin_coll`].
+    pub(crate) fn end_coll(&mut self) {
+        self.coll_bracket_end();
     }
 
     /// Collective-internal non-blocking send. Identical to [`Rank::isend`]
@@ -1205,6 +1263,48 @@ impl Rank {
     /// returns `out[s]` = the block rank `s` sent here.
     pub fn alltoall(&mut self, blocks: Vec<Vec<u8>>) -> Vec<Vec<u8>> {
         collectives::alltoall(self, blocks).expect("collective decryption failure")
+    }
+
+    // ---------------------------------------------------------------
+    // Nonblocking collectives: compiled schedules advanced by
+    // `test`/`progress`/`wait` on the returned request (DESIGN.md §11).
+    // ---------------------------------------------------------------
+
+    /// Nonblocking barrier. Poll [`collectives::CollRequest::test`] or
+    /// finish with [`collectives::CollRequest::wait`].
+    pub fn ibarrier(&mut self) -> collectives::CollRequest {
+        collectives::ibarrier(self)
+    }
+
+    /// Nonblocking broadcast from `root`; the request's output is the
+    /// broadcast bytes.
+    pub fn ibcast(&mut self, root: usize, data: Vec<u8>) -> collectives::CollRequest {
+        collectives::ibcast(self, root, data)
+    }
+
+    /// Nonblocking all-reduce (sum) of an f64 vector.
+    pub fn iallreduce_sum(&mut self, data: &[f64]) -> collectives::CollRequest {
+        collectives::iallreduce_sum(self, data)
+    }
+
+    /// Nonblocking all-to-all of equal-size blocks.
+    pub fn ialltoall(&mut self, blocks: Vec<Vec<u8>>) -> collectives::CollRequest {
+        collectives::ialltoall(self, blocks)
+    }
+
+    /// Nonblocking neighborhood exchange over derived datatypes: one
+    /// halo description per neighbor, sends drawn from `sendbuf` through
+    /// each halo's send datatype (the fused gather-seal path). Receives
+    /// are pre-posted before any send is issued. Complete with
+    /// [`collectives::NeighborRequest::test`] /
+    /// [`collectives::NeighborRequest::wait`], which scatter into the
+    /// ghost buffer supplied there.
+    pub fn ineighbor_alltoallw(
+        &mut self,
+        halos: &[collectives::NeighborHalo],
+        sendbuf: &[u8],
+    ) -> collectives::NeighborRequest {
+        collectives::ineighbor_alltoallw(self, halos, sendbuf)
     }
 
     /// Finish: snapshot the engine's matching counters into the stats and

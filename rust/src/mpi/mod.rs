@@ -13,6 +13,7 @@ pub mod transport;
 
 pub use datatype::{pack, unpack, Datatype};
 pub use stats::{
-    ClusterReport, CollOp, CollOpStats, CollStats, CommStats, MatchStats, RankReport, COLL_OPS,
+    AtomicMatchStats, ClusterReport, CollOp, CollOpStats, CollStats, CommStats, MatchStats,
+    RankReport, COLL_OPS,
 };
-pub use transport::{PostInfo, ProbePeek, Route, Ticket, Transport, WireMsg};
+pub use transport::{PostInfo, ProbePeek, Route, Ticket, Transport, WireMsg, COLL_TAG_BASE};

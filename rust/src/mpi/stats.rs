@@ -13,6 +13,8 @@
 //! bench runner uses to prove the hierarchical algorithms move fewer
 //! encrypted bytes across the node boundary.
 
+use std::sync::atomic::{AtomicU64, Ordering};
+
 /// The collective operations instrumented by [`CollStats`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum CollOp {
@@ -24,10 +26,12 @@ pub enum CollOp {
     Alltoall,
     Gather,
     Scatter,
+    /// Cartesian neighborhood exchange (`ineighbor_alltoallw`).
+    Neighbor,
 }
 
 /// All instrumented collective operations, in display order.
-pub const COLL_OPS: [CollOp; 8] = [
+pub const COLL_OPS: [CollOp; 9] = [
     CollOp::Barrier,
     CollOp::Bcast,
     CollOp::Reduce,
@@ -36,6 +40,7 @@ pub const COLL_OPS: [CollOp; 8] = [
     CollOp::Alltoall,
     CollOp::Gather,
     CollOp::Scatter,
+    CollOp::Neighbor,
 ];
 
 impl CollOp {
@@ -49,6 +54,7 @@ impl CollOp {
             CollOp::Alltoall => "alltoall",
             CollOp::Gather => "gather",
             CollOp::Scatter => "scatter",
+            CollOp::Neighbor => "neighbor",
         }
     }
 
@@ -91,7 +97,7 @@ impl CollOpStats {
 /// Per-operation collective counters (one [`CollOpStats`] per [`CollOp`]).
 #[derive(Debug, Default, Clone)]
 pub struct CollStats {
-    ops: [CollOpStats; 8],
+    ops: [CollOpStats; 9],
 }
 
 impl CollStats {
@@ -170,6 +176,68 @@ impl MatchStats {
         self.wildcard_scan_steps += other.wildcard_scan_steps;
         self.max_unexpected_depth = self.max_unexpected_depth.max(other.max_unexpected_depth);
         self.max_posted_depth = self.max_posted_depth.max(other.max_posted_depth);
+    }
+}
+
+/// Never-block source of truth for [`MatchStats`]: relaxed atomic counters
+/// living *outside* the matching engine's mutex, so nonblocking
+/// `progress()` polling from collective state machines can read them (and
+/// the engine can bump them) without serializing on the mailbox lock.
+/// Counters use `fetch_add`, high-water marks use `fetch_max`; a
+/// [`AtomicMatchStats::snapshot`] materializes a plain [`MatchStats`].
+#[derive(Debug, Default)]
+pub struct AtomicMatchStats {
+    deposits: AtomicU64,
+    preposted_matches: AtomicU64,
+    exact_matches: AtomicU64,
+    wildcard_matches: AtomicU64,
+    wildcard_scan_steps: AtomicU64,
+    max_unexpected_depth: AtomicU64,
+    max_posted_depth: AtomicU64,
+}
+
+impl AtomicMatchStats {
+    pub fn bump_deposits(&self) {
+        self.deposits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn bump_preposted(&self) {
+        self.preposted_matches.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn bump_exact(&self) {
+        self.exact_matches.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn bump_wildcard(&self) {
+        self.wildcard_matches.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add_scan_steps(&self, steps: u64) {
+        self.wildcard_scan_steps.fetch_add(steps, Ordering::Relaxed);
+    }
+
+    pub fn raise_unexpected_depth(&self, depth: u64) {
+        self.max_unexpected_depth.fetch_max(depth, Ordering::Relaxed);
+    }
+
+    pub fn raise_posted_depth(&self, depth: u64) {
+        self.max_posted_depth.fetch_max(depth, Ordering::Relaxed);
+    }
+
+    /// Lock-free snapshot of the counters. Each field is individually
+    /// consistent (relaxed loads); taken at quiescent points (rank finish,
+    /// test assertions) the whole snapshot is exact.
+    pub fn snapshot(&self) -> MatchStats {
+        MatchStats {
+            deposits: self.deposits.load(Ordering::Relaxed),
+            preposted_matches: self.preposted_matches.load(Ordering::Relaxed),
+            exact_matches: self.exact_matches.load(Ordering::Relaxed),
+            wildcard_matches: self.wildcard_matches.load(Ordering::Relaxed),
+            wildcard_scan_steps: self.wildcard_scan_steps.load(Ordering::Relaxed),
+            max_unexpected_depth: self.max_unexpected_depth.load(Ordering::Relaxed),
+            max_posted_depth: self.max_posted_depth.load(Ordering::Relaxed),
+        }
     }
 }
 
@@ -374,6 +442,52 @@ mod tests {
             assert_eq!(op.index(), i);
             assert!(!op.name().is_empty());
         }
+    }
+
+    #[test]
+    fn atomic_match_stats_snapshot() {
+        let a = AtomicMatchStats::default();
+        a.bump_deposits();
+        a.bump_deposits();
+        a.bump_preposted();
+        a.bump_exact();
+        a.bump_wildcard();
+        a.add_scan_steps(5);
+        a.raise_unexpected_depth(3);
+        a.raise_unexpected_depth(2); // lower: high-water mark unchanged
+        a.raise_posted_depth(7);
+        let s = a.snapshot();
+        assert_eq!(s.deposits, 2);
+        assert_eq!(s.preposted_matches, 1);
+        assert_eq!(s.exact_matches, 1);
+        assert_eq!(s.wildcard_matches, 1);
+        assert_eq!(s.wildcard_scan_steps, 5);
+        assert_eq!(s.max_unexpected_depth, 3);
+        assert_eq!(s.max_posted_depth, 7);
+        assert_eq!(s.total_matches(), 3);
+    }
+
+    #[test]
+    fn atomic_match_stats_shared_across_threads() {
+        use std::sync::Arc;
+        let a = Arc::new(AtomicMatchStats::default());
+        let handles: Vec<_> = (0..4)
+            .map(|i| {
+                let a = Arc::clone(&a);
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        a.bump_deposits();
+                    }
+                    a.raise_posted_depth(i as u64);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let s = a.snapshot();
+        assert_eq!(s.deposits, 4000);
+        assert_eq!(s.max_posted_depth, 3);
     }
 
     #[test]

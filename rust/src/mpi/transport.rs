@@ -34,6 +34,17 @@
 //! tickets never bind at deposit time: they resolve when waited on, so a
 //! later-deposited message with an earlier virtual arrival still wins.
 //!
+//! **Reserved tag namespace:** tags at or above [`COLL_TAG_BASE`] belong
+//! to the collective schedules of [`crate::coordinator::collectives`] and
+//! are invisible to wildcard matching — a user `recv_any`/`irecv_any`
+//! posted mid-collective can never steal a collective frame. Exact
+//! `(src, tag)` matching works in the reserved range as everywhere else.
+//!
+//! Matching counters ([`MatchStats`]) live in a per-rank
+//! [`AtomicMatchStats`] *outside* the engine mutex: deposits and matches
+//! bump relaxed atomics, and [`Transport::match_stats`] snapshots them
+//! without taking the lock, so stats polling never serializes progress.
+//!
 //! [`Transport::post`] computes the message's arrival time from the route
 //! — intra-node at the shared-memory rate, inter-node through the
 //! per-node NIC [`crate::net::Channel`]s (where concurrent flows contend
@@ -49,10 +60,15 @@
 //! lives in [`crate::coordinator`]; everything below — link rates,
 //! topology, contention — in [`crate::net`].
 
-use crate::mpi::stats::MatchStats;
+use crate::mpi::stats::{AtomicMatchStats, MatchStats};
 use crate::net::{NetConfig, NodeNics, Topology};
 use std::collections::{BTreeSet, HashMap, VecDeque};
 use std::sync::{Condvar, Mutex};
+
+/// First tag of the reserved internal namespace used by collective
+/// schedules. Application tags must stay below; wildcard receives refuse
+/// to match anything at or above it (see the module docs).
+pub const COLL_TAG_BASE: u64 = 1 << 40;
 
 /// A message on the (virtual) wire.
 #[derive(Debug)]
@@ -105,20 +121,21 @@ struct MboxState {
     depth: usize,
     next_deposit: u64,
     next_ticket: Ticket,
-    stats: MatchStats,
 }
 
 #[derive(Default)]
 struct Mailbox {
     state: Mutex<MboxState>,
     cv: Condvar,
+    /// Matching counters, outside the mutex (never-block reads/bumps).
+    stats: AtomicMatchStats,
 }
 
-fn push_umq(st: &mut MboxState, id: u64, msg: WireMsg) {
+fn push_umq(st: &mut MboxState, stats: &AtomicMatchStats, id: u64, msg: WireMsg) {
     st.tags.entry(msg.tag).or_default().insert(msg.src);
     st.umq.entry((msg.src, msg.tag)).or_default().push_back((id, msg));
     st.depth += 1;
-    st.stats.max_unexpected_depth = st.stats.max_unexpected_depth.max(st.depth as u64);
+    stats.raise_unexpected_depth(st.depth as u64);
 }
 
 /// Re-insert a message (e.g. from a canceled ticket) at its original
@@ -150,8 +167,12 @@ fn take_exact(st: &mut MboxState, src: usize, tag: u64) -> Option<(u64, WireMsg)
 
 /// Arrival-ordered wildcard match: scan only the heads of this tag's
 /// buckets and take the message start (`seq == 0`) with the earliest
-/// virtual arrival; deposit order breaks ties.
-fn take_wild(st: &mut MboxState, tag: u64) -> Option<(u64, WireMsg)> {
+/// virtual arrival; deposit order breaks ties. Tags in the reserved
+/// collective namespace are never wildcard-matchable.
+fn take_wild(st: &mut MboxState, stats: &AtomicMatchStats, tag: u64) -> Option<(u64, WireMsg)> {
+    if tag >= COLL_TAG_BASE {
+        return None;
+    }
     let srcs: Vec<usize> = st.tags.get(&tag)?.iter().copied().collect();
     let mut best: Option<(u64, u64, usize)> = None; // (arrival, deposit id, src)
     let mut steps = 0u64;
@@ -166,25 +187,30 @@ fn take_wild(st: &mut MboxState, tag: u64) -> Option<(u64, WireMsg)> {
             }
         }
     }
-    st.stats.wildcard_scan_steps += steps;
+    stats.add_scan_steps(steps);
     let (_, _, src) = best?;
     let out = take_exact(st, src, tag);
     if out.is_some() {
-        st.stats.wildcard_matches += 1;
+        stats.bump_wildcard();
     }
     out
 }
 
-fn take_match(st: &mut MboxState, src: Option<usize>, tag: u64) -> Option<WireMsg> {
+fn take_match(
+    st: &mut MboxState,
+    stats: &AtomicMatchStats,
+    src: Option<usize>,
+    tag: u64,
+) -> Option<WireMsg> {
     match src {
         Some(s) => {
             let out = take_exact(st, s, tag);
             if out.is_some() {
-                st.stats.exact_matches += 1;
+                stats.bump_exact();
             }
             out.map(|(_, m)| m)
         }
-        None => take_wild(st, tag).map(|(_, m)| m),
+        None => take_wild(st, stats, tag).map(|(_, m)| m),
     }
 }
 
@@ -209,7 +235,11 @@ pub struct ProbePeek {
 
 /// Source whose bucket head an arrival-ordered wildcard would take next
 /// (message starts only; earliest `arrival_ns`, deposit id breaks ties).
+/// Reserved collective tags are never wildcard-visible.
 fn wild_pick(st: &MboxState, tag: u64) -> Option<usize> {
+    if tag >= COLL_TAG_BASE {
+        return None;
+    }
     let srcs = st.tags.get(&tag)?;
     let mut best: Option<(u64, u64, usize)> = None;
     for &s in srcs {
@@ -288,7 +318,7 @@ fn unindex_wild(st: &mut MboxState, tag: u64, ticket: Ticket) {
 /// is the next unbound candidate for its signature (an earlier-posted
 /// entry has first rights to the queued message, exactly as arrival-time
 /// binding would have given it).
-fn resolve_ticket(st: &mut MboxState, ticket: Ticket) -> Option<WireMsg> {
+fn resolve_ticket(st: &mut MboxState, stats: &AtomicMatchStats, ticket: Ticket) -> Option<WireMsg> {
     let bound = st.posted.get(&ticket).expect("unknown receive ticket").msg.is_some();
     if bound {
         let e = st.posted.remove(&ticket).unwrap();
@@ -313,7 +343,7 @@ fn resolve_ticket(st: &mut MboxState, ticket: Ticket) -> Option<WireMsg> {
             let wild_owns = starts && wild_owns_head(st, s, tag, ticket);
             if lane_front && head_matches && !wild_owns {
                 if let Some((_, msg)) = take_exact(st, s, tag) {
-                    st.stats.exact_matches += 1;
+                    stats.bump_exact();
                     unindex_exact(st, s, tag, ticket);
                     st.posted.remove(&ticket);
                     return Some(msg);
@@ -327,7 +357,7 @@ fn resolve_ticket(st: &mut MboxState, ticket: Ticket) -> Option<WireMsg> {
                 .and_then(|q| q.front())
                 .is_some_and(|&f| f == ticket);
             if is_front {
-                if let Some((_, msg)) = take_wild(st, tag) {
+                if let Some((_, msg)) = take_wild(st, stats, tag) {
                     unindex_wild(st, tag, ticket);
                     st.posted.remove(&ticket);
                     return Some(msg);
@@ -441,13 +471,15 @@ impl Transport {
     fn deposit(&self, dst: usize, msg: WireMsg) {
         let mbox = &self.boxes[dst];
         let mut st = mbox.state.lock().unwrap();
-        st.stats.deposits += 1;
+        mbox.stats.bump_deposits();
         let id = st.next_deposit;
         st.next_deposit += 1;
         let key = (msg.src, msg.tag);
         let start = msg.seq == 0;
         let exact_t = first_of_lane(&st, key, start);
-        let wild_head = if start {
+        // Reserved collective tags are invisible to wildcards, so a posted
+        // wildcard never delays (or steals) a collective frame's binding.
+        let wild_head = if start && msg.tag < COLL_TAG_BASE {
             st.posted_wild.get(&msg.tag).and_then(|q| q.front()).copied()
         } else {
             None
@@ -459,10 +491,10 @@ impl Transport {
         };
         if let Some(ticket) = bind {
             unindex_exact(&mut st, msg.src, msg.tag, ticket);
-            st.stats.preposted_matches += 1;
+            mbox.stats.bump_preposted();
             st.posted.get_mut(&ticket).expect("indexed ticket").msg = Some((id, msg));
         } else {
-            push_umq(&mut st, id, msg);
+            push_umq(&mut st, &mbox.stats, id, msg);
         }
         drop(st);
         mbox.cv.notify_all();
@@ -475,7 +507,7 @@ impl Transport {
         let mbox = &self.boxes[me];
         let mut st = mbox.state.lock().unwrap();
         loop {
-            if let Some(msg) = take_match(&mut st, src, tag) {
+            if let Some(msg) = take_match(&mut st, &mbox.stats, src, tag) {
                 return msg;
             }
             st = mbox.cv.wait(st).unwrap();
@@ -484,8 +516,9 @@ impl Transport {
 
     /// Non-blocking probe-and-take.
     pub fn try_match(&self, me: usize, src: Option<usize>, tag: u64) -> Option<WireMsg> {
-        let mut st = self.boxes[me].state.lock().unwrap();
-        take_match(&mut st, src, tag)
+        let mbox = &self.boxes[me];
+        let mut st = mbox.state.lock().unwrap();
+        take_match(&mut st, &mbox.stats, src, tag)
     }
 
     /// Pre-post a *message* receive (matches `seq == 0` starts); the
@@ -531,7 +564,7 @@ impl Transport {
                 let wild_owns = starts_only && wild_owns_head(&st, s, tag, ticket);
                 if !older_same && head_matches && !wild_owns {
                     if let Some(found) = take_exact(&mut st, s, tag) {
-                        st.stats.exact_matches += 1;
+                        mbox.stats.bump_exact();
                         entry.msg = Some(found);
                     }
                 }
@@ -544,7 +577,7 @@ impl Transport {
             }
         }
         st.posted.insert(ticket, entry);
-        st.stats.max_posted_depth = st.stats.max_posted_depth.max(st.posted.len() as u64);
+        mbox.stats.raise_posted_depth(st.posted.len() as u64);
         ticket
     }
 
@@ -553,11 +586,22 @@ impl Transport {
         let mbox = &self.boxes[me];
         let mut st = mbox.state.lock().unwrap();
         loop {
-            if let Some(msg) = resolve_ticket(&mut st, ticket) {
+            if let Some(msg) = resolve_ticket(&mut st, &mbox.stats, ticket) {
                 return msg;
             }
             st = mbox.cv.wait(st).unwrap();
         }
+    }
+
+    /// Nonblocking completion attempt for a posted receive: one lock
+    /// acquisition, no condvar wait. Returns the message (consuming the
+    /// ticket) when one is matchable right now, else `None` with the
+    /// ticket still live. This is the progress/test hook the collective
+    /// state machines poll between application work.
+    pub fn try_resolve_posted(&self, me: usize, ticket: Ticket) -> Option<WireMsg> {
+        let mbox = &self.boxes[me];
+        let mut st = mbox.state.lock().unwrap();
+        resolve_ticket(&mut st, &mbox.stats, ticket)
     }
 
     /// Block until any of the posted receives completes; returns the index
@@ -569,7 +613,7 @@ impl Transport {
         let mut st = mbox.state.lock().unwrap();
         loop {
             for (i, &t) in tickets.iter().enumerate() {
-                if let Some(msg) = resolve_ticket(&mut st, t) {
+                if let Some(msg) = resolve_ticket(&mut st, &mbox.stats, t) {
                     return (i, msg);
                 }
             }
@@ -635,9 +679,10 @@ impl Transport {
         self.boxes[me].state.lock().unwrap().posted.len()
     }
 
-    /// Snapshot of rank `me`'s matching counters.
+    /// Snapshot of rank `me`'s matching counters. Lock-free: reads the
+    /// per-rank atomics without touching the engine mutex.
     pub fn match_stats(&self, me: usize) -> MatchStats {
-        self.boxes[me].state.lock().unwrap().stats
+        self.boxes[me].stats.snapshot()
     }
 }
 
@@ -916,6 +961,60 @@ mod tests {
         let wire = p.net.wire_ns(m);
         assert_eq!(a.arrival_ns, wire + p.net.alpha_ns(m));
         assert_eq!(b.arrival_ns, 2 * wire + p.net.alpha_ns(m));
+    }
+
+    /// Tags in the reserved collective namespace are invisible to every
+    /// wildcard path: probe-and-take, posted wildcard tickets, and the
+    /// deposit-time wildcard check — only exact `(src, tag)` matching
+    /// reaches them.
+    #[test]
+    fn wildcard_never_matches_reserved_tags() {
+        let t = transport(2, 1);
+        let tag = COLL_TAG_BASE + 3;
+        t.post(0, 1, tag, 0, vec![42], 0);
+        assert!(t.try_match(1, None, tag).is_none(), "wildcard take refused");
+        assert!(t.try_probe(1, None, tag, u64::MAX).is_none(), "wildcard probe refused");
+        // A posted wildcard ticket at the reserved tag never resolves...
+        let w = t.post_recv(1, None, tag);
+        assert!(t.try_resolve_posted(1, w).is_none());
+        // ...and does not delay an exact ticket posted *after* it.
+        let e = t.post_recv(1, Some(0), tag);
+        let m = t.wait_posted(1, e);
+        assert_eq!(m.body, vec![42], "exact match works in the reserved range");
+        t.cancel_recv(1, w);
+        assert_eq!(t.posted_depth(1), 0);
+        assert_eq!(t.match_stats(1).wildcard_matches, 0);
+    }
+
+    /// A deposit at a reserved tag binds to a pre-posted exact receive
+    /// even when an earlier wildcard ticket covers the tag (outside the
+    /// reserved range the wildcard would have first rights).
+    #[test]
+    fn reserved_tag_deposit_binds_past_earlier_wildcard() {
+        let t = transport(2, 1);
+        let tag = COLL_TAG_BASE;
+        let w = t.post_recv(1, None, tag); // earlier wildcard
+        let e = t.post_recv(1, Some(0), tag);
+        t.post(0, 1, tag, 0, vec![7], 0);
+        assert_eq!(t.pending(1), 0, "bound at deposit time despite the wildcard");
+        assert_eq!(t.wait_posted(1, e).body, vec![7]);
+        t.cancel_recv(1, w);
+    }
+
+    /// The nonblocking progress hook: resolves only when a message is
+    /// matchable, never blocks, leaves the ticket live otherwise.
+    #[test]
+    fn try_resolve_posted_is_nonblocking() {
+        let t = transport(2, 1);
+        let tk = t.post_recv(1, Some(0), 5);
+        assert!(t.try_resolve_posted(1, tk).is_none());
+        assert_eq!(t.posted_depth(1), 1, "unresolved ticket stays live");
+        t.post(0, 1, 5, 0, vec![9], 0);
+        let m = t.try_resolve_posted(1, tk).expect("bound message resolves");
+        assert_eq!(m.body, vec![9]);
+        assert_eq!(t.posted_depth(1), 0);
+        let s = t.match_stats(1);
+        assert_eq!(s.preposted_matches, 1);
     }
 
     #[test]
