@@ -1117,6 +1117,153 @@ pub fn overlap() -> Table {
     overlap_with(&[64 * 1024, 256 * 1024, 1 << 20], 10, !cfg!(debug_assertions))
 }
 
+/// The `pipeline` runner over an explicit size sweep. `enforce` turns on
+/// the release-mode throughput assertion — and only when the host
+/// actually has ≥ 2 cores, since a 4-worker pool cannot beat serial on
+/// one core. The wire-image equality gate runs on EVERY invocation,
+/// debug or release: byte-identical parallel/serial wire images are a
+/// correctness property, never a timing one.
+fn pipeline_with(sizes: &[usize], enforce: bool) -> Table {
+    use crate::coordinator::pool::WorkerPool;
+    use crate::crypto::stream::{
+        chop_decrypt_wire, chop_decrypt_wire_parallel, chop_encrypt_into_parallel_seeded,
+        chop_encrypt_into_seeded,
+    };
+    use crate::crypto::Gcm;
+    let mut t = Table::new(
+        "pipeline",
+        "Serial vs multi-worker parallel chop seal/open on this host (DESIGN.md §12)",
+        &[
+            "backend",
+            "size",
+            "workers",
+            "w1_seal_MBps",
+            "w_seal_MBps",
+            "w1_open_MBps",
+            "w_open_MBps",
+            "agg_speedup",
+            "wire_identical",
+        ],
+    );
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let mut json_rows: Vec<String> = Vec::new();
+    for hw in [true, false] {
+        let k1 = Gcm::with_backend(&[0x6bu8; 16], hw);
+        if hw && !k1.is_hw() {
+            t.note("hardware backend unavailable on this host; hw rows skipped");
+            continue;
+        }
+        let backend = if hw { "hw" } else { "soft" };
+        for &size in sizes {
+            let nsegs = 32u32;
+            let seed = [0x5au8; 16];
+            let mut msg = vec![0u8; size];
+            crate::crypto::rand::SimRng::new(size as u64 + hw as u64).fill(&mut msg);
+
+            // Wire-image gate, every run: same seed in, same bytes out.
+            let gate_pool = WorkerPool::new(4);
+            let (mut wire_s, mut wire_p) = (Vec::new(), Vec::new());
+            let h_s = chop_encrypt_into_seeded(&k1, &msg, nsegs, seed, &mut wire_s);
+            let h_p = chop_encrypt_into_parallel_seeded(
+                &k1, &msg, nsegs, seed, &mut wire_p, &gate_pool,
+            );
+            assert_eq!(h_s.encode(), h_p.encode(), "{backend} {size}: header diverged");
+            assert!(
+                wire_s == wire_p,
+                "{backend} {size}: parallel wire image diverged from serial"
+            );
+
+            for &w in &[1usize, 2, 4] {
+                let pool = WorkerPool::new(w);
+                // Seal: serial vs w-worker, interleaved best-of-5 so
+                // ambient slowdowns hit both sides alike.
+                let (mut ws, mut wp) = (Vec::new(), Vec::new());
+                let (seal1, sealw) = crypto_rate_pair(
+                    size,
+                    || {
+                        chop_encrypt_into_seeded(&k1, &msg, nsegs, seed, &mut ws);
+                        std::hint::black_box(&ws);
+                    },
+                    || {
+                        chop_encrypt_into_parallel_seeded(
+                            &k1, &msg, nsegs, seed, &mut wp, &pool,
+                        );
+                        std::hint::black_box(&wp);
+                    },
+                );
+                // Open: both sides verify + decrypt the same stream.
+                let header = chop_encrypt_into_seeded(&k1, &msg, nsegs, seed, &mut ws);
+                let ct = ws.clone();
+                let (open1, openw) = crypto_rate_pair(
+                    size,
+                    || {
+                        let out = chop_decrypt_wire(&k1, &header, &ct).expect("auth");
+                        std::hint::black_box(out);
+                    },
+                    || {
+                        let out =
+                            chop_decrypt_wire_parallel(&k1, &header, &ct, &pool).expect("auth");
+                        std::hint::black_box(out);
+                    },
+                );
+                let agg1 = 2.0 / (1.0 / seal1 + 1.0 / open1);
+                let aggw = 2.0 / (1.0 / sealw + 1.0 / openw);
+                t.row(vec![
+                    backend.into(),
+                    size_label(size),
+                    w.to_string(),
+                    f(seal1, 1),
+                    f(sealw, 1),
+                    f(open1, 1),
+                    f(openw, 1),
+                    f(aggw / agg1, 2),
+                    "yes".into(),
+                ]);
+                json_rows.push(format!(
+                    "    {{\"backend\": \"{backend}\", \"size\": {size}, \"workers\": {w}, \
+                     \"w1_seal\": {seal1:.1}, \"w_seal\": {sealw:.1}, \
+                     \"w1_open\": {open1:.1}, \"w_open\": {openw:.1}, \
+                     \"agg_speedup\": {:.3}, \"wire_identical\": true}}",
+                    aggw / agg1
+                ));
+                // Acceptance: on a multi-core host, 4 pipeline workers
+                // must beat the serial engine at chopped-pipeline sizes.
+                if enforce && w == 4 && size >= (1 << 20) && cores >= 2 {
+                    assert!(
+                        aggw >= agg1,
+                        "parallel pipeline lost to serial: backend={backend} size={size} \
+                         w4_agg={aggw:.1} w1_agg={agg1:.1}"
+                    );
+                }
+            }
+        }
+    }
+    if cores < 2 {
+        t.note("single-core host: the 4-worker >= 1-worker throughput gate is skipped");
+    }
+    t.artifact(
+        "BENCH_pipeline.json",
+        format!(
+            "{{\n  \"bench\": \"pipeline\",\n  \"unit\": \"bytes_per_us\",\n  \
+             \"results\": [\n{}\n  ]\n}}\n",
+            json_rows.join(",\n")
+        ),
+    );
+    t.note("Parallel engine: a chopped message's segments split into per-worker bands (chopper -> N sealers -> ordered writer, DESIGN.md §12); serial is the 1-band reference path.");
+    t.note("Wire-image gate (every run): seeded parallel seal produces byte-identical header + wire to serial before any timing happens.");
+    t.note("Acceptance (enforced in release runs on >= 2 cores): 4-worker aggregate seal+open throughput >= 1-worker at >= 1 MB on both backends.");
+    t.note("Machine-readable BENCH_pipeline.json is written next to the CSV and mirrored to the repo root (CI uploads it as a perf-trajectory artifact).");
+    t
+}
+
+/// This repo's parallel crypto-engine report: serial vs 1/2/4-worker
+/// chopped seal/open throughput with the every-run wire-image equality
+/// gate, the release-mode 4-worker no-loss assertion, and the
+/// `BENCH_pipeline.json` artifact.
+pub fn pipeline() -> Table {
+    pipeline_with(&[256 * 1024, 1 << 20, 4 << 20], !cfg!(debug_assertions))
+}
+
 /// Run one experiment by name.
 pub fn run_experiment(name: &str) -> Option<Table> {
     Some(match name {
@@ -1140,15 +1287,16 @@ pub fn run_experiment(name: &str) -> Option<Table> {
         "gcm" => gcm(),
         "datatype" => datatype(),
         "overlap" => overlap(),
+        "pipeline" => pipeline(),
         _ => return None,
     })
 }
 
 /// All experiment names: paper order, then the repo's own perf reports.
-pub const ALL_EXPERIMENTS: [&str; 20] = [
+pub const ALL_EXPERIMENTS: [&str; 21] = [
     "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "table1",
     "table2", "table3", "zerocopy", "collectives", "matching", "smoke", "gcm", "datatype",
-    "overlap",
+    "overlap", "pipeline",
 ];
 
 #[cfg(test)]
@@ -1168,7 +1316,8 @@ mod tests {
                     || name == "smoke"
                     || name == "gcm"
                     || name == "datatype"
-                    || name == "overlap",
+                    || name == "overlap"
+                    || name == "pipeline",
                 "unknown experiment family: {name}"
             );
         }
@@ -1224,6 +1373,28 @@ mod tests {
         assert_eq!(name, "BENCH_datatype.json");
         assert!(json.contains("\"bench\": \"datatype\"") && json.contains("\"gather_seal\""));
         assert_eq!(json.matches("\"backend\"").count(), t.rows.len());
+    }
+
+    /// The `pipeline` runner's table + artifact structure at tiny scale
+    /// (no timing assertions — debug timings are meaningless). The
+    /// wire-image equality gate is still live: a scheduling-dependent
+    /// byte anywhere in the parallel seal fails this test.
+    #[test]
+    fn pipeline_runner_structure() {
+        let t = pipeline_with(&[2048, 8192], false);
+        assert_eq!(t.header.len(), 9);
+        assert!(!t.rows.is_empty(), "at least the soft backend must report");
+        assert!(t.rows.iter().any(|r| r[0] == "soft"));
+        // Worker counts 1/2/4 report for every (backend, size) …
+        for w in ["1", "2", "4"] {
+            assert!(t.rows.iter().any(|r| r[2] == w), "missing worker row {w}");
+        }
+        // … and every row passed the wire-image gate.
+        assert!(t.rows.iter().all(|r| r[8] == "yes"));
+        let (name, json) = &t.artifacts[0];
+        assert_eq!(name, "BENCH_pipeline.json");
+        assert!(json.contains("\"bench\": \"pipeline\"") && json.contains("\"agg_speedup\""));
+        assert_eq!(json.matches("\"wire_identical\": true").count(), t.rows.len());
     }
 
     /// The `matching` runner's acceptance shape at reduced scale: engine

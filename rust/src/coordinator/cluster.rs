@@ -316,13 +316,16 @@ mod tests {
 
     /// Stress the matching engine with heterogeneous outstanding work:
     /// every rank keeps a derived-datatype receive, a chopped-stream
-    /// derived-datatype send, an `iallreduce` and an `ibarrier` in
-    /// flight at once, polling the collectives while the point-to-point
-    /// traffic is still pending — across node shapes and all four
-    /// security modes. Payload integrity and a fully drained engine
-    /// queue prove no frame was misrouted between request classes.
+    /// derived-datatype send, a parallel-pipelined 1.5 MB contiguous
+    /// send/receive pair (DESIGN.md §12), an `iallreduce` and an
+    /// `ibarrier` in flight at once, polling the collectives while the
+    /// point-to-point traffic is still pending — across node shapes and
+    /// all four security modes. Payload integrity, a fully drained
+    /// engine queue and a window-bounded posted-receive high-water mark
+    /// prove no frame was misrouted between request classes.
     #[test]
     fn mixed_outstanding_requests_all_modes() {
+        use crate::coordinator::rank::CHUNK_PREPOST_WINDOW;
         for mode in [
             SecurityMode::Unencrypted,
             SecurityMode::Naive,
@@ -331,22 +334,32 @@ mod tests {
         ] {
             for (ranks, rpn) in [(4, 2), (4, 1), (8, 2)] {
                 let cfg = ClusterConfig::new(ranks, rpn, SystemProfile::noleland(), mode);
-                let (outs, _) = run_cluster(&cfg, move |rank| {
+                let (outs, rep) = run_cluster(&cfg, move |rank| {
                     let n = rank.size();
                     let me = rank.id();
                     let peer = (me + 1) % n;
                     let from = (me + n - 1) % n;
+                    // Force the parallel seal/open engine onto every
+                    // multi-chunk message this rank moves.
+                    rank.set_crypto_workers(Some(4));
                     // 96 KB strided payload: chopped on the CryptMpi wire.
                     let (rows, width, pitch) = (128usize, 768usize, 1024usize);
                     let dt = Datatype::vector(rows, width, pitch);
                     let grid = payload(rows * pitch, me as u64 + 1);
                     let want = payload(rows * pitch, from as u64 + 1);
-                    // Outstanding mix: dt receive, allreduce, dt send,
-                    // barrier — then poll the collectives to completion
-                    // while the dt traffic is still in flight.
+                    // 1.5 MB contiguous payload: 3 chunks → parallel-sealed
+                    // in CryptMpi mode, with its open fanned on the pool.
+                    let big = payload(1_536_000, 100 + me as u64);
+                    let want_big = payload(1_536_000, 100 + from as u64);
+                    // Outstanding mix: dt receive, big receive, allreduce,
+                    // dt send, big send, barrier — then poll the
+                    // collectives to completion while all the
+                    // point-to-point traffic is still in flight.
                     let mut dtreq = Some(rank.irecv_dt(from, 5));
+                    let mut bigreq = Some(rank.irecv(from, 6));
                     let mut ar = rank.iallreduce_sum(&[me as f64, 1.0]);
                     let sreq = rank.isend_dt(peer, 5, &grid, &dt);
+                    let bsreq = rank.isend(peer, 6, &big);
                     let mut bar = rank.ibarrier();
                     loop {
                         let a = ar.test(rank).unwrap();
@@ -360,7 +373,7 @@ mod tests {
                     let expect: f64 = (0..n).map(|x| x as f64).sum();
                     assert_eq!(v, vec![expect, n as f64], "{mode:?} {ranks}/{rpn}");
                     bar.wait(rank).unwrap();
-                    // Now drain the point-to-point pair and check content.
+                    // Now drain the point-to-point pairs and check content.
                     let mut ghost = vec![0u8; rows * pitch];
                     let req = dtreq.take().expect("dt receive still posted");
                     let got = rank.wait_recv_dt_into_checked(req, &mut ghost, &dt).unwrap();
@@ -372,11 +385,35 @@ mod tests {
                             "{mode:?} {ranks}/{rpn} row {r}"
                         );
                     }
+                    let req = bigreq.take().expect("big receive still posted");
+                    let got_big = rank.wait_recv_checked(req).unwrap();
+                    assert_eq!(got_big, want_big, "{mode:?} {ranks}/{rpn} big pair");
                     rank.wait_send(sreq);
+                    rank.wait_send(bsreq);
                     assert_eq!(rank.queue_depth(), 0, "{mode:?} {ranks}/{rpn}");
                     true
                 });
                 assert!(outs.iter().all(|&x| x), "{mode:?} {ranks}/{rpn}");
+                for r in &rep.per_rank {
+                    // The sliding window bounds the engine state even with
+                    // two chopped streams + collectives outstanding (small
+                    // slack for the non-chunk request classes).
+                    assert!(
+                        r.stats.matching.max_posted_depth
+                            <= (2 * CHUNK_PREPOST_WINDOW + 16) as u64,
+                        "{mode:?} {ranks}/{rpn} rank {}: posted depth {}",
+                        r.rank,
+                        r.stats.matching.max_posted_depth
+                    );
+                    if matches!(mode, SecurityMode::CryptMpi) {
+                        // Both sides of the big pair took the parallel path.
+                        assert!(
+                            r.stats.pipeline.parallel_msgs >= 2,
+                            "{mode:?} {ranks}/{rpn} rank {}: pipeline unused",
+                            r.rank
+                        );
+                    }
+                }
             }
         }
     }

@@ -32,6 +32,56 @@ pub fn select_t_threads(profile: &SystemProfile, m_bytes: usize, t0: u32) -> u32
     profile.threads_for(m_bytes, t0)
 }
 
+/// Sanity cap on the cross-chunk pipeline worker count (env overrides are
+/// clamped here; far above any sensible per-message fan-out).
+pub const MAX_PIPELINE_WORKERS: usize = 64;
+
+/// Cross-chunk pipeline worker count for the parallel seal/open engine:
+/// how many of a chopped message's `k` chunks are sealed (or opened)
+/// concurrently on the rank's worker pool. Policy: auto by message size,
+/// overridable via `CRYPTMPI_CRYPTO_THREADS` (read once per process),
+/// always capped by the number of chunks — extra workers would idle.
+/// Returns 1 for messages below the multi-chunk regime, i.e. "use the
+/// serial reference path".
+pub fn select_pipeline_workers(m_bytes: usize, nchunks: usize) -> usize {
+    select_pipeline_workers_with(env_crypto_threads(), m_bytes, nchunks)
+}
+
+/// Testable core of [`select_pipeline_workers`]: `override_workers` wins
+/// over the size-based auto policy (it models both the env var and the
+/// per-rank `set_crypto_workers` API).
+pub fn select_pipeline_workers_with(
+    override_workers: Option<usize>,
+    m_bytes: usize,
+    nchunks: usize,
+) -> usize {
+    let auto = if m_bytes >= (2 << 20) {
+        4
+    } else if m_bytes >= (1 << 20) {
+        2
+    } else {
+        1
+    };
+    override_workers
+        .unwrap_or(auto)
+        .clamp(1, MAX_PIPELINE_WORKERS)
+        .min(nchunks.max(1))
+}
+
+/// `CRYPTMPI_CRYPTO_THREADS`, parsed once per process (same caching
+/// pattern as the crypto backend's `CRYPTMPI_SOFT_CRYPTO`). Invalid or
+/// zero values are ignored.
+fn env_crypto_threads() -> Option<usize> {
+    use std::sync::OnceLock;
+    static THREADS: OnceLock<Option<usize>> = OnceLock::new();
+    *THREADS.get_or_init(|| {
+        std::env::var("CRYPTMPI_CRYPTO_THREADS")
+            .ok()
+            .and_then(|v| v.trim().parse::<usize>().ok())
+            .filter(|&w| w >= 1)
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -71,6 +121,36 @@ mod tests {
         assert_eq!(select_t_threads(&p, 4 << 20, 32), 8);
         // 8 pairs per node → T0 = 4 → min{2, 8} = 2 (paper §V).
         assert_eq!(select_t_threads(&p, 4 << 20, 4), 2);
+    }
+
+    #[test]
+    fn pipeline_worker_auto_policy_by_size() {
+        // Single-chunk regime (< 1 MB): always serial.
+        assert_eq!(select_pipeline_workers_with(None, 64 * 1024, 1), 1);
+        assert_eq!(select_pipeline_workers_with(None, 512 * 1024, 1), 1);
+        // 1 MB → k = 2 chunks → 2 workers.
+        assert_eq!(select_pipeline_workers_with(None, 1 << 20, 2), 2);
+        // ≥ 2 MB → 4 workers, capped by the chunk count.
+        assert_eq!(select_pipeline_workers_with(None, 2 << 20, 4), 4);
+        assert_eq!(select_pipeline_workers_with(None, 4 << 20, 8), 4);
+        // Auto fan-out never exceeds the chunk count.
+        assert_eq!(select_pipeline_workers_with(None, 4 << 20, 3), 3);
+    }
+
+    #[test]
+    fn pipeline_worker_override_wins_but_stays_sane() {
+        // Explicit override beats the auto policy in both directions.
+        assert_eq!(select_pipeline_workers_with(Some(1), 4 << 20, 8), 1);
+        assert_eq!(select_pipeline_workers_with(Some(7), 4 << 20, 8), 7);
+        // ... but stays capped by the chunk count and the sanity cap.
+        assert_eq!(select_pipeline_workers_with(Some(7), 1 << 20, 2), 2);
+        assert_eq!(
+            select_pipeline_workers_with(Some(10_000), 4 << 20, 1_000_000),
+            MAX_PIPELINE_WORKERS
+        );
+        // Zero-chunk degenerate input still yields a valid worker count.
+        assert_eq!(select_pipeline_workers_with(Some(4), 4 << 20, 0), 1);
+        assert_eq!(select_pipeline_workers_with(None, 0, 0), 1);
     }
 
     #[test]

@@ -103,6 +103,84 @@ impl WorkerPool {
             resume_unwind(payload);
         }
     }
+
+    /// Run the closures concurrently and deliver each job's return value to
+    /// `on_complete` **in job-index order** — the ordered-writer stage of
+    /// the pipelined crypto engine. Workers finish in any order; job `i`'s
+    /// result is buffered until every result `< i` has been delivered, so a
+    /// consumer that posts wire chunks to the transport sees them in
+    /// sequence-number order regardless of scheduling. `on_complete` runs
+    /// on the caller's thread *while later jobs are still executing*, which
+    /// is what lets chunk `i`'s wire time overlap chunk `i+1`'s sealing.
+    ///
+    /// Panic safety mirrors [`scope_run`](Self::scope_run): every job
+    /// reports over the completion channel even when it panics, the caller
+    /// drains all completions before returning, and the panic is re-raised
+    /// afterwards. The ordered stream is *cut* at the first panicking
+    /// index: results ordered after it are drained (no worker leaks, no
+    /// deadlock) but never delivered — a failed chunk never causes
+    /// out-of-order or gap-skipping writes.
+    pub fn scope_run_ordered<'scope, F, R>(
+        &self,
+        jobs: Vec<F>,
+        mut on_complete: impl FnMut(usize, R),
+    ) where
+        F: FnOnce() -> R + Send + 'scope,
+        R: Send + 'scope,
+    {
+        if jobs.is_empty() {
+            return;
+        }
+        let n = jobs.len();
+        type Outcome<R> = (usize, Result<R, Box<dyn Any + Send>>);
+        let (done_tx, done_rx) = channel::<Outcome<R>>();
+        for (idx, job) in jobs.into_iter().enumerate() {
+            let done = done_tx.clone();
+            let wrapped: Box<dyn FnOnce() + Send + 'scope> = Box::new(move || {
+                let outcome = catch_unwind(AssertUnwindSafe(job));
+                let _ = done.send((idx, outcome));
+            });
+            // SAFETY: as in `scope_run` — we block below until all `n`
+            // jobs have signalled completion (the wrapper sends even on
+            // panic), so 'scope borrows outlive every job execution and
+            // the 'static cast never escapes this call.
+            let wrapped: Job = unsafe {
+                std::mem::transmute::<Box<dyn FnOnce() + Send + 'scope>, Job>(wrapped)
+            };
+            self.tx.send(Cmd::Run(wrapped)).expect("pool alive");
+        }
+        // Reorder buffer: deliver strictly in index order, cutting the
+        // stream at the first panicking index.
+        let mut slots: Vec<Option<Result<R, Box<dyn Any + Send>>>> =
+            (0..n).map(|_| None).collect();
+        let mut next = 0usize;
+        let mut panic_payload: Option<Box<dyn Any + Send>> = None;
+        for _ in 0..n {
+            let (idx, outcome) = done_rx.recv().expect("worker completed");
+            slots[idx] = Some(outcome);
+            while next < n {
+                let Some(out) = slots[next].take() else {
+                    break;
+                };
+                match out {
+                    Ok(r) => {
+                        if panic_payload.is_none() {
+                            on_complete(next, r);
+                        }
+                    }
+                    Err(payload) => {
+                        // `next` advances in order, so the first Err we
+                        // reach here is the lowest panicking index.
+                        panic_payload.get_or_insert(payload);
+                    }
+                }
+                next += 1;
+            }
+        }
+        if let Some(payload) = panic_payload {
+            resume_unwind(payload);
+        }
+    }
 }
 
 impl Drop for WorkerPool {
@@ -217,6 +295,129 @@ mod tests {
             .collect();
         pool.scope_run(jobs);
         assert_eq!(counter.load(Ordering::SeqCst), 8);
+    }
+
+    #[test]
+    fn ordered_completion_delivers_in_index_order() {
+        let pool = WorkerPool::new(4);
+        for _ in 0..8 {
+            let jobs: Vec<_> = (0..16u64)
+                .map(|i| {
+                    move || {
+                        // Later indices finish *earlier* so unordered
+                        // delivery would be visible.
+                        std::thread::sleep(std::time::Duration::from_micros(
+                            (16 - i) * 50,
+                        ));
+                        i * 7
+                    }
+                })
+                .collect();
+            let mut seen = Vec::new();
+            pool.scope_run_ordered(jobs, |idx, r| seen.push((idx, r)));
+            let want: Vec<_> = (0..16u64).map(|i| (i as usize, i * 7)).collect();
+            assert_eq!(seen, want);
+        }
+    }
+
+    #[test]
+    fn ordered_empty_job_list_is_noop() {
+        let pool = WorkerPool::new(2);
+        let mut called = false;
+        pool.scope_run_ordered(Vec::<fn() -> u32>::new(), |_, _| called = true);
+        assert!(!called);
+    }
+
+    #[test]
+    fn ordered_jobs_can_mutate_disjoint_borrows() {
+        let pool = WorkerPool::new(3);
+        let mut data = vec![0u64; 6];
+        let mut order = Vec::new();
+        {
+            let jobs: Vec<_> = data
+                .chunks_mut(2)
+                .enumerate()
+                .map(|(i, chunk)| {
+                    move || {
+                        for (j, x) in chunk.iter_mut().enumerate() {
+                            *x = (i * 2 + j) as u64 * 10;
+                        }
+                        i
+                    }
+                })
+                .collect();
+            pool.scope_run_ordered(jobs, |idx, r| {
+                assert_eq!(idx, r);
+                order.push(idx);
+            });
+        }
+        assert_eq!(data, vec![0, 10, 20, 30, 40, 50]);
+        assert_eq!(order, vec![0, 1, 2]);
+    }
+
+    /// Extension of the panic-safety regression to the ordered path: a
+    /// panicking job must still release its completion signal (no hang),
+    /// the ordered stream must be cut exactly at the panicking index (the
+    /// in-order prefix is delivered, nothing after it), the panic must
+    /// reach the caller, and the pool must stay usable.
+    #[test]
+    fn ordered_panicking_job_releases_completion_and_cuts_stream() {
+        let pool = WorkerPool::new(2);
+        let delivered = std::sync::Mutex::new(Vec::new());
+        let observed = catch_unwind(AssertUnwindSafe(|| {
+            let jobs: Vec<_> = (0..6usize)
+                .map(|i| {
+                    move || {
+                        if i == 3 {
+                            panic!("ordered job blew up");
+                        }
+                        i
+                    }
+                })
+                .collect();
+            pool.scope_run_ordered(jobs, |idx, r| {
+                delivered.lock().unwrap().push((idx, r));
+            });
+        }));
+        assert!(observed.is_err(), "caller must observe the job panic");
+        let delivered = delivered.into_inner().unwrap();
+        assert_eq!(
+            delivered,
+            vec![(0, 0), (1, 1), (2, 2)],
+            "exactly the in-order prefix before the panicking index"
+        );
+        // Pool survives for both run flavors.
+        let counter = AtomicUsize::new(0);
+        let jobs: Vec<_> = (0..8)
+            .map(|_| {
+                let c = &counter;
+                move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                    1usize
+                }
+            })
+            .collect();
+        let mut total = 0;
+        pool.scope_run_ordered(jobs, |_, r| total += r);
+        assert_eq!(total, 8);
+        assert_eq!(counter.load(Ordering::SeqCst), 8);
+    }
+
+    /// Every job panicking on the ordered path: one propagated panic, zero
+    /// deliveries, no hang, pool reusable — repeated to shake scheduling.
+    #[test]
+    fn ordered_all_panicking_jobs_deliver_nothing() {
+        let pool = WorkerPool::new(3);
+        for round in 0..5 {
+            let mut delivered = 0u32;
+            let observed = catch_unwind(AssertUnwindSafe(|| {
+                let jobs: Vec<_> =
+                    (0..6).map(|_| || -> usize { panic!("boom") }).collect();
+                pool.scope_run_ordered(jobs, |_, _| delivered += 1);
+            }));
+            assert!(observed.is_err(), "round {round}");
+            assert_eq!(delivered, 0, "round {round}");
+        }
     }
 
     /// Multiple panicking jobs: still exactly one propagated panic, still

@@ -36,10 +36,14 @@
 
 use crate::coordinator::bufpool::{split_mut, BufferPool, PoolStats};
 use crate::coordinator::collectives::{self, CollPolicy};
-use crate::coordinator::params::{select_k_constrained, select_t_threads};
+use crate::coordinator::params::{
+    select_k_constrained, select_pipeline_workers, select_pipeline_workers_with,
+    select_t_threads,
+};
 use crate::coordinator::pool::WorkerPool;
 use crate::coordinator::{Keys, SecurityMode};
 use crate::crypto::rand::secure_array;
+use crate::crypto::stream::open_band;
 use crate::crypto::{
     AuthError, GatherCursor, Header, Opcode, ScatterCursor, StreamOpener, StreamSealer,
     CHOP_THRESHOLD, HEADER_LEN, TAG_LEN,
@@ -69,8 +73,9 @@ const MAX_CHOPPED_MSG_LEN: u64 = 1 << 30;
 /// How many chunk receives `recv_chopped` keeps pre-posted ahead of
 /// consumption. Bounds the engine state a forged header can demand (its
 /// claimed segmentation is unauthenticated) while comfortably covering
-/// every legitimate stream's chunk count.
-const CHUNK_PREPOST_WINDOW: usize = 64;
+/// every legitimate stream's chunk count. Crate-visible so tests can
+/// assert the matching engine's high-water mark stays window-bounded.
+pub(crate) const CHUNK_PREPOST_WINDOW: usize = 64;
 
 /// A pending non-blocking send.
 #[derive(Debug)]
@@ -136,6 +141,18 @@ enum ChunkSink<'a> {
     Scatter(ScatterCursor<'a>),
 }
 
+/// One pulled-and-validated chunk of a chopped stream: matched in strict
+/// sequence order, its segment span derived from the wire length, body
+/// still ciphertext (`bodies ‖ tags`). The unit of work the parallel
+/// receive path fans across pipeline workers.
+struct PulledChunk {
+    first: u32,
+    last: u32,
+    body: Vec<u8>,
+    bodies_len: usize,
+    arrival_ns: u64,
+}
+
 /// One MPI rank of the simulated cluster.
 pub struct Rank {
     id: usize,
@@ -145,6 +162,9 @@ pub struct Rank {
     mode: SecurityMode,
     keys: Option<Keys>,
     pool: Option<WorkerPool>,
+    /// Explicit cross-chunk pipeline worker override (DESIGN.md §12).
+    /// `None` = the env/auto policy in `params::select_pipeline_workers`.
+    crypto_workers: Option<usize>,
     /// Recycled send/recv scratch buffers (zero-copy wire path).
     bufpool: BufferPool,
     clock: VClock,
@@ -180,6 +200,7 @@ impl Rank {
             mode,
             keys,
             pool: None,
+            crypto_workers: None,
             bufpool: BufferPool::new(),
             clock: VClock::new(),
             stats: CommStats::default(),
@@ -232,6 +253,30 @@ impl Rank {
         self.coll_policy = policy;
     }
 
+    /// Force the cross-chunk pipeline worker count for this rank's
+    /// chopped sends/receives (DESIGN.md §12). `Some(1)` pins the serial
+    /// reference path; `None` restores the env/auto policy. Either way
+    /// the count stays clamped by the message's chunk count, so the wire
+    /// image — which never depends on scheduling — is unaffected.
+    pub fn set_crypto_workers(&mut self, workers: Option<usize>) {
+        self.crypto_workers = workers;
+    }
+
+    /// The explicit pipeline worker override, if any.
+    pub fn crypto_workers(&self) -> Option<usize> {
+        self.crypto_workers
+    }
+
+    /// Pipeline worker count for an `m`-byte chopped message of
+    /// `nchunks` chunks: the per-rank override wins, then the
+    /// `CRYPTMPI_CRYPTO_THREADS` env / size-based auto policy.
+    fn pipeline_workers(&self, m: usize, nchunks: usize) -> usize {
+        match self.crypto_workers {
+            Some(w) => select_pipeline_workers_with(Some(w), m, nchunks),
+            None => select_pipeline_workers(m, nchunks),
+        }
+    }
+
     /// Current virtual time (ns).
     pub fn now_ns(&self) -> u64 {
         self.clock.now()
@@ -278,6 +323,20 @@ impl Rank {
             self.pool = Some(WorkerPool::new(need));
         }
         self.pool.as_ref().unwrap()
+    }
+
+    /// Move the worker pool out of the rank (sized to at least `t`
+    /// threads) so an ordered-completion callback can borrow `self`
+    /// mutably while the pool runs jobs. The caller puts it back with
+    /// `self.pool = Some(pool)`; if a panic unwinds past the caller the
+    /// pool is dropped (joining its workers) and lazily recreated on the
+    /// next use, so no state is poisoned.
+    fn pool_take(&mut self, t: u32) -> WorkerPool {
+        let need = t.max(1) as usize;
+        match self.pool.take() {
+            Some(p) if p.size() >= need => p,
+            _ => WorkerPool::new(need),
+        }
     }
 
     // ---------------------------------------------------------------
@@ -651,6 +710,16 @@ impl Rank {
         let sealer = StreamSealer::new(&keys.k1, m, k * t);
         let nsegs = sealer.num_segments();
 
+        // Multi-chunk messages can seal their chunks on parallel pipeline
+        // workers (DESIGN.md §12). Chunk bytes depend only on the sealer's
+        // seed and segment indices — never on scheduling — so both paths
+        // put byte-identical images on the wire.
+        let nchunks = nsegs.div_ceil(t) as usize;
+        let w = self.pipeline_workers(m, nchunks);
+        if w > 1 {
+            return self.send_chopped_parallel(to, tag, src, route, sealer, t, w);
+        }
+
         // Header travels first.
         let hinfo =
             self.tp
@@ -712,6 +781,93 @@ impl Rank {
             seq += 1;
             seg = hi + 1;
         }
+        SendReq {
+            local_complete_ns: local_complete,
+            needs_drain: max_wire > self.tp.net().eager_threshold,
+            route,
+        }
+    }
+
+    /// The cross-chunk parallel form of [`Rank::send_chopped`]
+    /// (DESIGN.md §12): chopper → N sealers → ordered writer → wire.
+    ///
+    /// The chopper stage draws every chunk's plaintext into its own
+    /// pooled `bodies ‖ tags` wire buffer up front (the gather cursor
+    /// walk is inherently sequential); `w` pool workers then seal whole
+    /// chunks concurrently — each chunk owns its subkey/nonce lanes and
+    /// a disjoint buffer — and the ordered-writer stage, the
+    /// `scope_run_ordered` completion callback running on this thread,
+    /// charges each chunk's virtual cost and posts it in strict
+    /// sequence-number order as soon as it and all its predecessors are
+    /// sealed. Chunk bytes depend only on the sealer's seed and segment
+    /// indices, and the virtual-clock arithmetic replays the serial
+    /// loop's exactly, so wire image AND simulated timings are identical
+    /// to the serial path — the parallelism buys host throughput only.
+    fn send_chopped_parallel(
+        &mut self,
+        to: usize,
+        tag: u64,
+        src: &mut GatherCursor,
+        route: Route,
+        sealer: StreamSealer,
+        t: u32,
+        w: usize,
+    ) -> SendReq {
+        let nsegs = sealer.num_segments();
+
+        // Header travels first, exactly as in the serial path.
+        let hinfo =
+            self.tp
+                .post(self.id, to, tag, 0, sealer.header().encode().to_vec(), self.clock.now());
+        let mut local_complete = hinfo.local_complete_ns;
+
+        // Chopper: one pooled wire buffer per chunk, plaintext gathered
+        // into the bodies region, tag block left for the seal jobs (every
+        // byte is overwritten, so the unzeroed acquire is safe).
+        let mut chunks: Vec<(u32, u32, Vec<u8>)> = Vec::new();
+        let mut chunk_bytes_by_idx: Vec<usize> = Vec::new();
+        let mut seg = 1u32;
+        while seg <= nsegs {
+            let hi = (seg + t - 1).min(nsegs);
+            let nparts = (hi - seg + 1) as usize;
+            let chunk_bytes = sealer.segment_range(hi).end - sealer.segment_range(seg).start;
+            let mut body = self.bufpool.acquire_for_overwrite(chunk_bytes + nparts * TAG_LEN);
+            src.copy_next(&mut body[..chunk_bytes]);
+            chunks.push((seg, hi, body));
+            chunk_bytes_by_idx.push(chunk_bytes);
+            seg = hi + 1;
+        }
+        self.stats.pipeline.record_message(w, chunks.len());
+
+        // Sealer fan-out + ordered writer. The pool moves out of `self`
+        // so the completion callback can charge the clock and post to the
+        // transport; it goes back once the scope completes.
+        let pool = self.pool_take(w as u32);
+        let mut max_wire = 0usize;
+        let mut seq = 1u32;
+        {
+            let sealer_ref = &sealer;
+            let jobs: Vec<_> = chunks
+                .into_iter()
+                .map(|(first, last, mut body)| {
+                    move || {
+                        sealer_ref.seal_chunk(first, last, &mut body);
+                        body
+                    }
+                })
+                .collect();
+            pool.scope_run_ordered(jobs, |idx, body: Vec<u8>| {
+                // Same virtual charge, same order, as the serial loop.
+                let enc = self.profile.crypto.enc_ns(self.calib, chunk_bytes_by_idx[idx], t);
+                self.clock.advance(enc);
+                self.stats.crypto_ns += enc;
+                max_wire = max_wire.max(body.len());
+                let info = self.tp.post(self.id, to, tag, seq, body, self.clock.now());
+                local_complete = local_complete.max(info.local_complete_ns);
+                seq += 1;
+            });
+        }
+        self.pool = Some(pool);
         SendReq {
             local_complete_ns: local_complete,
             needs_drain: max_wire > self.tp.net().eager_threshold,
@@ -993,9 +1149,25 @@ impl Rank {
         // deterministic `t` (both sides derive it from the profile and the
         // header's message length), so the stream carries ⌈nsegs/t⌉ chunks.
         let nchunks = opener.num_segments().div_ceil(t) as usize;
+        // Both sides derive the same worker policy from the message size,
+        // so a parallel-sealed stream is normally also opened in parallel
+        // — but nothing requires it: either path accepts either stream.
+        let w = self.pipeline_workers(m, nchunks);
         let mut tickets: VecDeque<Ticket> = VecDeque::new();
-        let out =
-            self.recv_chopped_stream(&mut opener, src, tag, t, nchunks, &mut tickets, &mut sink);
+        let out = if w > 1 {
+            self.recv_chopped_stream_parallel(
+                &mut opener,
+                src,
+                tag,
+                t,
+                w,
+                nchunks,
+                &mut tickets,
+                &mut sink,
+            )
+        } else {
+            self.recv_chopped_stream(&mut opener, src, tag, t, nchunks, &mut tickets, &mut sink)
+        };
         // Release the pre-posted receives an aborted stream left behind;
         // chunks already bound to them return to the unexpected queue as
         // strays, exactly as if they had never been pre-posted.
@@ -1027,43 +1199,14 @@ impl Rank {
         let mut expect_seq = 1u32;
         let mut posted = 0usize;
         while next <= nsegs {
-            while posted < nchunks && tickets.len() < CHUNK_PREPOST_WINDOW {
-                tickets.push_back(self.tp.post_recv_stream(self.id, src, tag));
-                posted += 1;
-            }
-            let Some(tk) = tickets.pop_front() else {
-                // More chunks on the wire than the header's segmentation
-                // implies: protocol violation.
-                return Err(AuthError);
-            };
-            let cmsg = self.tp.wait_posted(self.id, tk);
-            if cmsg.seq != expect_seq {
-                return Err(AuthError);
-            }
+            let c = self.pull_chunk(
+                opener, src, tag, nsegs, next, expect_seq, nchunks, &mut posted, tickets,
+            )?;
             expect_seq += 1;
-            self.clock.wait_until(cmsg.arrival_ns);
-            // Derive how many whole segments this contiguous chunk
-            // (`bodies ‖ tags`) carries from its wire length.
-            let first = next;
-            let mut last = first - 1;
-            let mut wire_left = cmsg.body.len();
-            while wire_left > 0 {
-                if last >= nsegs {
-                    return Err(AuthError); // trailing garbage
-                }
-                let need = opener.segment_len(last + 1) + TAG_LEN;
-                if wire_left < need {
-                    return Err(AuthError); // truncated segment
-                }
-                wire_left -= need;
-                last += 1;
-            }
-            if last < first {
-                return Err(AuthError); // empty chunk
-            }
-            let nparts = (last - first + 1) as usize;
-            let mut body = cmsg.body;
-            let bodies_len = body.len() - nparts * TAG_LEN;
+            self.clock.wait_until(c.arrival_ns);
+            let (first, last) = (c.first, c.last);
+            let mut body = c.body;
+            let bodies_len = c.bodies_len;
             let lens: Vec<usize> = (first..=last).map(|i| opener.segment_len(i)).collect();
             let failed = AtomicBool::new(false);
             {
@@ -1128,6 +1271,178 @@ impl Rank {
             // every byte before the buffer reaches the wire.
             self.bufpool.recycle(body);
             next = last + 1;
+        }
+        opener.finish()
+    }
+
+    /// Match and validate the next chunk of a chopped stream: top up the
+    /// pre-posted window, consume the oldest ticket, enforce strict
+    /// sequence order, and derive how many whole segments the contiguous
+    /// `bodies ‖ tags` frame carries from its wire length. No clock or
+    /// crypto work happens here — both the serial loop and the parallel
+    /// batcher layer their own accounting on top.
+    #[allow(clippy::too_many_arguments)]
+    fn pull_chunk(
+        &mut self,
+        opener: &StreamOpener,
+        src: usize,
+        tag: u64,
+        nsegs: u32,
+        next: u32,
+        expect_seq: u32,
+        nchunks: usize,
+        posted: &mut usize,
+        tickets: &mut VecDeque<Ticket>,
+    ) -> Result<PulledChunk, AuthError> {
+        while *posted < nchunks && tickets.len() < CHUNK_PREPOST_WINDOW {
+            tickets.push_back(self.tp.post_recv_stream(self.id, src, tag));
+            *posted += 1;
+        }
+        let Some(tk) = tickets.pop_front() else {
+            // More chunks on the wire than the header's segmentation
+            // implies: protocol violation.
+            return Err(AuthError);
+        };
+        let cmsg = self.tp.wait_posted(self.id, tk);
+        if cmsg.seq != expect_seq {
+            return Err(AuthError);
+        }
+        let first = next;
+        let mut last = first - 1;
+        let mut wire_left = cmsg.body.len();
+        while wire_left > 0 {
+            if last >= nsegs {
+                return Err(AuthError); // trailing garbage
+            }
+            let need = opener.segment_len(last + 1) + TAG_LEN;
+            if wire_left < need {
+                return Err(AuthError); // truncated segment
+            }
+            wire_left -= need;
+            last += 1;
+        }
+        if last < first {
+            return Err(AuthError); // empty chunk
+        }
+        let nparts = (last - first + 1) as usize;
+        let bodies_len = cmsg.body.len() - nparts * TAG_LEN;
+        Ok(PulledChunk { first, last, body: cmsg.body, bodies_len, arrival_ns: cmsg.arrival_ns })
+    }
+
+    /// The cross-chunk parallel form of [`Rank::recv_chopped_stream`]
+    /// (DESIGN.md §12): pull up to `w` consecutive chunks of the
+    /// pre-posted window, fan their verified-opens across the pipeline
+    /// workers — one job per chunk, each opening its segments in place
+    /// with the shutdown-flag latch, so one chunk's bad tag stops the
+    /// other workers at their next segment boundary — then replay the
+    /// serial loop's virtual accounting strictly in sequence order
+    /// (`wait_until(arrival_i)` then the decrypt charge, charged before
+    /// the verdict so forged chunks are not free). On success the
+    /// simulated clock is bit-identical to the serial path's; on any
+    /// tamper the caller sees the same clean [`AuthError`].
+    ///
+    /// Scatter sinks get a strictly stronger guarantee than the serial
+    /// path here: plaintext is swept out to the datatype's extents only
+    /// after the *whole batch* verified, so chunks of a failing batch
+    /// never reach the user buffer at all.
+    #[allow(clippy::too_many_arguments)]
+    fn recv_chopped_stream_parallel(
+        &mut self,
+        opener: &mut StreamOpener,
+        src: usize,
+        tag: u64,
+        t: u32,
+        w: usize,
+        nchunks: usize,
+        tickets: &mut VecDeque<Ticket>,
+        sink: &mut ChunkSink,
+    ) -> Result<(), AuthError> {
+        let nsegs = opener.num_segments();
+        let mut next = 1u32;
+        let mut expect_seq = 1u32;
+        let mut posted = 0usize;
+        self.stats.pipeline.record_message(w, nchunks);
+        while next <= nsegs {
+            // Pull a batch of up to `w` consecutive chunks. Posts are
+            // buffered by the transport, so batching the waits cannot
+            // deadlock against the sender.
+            let mut batch: Vec<PulledChunk> = Vec::with_capacity(w);
+            while batch.len() < w && next <= nsegs {
+                let c = self.pull_chunk(
+                    opener, src, tag, nsegs, next, expect_seq, nchunks, &mut posted, tickets,
+                )?;
+                next = c.last + 1;
+                expect_seq += 1;
+                batch.push(c);
+            }
+            // Fan verified-open of the batch across the pool: one job
+            // per chunk, error latched across all of them.
+            let failed = AtomicBool::new(false);
+            {
+                let opener_ref: &StreamOpener = opener;
+                let failed_ref = &failed;
+                let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+                    Vec::with_capacity(batch.len());
+                match sink {
+                    // Zero-copy open: each chunk's ciphertext bodies are
+                    // copied straight to their final offsets in the
+                    // output and decrypted in place there, the wire
+                    // buffer never written (clean ciphertext on error).
+                    ChunkSink::Contig(out) => {
+                        let lo = opener_ref.segment_range(batch[0].first).start;
+                        let hi =
+                            opener_ref.segment_range(batch[batch.len() - 1].last).end;
+                        let lens: Vec<usize> = batch.iter().map(|c| c.bodies_len).collect();
+                        let out_slices = split_mut(&mut out[lo..hi], &lens);
+                        for (c, out_chunk) in batch.iter_mut().zip(out_slices) {
+                            let (first, last, blen) = (c.first, c.last, c.bodies_len);
+                            let body = &mut c.body;
+                            jobs.push(Box::new(move || {
+                                let (bodies, tags) = body.split_at_mut(blen);
+                                out_chunk.copy_from_slice(bodies);
+                                open_band(opener_ref, first, last, out_chunk, tags, failed_ref);
+                            }));
+                        }
+                    }
+                    // Scatter sink: verify + decrypt in place in the
+                    // consumed wire buffers; the strided sweep happens
+                    // below, only after the whole batch verified.
+                    ChunkSink::Scatter(_) => {
+                        for c in batch.iter_mut() {
+                            let (first, last, blen) = (c.first, c.last, c.bodies_len);
+                            let body = &mut c.body;
+                            jobs.push(Box::new(move || {
+                                let (bodies, tags) = body.split_at_mut(blen);
+                                open_band(opener_ref, first, last, bodies, tags, failed_ref);
+                            }));
+                        }
+                    }
+                }
+                let pool = self.pool(w as u32);
+                pool.scope_run(jobs);
+            }
+            // Replay the serial loop's virtual accounting in sequence
+            // order — identical clock arithmetic, so simulated timings
+            // never depend on host scheduling. Charged before acting on
+            // the verdict: forged chunks cost the same as honest ones.
+            for c in &batch {
+                self.clock.wait_until(c.arrival_ns);
+                let dec = self.profile.crypto.enc_ns(self.calib, c.bodies_len, t);
+                self.clock.advance(dec);
+                self.stats.crypto_ns += dec;
+            }
+            if failed.load(Ordering::SeqCst) {
+                return Err(AuthError);
+            }
+            for c in batch {
+                if let ChunkSink::Scatter(cur) = sink {
+                    cur.copy_next(&c.body[..c.bodies_len]);
+                }
+                for _ in c.first..=c.last {
+                    opener.mark_received();
+                }
+                self.bufpool.recycle(c.body);
+            }
         }
         opener.finish()
     }
@@ -1704,5 +2019,80 @@ mod tests {
             b.recv_dt_into_checked(Some(0), 6, &mut dst, &dt).is_err(),
             "bit flip must be detected on the scatter path"
         );
+    }
+
+    /// The parallel pipeline (DESIGN.md §12) is invisible to correctness
+    /// and to the simulation: every worker-count combination roundtrips
+    /// (including serial-sealed → parallel-opened and vice versa), and
+    /// the virtual clocks of serial and parallel ranks advance
+    /// identically — the ordered writer and the batch replay reproduce
+    /// the serial loop's clock arithmetic, so the parallelism buys host
+    /// throughput only.
+    #[test]
+    fn parallel_pipeline_roundtrips_and_preserves_virtual_time() {
+        let msg = payload(1_600_000); // 3 chunks of ~512 KB
+        let mut clocks = Vec::new();
+        let combos =
+            [(Some(1), Some(1)), (Some(3), Some(3)), (Some(3), Some(1)), (Some(1), Some(3))];
+        for (ws, wr) in combos {
+            let (mut a, mut b) = rank_pair(SecurityMode::CryptMpi);
+            a.set_crypto_workers(ws);
+            b.set_crypto_workers(wr);
+            a.send(1, 7, &msg);
+            let got = b.recv_checked(Some(0), 7).expect("roundtrip");
+            assert_eq!(got, msg, "ws={ws:?} wr={wr:?}");
+            clocks.push((a.now_ns(), b.now_ns()));
+            let (pa, pb) = (&a.stats().pipeline, &b.stats().pipeline);
+            if ws == Some(3) {
+                assert_eq!(pa.parallel_msgs, 1, "parallel send must be counted");
+                assert_eq!(pa.max_workers, 3);
+                assert_eq!(pa.parallel_chunks, 3);
+            } else {
+                assert_eq!(pa.parallel_msgs, 0, "serial send must stay uncounted");
+            }
+            if wr == Some(3) {
+                assert_eq!(pb.parallel_msgs, 1, "parallel open must be counted");
+            } else {
+                assert_eq!(pb.parallel_msgs, 0);
+            }
+        }
+        assert!(
+            clocks.windows(2).all(|w| w[0] == w[1]),
+            "virtual time must not depend on worker count: {clocks:?}"
+        );
+    }
+
+    /// Corrupting chunk k of an n-chunk parallel open — first, middle,
+    /// last — latches exactly one clean `AuthError`, never deadlocks the
+    /// worker pool, and leaves both ranks fully usable afterwards.
+    #[test]
+    fn parallel_open_corrupt_chunk_first_middle_last() {
+        let msg = payload(1_600_000); // k = 3 chunks
+        for victim in [1usize, 2, 3] {
+            let (mut a, mut b) = rank_pair(SecurityMode::CryptMpi);
+            a.set_crypto_workers(Some(3));
+            b.set_crypto_workers(Some(3));
+            a.send(1, 11, &msg);
+            // Take the stream off the wire, flip one ciphertext byte in
+            // the victim chunk, and repost everything in order.
+            let mut msgs = Vec::new();
+            while let Some(m) = a.tp.try_match(1, Some(0), 11) {
+                msgs.push(m);
+            }
+            assert_eq!(msgs.len(), 4, "header + 3 chunks");
+            let mid = msgs[victim].body.len() / 2;
+            msgs[victim].body[mid] ^= 0x80;
+            for m in msgs {
+                b.tp.post(0, 1, 11, m.seq, m.body, 0);
+            }
+            assert!(
+                b.recv_checked(Some(0), 11).is_err(),
+                "corrupt chunk {victim} must surface a clean AuthError"
+            );
+            // The engine survives the latch: the same pair (same pools)
+            // moves a fresh message end to end.
+            a.send(1, 12, &msg);
+            assert_eq!(b.recv_checked(Some(0), 12).expect("post-error reuse"), msg);
+        }
     }
 }

@@ -32,6 +32,10 @@ pub mod stream;
 
 pub use gcm::{AuthError, Gcm, NONCE_LEN, TAG_LEN};
 pub use stream::{
-    chop_decrypt_wire_scatter, chop_encrypt_gather_into, GatherCursor, Header, Opcode,
+    chop_decrypt_wire_parallel, chop_decrypt_wire_scatter, chop_decrypt_wire_scatter_parallel,
+    chop_encrypt_gather_into, chop_encrypt_gather_into_parallel,
+    chop_encrypt_gather_into_seeded,
+    chop_encrypt_gather_into_parallel_seeded, chop_encrypt_into_parallel,
+    chop_encrypt_into_parallel_seeded, chop_encrypt_into_seeded, GatherCursor, Header, Opcode,
     ScatterCursor, StreamOpener, StreamSealer, CHOP_THRESHOLD, HEADER_LEN,
 };

@@ -181,6 +181,27 @@ impl<'a> GatherCursor<'a> {
         self.remaining -= dst.len();
     }
 
+    /// Advance past the next `n` logical bytes without copying them —
+    /// positions a fresh cursor at a band's start offset so the parallel
+    /// seal engine can hand each worker its own cursor over a disjoint
+    /// region of one logical message. Panics if fewer than `n` remain.
+    pub fn skip(&mut self, n: usize) {
+        assert!(n <= self.remaining, "gather cursor exhausted");
+        let mut left = n;
+        while left > 0 {
+            let (_, len) = self.ext[self.idx];
+            if self.off == len {
+                self.idx += 1;
+                self.off = 0;
+                continue;
+            }
+            let take = (len - self.off).min(left);
+            left -= take;
+            self.off += take;
+        }
+        self.remaining -= n;
+    }
+
     /// Append the next `n` logical bytes to `out` — the push-style mirror
     /// of [`copy_next`](Self::copy_next) for paths that build a `Vec`
     /// frame incrementally (no dead zero-fill of the body region).
@@ -253,6 +274,26 @@ impl<'a> ScatterCursor<'a> {
             self.off += take;
         }
         self.remaining -= src.len();
+    }
+
+    /// Advance past the next `n` logical bytes of destination capacity
+    /// without writing — the scatter mirror of [`GatherCursor::skip`].
+    /// Panics if less capacity remains.
+    pub fn skip(&mut self, n: usize) {
+        assert!(n <= self.remaining, "scatter cursor exhausted");
+        let mut left = n;
+        while left > 0 {
+            let (_, len) = self.ext[self.idx];
+            if self.off == len {
+                self.idx += 1;
+                self.off = 0;
+                continue;
+            }
+            let take = (len - self.off).min(left);
+            left -= take;
+            self.off += take;
+        }
+        self.remaining -= n;
     }
 }
 
@@ -566,19 +607,40 @@ pub fn chop_encrypt(k1: &Gcm, msg: &[u8], nsegs: u32) -> (Header, Vec<Vec<u8>>) 
 /// O(segments) `Vec`s of [`chop_encrypt`].
 pub fn chop_encrypt_into(k1: &Gcm, msg: &[u8], nsegs: u32, wire: &mut Vec<u8>) -> Header {
     let sealer = StreamSealer::new(k1, msg.len(), nsegs);
+    chop_seal_into(&sealer, msg, wire)
+}
+
+/// Deterministic-seed variant of [`chop_encrypt_into`] — the anchor of the
+/// parallel-vs-serial wire-image equivalence battery (same seed ⇒ the
+/// wire must be byte-identical however the sealing was scheduled).
+pub fn chop_encrypt_into_seeded(
+    k1: &Gcm,
+    msg: &[u8],
+    nsegs: u32,
+    seed: [u8; 16],
+    wire: &mut Vec<u8>,
+) -> Header {
+    let sealer = StreamSealer::with_seed(k1, msg.len(), nsegs, seed);
+    chop_seal_into(&sealer, msg, wire)
+}
+
+fn chop_seal_into(sealer: &StreamSealer, msg: &[u8], wire: &mut Vec<u8>) -> Header {
     let n = sealer.num_segments();
-    let total = sealer.chunk_wire_len(1, n);
-    // No clear+zero-fill: every byte is overwritten below (bodies by the
-    // plaintext copy, the tag block by seal_chunk), so only a grown tail
-    // ever needs initializing.
+    resize_wire(wire, sealer.chunk_wire_len(1, n));
+    wire[..msg.len()].copy_from_slice(msg);
+    sealer.seal_chunk(1, n, &mut wire[..]);
+    sealer.header().clone()
+}
+
+/// Resize a recycled wire buffer without clearing: every byte is
+/// overwritten by the copy/gather + seal that follows, so only a grown
+/// tail ever needs initializing.
+fn resize_wire(wire: &mut Vec<u8>, total: usize) {
     if wire.len() > total {
         wire.truncate(total);
     } else {
         wire.resize(total, 0);
     }
-    wire[..msg.len()].copy_from_slice(msg);
-    sealer.seal_chunk(1, n, &mut wire[..]);
-    sealer.header().clone()
 }
 
 /// One-shot decrypt of [`chop_encrypt_into`]'s contiguous wire layout.
@@ -614,15 +676,32 @@ pub fn chop_encrypt_gather_into(
 ) -> Header {
     let msg_len: usize = ext.iter().map(|e| e.1).sum();
     let sealer = StreamSealer::new(k1, msg_len, nsegs);
+    chop_seal_gather_into(&sealer, src, ext, wire)
+}
+
+/// Deterministic-seed variant of [`chop_encrypt_gather_into`] (the
+/// gather-seal leg of the wire-image equivalence battery).
+pub fn chop_encrypt_gather_into_seeded(
+    k1: &Gcm,
+    src: &[u8],
+    ext: &[(usize, usize)],
+    nsegs: u32,
+    seed: [u8; 16],
+    wire: &mut Vec<u8>,
+) -> Header {
+    let msg_len: usize = ext.iter().map(|e| e.1).sum();
+    let sealer = StreamSealer::with_seed(k1, msg_len, nsegs, seed);
+    chop_seal_gather_into(&sealer, src, ext, wire)
+}
+
+fn chop_seal_gather_into(
+    sealer: &StreamSealer,
+    src: &[u8],
+    ext: &[(usize, usize)],
+    wire: &mut Vec<u8>,
+) -> Header {
     let n = sealer.num_segments();
-    let total = sealer.chunk_wire_len(1, n);
-    // Every byte is overwritten (bodies by the gather, tags by the seal),
-    // so only a grown tail needs initializing — same as chop_encrypt_into.
-    if wire.len() > total {
-        wire.truncate(total);
-    } else {
-        wire.resize(total, 0);
-    }
+    resize_wire(wire, sealer.chunk_wire_len(1, n));
     let mut cur = GatherCursor::new(src, ext);
     sealer.seal_chunk_gather(1, n, &mut cur, &mut wire[..]);
     sealer.header().clone()
@@ -678,6 +757,308 @@ pub fn chop_decrypt(k1: &Gcm, header: &Header, segs: &[Vec<u8>]) -> Result<Vec<u
     }
     opener.finish()?;
     Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Parallel seal/open engine (DESIGN.md §12)
+//
+// Every segment owns its positional nonce and a disjoint wire slice, so
+// the one-shot forms below fan segments across a `WorkerPool` in
+// contiguous *bands* (one job per worker, each sealing/opening its
+// segments in sequence). Chunk content depends only on (seed, msg_len,
+// nsegs, index) — never on scheduling — so the wire image is
+// byte-identical to the serial forms under the same seed. On open, a
+// shutdown flag latches the first AuthError: the remaining workers drain
+// (skipping their leftover segments) and the caller surfaces the same
+// clean `AuthError` the serial path produces.
+// ---------------------------------------------------------------------------
+
+use crate::coordinator::pool::WorkerPool;
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// Split segments `1..=n` into at most `w` contiguous, near-equal bands
+/// (earlier bands take the remainder). Always at least one band.
+fn band_ranges(n: u32, w: usize) -> Vec<(u32, u32)> {
+    let w = w.clamp(1, n.max(1) as usize) as u32;
+    let base = n / w;
+    let extra = n % w;
+    let mut out = Vec::with_capacity(w as usize);
+    let mut a = 1u32;
+    for i in 0..w {
+        let len = base + u32::from(i < extra);
+        out.push((a, a + len - 1));
+        a += len;
+    }
+    out
+}
+
+/// Seal segments `a..=b` over split body/tag regions (the band form of
+/// [`StreamSealer::seal_chunk`], where a band's bodies and tags are two
+/// disjoint slices of one larger wire buffer rather than adjacent).
+fn seal_band(sealer: &StreamSealer, a: u32, b: u32, bodies: &mut [u8], tags: &mut [u8]) {
+    let mut bodies = bodies;
+    for (j, i) in (a..=b).enumerate() {
+        let len = sealer.segment_range(i).len();
+        let (body, rest) = std::mem::take(&mut bodies).split_at_mut(len);
+        bodies = rest;
+        let tag = sealer.seal_segment(i, body);
+        tags[j * TAG_LEN..(j + 1) * TAG_LEN].copy_from_slice(&tag);
+    }
+}
+
+/// Seal the full `bodies ‖ tags` wire image across the pool's workers.
+/// The body region must already hold plaintext.
+fn seal_wire_parallel(sealer: &StreamSealer, wire: &mut [u8], pool: &WorkerPool) {
+    let n = sealer.num_segments();
+    let bands = band_ranges(n, pool.size());
+    if bands.len() <= 1 {
+        return sealer.seal_chunk(1, n, wire);
+    }
+    let bodies_len = wire.len() - n as usize * TAG_LEN;
+    let (mut bodies, mut tags) = wire.split_at_mut(bodies_len);
+    let mut jobs = Vec::with_capacity(bands.len());
+    for &(a, b) in &bands {
+        let blen = sealer.segment_range(b).end - sealer.segment_range(a).start;
+        let (band_bodies, rest) = std::mem::take(&mut bodies).split_at_mut(blen);
+        bodies = rest;
+        let (band_tags, rest) =
+            std::mem::take(&mut tags).split_at_mut((b - a + 1) as usize * TAG_LEN);
+        tags = rest;
+        jobs.push(move || seal_band(sealer, a, b, band_bodies, band_tags));
+    }
+    pool.scope_run(jobs);
+}
+
+/// Parallel form of [`chop_encrypt_into`]: same wire image, same header,
+/// the sealing fanned across `pool`'s workers in contiguous bands.
+pub fn chop_encrypt_into_parallel(
+    k1: &Gcm,
+    msg: &[u8],
+    nsegs: u32,
+    wire: &mut Vec<u8>,
+    pool: &WorkerPool,
+) -> Header {
+    chop_encrypt_into_parallel_seeded(k1, msg, nsegs, secure_array(), wire, pool)
+}
+
+/// Deterministic-seed variant of [`chop_encrypt_into_parallel`].
+pub fn chop_encrypt_into_parallel_seeded(
+    k1: &Gcm,
+    msg: &[u8],
+    nsegs: u32,
+    seed: [u8; 16],
+    wire: &mut Vec<u8>,
+    pool: &WorkerPool,
+) -> Header {
+    let sealer = StreamSealer::with_seed(k1, msg.len(), nsegs, seed);
+    let n = sealer.num_segments();
+    resize_wire(wire, sealer.chunk_wire_len(1, n));
+    wire[..msg.len()].copy_from_slice(msg);
+    seal_wire_parallel(&sealer, &mut wire[..], pool);
+    sealer.header().clone()
+}
+
+/// Parallel form of [`chop_encrypt_gather_into`]: each band job walks its
+/// own [`GatherCursor`], skipped to the band's logical offset, so the
+/// strided gather fans out with the sealing.
+pub fn chop_encrypt_gather_into_parallel(
+    k1: &Gcm,
+    src: &[u8],
+    ext: &[(usize, usize)],
+    nsegs: u32,
+    wire: &mut Vec<u8>,
+    pool: &WorkerPool,
+) -> Header {
+    chop_encrypt_gather_into_parallel_seeded(k1, src, ext, nsegs, secure_array(), wire, pool)
+}
+
+/// Deterministic-seed variant of [`chop_encrypt_gather_into_parallel`].
+pub fn chop_encrypt_gather_into_parallel_seeded(
+    k1: &Gcm,
+    src: &[u8],
+    ext: &[(usize, usize)],
+    nsegs: u32,
+    seed: [u8; 16],
+    wire: &mut Vec<u8>,
+    pool: &WorkerPool,
+) -> Header {
+    let msg_len: usize = ext.iter().map(|e| e.1).sum();
+    let sealer = StreamSealer::with_seed(k1, msg_len, nsegs, seed);
+    let n = sealer.num_segments();
+    resize_wire(wire, sealer.chunk_wire_len(1, n));
+    let bands = band_ranges(n, pool.size());
+    if bands.len() <= 1 {
+        let mut cur = GatherCursor::new(src, ext);
+        sealer.seal_chunk_gather(1, n, &mut cur, &mut wire[..]);
+        return sealer.header().clone();
+    }
+    let bodies_len = msg_len;
+    let (mut bodies, mut tags) = wire.split_at_mut(bodies_len);
+    let sealer_ref = &sealer;
+    let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(bands.len());
+    for &(a, b) in &bands {
+        let start = sealer.segment_range(a).start;
+        let blen = sealer.segment_range(b).end - start;
+        let (band_bodies, rest) = std::mem::take(&mut bodies).split_at_mut(blen);
+        bodies = rest;
+        let (band_tags, rest) =
+            std::mem::take(&mut tags).split_at_mut((b - a + 1) as usize * TAG_LEN);
+        tags = rest;
+        jobs.push(Box::new(move || {
+            let mut cur = GatherCursor::new(src, ext);
+            cur.skip(start);
+            let mut bodies = band_bodies;
+            for (j, i) in (a..=b).enumerate() {
+                let len = sealer_ref.segment_range(i).len();
+                let (body, rest) = std::mem::take(&mut bodies).split_at_mut(len);
+                bodies = rest;
+                let tag = sealer_ref.seal_segment_gather(i, &mut cur, body);
+                band_tags[j * TAG_LEN..(j + 1) * TAG_LEN].copy_from_slice(&tag);
+            }
+        }));
+    }
+    pool.scope_run(jobs);
+    sealer.header().clone()
+}
+
+/// Verify-and-decrypt segments `a..=b` in place over split body/tag
+/// regions, with the shutdown-flag error latch: the first failed tag sets
+/// `failed` and every band (this one and the others, at their next
+/// segment boundary) stops doing work and drains. The failed segment's
+/// ciphertext is restored by GCM's restore-on-reject; segments never
+/// reached stay untouched ciphertext. Crate-visible: the rank's parallel
+/// receive path fans whole chunks over this same primitive.
+pub(crate) fn open_band(
+    opener: &StreamOpener,
+    a: u32,
+    b: u32,
+    bodies: &mut [u8],
+    tags: &[u8],
+    failed: &AtomicBool,
+) {
+    let mut bodies = bodies;
+    for (j, i) in (a..=b).enumerate() {
+        if failed.load(Ordering::Relaxed) {
+            return;
+        }
+        let len = opener.segment_len(i);
+        let (body, rest) = std::mem::take(&mut bodies).split_at_mut(len);
+        bodies = rest;
+        let tag: [u8; TAG_LEN] = tags[j * TAG_LEN..(j + 1) * TAG_LEN].try_into().unwrap();
+        if opener.open_segment(i, body, &tag).is_err() {
+            failed.store(true, Ordering::Relaxed);
+            return;
+        }
+    }
+}
+
+/// Parallel form of [`chop_decrypt_wire`]: ciphertext bodies are copied
+/// once into the output buffer and decrypted in place there by band jobs.
+/// On any tamper the error latches and `wire` (never written) plus the
+/// same clean [`AuthError`] as the serial path are all the caller sees.
+pub fn chop_decrypt_wire_parallel(
+    k1: &Gcm,
+    header: &Header,
+    wire: &[u8],
+    pool: &WorkerPool,
+) -> Result<Vec<u8>, AuthError> {
+    let mut opener = StreamOpener::new(k1, header)?;
+    let n = opener.num_segments();
+    // Same unauthenticated-header length bound as the serial path.
+    let expect = header.msg_len as u128 + n as u128 * TAG_LEN as u128;
+    if wire.len() as u128 != expect {
+        return Err(AuthError);
+    }
+    let bands = band_ranges(n, pool.size());
+    let mut out = vec![0u8; header.msg_len as usize];
+    if bands.len() <= 1 {
+        opener.open_chunk_into(1, n, wire, &mut out)?;
+        opener.finish()?;
+        return Ok(out);
+    }
+    let bodies_len = header.msg_len as usize;
+    out.copy_from_slice(&wire[..bodies_len]);
+    let failed = AtomicBool::new(false);
+    {
+        let opener_ref = &opener;
+        let failed_ref = &failed;
+        let mut out_rest: &mut [u8] = &mut out;
+        let mut tags_rest = &wire[bodies_len..];
+        let mut jobs = Vec::with_capacity(bands.len());
+        for &(a, b) in &bands {
+            let blen: usize = (a..=b).map(|i| opener_ref.segment_len(i)).sum();
+            let (band_out, rest) = std::mem::take(&mut out_rest).split_at_mut(blen);
+            out_rest = rest;
+            let (band_tags, rest) = tags_rest.split_at((b - a + 1) as usize * TAG_LEN);
+            tags_rest = rest;
+            jobs.push(move || open_band(opener_ref, a, b, band_out, band_tags, failed_ref));
+        }
+        pool.scope_run(jobs);
+    }
+    if failed.load(Ordering::Relaxed) {
+        return Err(AuthError);
+    }
+    for _ in 0..n {
+        opener.mark_received();
+    }
+    opener.finish()?;
+    Ok(out)
+}
+
+/// Parallel form of [`chop_decrypt_wire_scatter`]: band jobs decrypt in
+/// place in `wire`, then — only once **every** tag verified — one scatter
+/// sweep delivers the plaintext through `ext`. Stricter than the serial
+/// path (which scatters segment-by-segment as each verifies): under
+/// parallel open, nothing reaches the user buffer on a failed message.
+pub fn chop_decrypt_wire_scatter_parallel(
+    k1: &Gcm,
+    header: &Header,
+    wire: &mut [u8],
+    dst: &mut [u8],
+    ext: &[(usize, usize)],
+    pool: &WorkerPool,
+) -> Result<(), AuthError> {
+    let mut opener = StreamOpener::new(k1, header)?;
+    let n = opener.num_segments();
+    let cap: usize = ext.iter().map(|e| e.1).sum();
+    let expect = header.msg_len as u128 + n as u128 * TAG_LEN as u128;
+    if wire.len() as u128 != expect || (header.msg_len as u128) > cap as u128 {
+        return Err(AuthError);
+    }
+    let bands = band_ranges(n, pool.size());
+    if bands.len() <= 1 {
+        let mut cur = ScatterCursor::new(dst, ext);
+        opener.open_chunk_scatter(1, n, wire, &mut cur)?;
+        return opener.finish();
+    }
+    let bodies_len = header.msg_len as usize;
+    let (bodies, tags) = wire.split_at_mut(bodies_len);
+    let failed = AtomicBool::new(false);
+    {
+        let opener_ref = &opener;
+        let failed_ref = &failed;
+        let mut bodies_rest: &mut [u8] = bodies;
+        let mut tags_rest: &[u8] = tags;
+        let mut jobs = Vec::with_capacity(bands.len());
+        for &(a, b) in &bands {
+            let blen: usize = (a..=b).map(|i| opener_ref.segment_len(i)).sum();
+            let (band_bodies, rest) = std::mem::take(&mut bodies_rest).split_at_mut(blen);
+            bodies_rest = rest;
+            let (band_tags, rest) = tags_rest.split_at((b - a + 1) as usize * TAG_LEN);
+            tags_rest = rest;
+            jobs.push(move || open_band(opener_ref, a, b, band_bodies, band_tags, failed_ref));
+        }
+        pool.scope_run(jobs);
+    }
+    if failed.load(Ordering::Relaxed) {
+        return Err(AuthError);
+    }
+    let mut cur = ScatterCursor::new(dst, ext);
+    cur.copy_next(bodies);
+    for _ in 0..n {
+        opener.mark_received();
+    }
+    opener.finish()
 }
 
 #[cfg(test)]
@@ -1095,5 +1476,105 @@ mod tests {
             let s = StreamSealer::new(&k1, 1024, 2);
             assert!(seen.insert(s.header().seed), "seed collision");
         }
+    }
+
+    #[test]
+    fn band_ranges_cover_and_balance() {
+        for n in [1u32, 2, 3, 7, 8, 16, 33] {
+            for w in [1usize, 2, 3, 4, 7, 64] {
+                let bands = band_ranges(n, w);
+                assert!(!bands.is_empty());
+                assert!(bands.len() <= w.min(n as usize));
+                assert_eq!(bands[0].0, 1);
+                assert_eq!(bands.last().unwrap().1, n);
+                for win in bands.windows(2) {
+                    assert_eq!(win[1].0, win[0].1 + 1, "contiguous bands");
+                }
+                let sizes: Vec<u32> = bands.iter().map(|&(a, b)| b - a + 1).collect();
+                let (lo, hi) =
+                    (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+                assert!(hi - lo <= 1, "near-equal bands: n={n} w={w}");
+            }
+        }
+    }
+
+    #[test]
+    fn cursor_skip_matches_copy_prefix() {
+        // skip(n) must leave a cursor positioned exactly where consuming n
+        // bytes would — across extent boundaries and zero-length extents.
+        let src = msg(4096, 77);
+        let ext = [(0usize, 500usize), (600, 0), (700, 1000), (2000, 900)];
+        let total = 2400usize;
+        let mut full = vec![0u8; total];
+        GatherCursor::new(&src, &ext).copy_next(&mut full);
+        for n in [0usize, 1, 499, 500, 501, 1499, 1500, 2399, 2400] {
+            let mut a = GatherCursor::new(&src, &ext);
+            a.skip(n);
+            assert_eq!(a.remaining(), total - n);
+            let mut tail = vec![0u8; total - n];
+            a.copy_next(&mut tail);
+            assert_eq!(tail, full[n..], "gather skip n={n}");
+
+            // Scatter mirror: skip n, write the tail — the result must
+            // match a full scatter with the first n logical bytes zeroed.
+            let mut dst_skip = vec![0u8; 4096];
+            let mut sc = ScatterCursor::new(&mut dst_skip, &ext);
+            sc.skip(n);
+            sc.copy_next(&full[n..]);
+            let mut want = vec![0u8; 4096];
+            let mut zeroed = full.clone();
+            zeroed[..n].fill(0);
+            ScatterCursor::new(&mut want, &ext).copy_next(&zeroed);
+            assert_eq!(dst_skip, want, "scatter skip n={n}");
+        }
+    }
+
+    /// The anchor property at unit scope: parallel banding over any worker
+    /// count yields byte-identical wire to the serial seal, and the
+    /// parallel open roundtrips it (both backends).
+    #[test]
+    fn parallel_seal_open_matches_serial_wire_image() {
+        for hw in [true, false] {
+            let k1 = Gcm::with_backend(&[0x61u8; 16], hw);
+            let m = msg(200_001, 13);
+            let seed = [0x5au8; 16];
+            let mut serial = Vec::new();
+            let h = chop_encrypt_into_seeded(&k1, &m, 6, seed, &mut serial);
+            for w in [1usize, 2, 4, 7] {
+                let pool = WorkerPool::new(w);
+                let mut par = Vec::new();
+                let hp = chop_encrypt_into_parallel_seeded(&k1, &m, 6, seed, &mut par, &pool);
+                assert_eq!(hp, h, "hw={hw} w={w}");
+                assert_eq!(par, serial, "hw={hw} w={w}");
+                let back = chop_decrypt_wire_parallel(&k1, &h, &par, &pool).unwrap();
+                assert_eq!(back, m, "hw={hw} w={w}");
+                // Cross-compatibility: serial open of parallel wire.
+                assert_eq!(chop_decrypt_wire(&k1, &h, &par).unwrap(), m);
+            }
+        }
+    }
+
+    /// Parallel open error latch: a corrupted segment anywhere surfaces as
+    /// the same clean AuthError, the input wire stays untouched, and the
+    /// pool keeps working (no deadlock, no poisoned workers).
+    #[test]
+    fn parallel_open_latches_clean_autherror() {
+        let k1 = Gcm::new(&[0x62u8; 16]);
+        let m = msg(160_000, 21);
+        let pool = WorkerPool::new(4);
+        let mut wire = Vec::new();
+        let h = chop_encrypt_into(&k1, &m, 8, &mut wire);
+        for pos in [0usize, 80_000, 159_999, 160_005] {
+            let mut bad = wire.clone();
+            bad[pos] ^= 1;
+            let snapshot = bad.clone();
+            assert!(
+                chop_decrypt_wire_parallel(&k1, &h, &bad, &pool).is_err(),
+                "pos={pos}"
+            );
+            assert_eq!(bad, snapshot, "input wire must stay untouched, pos={pos}");
+        }
+        // Pool is still fully usable for a good message afterwards.
+        assert_eq!(chop_decrypt_wire_parallel(&k1, &h, &wire, &pool).unwrap(), m);
     }
 }

@@ -14,6 +14,6 @@ pub mod transport;
 pub use datatype::{pack, unpack, Datatype};
 pub use stats::{
     AtomicMatchStats, ClusterReport, CollOp, CollOpStats, CollStats, CommStats, MatchStats,
-    RankReport, COLL_OPS,
+    PipelineStats, RankReport, COLL_OPS,
 };
 pub use transport::{PostInfo, ProbePeek, Route, Ticket, Transport, WireMsg, COLL_TAG_BASE};

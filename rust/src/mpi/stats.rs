@@ -241,6 +241,58 @@ impl AtomicMatchStats {
     }
 }
 
+/// Counters for the cross-chunk parallel crypto engine (DESIGN.md §12):
+/// messages that took the parallel seal/open path, the chunks its workers
+/// processed, the per-message worker-count high-water mark, and the
+/// pipeline fill — occupied worker-slots over available worker-slots
+/// across the rounds each message needed. A fill near 1.0 means chunk
+/// counts divide evenly across the fan-out; a low fill flags messages
+/// whose tail round left workers idle.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct PipelineStats {
+    /// Messages sealed or opened on the parallel (w > 1) path.
+    pub parallel_msgs: u64,
+    /// Chunks those messages fanned across the pool.
+    pub parallel_chunks: u64,
+    /// Largest per-message worker count used.
+    pub max_workers: u64,
+    /// Worker-slots actually occupied by chunk jobs.
+    pub fill_slots_used: u64,
+    /// Worker-slots available over the rounds used (`workers ×
+    /// ⌈chunks/workers⌉` per message).
+    pub fill_slots_avail: u64,
+}
+
+impl PipelineStats {
+    /// Record one parallel-path message: `workers` pool workers over
+    /// `nchunks` chunk jobs.
+    pub fn record_message(&mut self, workers: usize, nchunks: usize) {
+        let (w, c) = (workers.max(1) as u64, nchunks as u64);
+        self.parallel_msgs += 1;
+        self.parallel_chunks += c;
+        self.max_workers = self.max_workers.max(w);
+        self.fill_slots_used += c;
+        self.fill_slots_avail += w * c.div_ceil(w);
+    }
+
+    /// Pipeline fill ratio in (0, 1] (0.0 when nothing ran in parallel).
+    pub fn fill(&self) -> f64 {
+        if self.fill_slots_avail == 0 {
+            0.0
+        } else {
+            self.fill_slots_used as f64 / self.fill_slots_avail as f64
+        }
+    }
+
+    pub fn merge(&mut self, other: &PipelineStats) {
+        self.parallel_msgs += other.parallel_msgs;
+        self.parallel_chunks += other.parallel_chunks;
+        self.max_workers = self.max_workers.max(other.max_workers);
+        self.fill_slots_used += other.fill_slots_used;
+        self.fill_slots_avail += other.fill_slots_avail;
+    }
+}
+
 /// Communication-time accounting for one rank (virtual nanoseconds).
 #[derive(Debug, Default, Clone)]
 pub struct CommStats {
@@ -266,6 +318,8 @@ pub struct CommStats {
     /// Matching/progress-engine counters (snapshotted from the transport
     /// when the rank finishes).
     pub matching: MatchStats,
+    /// Parallel crypto-engine counters (worker fan-out, pipeline fill).
+    pub pipeline: PipelineStats,
 }
 
 impl CommStats {
@@ -286,6 +340,7 @@ impl CommStats {
         self.msgs_recv += other.msgs_recv;
         self.coll.merge(&other.coll);
         self.matching.merge(&other.matching);
+        self.pipeline.merge(&other.pipeline);
     }
 }
 
@@ -380,6 +435,32 @@ mod tests {
         // not double-count it.
         let s = CommStats { inter_ns: 100, coll_ns: 100, ..Default::default() };
         assert_eq!(s.total_comm_ns(), 100);
+    }
+
+    #[test]
+    fn pipeline_stats_record_fill_and_merge() {
+        let mut p = PipelineStats::default();
+        assert_eq!(p.fill(), 0.0);
+        // 4 workers over 8 chunks: 2 full rounds, fill = 1.0.
+        p.record_message(4, 8);
+        assert_eq!(p.parallel_msgs, 1);
+        assert_eq!(p.parallel_chunks, 8);
+        assert_eq!(p.max_workers, 4);
+        assert!((p.fill() - 1.0).abs() < 1e-12);
+        // 4 workers over 5 chunks: 2 rounds = 8 slots, 5 used.
+        p.record_message(4, 5);
+        assert_eq!(p.fill_slots_used, 13);
+        assert_eq!(p.fill_slots_avail, 16);
+        assert!((p.fill() - 13.0 / 16.0).abs() < 1e-12);
+
+        let mut q = PipelineStats::default();
+        q.record_message(7, 7);
+        q.merge(&p);
+        assert_eq!(q.parallel_msgs, 3);
+        assert_eq!(q.parallel_chunks, 20);
+        assert_eq!(q.max_workers, 7);
+        assert_eq!(q.fill_slots_used, 20);
+        assert_eq!(q.fill_slots_avail, 23);
     }
 
     #[test]

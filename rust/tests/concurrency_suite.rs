@@ -1,0 +1,177 @@
+//! Adversarial concurrency battery for the parallel seal/open engine
+//! (DESIGN.md §12). The engine's claims under attack are: one corrupt
+//! chunk — wherever it sits — latches exactly one clean `AuthError`;
+//! workers drain instead of deadlocking; untouched ciphertext is left
+//! untouched (and the failed segment's ciphertext is restored by GCM's
+//! restore-on-reject); and the pool's ordered-completion scope survives
+//! arbitrary job panics. Every test here loops or sweeps positions, so a
+//! scheduling-dependent failure has many chances to show itself; CI runs
+//! the pool suite 64× on top.
+
+use cryptmpi::coordinator::pool::WorkerPool;
+use cryptmpi::crypto::rand::SimRng;
+use cryptmpi::crypto::stream::{
+    chop_decrypt_wire_parallel, chop_decrypt_wire_scatter_parallel,
+    chop_encrypt_gather_into_seeded, chop_encrypt_into_seeded,
+};
+use cryptmpi::crypto::Gcm;
+
+fn payload(rng: &mut SimRng, n: usize) -> Vec<u8> {
+    let mut v = vec![0u8; n];
+    rng.fill(&mut v);
+    v
+}
+
+/// Corrupting the first, a middle, or the last segment of a parallel
+/// open — body bytes and tag bytes alike — surfaces the same clean
+/// `AuthError` as the serial path, never writes the input wire, and
+/// leaves the pool fully usable.
+#[test]
+fn corrupt_segment_first_middle_last_latches_cleanly() {
+    let k1 = Gcm::new(&[0x61u8; 16]);
+    let mut rng = SimRng::new(0xbad5eed);
+    let len = 160_000usize;
+    let nsegs = 8u32;
+    let msg = payload(&mut rng, len);
+    let mut seed = [0u8; 16];
+    rng.fill(&mut seed);
+    let mut wire = Vec::new();
+    let h = chop_encrypt_into_seeded(&k1, &msg, nsegs, seed, &mut wire);
+    let pool = WorkerPool::new(4);
+    // First body byte, a middle segment, the last body byte, and a byte
+    // inside the trailing tag block.
+    for &pos in &[0usize, len / 2, len - 1, len + 5] {
+        let mut bad = wire.clone();
+        bad[pos] ^= 1;
+        let snapshot = bad.clone();
+        assert!(
+            chop_decrypt_wire_parallel(&k1, &h, &bad, &pool).is_err(),
+            "corruption at {pos} must latch an AuthError"
+        );
+        assert_eq!(bad, snapshot, "contig parallel open must never write the wire ({pos})");
+    }
+    // The latch left no poisoned state behind: the same pool still opens
+    // the untouched stream.
+    assert_eq!(chop_decrypt_wire_parallel(&k1, &h, &wire, &pool).unwrap(), msg);
+}
+
+/// The parallel open-scatter on a corrupt stream: nothing reaches the
+/// destination buffer, the failed segment's ciphertext is restored in
+/// the wire buffer (GCM restore-on-reject), and the pool survives.
+#[test]
+fn corrupt_scatter_open_spares_dst_and_restores_ciphertext() {
+    let k1 = Gcm::new(&[0x62u8; 16]);
+    let mut rng = SimRng::new(0x5ca7734);
+    // 72 KB logical payload gathered from 96 strided rows.
+    let (rows, width, pitch) = (96usize, 768usize, 1024usize);
+    let ext: Vec<(usize, usize)> = (0..rows).map(|r| (r * pitch, width)).collect();
+    let grid = payload(&mut rng, rows * pitch);
+    let mut seed = [0u8; 16];
+    rng.fill(&mut seed);
+    let mut wire = Vec::new();
+    let h = chop_encrypt_gather_into_seeded(&k1, &grid, &ext, 9, seed, &mut wire);
+    let pool = WorkerPool::new(4);
+    let msg_len = rows * width;
+    let seg = h.seg_size as usize;
+    for &pos in &[0usize, msg_len / 2, msg_len - 1] {
+        let mut bad = wire.clone();
+        bad[pos] ^= 0x40;
+        let corrupted_seg = {
+            let lo = (pos / seg) * seg;
+            lo..(lo + seg).min(msg_len)
+        };
+        let snapshot = bad[corrupted_seg.clone()].to_vec();
+        let mut dst = vec![0u8; rows * pitch];
+        assert!(
+            chop_decrypt_wire_scatter_parallel(&k1, &h, &mut bad, &mut dst, &ext, &pool)
+                .is_err(),
+            "corruption at {pos} must latch an AuthError"
+        );
+        assert!(dst.iter().all(|&b| b == 0), "no plaintext may reach dst on failure ({pos})");
+        assert_eq!(
+            &bad[corrupted_seg],
+            &snapshot[..],
+            "failed segment's ciphertext must be restored ({pos})"
+        );
+    }
+    // Clean stream still opens on the same pool, landing every row.
+    let mut dst = vec![0u8; rows * pitch];
+    chop_decrypt_wire_scatter_parallel(&k1, &h, &mut wire, &mut dst, &ext, &pool)
+        .expect("clean open after latches");
+    for r in 0..rows {
+        assert_eq!(
+            &dst[r * pitch..r * pitch + width],
+            &grid[r * pitch..r * pitch + width],
+            "row {r}"
+        );
+    }
+}
+
+/// 64 rounds of corrupt-then-open on a 7-worker pool: the shutdown-flag
+/// latch must produce a clean error every time and never wedge a worker
+/// (a deadlock here hangs the test). Every 8th round opens the clean
+/// stream to prove the pool still does real work.
+#[test]
+fn latch_never_deadlocks_under_repeated_corruption() {
+    let k1 = Gcm::new(&[0x63u8; 16]);
+    let mut rng = SimRng::new(0x10aded);
+    let len = 96_000usize;
+    let msg = payload(&mut rng, len);
+    let mut seed = [0u8; 16];
+    rng.fill(&mut seed);
+    let mut wire = Vec::new();
+    let h = chop_encrypt_into_seeded(&k1, &msg, 12, seed, &mut wire);
+    let pool = WorkerPool::new(7);
+    for it in 0..64u64 {
+        let pos = rng.below(wire.len() as u64) as usize;
+        let mut bad = wire.clone();
+        bad[pos] ^= 1 << (it % 8);
+        assert!(
+            chop_decrypt_wire_parallel(&k1, &h, &bad, &pool).is_err(),
+            "iteration {it}: corruption at {pos} must fail"
+        );
+        if it % 8 == 7 {
+            assert_eq!(
+                chop_decrypt_wire_parallel(&k1, &h, &wire, &pool).unwrap(),
+                msg,
+                "iteration {it}: clean open after latches"
+            );
+        }
+    }
+}
+
+/// 64 rounds of a panicking job inside `scope_run_ordered`: the panic
+/// resurfaces on the caller every round, deliveries stop exactly at the
+/// panicked index (the ordered-writer cut), and the pool keeps working
+/// afterwards — the completion signal is released even when jobs die.
+#[test]
+fn ordered_scope_survives_repeated_panics() {
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    let pool = WorkerPool::new(4);
+    for round in 0..64usize {
+        let boom = round % 6;
+        let mut delivered: Vec<(usize, usize)> = Vec::new();
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            let jobs: Vec<Box<dyn FnOnce() -> usize + Send>> = (0..6usize)
+                .map(|i| {
+                    let dies = i == boom;
+                    Box::new(move || {
+                        if dies {
+                            panic!("job {i} down");
+                        }
+                        i * 10
+                    }) as Box<dyn FnOnce() -> usize + Send>
+                })
+                .collect();
+            pool.scope_run_ordered(jobs, |idx, v| delivered.push((idx, v)));
+        }));
+        assert!(r.is_err(), "round {round}: the job panic must resurface");
+        let want: Vec<(usize, usize)> = (0..boom).map(|i| (i, i * 10)).collect();
+        assert_eq!(delivered, want, "round {round}: deliveries must cut at the panic");
+    }
+    // Still fully functional after 64 unwinds.
+    let mut out = Vec::new();
+    let jobs: Vec<_> = (0..5usize).map(|i| move || i).collect();
+    pool.scope_run_ordered(jobs, |_, v| out.push(v));
+    assert_eq!(out, vec![0, 1, 2, 3, 4]);
+}

@@ -465,6 +465,175 @@ fn prop_outstanding_irecv_interleaving_drains_engine() {
     }
 }
 
+/// Property (parallel engine, DESIGN.md §12): under the same seed the
+/// parallel seal produces byte-identical header + wire images to the
+/// serial reference for worker counts {1, 2, 4, 7} × both crypto
+/// backends × awkward sizes around the chopping threshold — and the
+/// images are interchangeable: parallel open accepts the serial image
+/// and serial open accepts the parallel one.
+#[test]
+fn prop_parallel_wire_image_equivalence() {
+    use cryptmpi::coordinator::pool::WorkerPool;
+    use cryptmpi::crypto::stream::{
+        chop_decrypt_wire_parallel, chop_encrypt_into_parallel_seeded,
+        chop_encrypt_into_seeded,
+    };
+    use cryptmpi::crypto::CHOP_THRESHOLD;
+    let mut rng = SimRng::new(0x12a7);
+    for hw in [true, false] {
+        let k1 = Gcm::with_backend(&[0x51u8; 16], hw);
+        if hw && !k1.is_hw() {
+            continue;
+        }
+        // 1 byte, both sides of the 64 KB threshold, and a length that is
+        // a multiple of nothing (so the tail segment is ragged).
+        for &len in &[1usize, CHOP_THRESHOLD - 1, CHOP_THRESHOLD + 1, 200_001] {
+            let msg = payload(&mut rng, len);
+            let nsegs = 12u32;
+            let mut seed = [0u8; 16];
+            rng.fill(&mut seed);
+            let mut wire_s = Vec::new();
+            let h = chop_encrypt_into_seeded(&k1, &msg, nsegs, seed, &mut wire_s);
+            for &w in &[1usize, 2, 4, 7] {
+                let pool = WorkerPool::new(w);
+                let mut wire_p = Vec::new();
+                let hp = chop_encrypt_into_parallel_seeded(
+                    &k1, &msg, nsegs, seed, &mut wire_p, &pool,
+                );
+                assert_eq!(h.encode(), hp.encode(), "hw={hw} len={len} w={w}: header");
+                assert!(wire_s == wire_p, "hw={hw} len={len} w={w}: wire image diverged");
+                let out = chop_decrypt_wire_parallel(&k1, &h, &wire_s, &pool)
+                    .unwrap_or_else(|_| panic!("hw={hw} len={len} w={w}: parallel open"));
+                assert_eq!(out, msg, "hw={hw} len={len} w={w}: parallel open bytes");
+                let out = chop_decrypt_wire(&k1, &hp, &wire_p).expect("serial open");
+                assert_eq!(out, msg, "hw={hw} len={len} w={w}: serial open bytes");
+            }
+        }
+    }
+}
+
+/// Property (parallel engine × datatypes): the fused gather-seal over a
+/// strided layout produces the same wire image serial vs parallel, and
+/// both equal the contiguous seal of the packed payload — the parallel
+/// engine never perturbs what reaches the wire, strided or not. The
+/// parallel open-scatter roundtrips the image back into a strided
+/// destination.
+#[test]
+fn prop_parallel_gather_seal_matches_serial_and_packed() {
+    use cryptmpi::coordinator::pool::WorkerPool;
+    use cryptmpi::crypto::stream::{
+        chop_decrypt_wire_scatter_parallel, chop_encrypt_gather_into_parallel_seeded,
+        chop_encrypt_gather_into_seeded, chop_encrypt_into_seeded,
+    };
+    let mut rng = SimRng::new(0x9e11);
+    // 96 × 768-byte rows on a 1 KB pitch: 72 KB logical payload (chopped
+    // regime) gathered from a strided span.
+    let (rows, width, pitch) = (96usize, 768usize, 1024usize);
+    let ext: Vec<(usize, usize)> = (0..rows).map(|r| (r * pitch, width)).collect();
+    for hw in [true, false] {
+        let k1 = Gcm::with_backend(&[0x52u8; 16], hw);
+        if hw && !k1.is_hw() {
+            continue;
+        }
+        let grid = payload(&mut rng, rows * pitch);
+        let packed: Vec<u8> =
+            (0..rows).flat_map(|r| grid[r * pitch..r * pitch + width].to_vec()).collect();
+        let nsegs = 10u32;
+        let mut seed = [0u8; 16];
+        rng.fill(&mut seed);
+        let mut wire_gs = Vec::new();
+        let h = chop_encrypt_gather_into_seeded(&k1, &grid, &ext, nsegs, seed, &mut wire_gs);
+        let mut wire_pk = Vec::new();
+        let hc = chop_encrypt_into_seeded(&k1, &packed, nsegs, seed, &mut wire_pk);
+        assert_eq!(h.encode(), hc.encode(), "hw={hw}: gather vs packed header");
+        assert!(wire_gs == wire_pk, "hw={hw}: gather-seal wire != packed contiguous wire");
+        for &w in &[2usize, 7] {
+            let pool = WorkerPool::new(w);
+            let mut wire_gp = Vec::new();
+            let hp = chop_encrypt_gather_into_parallel_seeded(
+                &k1, &grid, &ext, nsegs, seed, &mut wire_gp, &pool,
+            );
+            assert_eq!(h.encode(), hp.encode(), "hw={hw} w={w}: parallel gather header");
+            assert!(wire_gs == wire_gp, "hw={hw} w={w}: parallel gather-seal diverged");
+            // Parallel open-scatter lands the rows back on their pitch.
+            let mut dst = vec![0u8; rows * pitch];
+            let mut wire_mut = wire_gp.clone();
+            chop_decrypt_wire_scatter_parallel(&k1, &hp, &mut wire_mut, &mut dst, &ext, &pool)
+                .expect("parallel open-scatter");
+            for r in 0..rows {
+                assert_eq!(
+                    &dst[r * pitch..r * pitch + width],
+                    &grid[r * pitch..r * pitch + width],
+                    "hw={hw} w={w} row {r}"
+                );
+            }
+        }
+    }
+}
+
+/// Property (parallel engine, end to end): payloads survive the cluster
+/// pipeline bit-exactly in all four security modes with the pipeline
+/// worker count forced up and down — 0-byte and threshold-straddling
+/// sizes included — and a multi-chunk derived-datatype send roundtrips
+/// under every worker count.
+#[test]
+fn prop_parallel_workers_end_to_end() {
+    use cryptmpi::mpi::Datatype;
+    let mut rng = SimRng::new(0xced5);
+    for mode in [
+        SecurityMode::Unencrypted,
+        SecurityMode::IpsecSim,
+        SecurityMode::Naive,
+        SecurityMode::CryptMpi,
+    ] {
+        for &len in &[0usize, 64 * 1024 - 1, (1 << 20) + 4097] {
+            let msg = payload(&mut rng, len);
+            for &w in &[2usize, 7] {
+                let cfg = ClusterConfig::pingpong(SystemProfile::noleland(), mode);
+                let m2 = msg.clone();
+                let (outs, _) = run_cluster(&cfg, move |rank| {
+                    rank.set_crypto_workers(Some(w));
+                    if rank.id() == 0 {
+                        rank.send(1, 9, &m2);
+                        true
+                    } else {
+                        rank.recv(0, 9) == m2
+                    }
+                });
+                assert!(outs[1], "mode {mode:?} len {len} w={w}: payload corrupted");
+            }
+        }
+    }
+    // Gather-seal datatype send at multi-chunk size, all worker counts
+    // (sender parallel-seals straight from the strided layout; receiver
+    // parallel-opens into it).
+    let (rows, width, pitch) = (1536usize, 1024usize, 2048usize); // 1.5 MB logical
+    let dt = Datatype::vector(rows, width, pitch);
+    let grid = payload(&mut rng, rows * pitch);
+    for &w in &[1usize, 2, 4, 7] {
+        let cfg =
+            ClusterConfig::pingpong(SystemProfile::noleland(), SecurityMode::CryptMpi);
+        let g2 = grid.clone();
+        let dt2 = dt.clone();
+        let (outs, _) = run_cluster(&cfg, move |rank| {
+            rank.set_crypto_workers(Some(w));
+            if rank.id() == 0 {
+                rank.send_dt(1, 3, &g2, &dt2);
+                true
+            } else {
+                let mut ghost = vec![0u8; dt2.extent()];
+                let got = rank.recv_dt_into(Some(0), 3, &mut ghost, &dt2);
+                got == rows * width
+                    && (0..rows).all(|r| {
+                        ghost[r * pitch..r * pitch + width]
+                            == g2[r * pitch..r * pitch + width]
+                    })
+            }
+        });
+        assert!(outs[1], "dt roundtrip w={w}");
+    }
+}
+
 /// Property: virtual elapsed time is stable across repeated runs of the
 /// same workload. Gap-filling reservation removes most scheduling
 /// sensitivity, but simultaneous-ready contenders are still served in real
