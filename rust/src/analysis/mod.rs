@@ -1,0 +1,151 @@
+//! `cryptlint` — an in-repo, zero-dependency static-analysis pass for
+//! secret hygiene, unsafe audit, and protocol invariants.
+//!
+//! The pass is deliberately self-contained (a ~300-line token scanner in
+//! [`tokenizer`] plus a rule engine in [`rules`]) so it can run in CI with
+//! nothing but the crate itself: `cargo run --bin cryptlint`. It is also
+//! *self-hosting*: `tests/cryptlint_suite.rs` lints the entire crate and
+//! asserts zero findings, so every rule is continuously proven against
+//! the real tree, and every `unsafe` site ships with a machine-readable
+//! justification inventory (see [`inventory_json`]).
+//!
+//! See DESIGN.md §13 for the rule catalogue and the scope/limits of the
+//! surface-syntax approach.
+
+pub mod rules;
+pub mod tokenizer;
+
+use rules::{AllowMarker, FileReport, Finding, UnsafeSite};
+use std::path::{Path, PathBuf};
+
+/// Aggregated result of linting a set of roots.
+#[derive(Debug, Default)]
+pub struct TreeReport {
+    /// Number of `.rs` files linted.
+    pub files: usize,
+    pub findings: Vec<Finding>,
+    pub unsafe_sites: Vec<UnsafeSite>,
+    pub markers: Vec<AllowMarker>,
+    /// Total `unsafe` keyword tokens seen; the inventory is complete iff
+    /// `unsafe_sites.len() == unsafe_tokens`.
+    pub unsafe_tokens: usize,
+}
+
+impl TreeReport {
+    fn absorb(&mut self, r: FileReport) {
+        self.files += 1;
+        self.findings.extend(r.findings);
+        self.unsafe_sites.extend(r.unsafe_sites);
+        self.markers.extend(r.markers);
+        self.unsafe_tokens += r.unsafe_tokens;
+    }
+}
+
+/// Recursively collect `.rs` files under `dir`, sorted for deterministic
+/// output. Missing directories yield an empty list (the `benches/` root
+/// is optional).
+pub fn collect_rs_files(dir: &Path) -> Vec<PathBuf> {
+    let mut out: Vec<PathBuf> = Vec::new();
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return out;
+    };
+    let mut entries: Vec<PathBuf> = entries.filter_map(|e| e.ok().map(|e| e.path())).collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            out.extend(collect_rs_files(&p));
+        } else if p.extension().and_then(|x| x.to_str()) == Some("rs") {
+            out.push(p);
+        }
+    }
+    out
+}
+
+/// The roots this repo lints, as `(prefix, directory)` pairs. The prefix
+/// becomes the leading path component of every reported file (it is what
+/// the per-root rule exemptions key on: `tests/` and `benches/` files
+/// skip the secret-hygiene and key-hygiene rules).
+pub fn default_roots() -> Vec<(String, PathBuf)> {
+    let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let repo = manifest.parent().map(Path::to_path_buf).unwrap_or_else(|| manifest.clone());
+    vec![
+        ("src".to_string(), manifest.join("src")),
+        ("tests".to_string(), manifest.join("tests")),
+        ("benches".to_string(), manifest.join("benches")),
+        ("examples".to_string(), repo.join("examples")),
+    ]
+}
+
+/// Lint every `.rs` file under the given roots. Unreadable files are
+/// skipped (they cannot carry violations the compiler would accept
+/// either).
+pub fn lint_tree(roots: &[(String, PathBuf)]) -> TreeReport {
+    let mut report = TreeReport::default();
+    for (prefix, dir) in roots {
+        for path in collect_rs_files(dir) {
+            let rel = path.strip_prefix(dir).unwrap_or(&path);
+            let rel = format!("{}/{}", prefix, rel.display());
+            let Ok(src) = std::fs::read_to_string(&path) else {
+                continue;
+            };
+            report.absorb(rules::lint_file(&rel, &src));
+        }
+    }
+    report
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// The machine-readable unsafe inventory: every `unsafe` site with its
+/// kind and justification, plus every `cryptlint-allow` marker — the
+/// artifact CI uploads so reviewers can diff the audit surface over time.
+pub fn inventory_json(report: &TreeReport) -> String {
+    let mut out = String::new();
+    out.push_str("{\n  \"unsafe_sites\": [\n");
+    for (i, s) in report.unsafe_sites.iter().enumerate() {
+        let just = match &s.justification {
+            Some(j) => format!("\"{}\"", json_escape(j)),
+            None => "null".to_string(),
+        };
+        out.push_str(&format!(
+            "    {{\"file\": \"{}\", \"line\": {}, \"kind\": \"{}\", \"justification\": {}}}{}\n",
+            json_escape(&s.file),
+            s.line,
+            s.kind,
+            just,
+            if i + 1 < report.unsafe_sites.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ],\n  \"allow_markers\": [\n");
+    for (i, m) in report.markers.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"file\": \"{}\", \"line\": {}, \"rule\": \"{}\", \"reason\": \"{}\"}}{}\n",
+            json_escape(&m.file),
+            m.line,
+            json_escape(&m.rule),
+            json_escape(&m.reason),
+            if i + 1 < report.markers.len() { "," } else { "" }
+        ));
+    }
+    out.push_str(&format!(
+        "  ],\n  \"files\": {},\n  \"unsafe_tokens\": {},\n  \"findings\": {}\n}}\n",
+        report.files,
+        report.unsafe_tokens,
+        report.findings.len()
+    ));
+    out
+}

@@ -1,0 +1,1109 @@
+//! The `cryptlint` rule engine: five per-file passes over the token stream
+//! of [`super::tokenizer`], each grounded in an invariant this repo
+//! actually relies on (DESIGN.md §13 is the rule catalogue):
+//!
+//! * [`RULE_SECRET`] — secret-typed values must not flow into branch
+//!   conditions, slice indexing, or formatting output, and authentication
+//!   tags must never be compared with raw `==`/`!=` (use `gcm::ct_eq`).
+//! * [`RULE_UNSAFE`] — every `unsafe` occurrence needs an immediately
+//!   preceding `// SAFETY:` comment (or a `# Safety` doc contract for
+//!   `unsafe fn`); all sites are inventoried with their justification.
+//! * [`RULE_TAG_NS`] — only `coordinator/collectives.rs` and
+//!   `mpi/transport.rs` may reference `COLL_TAG_BASE` (plain `use`
+//!   re-exports are exempt: importing the name does not construct a tag).
+//! * [`RULE_KEY`] — key-material types must not derive `Debug`, and must
+//!   wipe on `Drop` before they may derive `Clone`.
+//! * [`RULE_POOL`] — no blocking calls (`.lock()`, `.recv()`, `.join()`,
+//!   …) inside `scope_run` / `scope_run_ordered` worker-job closures
+//!   (`scope_run_ordered`'s completion closure runs on the caller thread
+//!   and is allowed to block).
+//!
+//! A per-file allow marker — a comment naming `cryptlint-allow` with the
+//! rule id in parentheses and a `: reason` — suppresses that rule for the
+//! file; markers are themselves inventoried so the escape hatch stays
+//! auditable. (The syntax is spelled out in DESIGN.md §13; writing it
+//! literally here would register this file's doc as a marker.)
+
+use super::tokenizer::{tokenize, Kind, Token};
+
+pub const RULE_SECRET: &str = "secret-hygiene";
+pub const RULE_UNSAFE: &str = "unsafe-audit";
+pub const RULE_TAG_NS: &str = "tag-namespace";
+pub const RULE_KEY: &str = "key-hygiene";
+pub const RULE_POOL: &str = "pool-discipline";
+
+/// Every shipped rule id.
+pub const RULES: &[&str] = &[RULE_SECRET, RULE_UNSAFE, RULE_TAG_NS, RULE_KEY, RULE_POOL];
+
+/// Types that *own* raw key material (schedules, subkey tables). They must
+/// wipe on Drop; values of these types are secret for flow purposes.
+const SECRET_OWNER_TYPES: &[&str] =
+    &["AesKey", "AesNiKey", "GhashClmulKey", "GhashTableKey", "GhashSoft"];
+
+/// Composite types that carry owners inside (wipe transitively via their
+/// fields' Drop impls); values are secret for flow purposes.
+const SECRET_CARRIER_TYPES: &[&str] = &["Gcm", "StreamSealer", "StreamOpener"];
+
+/// Functions whose return value is key material: binding their result
+/// marks the binding secret.
+const SECRET_FNS: &[&str] = &[
+    "derive_subkey",
+    "round_key_bytes",
+    "keystream8",
+    "keystream1",
+    "subkey_like",
+    "soft_keystream4",
+    "soft_keystream1",
+];
+
+/// Functions whose return value is an authentication tag: raw `==` on
+/// those bindings is forbidden (timing side channel on tag comparison).
+const TAG_FNS: &[&str] = &[
+    "seal_in_place",
+    "seal_in_place_two_pass",
+    "seal_segment",
+    "finish_tag",
+    "soft_finish_tag",
+    "finalize_tag",
+    "open_tag",
+];
+
+/// Constant-time comparison entry points: spans inside their call
+/// arguments are exempt from the secret/tag sinks.
+const CT_SINKS: &[&str] = &["ct_eq"];
+
+/// Macros whose argument list is formatting output.
+const FMT_MACROS: &[&str] = &[
+    "format",
+    "println",
+    "eprintln",
+    "print",
+    "eprint",
+    "write",
+    "writeln",
+    "panic",
+    "assert",
+    "assert_eq",
+    "assert_ne",
+    "debug_assert",
+    "debug_assert_eq",
+    "debug_assert_ne",
+    "format_args",
+];
+
+/// The only files allowed to reference `COLL_TAG_BASE`.
+const TAG_NS_ALLOWED: &[&str] = &["src/coordinator/collectives.rs", "src/mpi/transport.rs"];
+
+/// Method names that block inside worker closures.
+const BLOCKING_CALLS: &[&str] =
+    &["lock", "recv", "recv_timeout", "join", "wait", "wait_timeout", "park"];
+
+/// One rule violation.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub file: String,
+    pub line: u32,
+    pub rule: &'static str,
+    pub message: String,
+    pub excerpt: String,
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}:{}: [{}] {}\n    {}",
+            self.file, self.line, self.rule, self.message, self.excerpt
+        )
+    }
+}
+
+/// One `unsafe` occurrence and its justification (None = unjustified,
+/// which is also a [`RULE_UNSAFE`] finding).
+#[derive(Debug, Clone)]
+pub struct UnsafeSite {
+    pub file: String,
+    pub line: u32,
+    pub kind: &'static str,
+    pub justification: Option<String>,
+}
+
+/// An escape-hatch marker: a comment naming `cryptlint-allow` with the
+/// rule id in parentheses and a `: reason` tail.
+#[derive(Debug, Clone)]
+pub struct AllowMarker {
+    pub file: String,
+    pub line: u32,
+    pub rule: String,
+    pub reason: String,
+}
+
+/// Everything the pass learned about one file.
+#[derive(Debug)]
+pub struct FileReport {
+    pub file: String,
+    pub findings: Vec<Finding>,
+    pub unsafe_sites: Vec<UnsafeSite>,
+    pub markers: Vec<AllowMarker>,
+    /// Raw count of `unsafe` keyword tokens (the inventory must cover
+    /// 100% of these).
+    pub unsafe_tokens: usize,
+}
+
+struct Linter<'a> {
+    file: String,
+    lines: Vec<&'a str>,
+    toks: Vec<Token>,
+    /// Indices into `toks` of non-comment tokens, in order.
+    code: Vec<usize>,
+    /// Token-index ranges (inclusive) of `#[cfg(test)] mod` items.
+    test_spans: Vec<(usize, usize)>,
+    findings: Vec<Finding>,
+    unsafe_sites: Vec<UnsafeSite>,
+    markers: Vec<AllowMarker>,
+    unsafe_tokens: usize,
+}
+
+/// Run every rule over one file. `file` is the repo-relative path with a
+/// root prefix (`src/...`, `tests/...`, `benches/...`, `examples/...`) —
+/// the prefix drives the per-root skips (test files are exempt from
+/// [`RULE_SECRET`] and [`RULE_KEY`]).
+pub fn lint_file(file: &str, src: &str) -> FileReport {
+    let toks = tokenize(src);
+    let code: Vec<usize> =
+        (0..toks.len()).filter(|&i| toks[i].kind != Kind::Comment).collect();
+    let mut lt = Linter {
+        file: file.to_string(),
+        lines: src.lines().collect(),
+        toks,
+        code,
+        test_spans: Vec::new(),
+        findings: Vec::new(),
+        unsafe_sites: Vec::new(),
+        markers: Vec::new(),
+        unsafe_tokens: 0,
+    };
+    lt.collect_markers();
+    lt.find_test_spans();
+    lt.rule_unsafe_audit();
+    lt.rule_tag_namespace();
+    lt.rule_key_hygiene();
+    lt.rule_pool_discipline();
+    lt.rule_secret_hygiene();
+    lt.apply_markers();
+    FileReport {
+        file: lt.file,
+        findings: lt.findings,
+        unsafe_sites: lt.unsafe_sites,
+        markers: lt.markers,
+        unsafe_tokens: lt.unsafe_tokens,
+    }
+}
+
+impl<'a> Linter<'a> {
+    // ---- shared helpers -------------------------------------------------
+
+    fn is_test_file(&self) -> bool {
+        self.file.starts_with("tests/") || self.file.starts_with("benches/")
+    }
+
+    fn emit(&mut self, rule: &'static str, line: u32, message: String) {
+        let excerpt = if line >= 1 && (line as usize) <= self.lines.len() {
+            self.lines[line as usize - 1].trim().to_string()
+        } else {
+            String::new()
+        };
+        self.findings.push(Finding { file: self.file.clone(), line, rule, message, excerpt });
+    }
+
+    /// Kind of the `ci`-th code token.
+    fn ckind(&self, ci: usize) -> Kind {
+        self.toks[self.code[ci]].kind
+    }
+
+    /// Text of the `ci`-th code token.
+    fn ctext(&self, ci: usize) -> &str {
+        &self.toks[self.code[ci]].text
+    }
+
+    /// Line of the `ci`-th code token.
+    fn cline(&self, ci: usize) -> u32 {
+        self.toks[self.code[ci]].line
+    }
+
+    /// Next non-comment token index after token index `i`.
+    fn next_code_tok(&self, i: usize) -> Option<usize> {
+        ((i + 1)..self.toks.len()).find(|&j| self.toks[j].kind != Kind::Comment)
+    }
+
+    /// Previous non-comment token index before token index `i`.
+    fn prev_code_tok(&self, i: usize) -> Option<usize> {
+        (0..i).rev().find(|&j| self.toks[j].kind != Kind::Comment)
+    }
+
+    /// Code index of the matching close delimiter for the open delimiter
+    /// at code index `start_ci`.
+    fn match_close(&self, start_ci: usize, open: &str, close: &str) -> Option<usize> {
+        let mut d = 0i32;
+        let mut ci = start_ci;
+        while ci < self.code.len() {
+            if self.ckind(ci) == Kind::Punct {
+                let t = self.ctext(ci);
+                if t == open {
+                    d += 1;
+                } else if t == close {
+                    d -= 1;
+                    if d == 0 {
+                        return Some(ci);
+                    }
+                }
+            }
+            ci += 1;
+        }
+        None
+    }
+
+    fn in_test_span(&self, tok_idx: usize) -> bool {
+        self.test_spans.iter().any(|&(s, e)| s <= tok_idx && tok_idx <= e)
+    }
+
+    // ---- markers --------------------------------------------------------
+
+    fn collect_markers(&mut self) {
+        let mut found: Vec<AllowMarker> = Vec::new();
+        for t in &self.toks {
+            if t.kind != Kind::Comment {
+                continue;
+            }
+            if let Some(pos) = t.text.find("cryptlint-allow(") {
+                let rest = &t.text[pos + "cryptlint-allow(".len()..];
+                if let Some(close) = rest.find(')') {
+                    let rule = rest[..close].trim().to_string();
+                    let reason =
+                        rest[close + 1..].trim_start_matches(':').trim().to_string();
+                    found.push(AllowMarker {
+                        file: self.file.clone(),
+                        line: t.line,
+                        rule,
+                        reason,
+                    });
+                }
+            }
+        }
+        self.markers = found;
+    }
+
+    fn apply_markers(&mut self) {
+        if self.markers.is_empty() {
+            return;
+        }
+        // A marker's reason becomes the justification of otherwise
+        // unjustified unsafe sites in the file, so the inventory stays
+        // 100% justified while recording the override.
+        if let Some(mk) = self.markers.iter().find(|m| m.rule == RULE_UNSAFE) {
+            let reason = format!("cryptlint-allow: {}", mk.reason);
+            for s in &mut self.unsafe_sites {
+                if s.justification.is_none() {
+                    s.justification = Some(reason.clone());
+                }
+            }
+        }
+        let suppressed: Vec<String> = self.markers.iter().map(|m| m.rule.clone()).collect();
+        self.findings.retain(|f| !suppressed.iter().any(|r| r == f.rule));
+    }
+
+    // ---- test-mod spans -------------------------------------------------
+
+    fn find_test_spans(&mut self) {
+        let n = self.toks.len();
+        let mut spans: Vec<(usize, usize)> = Vec::new();
+        let mut i = 0usize;
+        while i < n {
+            if self.toks[i].kind != Kind::Punct
+                || self.toks[i].text != "#"
+                || i + 1 >= n
+                || self.toks[i + 1].text != "["
+            {
+                i += 1;
+                continue;
+            }
+            // Scan the attribute's bracket span, collecting idents.
+            let mut depth = 0i32;
+            let mut j = i + 1;
+            let mut has_cfg = false;
+            let mut has_test = false;
+            while j < n {
+                let t = &self.toks[j];
+                if t.kind == Kind::Punct && t.text == "[" {
+                    depth += 1;
+                } else if t.kind == Kind::Punct && t.text == "]" {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                } else if t.kind == Kind::Ident {
+                    if t.text == "cfg" {
+                        has_cfg = true;
+                    } else if t.text == "test" {
+                        has_test = true;
+                    }
+                }
+                j += 1;
+            }
+            if has_cfg && has_test {
+                // Skip comments and further attribute groups to find `mod`.
+                let mut m = j + 1;
+                while m < n {
+                    let t = &self.toks[m];
+                    if t.kind == Kind::Comment {
+                        m += 1;
+                        continue;
+                    }
+                    if t.kind == Kind::Punct && t.text == "#" {
+                        let mut d = 0i32;
+                        m += 1;
+                        while m < n {
+                            if self.toks[m].text == "[" {
+                                d += 1;
+                            } else if self.toks[m].text == "]" {
+                                d -= 1;
+                                if d == 0 {
+                                    m += 1;
+                                    break;
+                                }
+                            }
+                            m += 1;
+                        }
+                        continue;
+                    }
+                    break;
+                }
+                if m < n && self.toks[m].kind == Kind::Ident && self.toks[m].text == "mod" {
+                    let mut b = m;
+                    while b < n && self.toks[b].text != "{" {
+                        b += 1;
+                    }
+                    let mut d = 0i32;
+                    let mut e = b;
+                    while e < n {
+                        if self.toks[e].kind == Kind::Punct && self.toks[e].text == "{" {
+                            d += 1;
+                        } else if self.toks[e].kind == Kind::Punct && self.toks[e].text == "}" {
+                            d -= 1;
+                            if d == 0 {
+                                break;
+                            }
+                        }
+                        e += 1;
+                    }
+                    spans.push((i, e));
+                    i = j + 1;
+                    continue;
+                }
+            }
+            i = if j > i { j + 1 } else { i + 1 };
+        }
+        self.test_spans = spans;
+    }
+
+    // ---- unsafe-audit ---------------------------------------------------
+
+    /// Walk upward from `line` collecting contiguous comment lines
+    /// (skipping blanks and attributes); return the justification if a
+    /// `SAFETY:` comment (or, for non-block sites, a `# Safety` doc
+    /// contract) is present.
+    fn safety_justification(&self, line: u32, allow_doc: bool) -> Option<String> {
+        let l = line as usize - 1;
+        if l < self.lines.len() {
+            if let Some(p) = self.lines[l].find("SAFETY:") {
+                return Some(self.lines[l][p..].trim().to_string());
+            }
+        }
+        let mut collected: Vec<&str> = Vec::new();
+        let mut k = l;
+        let mut budget = 40u32;
+        while k > 0 && budget > 0 {
+            k -= 1;
+            budget -= 1;
+            let t = self.lines.get(k).map(|s| s.trim()).unwrap_or("");
+            if t.is_empty() {
+                continue;
+            }
+            if t.starts_with("#[") || t.starts_with("#![") {
+                continue;
+            }
+            if t.starts_with("//") {
+                collected.push(t);
+                continue;
+            }
+            break;
+        }
+        for c in &collected {
+            if let Some(p) = c.find("SAFETY:") {
+                return Some(c[p..].trim().to_string());
+            }
+        }
+        if allow_doc {
+            for c in &collected {
+                if c.contains("# Safety") {
+                    return Some("documented `# Safety` contract".to_string());
+                }
+            }
+        }
+        None
+    }
+
+    fn rule_unsafe_audit(&mut self) {
+        for idx in self.code.clone() {
+            if self.toks[idx].kind != Kind::Ident || self.toks[idx].text != "unsafe" {
+                continue;
+            }
+            self.unsafe_tokens += 1;
+            let line = self.toks[idx].line;
+            let next = self
+                .next_code_tok(idx)
+                .map(|j| self.toks[j].text.clone())
+                .unwrap_or_default();
+            let kind: &'static str = match next.as_str() {
+                "{" => "block",
+                "fn" | "extern" => "fn",
+                "impl" => "impl",
+                "trait" => "trait",
+                _ => "other",
+            };
+            let just = self.safety_justification(line, kind != "block");
+            let missing = just.is_none();
+            self.unsafe_sites.push(UnsafeSite {
+                file: self.file.clone(),
+                line,
+                kind,
+                justification: just,
+            });
+            if missing {
+                self.emit(
+                    RULE_UNSAFE,
+                    line,
+                    format!("`unsafe` {kind} without an immediately preceding `// SAFETY:` comment"),
+                );
+            }
+        }
+    }
+
+    // ---- tag-namespace --------------------------------------------------
+
+    /// True if the token at `idx` sits inside a `use` declaration: walk
+    /// back to the nearest statement boundary (`;` or `}`) and look for
+    /// `use` among the first three identifiers after it (`use …`,
+    /// `pub use …`, `pub(crate) use …`).
+    fn in_use_decl(&self, idx: usize) -> bool {
+        let mut boundary: Option<usize> = None;
+        let mut j = idx;
+        while j > 0 {
+            j -= 1;
+            let t = &self.toks[j];
+            if t.kind == Kind::Comment {
+                continue;
+            }
+            if t.kind == Kind::Punct && (t.text == ";" || t.text == "}") {
+                boundary = Some(j);
+                break;
+            }
+        }
+        let start = boundary.map(|b| b + 1).unwrap_or(0);
+        let mut idents = 0u32;
+        let mut j = start;
+        while j < self.toks.len() && idents < 3 {
+            if self.toks[j].kind == Kind::Ident {
+                if self.toks[j].text == "use" {
+                    return true;
+                }
+                idents += 1;
+            }
+            j += 1;
+        }
+        false
+    }
+
+    fn rule_tag_namespace(&mut self) {
+        if TAG_NS_ALLOWED
+            .iter()
+            .any(|a| self.file == *a || self.file.ends_with(&format!("/{a}")))
+        {
+            return;
+        }
+        for idx in self.code.clone() {
+            if self.toks[idx].kind != Kind::Ident || self.toks[idx].text != "COLL_TAG_BASE" {
+                continue;
+            }
+            if self.in_use_decl(idx) {
+                continue;
+            }
+            let line = self.toks[idx].line;
+            self.emit(
+                RULE_TAG_NS,
+                line,
+                "reserved collective tag namespace referenced outside \
+                 coordinator/collectives.rs and mpi/transport.rs"
+                    .to_string(),
+            );
+        }
+    }
+
+    // ---- key-hygiene ----------------------------------------------------
+
+    /// Derive names attached to the type defined at 1-based `def_line`,
+    /// plus the line of the derive attribute itself.
+    fn collect_derives(&self, def_line: u32) -> (Vec<String>, Option<u32>) {
+        let mut derives: Vec<String> = Vec::new();
+        let mut attr_line: Option<u32> = None;
+        let mut k = def_line as usize - 1;
+        let mut budget = 12u32;
+        while k > 0 && budget > 0 {
+            k -= 1;
+            budget -= 1;
+            let t = self.lines.get(k).map(|s| s.trim()).unwrap_or("");
+            if t.is_empty() || t.starts_with("//") {
+                continue;
+            }
+            if t.starts_with("#[") || t.starts_with("#![") {
+                if let Some(p) = t.find("derive(") {
+                    let inner = &t[p + "derive(".len()..];
+                    let inner = inner.split(')').next().unwrap_or("");
+                    for d in inner.split(',') {
+                        derives.push(d.trim().to_string());
+                    }
+                    if attr_line.is_none() {
+                        attr_line = Some(k as u32 + 1);
+                    }
+                }
+                continue;
+            }
+            break;
+        }
+        (derives, attr_line)
+    }
+
+    /// Whether this file contains `impl Drop for <name>` (cfg-gated
+    /// variants included: attributes are invisible at this level).
+    fn has_drop_impl(&self, name: &str) -> bool {
+        if self.code.len() < 4 {
+            return false;
+        }
+        for p in 0..self.code.len() - 3 {
+            if self.ctext(p) == "impl"
+                && self.ctext(p + 1) == "Drop"
+                && self.ctext(p + 2) == "for"
+                && self.ctext(p + 3) == name
+            {
+                return true;
+            }
+        }
+        false
+    }
+
+    fn rule_key_hygiene(&mut self) {
+        if self.is_test_file() {
+            return;
+        }
+        for idx in self.code.clone() {
+            let t = &self.toks[idx];
+            if t.kind != Kind::Ident || (t.text != "struct" && t.text != "enum") {
+                continue;
+            }
+            if self.in_test_span(idx) {
+                continue;
+            }
+            let Some(nc) = self.next_code_tok(idx) else { continue };
+            if self.toks[nc].kind != Kind::Ident {
+                continue;
+            }
+            let name = self.toks[nc].text.clone();
+            let def_line = self.toks[idx].line;
+            let owner = SECRET_OWNER_TYPES.contains(&name.as_str());
+            let carrier = SECRET_CARRIER_TYPES.contains(&name.as_str());
+            if !(owner || carrier) {
+                continue;
+            }
+            let (derives, attr_line) = self.collect_derives(def_line);
+            let dl = attr_line.unwrap_or(def_line);
+            if derives.iter().any(|d| d == "Debug") {
+                self.emit(
+                    RULE_KEY,
+                    dl,
+                    format!("key-material type `{name}` derives Debug (key bytes could reach logs)"),
+                );
+            }
+            let has_drop = self.has_drop_impl(&name);
+            if owner && derives.iter().any(|d| d == "Clone") && !has_drop {
+                self.emit(
+                    RULE_KEY,
+                    dl,
+                    format!("key-material type `{name}` derives Clone but does not wipe on Drop"),
+                );
+            }
+            if owner && !has_drop {
+                self.emit(
+                    RULE_KEY,
+                    def_line,
+                    format!("key-material type `{name}` has no `impl Drop` wiping its key bytes"),
+                );
+            }
+        }
+    }
+
+    // ---- pool-discipline ------------------------------------------------
+
+    fn rule_pool_discipline(&mut self) {
+        for ci in 0..self.code.len() {
+            let idx = self.code[ci];
+            let t = &self.toks[idx];
+            if t.kind != Kind::Ident
+                || (t.text != "scope_run" && t.text != "scope_run_ordered")
+            {
+                continue;
+            }
+            let callee_ordered = t.text == "scope_run_ordered";
+            let callee = t.text.clone();
+            // Skip the definition site (`fn scope_run…`).
+            if let Some(p) = self.prev_code_tok(idx) {
+                if self.toks[p].kind == Kind::Ident && self.toks[p].text == "fn" {
+                    continue;
+                }
+            }
+            let nc = ci + 1;
+            if nc >= self.code.len() || self.ctext(nc) != "(" {
+                continue;
+            }
+            let Some(close) = self.match_close(nc, "(", ")") else { continue };
+            // For the ordered variant only the first top-level argument
+            // (the jobs vector) runs on workers; the completion closure
+            // runs on the caller thread and may block.
+            let mut end = close;
+            if callee_ordered {
+                let mut d = 0i32;
+                for cj in nc..close {
+                    if self.ckind(cj) == Kind::Punct {
+                        let tt = self.ctext(cj);
+                        if tt == "(" || tt == "[" || tt == "{" {
+                            d += 1;
+                        } else if tt == ")" || tt == "]" || tt == "}" {
+                            d -= 1;
+                        } else if tt == "," && d == 1 {
+                            end = cj;
+                            break;
+                        }
+                    }
+                }
+            }
+            let mut findings: Vec<(u32, String)> = Vec::new();
+            for cj in (nc + 1)..end {
+                if self.ckind(cj) != Kind::Ident {
+                    continue;
+                }
+                let tt = self.ctext(cj);
+                if !BLOCKING_CALLS.contains(&tt) {
+                    continue;
+                }
+                let prev_dot = cj > 0 && self.ctext(cj - 1) == ".";
+                let next_paren = cj + 1 < self.code.len() && self.ctext(cj + 1) == "(";
+                if prev_dot && next_paren {
+                    findings.push((
+                        self.cline(cj),
+                        format!(
+                            "blocking call `.{tt}()` inside a `{callee}` worker closure \
+                             (deadlock risk under pool-wide fan-out)"
+                        ),
+                    ));
+                }
+            }
+            for (line, msg) in findings {
+                self.emit(RULE_POOL, line, msg);
+            }
+        }
+    }
+
+    // ---- secret-hygiene -------------------------------------------------
+
+    /// True when the secret ident at code index `ck` is only the receiver
+    /// of a method call (`ident.method(…)`): the callee is itself linted
+    /// and the raw value does not reach the sink.
+    fn is_method_recv(&self, ck: usize) -> bool {
+        if ck + 3 < self.code.len() {
+            self.ctext(ck + 1) == "."
+                && self.ckind(ck + 2) == Kind::Ident
+                && self.ctext(ck + 3) == "("
+        } else {
+            false
+        }
+    }
+
+    fn rule_secret_hygiene(&mut self) {
+        if self.is_test_file() {
+            return;
+        }
+        let n = self.code.len();
+        let mut ci = 0usize;
+        while ci < n {
+            let idx = self.code[ci];
+            if self.toks[idx].kind != Kind::Ident
+                || self.toks[idx].text != "fn"
+                || self.in_test_span(idx)
+            {
+                ci += 1;
+                continue;
+            }
+            // Signature parens.
+            let mut pi = ci + 1;
+            while pi < n && self.ctext(pi) != "(" {
+                pi += 1;
+            }
+            if pi >= n {
+                ci += 1;
+                continue;
+            }
+            let Some(pclose) = self.match_close(pi, "(", ")") else {
+                ci += 1;
+                continue;
+            };
+            // Body brace (or `;` for a bodyless decl).
+            let mut bi = pclose;
+            while bi < n && self.ctext(bi) != "{" && self.ctext(bi) != ";" {
+                bi += 1;
+            }
+            if bi >= n || self.ctext(bi) == ";" {
+                ci = pclose + 1;
+                continue;
+            }
+            let Some(bclose) = self.match_close(bi, "{", "}") else {
+                ci = bi + 1;
+                continue;
+            };
+            self.scan_fn(pi, pclose, bi, bclose);
+            ci = bi + 1; // nested fns are rediscovered by the outer loop
+        }
+    }
+
+    #[allow(clippy::too_many_lines)]
+    fn scan_fn(&mut self, pi: usize, pclose: usize, bi: usize, bclose: usize) {
+        use std::collections::HashSet;
+        let mut secret: HashSet<String> = HashSet::new();
+        let mut tagcls: HashSet<String> = HashSet::new();
+
+        // --- parameters: split the signature at top-level commas.
+        {
+            let mut d = 0i32;
+            let mut param: Vec<(Kind, String)> = Vec::new();
+            let mut params: Vec<Vec<(Kind, String)>> = Vec::new();
+            for cj in pi..=pclose {
+                let k = self.ckind(cj);
+                let t = self.ctext(cj).to_string();
+                if k == Kind::Punct && (t == "(" || t == "[" || t == "{" || t == "<") {
+                    d += 1;
+                    param.push((k, t));
+                } else if k == Kind::Punct && (t == ")" || t == "]" || t == "}" || t == ">") {
+                    d -= 1;
+                    if d == 0 && t == ")" {
+                        params.push(std::mem::take(&mut param));
+                    } else {
+                        param.push((k, t));
+                    }
+                } else if k == Kind::Punct && t == "," && d == 1 {
+                    params.push(std::mem::take(&mut param));
+                } else {
+                    param.push((k, t));
+                }
+            }
+            for p in &params {
+                let idents: Vec<&str> = p
+                    .iter()
+                    .filter(|(k, _)| *k == Kind::Ident)
+                    .map(|(_, t)| t.as_str())
+                    .collect();
+                if idents.is_empty() {
+                    continue;
+                }
+                let Some(name) = idents.iter().find(|&&t| t != "mut" && t != "self") else {
+                    continue;
+                };
+                let has_colon = p.iter().any(|(k, t)| *k == Kind::Punct && t == ":");
+                if !has_colon {
+                    continue;
+                }
+                let type_idents = &idents[1..];
+                if type_idents.iter().any(|t| {
+                    SECRET_OWNER_TYPES.contains(t) || SECRET_CARRIER_TYPES.contains(t)
+                }) {
+                    secret.insert((*name).to_string());
+                }
+                if type_idents.contains(&"TAG_LEN") {
+                    tagcls.insert((*name).to_string());
+                }
+            }
+        }
+
+        // --- ct_eq(...) argument spans are exempt everywhere.
+        let mut ct_spans: Vec<(usize, usize)> = Vec::new();
+        for cj in bi..bclose {
+            if self.ckind(cj) == Kind::Ident
+                && CT_SINKS.contains(&self.ctext(cj))
+                && cj + 1 < self.code.len()
+                && self.ctext(cj + 1) == "("
+            {
+                if let Some(close) = self.match_close(cj + 1, "(", ")") {
+                    ct_spans.push((cj, close));
+                }
+            }
+        }
+        let in_ct = |ck: usize| ct_spans.iter().any(|&(s, e)| s <= ck && ck <= e);
+
+        // --- walk the body.
+        let mut cj = bi;
+        while cj < bclose {
+            let k = self.ckind(cj);
+            let t = self.ctext(cj).to_string();
+
+            // `let` (re)bindings drive the one-hop taint sets.
+            if k == Kind::Ident && t == "let" {
+                let mut name: Option<String> = None;
+                let mut eq: Option<usize> = None;
+                let mut d = 0i32;
+                let mut end = bclose;
+                let mut ck = cj + 1;
+                while ck < bclose {
+                    let kk = self.ckind(ck);
+                    let tt = self.ctext(ck);
+                    if kk == Kind::Punct && (tt == "(" || tt == "[" || tt == "{") {
+                        d += 1;
+                    } else if kk == Kind::Punct && (tt == ")" || tt == "]" || tt == "}") {
+                        d -= 1;
+                        if d < 0 {
+                            end = ck;
+                            break;
+                        }
+                    } else if kk == Kind::Punct && tt == ";" && d == 0 {
+                        end = ck;
+                        break;
+                    } else if kk == Kind::Punct && tt == "=" && d == 0 && eq.is_none() {
+                        eq = Some(ck);
+                    } else if kk == Kind::Ident && name.is_none() && tt != "mut" {
+                        name = Some(tt.to_string());
+                    }
+                    ck += 1;
+                }
+                if let Some(name) = name {
+                    let mut is_sec = false;
+                    let mut has_tag_fn = false;
+                    let mut has_tag_len = false;
+                    for ck in (cj + 1)..end {
+                        if self.ckind(ck) != Kind::Ident {
+                            continue;
+                        }
+                        let tt = self.ctext(ck);
+                        if SECRET_OWNER_TYPES.contains(&tt)
+                            || SECRET_CARRIER_TYPES.contains(&tt)
+                            || SECRET_FNS.contains(&tt)
+                        {
+                            is_sec = true;
+                        }
+                        if TAG_FNS.contains(&tt) {
+                            has_tag_fn = true;
+                        }
+                        if tt == "TAG_LEN" {
+                            has_tag_len = true;
+                        }
+                    }
+                    let is_tag = has_tag_fn || (has_tag_len && eq.is_none());
+                    if is_sec {
+                        secret.insert(name.clone());
+                    } else {
+                        secret.remove(&name);
+                    }
+                    if is_tag {
+                        tagcls.insert(name);
+                    } else {
+                        tagcls.remove(&name);
+                    }
+                }
+                cj += 1;
+                continue;
+            }
+
+            // Branch conditions: `if` / `while` / `match` scrutinee up to
+            // the `{` at delimiter depth 0.
+            if k == Kind::Ident && (t == "if" || t == "while" || t == "match") {
+                let mut d = 0i32;
+                let start = cj + 1;
+                let mut condend: Option<usize> = None;
+                for ck in (cj + 1)..bclose {
+                    let kk = self.ckind(ck);
+                    let tt = self.ctext(ck);
+                    if kk == Kind::Punct && (tt == "(" || tt == "[") {
+                        d += 1;
+                    } else if kk == Kind::Punct && (tt == ")" || tt == "]") {
+                        d -= 1;
+                    } else if kk == Kind::Punct && tt == "{" && d == 0 {
+                        condend = Some(ck);
+                        break;
+                    }
+                }
+                let Some(condend) = condend else {
+                    cj += 1;
+                    continue;
+                };
+                // `if let PAT = expr`: the pattern is not a value flow.
+                let mut scan_from = start;
+                if start < condend && self.ckind(start) == Kind::Ident && self.ctext(start) == "let"
+                {
+                    let mut d2 = 0i32;
+                    for ck in (start + 1)..condend {
+                        let kk = self.ckind(ck);
+                        let tt = self.ctext(ck);
+                        if kk == Kind::Punct && (tt == "(" || tt == "[" || tt == "{") {
+                            d2 += 1;
+                        } else if kk == Kind::Punct && (tt == ")" || tt == "]" || tt == "}") {
+                            d2 -= 1;
+                        } else if kk == Kind::Punct && tt == "=" && d2 == 0 {
+                            scan_from = ck + 1;
+                            break;
+                        }
+                    }
+                }
+                let mut hits: Vec<(u32, String)> = Vec::new();
+                for ck in scan_from..condend {
+                    if self.ckind(ck) != Kind::Ident {
+                        continue;
+                    }
+                    let tt = self.ctext(ck);
+                    if secret.contains(tt) && !in_ct(ck) && !self.is_method_recv(ck) {
+                        hits.push((
+                            self.cline(ck),
+                            format!(
+                                "secret-typed value `{tt}` flows into a `{t}` condition \
+                                 (secret-dependent branch)"
+                            ),
+                        ));
+                    }
+                }
+                for (line, msg) in hits {
+                    self.emit(RULE_SECRET, line, msg);
+                }
+                cj += 1;
+                continue;
+            }
+
+            // Indexing: `expr[...]` where the previous token makes `[` an
+            // index (identifier, `]`, or `)`), not an array literal.
+            if k == Kind::Punct && t == "[" && cj > 0 {
+                let pk = self.ckind(cj - 1);
+                let pt = self.ctext(cj - 1).to_string();
+                let is_index = (pk == Kind::Ident
+                    && !matches!(pt.as_str(), "mut" | "dyn" | "as" | "in" | "return"))
+                    || (pk == Kind::Punct && (pt == "]" || pt == ")"));
+                if is_index {
+                    if let Some(close) = self.match_close(cj, "[", "]") {
+                        let mut hits: Vec<(u32, String)> = Vec::new();
+                        for ck in (cj + 1)..close {
+                            if self.ckind(ck) != Kind::Ident {
+                                continue;
+                            }
+                            let tt = self.ctext(ck);
+                            if secret.contains(tt) && !in_ct(ck) && !self.is_method_recv(ck) {
+                                hits.push((
+                                    self.cline(ck),
+                                    format!(
+                                        "secret-typed value `{tt}` used as a slice/table index \
+                                         (secret-dependent memory access)"
+                                    ),
+                                ));
+                            }
+                        }
+                        for (line, msg) in hits {
+                            self.emit(RULE_SECRET, line, msg);
+                        }
+                    }
+                }
+                cj += 1;
+                continue;
+            }
+
+            // Formatting macros: `name!(...)` argument spans.
+            if k == Kind::Ident
+                && FMT_MACROS.contains(&t.as_str())
+                && cj + 1 < self.code.len()
+                && self.ctext(cj + 1) == "!"
+            {
+                let oi = cj + 2;
+                if oi < self.code.len() {
+                    let op = self.ctext(oi).to_string();
+                    let cl = match op.as_str() {
+                        "(" => Some(")"),
+                        "[" => Some("]"),
+                        "{" => Some("}"),
+                        _ => None,
+                    };
+                    if let Some(cl) = cl {
+                        if let Some(close) = self.match_close(oi, &op, cl) {
+                            let mut hits: Vec<(u32, String)> = Vec::new();
+                            for ck in (oi + 1)..close {
+                                if self.ckind(ck) != Kind::Ident {
+                                    continue;
+                                }
+                                let tt = self.ctext(ck);
+                                if secret.contains(tt) && !self.is_method_recv(ck) {
+                                    hits.push((
+                                        self.cline(ck),
+                                        format!(
+                                            "secret-typed value `{tt}` passed to `{t}!` \
+                                             formatting output"
+                                        ),
+                                    ));
+                                }
+                            }
+                            for (line, msg) in hits {
+                                self.emit(RULE_SECRET, line, msg);
+                            }
+                            cj = close + 1;
+                            continue;
+                        }
+                    }
+                }
+            }
+
+            // Raw comparisons adjacent to secret/tag identifiers.
+            if k == Kind::Punct && (t == "==" || t == "!=") {
+                let line = self.cline(cj);
+                let mut hits: Vec<(u32, String)> = Vec::new();
+                for side in [cj.wrapping_sub(1), cj + 1] {
+                    if side >= self.code.len() || (side == cj.wrapping_sub(1) && cj == 0) {
+                        continue;
+                    }
+                    if self.ckind(side) != Kind::Ident {
+                        continue;
+                    }
+                    let tt = self.ctext(side);
+                    let tagged = tagcls.contains(tt);
+                    let sec = secret.contains(tt);
+                    if (tagged || sec) && !in_ct(side) && !self.is_method_recv(side) {
+                        if tagged {
+                            hits.push((
+                                line,
+                                format!("raw `{t}` on authentication tag `{tt}`; use `gcm::ct_eq`"),
+                            ));
+                        } else {
+                            hits.push((
+                                line,
+                                format!("secret-typed value `{tt}` compared with \
+                                         non-constant-time `{t}`"),
+                            ));
+                        }
+                    }
+                }
+                for (line, msg) in hits {
+                    self.emit(RULE_SECRET, line, msg);
+                }
+            }
+
+            cj += 1;
+        }
+    }
+}

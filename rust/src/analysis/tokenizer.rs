@@ -1,0 +1,358 @@
+//! A minimal comment- and string-aware Rust tokenizer for `cryptlint`.
+//!
+//! This is **not** a full Rust lexer — it is exactly the subset the
+//! [`super::rules`] engine needs to reason about source text without being
+//! fooled by comments and string literals:
+//!
+//! * line (`//`, `///`, `//!`) and nested block (`/* /* */ */`) comments
+//!   become single [`Kind::Comment`] tokens;
+//! * plain, byte, raw, and raw-byte strings (any `#` count) become single
+//!   [`Kind::Str`] tokens, so `"unsafe {"` inside a fixture literal never
+//!   looks like code;
+//! * `'a'` / `'\n'` / `b'x'` char literals are distinguished from `'a`
+//!   lifetimes by lookahead;
+//! * identifiers, numbers, and punctuation (with the common two-character
+//!   operators fused: `==`, `!=`, `->`, `::`, …) carry their 1-based
+//!   source line for findings.
+//!
+//! Known limits (documented in DESIGN.md §13): no raw identifiers
+//! (`r#fn` lexes as `r` + `#` + `fn`), numeric exponents with a sign
+//! split into two tokens, and no macro expansion — rules see surface
+//! syntax only.
+
+/// Token class.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    Ident,
+    Punct,
+    Str,
+    Char,
+    Lifetime,
+    Num,
+    Comment,
+}
+
+/// One surface token with its 1-based source line.
+#[derive(Debug, Clone)]
+pub struct Token {
+    pub kind: Kind,
+    pub text: String,
+    pub line: u32,
+}
+
+/// Two-character operators fused into one `Punct` token.
+const TWO_CHAR: &[&str] = &[
+    "==", "!=", "<=", ">=", "->", "=>", "::", "&&", "||", "..", ">>", "<<", "+=", "-=", "*=",
+    "/=", "|=", "&=", "^=",
+];
+
+/// If `chars[j]` is `r` opening a raw string (`r"`, `r#"`, `r##"`, …),
+/// return the hash count; otherwise `None`.
+fn raw_str_hashes(chars: &[char], j: usize) -> Option<usize> {
+    let n = chars.len();
+    let mut k = j + 1;
+    let mut h = 0usize;
+    while k < n && chars[k] == '#' {
+        h += 1;
+        k += 1;
+    }
+    if k < n && chars[k] == '"' {
+        Some(h)
+    } else {
+        None
+    }
+}
+
+/// Scan a plain (escaped) string whose opening quote is at `i`; returns
+/// (index after the closing quote, updated line counter).
+fn scan_plain_string(chars: &[char], mut i: usize, mut line: u32) -> (usize, u32) {
+    let n = chars.len();
+    i += 1;
+    while i < n {
+        match chars[i] {
+            '\\' => {
+                if i + 1 < n && chars[i + 1] == '\n' {
+                    line += 1;
+                }
+                i += 2;
+            }
+            '"' => {
+                i += 1;
+                break;
+            }
+            '\n' => {
+                line += 1;
+                i += 1;
+            }
+            _ => i += 1,
+        }
+    }
+    (i, line)
+}
+
+/// Scan a raw string whose opening quote is at `qpos` with `hashes` hash
+/// marks; returns (index after the closing delimiter, updated line).
+fn scan_raw_string(chars: &[char], qpos: usize, hashes: usize, mut line: u32) -> (usize, u32) {
+    let n = chars.len();
+    let mut i = qpos + 1;
+    while i < n {
+        if chars[i] == '\n' {
+            line += 1;
+            i += 1;
+        } else if chars[i] == '"' {
+            let mut k = i + 1;
+            let mut h = 0usize;
+            while k < n && h < hashes && chars[k] == '#' {
+                h += 1;
+                k += 1;
+            }
+            if h == hashes {
+                return (k, line);
+            }
+            i += 1;
+        } else {
+            i += 1;
+        }
+    }
+    (i, line)
+}
+
+fn text_of(chars: &[char], start: usize, end: usize) -> String {
+    chars[start..end].iter().collect()
+}
+
+/// Tokenize Rust source text. Never panics on malformed input — unclosed
+/// delimiters simply consume to end-of-file.
+pub fn tokenize(src: &str) -> Vec<Token> {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut toks: Vec<Token> = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1u32;
+
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+        } else if c.is_whitespace() {
+            i += 1;
+        } else if c == '/' && i + 1 < n && chars[i + 1] == '/' {
+            let start = i;
+            let tline = line;
+            while i < n && chars[i] != '\n' {
+                i += 1;
+            }
+            toks.push(Token { kind: Kind::Comment, text: text_of(&chars, start, i), line: tline });
+        } else if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+            let start = i;
+            let tline = line;
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if chars[i] == '\n' {
+                    line += 1;
+                    i += 1;
+                } else if chars[i] == '/' && i + 1 < n && chars[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if chars[i] == '*' && i + 1 < n && chars[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            toks.push(Token { kind: Kind::Comment, text: text_of(&chars, start, i), line: tline });
+        } else if c == '"' {
+            let start = i;
+            let tline = line;
+            let (ni, nl) = scan_plain_string(&chars, i, line);
+            i = ni;
+            line = nl;
+            toks.push(Token { kind: Kind::Str, text: text_of(&chars, start, i), line: tline });
+        } else if c == '\'' {
+            let tline = line;
+            if i + 1 < n && chars[i + 1] == '\\' {
+                // Escaped char literal: scan to the closing quote.
+                i += 2;
+                while i < n && chars[i] != '\'' {
+                    i += 1;
+                }
+                i += 1;
+                toks.push(Token { kind: Kind::Char, text: String::new(), line: tline });
+            } else if i + 2 < n && chars[i + 2] == '\'' && chars[i + 1] != '\'' {
+                let text = chars[i + 1].to_string();
+                i += 3;
+                toks.push(Token { kind: Kind::Char, text, line: tline });
+            } else {
+                let start = i;
+                i += 1;
+                while i < n && (chars[i] == '_' || chars[i].is_alphanumeric()) {
+                    i += 1;
+                }
+                toks.push(Token {
+                    kind: Kind::Lifetime,
+                    text: text_of(&chars, start, i),
+                    line: tline,
+                });
+            }
+        } else if c == '_' || c.is_alphabetic() {
+            // Raw / byte string prefixes first: r"..", r#".."#, b"..",
+            // br".." / b'x'.
+            let mut raw: Option<(usize, usize)> = None; // (hashes, quote pos)
+            if c == 'r' {
+                if let Some(h) = raw_str_hashes(&chars, i) {
+                    raw = Some((h, i + 1 + h));
+                }
+            } else if c == 'b' {
+                if i + 1 < n && chars[i + 1] == '"' {
+                    let start = i;
+                    let tline = line;
+                    let (ni, nl) = scan_plain_string(&chars, i + 1, line);
+                    i = ni;
+                    line = nl;
+                    toks.push(Token {
+                        kind: Kind::Str,
+                        text: text_of(&chars, start, i),
+                        line: tline,
+                    });
+                    continue;
+                }
+                if i + 1 < n && chars[i + 1] == '\'' {
+                    let start = i;
+                    let tline = line;
+                    i += 2;
+                    if i < n && chars[i] == '\\' {
+                        i += 1;
+                    }
+                    while i < n && chars[i] != '\'' {
+                        i += 1;
+                    }
+                    i += 1;
+                    toks.push(Token {
+                        kind: Kind::Char,
+                        text: text_of(&chars, start, i.min(n)),
+                        line: tline,
+                    });
+                    continue;
+                }
+                if i + 1 < n && chars[i + 1] == 'r' {
+                    if let Some(h) = raw_str_hashes(&chars, i + 1) {
+                        raw = Some((h, i + 2 + h));
+                    }
+                }
+            }
+            if let Some((hashes, qpos)) = raw {
+                let start = i;
+                let tline = line;
+                let (ni, nl) = scan_raw_string(&chars, qpos, hashes, line);
+                i = ni;
+                line = nl;
+                toks.push(Token { kind: Kind::Str, text: text_of(&chars, start, i), line: tline });
+                continue;
+            }
+            let start = i;
+            while i < n && (chars[i] == '_' || chars[i].is_alphanumeric()) {
+                i += 1;
+            }
+            toks.push(Token { kind: Kind::Ident, text: text_of(&chars, start, i), line });
+        } else if c.is_ascii_digit() {
+            let start = i;
+            while i < n && (chars[i] == '_' || chars[i].is_alphanumeric()) {
+                i += 1;
+            }
+            if i < n && chars[i] == '.' && i + 1 < n && chars[i + 1].is_ascii_digit() {
+                i += 1;
+                while i < n && (chars[i] == '_' || chars[i].is_alphanumeric()) {
+                    i += 1;
+                }
+            }
+            toks.push(Token { kind: Kind::Num, text: text_of(&chars, start, i), line });
+        } else {
+            if i + 1 < n {
+                let two: String = chars[i..i + 2].iter().collect();
+                if TWO_CHAR.contains(&two.as_str()) {
+                    toks.push(Token { kind: Kind::Punct, text: two, line });
+                    i += 2;
+                    continue;
+                }
+            }
+            toks.push(Token { kind: Kind::Punct, text: c.to_string(), line });
+            i += 1;
+        }
+    }
+    toks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(Kind, String)> {
+        tokenize(src).into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    #[test]
+    fn comments_and_strings_are_opaque() {
+        let toks = kinds("let x = \"unsafe { fn }\"; // unsafe trailing\nfoo");
+        assert!(toks
+            .iter()
+            .all(|(k, t)| t.as_str() != "unsafe" || matches!(*k, Kind::Str | Kind::Comment)));
+        assert_eq!(toks.last().unwrap().1, "foo");
+    }
+
+    #[test]
+    fn nested_block_comment() {
+        let toks = kinds("/* a /* b */ c */ after");
+        assert_eq!(toks.len(), 2);
+        assert_eq!(toks[0].0, Kind::Comment);
+        assert_eq!(toks[1].1, "after");
+    }
+
+    #[test]
+    fn raw_strings_with_hashes() {
+        let toks = kinds(r####"let s = r##"quote " and "# inside"## ; x"####);
+        let strs: Vec<_> = toks.iter().filter(|(k, _)| *k == Kind::Str).collect();
+        assert_eq!(strs.len(), 1);
+        assert_eq!(toks.last().unwrap().1, "x");
+    }
+
+    #[test]
+    fn lifetime_vs_char() {
+        let toks = kinds("fn f<'a>(x: &'a u8) { let c = 'z'; let e = '\\n'; }");
+        let lifetimes = toks.iter().filter(|(k, _)| *k == Kind::Lifetime).count();
+        let charlits = toks.iter().filter(|(k, _)| *k == Kind::Char).count();
+        assert_eq!(lifetimes, 2);
+        assert_eq!(charlits, 2);
+    }
+
+    #[test]
+    fn two_char_puncts_fused() {
+        let toks = kinds("a == b && c -> d :: e");
+        let puncts: Vec<_> = toks
+            .iter()
+            .filter(|(k, _)| *k == Kind::Punct)
+            .map(|(_, t)| t.as_str())
+            .collect();
+        assert_eq!(puncts, ["==", "&&", "->", "::"]);
+    }
+
+    #[test]
+    fn line_numbers_track_every_form() {
+        let src = "a\n\"two\nline\"\nb /* c\nd */ e";
+        let toks = tokenize(src);
+        let find = |name: &str| toks.iter().find(|t| t.text == name).unwrap().line;
+        assert_eq!(find("a"), 1);
+        assert_eq!(find("b"), 4);
+        assert_eq!(find("e"), 5);
+    }
+
+    #[test]
+    fn byte_strings_and_byte_chars() {
+        let toks = kinds("let a = b\"bytes\"; let c = b'x'; done");
+        assert!(toks.iter().any(|(k, t)| *k == Kind::Str && t.starts_with("b\"")));
+        assert!(toks.iter().any(|(k, _)| *k == Kind::Char));
+        assert_eq!(toks.last().unwrap().1, "done");
+    }
+}

@@ -1,0 +1,76 @@
+//! `cryptlint` CLI — lint the crate's own source tree for secret-hygiene,
+//! unsafe-audit, tag-namespace, key-hygiene, and pool-discipline
+//! violations, and optionally write the machine-readable unsafe
+//! inventory.
+//!
+//! Usage:
+//!
+//! ```text
+//! cryptlint [--inventory PATH]
+//! ```
+//!
+//! Exit status: 0 = clean, 1 = findings, 2 = usage or I/O error.
+
+use cryptmpi::analysis::{default_roots, inventory_json, lint_tree};
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let mut inventory_path: Option<String> = None;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--inventory" => {
+                let Some(p) = args.next() else {
+                    eprintln!("cryptlint: --inventory requires a path");
+                    return ExitCode::from(2);
+                };
+                inventory_path = Some(p);
+            }
+            "--help" | "-h" => {
+                println!("usage: cryptlint [--inventory PATH]");
+                println!("lints src/, tests/, benches/, and examples/ for:");
+                for r in cryptmpi::analysis::rules::RULES {
+                    println!("  - {r}");
+                }
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("cryptlint: unknown argument `{other}`");
+                return ExitCode::from(2);
+            }
+        }
+    }
+
+    let report = lint_tree(&default_roots());
+    if let Some(path) = inventory_path {
+        if let Some(parent) = std::path::Path::new(&path).parent() {
+            if !parent.as_os_str().is_empty() {
+                let _ = std::fs::create_dir_all(parent);
+            }
+        }
+        if let Err(e) = std::fs::write(&path, inventory_json(&report)) {
+            eprintln!("cryptlint: cannot write inventory to {path}: {e}");
+            return ExitCode::from(2);
+        }
+        eprintln!("cryptlint: wrote unsafe inventory ({} sites) to {path}", report.unsafe_sites.len());
+    }
+
+    let unjustified =
+        report.unsafe_sites.iter().filter(|s| s.justification.is_none()).count();
+    eprintln!(
+        "cryptlint: {} files, {} unsafe sites ({} unjustified), {} allow markers, {} findings",
+        report.files,
+        report.unsafe_sites.len(),
+        unjustified,
+        report.markers.len(),
+        report.findings.len()
+    );
+    if report.findings.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        for f in &report.findings {
+            println!("{f}");
+        }
+        ExitCode::from(1)
+    }
+}

@@ -1743,7 +1743,7 @@ impl NeighborRequest {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::rank::COLL_TAG_BASE;
+    use crate::mpi::transport::COLL_TAG_BASE;
     use crate::coordinator::{run_cluster, ClusterConfig, Keys, SecurityMode};
     use crate::crypto::{Header, Opcode, TAG_LEN};
     use crate::mpi::{CollOp, Transport};

@@ -56,10 +56,10 @@ use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
-/// Base tag for internal collective traffic (app tags must stay below).
-/// Defined by the transport, which excludes the whole namespace from
-/// wildcard matching; re-exported here for the collective layer.
-pub(crate) use crate::mpi::transport::COLL_TAG_BASE;
+/// Reserved collective tags come from [`crate::mpi::transport::coll_tag`]
+/// — the transport owns the namespace (and excludes it from wildcard
+/// matching); this module only hands out sequence numbers.
+use crate::mpi::transport::coll_tag;
 
 /// Upper bound on the message length a *chopped* header may claim. The
 /// header travels unauthenticated (its fields are only validated when the
@@ -1453,7 +1453,7 @@ impl Rank {
     // ---------------------------------------------------------------
 
     fn next_coll_tag(&mut self) -> u64 {
-        let t = COLL_TAG_BASE + self.coll_seq;
+        let t = coll_tag(self.coll_seq);
         self.coll_seq += 1;
         t
     }

@@ -130,6 +130,14 @@ impl AesKey {
     }
 }
 
+impl Drop for AesKey {
+    /// Volatile-wipe the expanded schedule so round keys never outlive the
+    /// key in process memory (see [`super::wipe`]).
+    fn drop(&mut self) {
+        crate::crypto::wipe::wipe_value(&mut self.rk);
+    }
+}
+
 /// Encrypt one 16-byte block in place (software T-table path).
 pub fn encrypt_block_soft(key: &AesKey, block: &mut [u8; 16]) {
     encrypt_blocks_soft(key, core::array::from_mut(block));

@@ -171,6 +171,15 @@ pub unsafe fn ctr_block(prefix: __m128i, ctr: u32) -> __m128i {
     _mm_or_si128(prefix, _mm_set_epi32(ctr.swap_bytes() as i32, 0, 0, 0))
 }
 
+#[cfg(target_arch = "x86_64")]
+impl Drop for AesNiKey {
+    /// Volatile-wipe the register-format schedule (see
+    /// [`crate::crypto::wipe`]).
+    fn drop(&mut self) {
+        crate::crypto::wipe::wipe_value(&mut self.rk);
+    }
+}
+
 #[cfg(not(target_arch = "x86_64"))]
 #[derive(Clone)]
 pub struct AesNiKey;
@@ -192,6 +201,7 @@ mod tests {
             let mut a: [u8; 16] = core::array::from_fn(|i| s.wrapping_add(i as u8 * 17));
             let mut b = a;
             encrypt_block_soft(&key, &mut a);
+            // SAFETY: available() was checked at the top of the test.
             unsafe { ni.encrypt_block(&mut b) };
             assert_eq!(a, b);
         }
@@ -210,6 +220,7 @@ mod tests {
         for len in [1usize, 15, 16, 17, 127, 128, 129, 1000] {
             let data: Vec<u8> = (0..len).map(|i| i as u8).collect();
             let mut fast = data.clone();
+            // SAFETY: available() was checked at the top of the test.
             unsafe { ni.ctr_xor(&ctr0, 2, &mut fast) };
 
             let mut slow = data.clone();
@@ -234,6 +245,7 @@ mod tests {
         let ni = AesNiKey::from_schedule(&key);
         let ctr0 = [0x31u8; 16];
         let mut a = vec![0u8; 64];
+        // SAFETY: available() was checked at the top of the test.
         unsafe { ni.ctr_xor(&ctr0, u32::MAX - 1, &mut a) };
         let mut b = vec![0u8; 64];
         for (bi, chunk) in b.chunks_mut(16).enumerate() {

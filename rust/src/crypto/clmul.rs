@@ -40,6 +40,7 @@ mod imp {
     use super::*;
     use std::sync::OnceLock;
 
+    // SAFETY: plain SSE2 (always present on x86-64); no memory access.
     #[inline(always)]
     unsafe fn bswap_mask() -> __m128i {
         _mm_set_epi8(0, 1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14, 15)
@@ -49,6 +50,8 @@ mod imp {
     /// product as (lo, hi). Products are linear, so multiple block·H^k
     /// products can be XOR-aggregated before a single reduction — the
     /// classic 4-block GHASH aggregation (§Perf optimization).
+    // SAFETY: callers must hold PCLMULQDQ+SSSE3 (every call site is itself a
+    // #[target_feature] fn reached only through `available()`-guarded paths).
     #[target_feature(enable = "pclmulqdq", enable = "ssse3")]
     unsafe fn clmul_nored(a: __m128i, b: __m128i) -> (__m128i, __m128i) {
         let mut lo = _mm_clmulepi64_si128(a, b, 0x00);
@@ -63,6 +66,7 @@ mod imp {
 
     /// Shift the 256-bit value left one bit and reduce modulo
     /// `x^128 + x^7 + x^2 + x + 1` (byte-reflected domain).
+    // SAFETY: callers must hold PCLMULQDQ+SSSE3; register-only arithmetic.
     #[target_feature(enable = "pclmulqdq", enable = "ssse3")]
     unsafe fn shift_reduce(mut tmp3: __m128i, mut tmp6: __m128i) -> __m128i {
         // Shift the 256-bit product [tmp6:tmp3] left by one bit.
@@ -98,6 +102,7 @@ mod imp {
     }
 
     /// Carry-less multiply + reduce (single block).
+    // SAFETY: callers must hold PCLMULQDQ+SSSE3; register-only arithmetic.
     #[target_feature(enable = "pclmulqdq", enable = "ssse3")]
     unsafe fn gfmul(a: __m128i, b: __m128i) -> __m128i {
         let (lo, hi) = clmul_nored(a, b);
@@ -129,6 +134,15 @@ mod imp {
             GhashClmulKey { h1, pow: OnceLock::new() }
         }
 
+        /// Volatile-wipe `H` and any built power table (also the `Drop`
+        /// path; public so tests and rekey paths can zeroize eagerly).
+        pub fn wipe(&mut self) {
+            crate::crypto::wipe::wipe_value(&mut self.h1);
+            if let Some(p) = self.pow.get_mut() {
+                crate::crypto::wipe::wipe_value(p);
+            }
+        }
+
         /// `pow[k] = H^(k+1)` — built on first call.
         ///
         /// # Safety: see `new`.
@@ -144,6 +158,12 @@ mod imp {
                     p
                 }
             })
+        }
+    }
+
+    impl Drop for GhashClmulKey {
+        fn drop(&mut self) {
+            self.wipe();
         }
     }
 
@@ -277,6 +297,7 @@ mod tests {
             soft.update(&data);
             soft.update_lengths(0, len as u64);
 
+            // SAFETY: available() was checked at the top of the test.
             unsafe {
                 let key = GhashClmulKey::new(&h);
                 let mut fast = GhashClmul::new(&key);
@@ -294,6 +315,7 @@ mod tests {
         }
         let h: [u8; 16] = rand_bytes(16, 99)[..].try_into().unwrap();
         let data = rand_bytes(512, 123);
+        // SAFETY: available() was checked at the top of the test.
         unsafe {
             let key = GhashClmulKey::new(&h);
             let mut a = GhashClmul::new(&key);
@@ -307,6 +329,33 @@ mod tests {
             b.update(&data[192..448]);
             b.update(&data[448..]);
             assert_eq!(a.finalize(), b.finalize());
+        }
+    }
+
+    /// `wipe()` (the `Drop` path) zeroes both `H` and the lazily built
+    /// power table: afterwards every GHASH product is a multiply by zero,
+    /// so the accumulator can never leave zero. (The whole-struct byte
+    /// check used for the POD schedules lives in `crypto::wipe::tests`;
+    /// this key holds a `OnceLock`, so the observable-behavior check is
+    /// the right probe.)
+    #[test]
+    fn clmul_key_wipe_zeroes_material() {
+        if !available() {
+            return;
+        }
+        // SAFETY: available() was checked at the top of the test.
+        unsafe {
+            let mut key = GhashClmulKey::new(&[0x5Au8; 16]);
+            let mut g = GhashClmul::new(&key);
+            g.update(&[1u8; 256]); // force the H^1..H^8 power table to build
+            let pre = g.finalize();
+            assert_ne!(pre, [0u8; 16], "live key produces nonzero GHASH");
+            drop(g);
+            key.wipe();
+            let mut g2 = GhashClmul::new(&key);
+            g2.update(&[0xFFu8; 256]);
+            g2.update_lengths(0, 256);
+            assert_eq!(g2.finalize(), [0u8; 16], "wiped key must act as H = 0");
         }
     }
 }

@@ -115,6 +115,15 @@ impl GhashSoft {
     }
 }
 
+impl Drop for GhashSoft {
+    /// Volatile-wipe `H` (key material) and the running accumulator
+    /// (keystream-derived) — see [`super::wipe`].
+    fn drop(&mut self) {
+        crate::crypto::wipe::wipe_value(&mut self.h);
+        crate::crypto::wipe::wipe_value(&mut self.y);
+    }
+}
+
 /// Precomputed 4-bit Shoup table for one hash subkey `H`: `m[b] = e(b)·H`
 /// where `e(b)` places the four bits of `b` at coefficients `x^0..x^3`
 /// (so `e(8)` is the multiplicative identity and `m[8] = H`).
@@ -155,6 +164,15 @@ impl GhashTableKey {
             shift += 4;
         }
         z
+    }
+}
+
+impl Drop for GhashTableKey {
+    /// Volatile-wipe the multiple table: every entry is a known multiple of
+    /// the hash subkey `H`, so the table *is* key material (see
+    /// [`super::wipe`]).
+    fn drop(&mut self) {
+        crate::crypto::wipe::wipe_value(&mut self.m);
     }
 }
 

@@ -13,6 +13,8 @@
 //! * [`rsa`] — RSA-OAEP keypairs for the `MPI_Init` key distribution.
 //! * [`rand`] — ChaCha20 CSPRNG (keys/nonces/seeds) and xoshiro256**
 //!   deterministic PRNG (simulation workloads only).
+//! * [`wipe`] — volatile zeroization; every key-schedule type wipes its
+//!   backing bytes on `Drop` (enforced by the `key-hygiene` cryptlint rule).
 //!
 //! Oracles: NIST/FIPS/RFC test vectors inline (always on); the RustCrypto
 //! `aes`/`sha2` cross-checks behind the `oracle` feature; and the
@@ -29,6 +31,7 @@ pub mod rand;
 pub mod rsa;
 pub mod sha256;
 pub mod stream;
+pub mod wipe;
 
 pub use gcm::{AuthError, Gcm, NONCE_LEN, TAG_LEN};
 pub use stream::{

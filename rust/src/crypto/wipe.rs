@@ -1,0 +1,116 @@
+//! Best-effort zeroization of key material.
+//!
+//! Every key-schedule type in this crate ([`super::aes::AesKey`],
+//! [`super::aesni::AesNiKey`], [`super::ghash::GhashTableKey`],
+//! [`super::ghash::GhashSoft`], [`super::clmul::GhashClmulKey`]) wipes its
+//! backing bytes on `Drop` through these helpers — the `key-hygiene`
+//! cryptlint rule ([`crate::analysis`]) enforces that the impls exist.
+//!
+//! The writes are volatile and followed by a compiler fence so the
+//! zeroization cannot be elided as a dead store when the value is about to
+//! go out of scope — exactly the case `Drop` runs in. This is best-effort
+//! hygiene (copies spilled to registers/stack by earlier computation are
+//! out of reach, as is the OS paging the bytes out); the goal is that a
+//! key's *owned* storage never outlives the key in process memory.
+
+#![allow(unsafe_code)]
+
+use std::sync::atomic::{compiler_fence, Ordering};
+
+/// Volatile-zero every byte of `v`.
+///
+/// Crate-private on purpose: overwriting with zeroes is only valid for
+/// plain-old-data types (integer/SIMD arrays — everything the crypto key
+/// schedules store). Zeroing a type containing references or niches would
+/// be instant UB, so this must not be exposed as a safe public API.
+pub(crate) fn wipe_value<T: Copy>(v: &mut T) {
+    let p = v as *mut T as *mut u8;
+    let n = core::mem::size_of::<T>();
+    // SAFETY: `p` covers exactly the `n` bytes of a live, exclusively
+    // borrowed `T`; byte-wise volatile stores stay in bounds and cannot be
+    // elided by the optimizer.
+    unsafe {
+        for i in 0..n {
+            core::ptr::write_volatile(p.add(i), 0);
+        }
+    }
+    compiler_fence(Ordering::SeqCst);
+}
+
+/// Volatile-zero a byte slice (subkey seeds, serialized key blocks).
+pub fn wipe_bytes(b: &mut [u8]) {
+    let p = b.as_mut_ptr();
+    // SAFETY: writes stay within the exclusively borrowed slice bounds.
+    unsafe {
+        for i in 0..b.len() {
+            core::ptr::write_volatile(p.add(i), 0);
+        }
+    }
+    compiler_fence(Ordering::SeqCst);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::aes::AesKey;
+    use crate::crypto::ghash::{GhashSoft, GhashTableKey};
+
+    #[test]
+    fn wipe_bytes_zeroes() {
+        let mut b = vec![0xA5u8; 77];
+        wipe_bytes(&mut b);
+        assert!(b.iter().all(|&x| x == 0));
+    }
+
+    /// A dropped key schedule's backing memory is cleared. `ManuallyDrop`
+    /// keeps the storage alive so the bytes can be inspected after
+    /// `drop_in_place` runs the wipe.
+    #[test]
+    #[cfg_attr(miri, ignore)] // deliberately inspects a dropped value's bytes
+    fn aes_key_backing_memory_wiped_on_drop() {
+        use core::mem::ManuallyDrop;
+        let mut k = ManuallyDrop::new(AesKey::new(&[0xA5u8; 16]));
+        assert!(k.rk.iter().any(|&w| w != 0), "schedule starts nonzero");
+        // SAFETY: the value is dropped exactly once and never used as an
+        // `AesKey` afterwards; the storage itself stays live inside the
+        // `ManuallyDrop`, and `u8` reads of it are always valid.
+        unsafe {
+            core::ptr::drop_in_place(&mut *k as *mut AesKey);
+            let p = &*k as *const AesKey as *const u8;
+            for i in 0..core::mem::size_of::<AesKey>() {
+                assert_eq!(core::ptr::read_volatile(p.add(i)), 0, "byte {i} survived drop");
+            }
+        }
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore)] // deliberately inspects a dropped value's bytes
+    fn ghash_table_key_backing_memory_wiped_on_drop() {
+        use core::mem::ManuallyDrop;
+        let mut k = ManuallyDrop::new(GhashTableKey::new(0x0123_4567_89ab_cdef_u128 << 17));
+        // SAFETY: as in `aes_key_backing_memory_wiped_on_drop`.
+        unsafe {
+            core::ptr::drop_in_place(&mut *k as *mut GhashTableKey);
+            let p = &*k as *const GhashTableKey as *const u8;
+            for i in 0..core::mem::size_of::<GhashTableKey>() {
+                assert_eq!(core::ptr::read_volatile(p.add(i)), 0, "byte {i} survived drop");
+            }
+        }
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore)] // deliberately inspects a dropped value's bytes
+    fn ghash_soft_backing_memory_wiped_on_drop() {
+        use core::mem::ManuallyDrop;
+        let mut g = ManuallyDrop::new(GhashSoft::new(0xdead_beef_u128));
+        g.update(&[7u8; 48]);
+        // SAFETY: as in `aes_key_backing_memory_wiped_on_drop`.
+        unsafe {
+            core::ptr::drop_in_place(&mut *g as *mut GhashSoft);
+            let p = &*g as *const GhashSoft as *const u8;
+            for i in 0..core::mem::size_of::<GhashSoft>() {
+                assert_eq!(core::ptr::read_volatile(p.add(i)), 0, "byte {i} survived drop");
+            }
+        }
+    }
+}

@@ -15,7 +15,16 @@
 //!   dependency-free build does not assume).
 //! * [`apps`] — ping-pong, OSU multi-pair, stencil kernels, NAS mini-apps.
 //! * [`bench`] — one runner per paper figure/table.
+//! * [`analysis`] — `cryptlint`, the in-repo static-analysis pass (secret
+//!   hygiene, unsafe audit, tag namespace, key hygiene, pool discipline);
+//!   self-hosting via `tests/cryptlint_suite.rs` and the `cryptlint` bin.
 
+// Every `unsafe` block must carry a `// SAFETY:` comment; the in-repo
+// `cryptlint` unsafe-audit rule enforces the same invariant (plus
+// justification inventory) without needing clippy present.
+#![warn(clippy::undocumented_unsafe_blocks)]
+
+pub mod analysis;
 pub mod crypto;
 pub mod mpi;
 pub mod net;

@@ -70,6 +70,16 @@ use std::sync::{Condvar, Mutex};
 /// to match anything at or above it (see the module docs).
 pub const COLL_TAG_BASE: u64 = 1 << 40;
 
+/// The `seq`-th tag of the reserved collective namespace. This is the only
+/// sanctioned constructor for internal collective tags: the `tag-namespace`
+/// cryptlint rule forbids other modules from touching [`COLL_TAG_BASE`]
+/// directly, so every reserved tag provably flows through here (or through
+/// `coordinator/collectives.rs`, the namespace's other owner).
+#[inline]
+pub fn coll_tag(seq: u64) -> u64 {
+    COLL_TAG_BASE + seq
+}
+
 /// A message on the (virtual) wire.
 #[derive(Debug)]
 pub struct WireMsg {

@@ -26,6 +26,9 @@ impl HostBuf {
             }
             HostBuf::F32(v) => {
                 anyhow::ensure!(v.len() == elem_count, "f32 buffer length mismatch");
+                // SAFETY: reinterpreting an f32 slice as bytes: u8 has
+                // alignment 1 and the length covers exactly v.len()*4
+                // initialized bytes owned by `v` for the borrow's lifetime.
                 (xla::ElementType::F32, unsafe {
                     std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
                 })
