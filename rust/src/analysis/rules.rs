@@ -8,9 +8,11 @@
 //! * [`RULE_UNSAFE`] — every `unsafe` occurrence needs an immediately
 //!   preceding `// SAFETY:` comment (or a `# Safety` doc contract for
 //!   `unsafe fn`); all sites are inventoried with their justification.
-//! * [`RULE_TAG_NS`] — only `coordinator/collectives.rs` and
-//!   `mpi/transport.rs` may reference `COLL_TAG_BASE` (plain `use`
-//!   re-exports are exempt: importing the name does not construct a tag).
+//! * [`RULE_TAG_NS`] — reserved tag namespaces are confined per
+//!   constant: only `coordinator/collectives.rs` and `mpi/transport.rs`
+//!   may reference `COLL_TAG_BASE`, and only `mpi/transport.rs` may
+//!   reference `RELIA_TAG_BASE` (plain `use` re-exports are exempt:
+//!   importing the name does not construct a tag).
 //! * [`RULE_KEY`] — key-material types must not derive `Debug`, and must
 //!   wipe on `Drop` before they may derive `Clone`.
 //! * [`RULE_POOL`] — no blocking calls (`.lock()`, `.recv()`, `.join()`,
@@ -91,8 +93,14 @@ const FMT_MACROS: &[&str] = &[
     "format_args",
 ];
 
-/// The only files allowed to reference `COLL_TAG_BASE`.
-const TAG_NS_ALLOWED: &[&str] = &["src/coordinator/collectives.rs", "src/mpi/transport.rs"];
+/// Reserved tag-namespace constants and the only files allowed to
+/// reference each. The reliability ack namespace is tighter than the
+/// collective one: even the collectives layer must never mint ack tags,
+/// so `RELIA_TAG_BASE` is confined to the transport alone.
+const TAG_NS_CONFINED: &[(&str, &[&str])] = &[
+    ("COLL_TAG_BASE", &["src/coordinator/collectives.rs", "src/mpi/transport.rs"]),
+    ("RELIA_TAG_BASE", &["src/mpi/transport.rs"]),
+];
 
 /// Method names that block inside worker closures.
 const BLOCKING_CALLS: &[&str] =
@@ -525,27 +533,30 @@ impl<'a> Linter<'a> {
     }
 
     fn rule_tag_namespace(&mut self) {
-        if TAG_NS_ALLOWED
-            .iter()
-            .any(|a| self.file == *a || self.file.ends_with(&format!("/{a}")))
-        {
-            return;
-        }
-        for idx in self.code.clone() {
-            if self.toks[idx].kind != Kind::Ident || self.toks[idx].text != "COLL_TAG_BASE" {
+        for &(token, allowed) in TAG_NS_CONFINED {
+            if allowed
+                .iter()
+                .any(|a| self.file == *a || self.file.ends_with(&format!("/{a}")))
+            {
                 continue;
             }
-            if self.in_use_decl(idx) {
-                continue;
+            for idx in self.code.clone() {
+                if self.toks[idx].kind != Kind::Ident || self.toks[idx].text != token {
+                    continue;
+                }
+                if self.in_use_decl(idx) {
+                    continue;
+                }
+                let line = self.toks[idx].line;
+                self.emit(
+                    RULE_TAG_NS,
+                    line,
+                    format!(
+                        "reserved tag namespace `{token}` referenced outside {}",
+                        allowed.join(", ")
+                    ),
+                );
             }
-            let line = self.toks[idx].line;
-            self.emit(
-                RULE_TAG_NS,
-                line,
-                "reserved collective tag namespace referenced outside \
-                 coordinator/collectives.rs and mpi/transport.rs"
-                    .to_string(),
-            );
         }
     }
 

@@ -1264,6 +1264,138 @@ pub fn pipeline() -> Table {
     pipeline_with(&[256 * 1024, 1 << 20, 4 << 20], !cfg!(debug_assertions))
 }
 
+/// The `faults` runner over an explicit payload size and iteration
+/// count: ping-pong traffic under the deterministic fault-injection
+/// plane (`net::faults`, DESIGN.md §14) at fault rates 0% / 0.1% / 1%
+/// in every security mode, with drop, duplicate and bit-corrupt faults
+/// armed together. Two gates run on EVERY invocation, debug or release
+/// — both are correctness properties, never timing ones:
+///
+/// * **Invisibility**: the zero-rate rows must be tick-identical to a
+///   plane-free baseline, with every recovery counter at zero — arming
+///   the machinery may cost nothing until a fault actually fires.
+/// * **Integrity**: every payload arrives byte-intact at every rate
+///   (recovery is allowed to cost virtual time, never correctness).
+fn faults_with(size: usize, iters: usize) -> Table {
+    use crate::mpi::ReliabilityStats;
+    use crate::net::FaultSpec;
+    let mut t = Table::new(
+        "faults",
+        "Reliable delivery under injected drop/dup/corrupt faults, noleland IB",
+        &[
+            "mode",
+            "rate_pct",
+            "time_us",
+            "frames",
+            "retransmits",
+            "dup_dropped",
+            "corrupt_recovered",
+            "overhead_pct",
+        ],
+    );
+    let run = |mode: SecurityMode, spec: Option<FaultSpec>| -> (u64, ReliabilityStats) {
+        let mut cfg = ClusterConfig::pingpong(SystemProfile::noleland(), mode);
+        cfg.profile.net.faults = spec;
+        let mut msg = vec![0u8; size];
+        crate::crypto::rand::SimRng::new(size as u64 + 1).fill(&mut msg);
+        let (outs, rep) = run_cluster(&cfg, move |rank| {
+            let mut ok = true;
+            for i in 0..iters as u64 {
+                if rank.id() == 0 {
+                    rank.send(1, i, &msg);
+                    ok &= rank.recv(1, 1000 + i) == msg;
+                } else {
+                    let got = rank.recv(0, i);
+                    ok &= got == msg;
+                    rank.send(0, 1000 + i, &got);
+                }
+            }
+            ok
+        });
+        assert!(outs.iter().all(|&x| x), "{mode:?}: payload corrupted end-to-end");
+        let mut rel = ReliabilityStats::default();
+        for r in &rep.per_rank {
+            rel.merge(&r.stats.reliability);
+        }
+        (rep.per_rank.iter().map(|r| r.elapsed_ns).max().unwrap(), rel)
+    };
+    let mut json_rows: Vec<String> = Vec::new();
+    for mode in [
+        SecurityMode::Unencrypted,
+        SecurityMode::Naive,
+        SecurityMode::CryptMpi,
+        SecurityMode::IpsecSim,
+    ] {
+        let (base_ns, base_rel) = run(mode, None);
+        assert_eq!(
+            base_rel,
+            ReliabilityStats::default(),
+            "{mode:?}: plane-free run must not touch the reliability lane"
+        );
+        for rate in [0.0f64, 0.001, 0.01] {
+            let spec = FaultSpec::zero()
+                .with_drop(rate)
+                .with_dup(rate / 2.0)
+                .with_corrupt(rate / 5.0)
+                .with_seed(42);
+            let (ns, rel) = run(mode, Some(spec));
+            if rate == 0.0 {
+                assert_eq!(
+                    ns, base_ns,
+                    "{mode:?}: zero-rate fault plane shifted virtual completion time"
+                );
+                assert!(rel.frames > 0, "{mode:?}: inter-node frames must ride the plane");
+                assert_eq!(
+                    rel,
+                    ReliabilityStats { frames: rel.frames, ..ReliabilityStats::default() },
+                    "{mode:?}: zero-rate plane must leave every recovery counter at zero"
+                );
+            }
+            let ovh = (ns as f64 / base_ns as f64 - 1.0) * 100.0;
+            t.row(vec![
+                mode.name().into(),
+                f(rate * 100.0, 2),
+                f(ns as f64 / 1000.0, 1),
+                rel.frames.to_string(),
+                rel.retransmits.to_string(),
+                rel.dup_dropped.to_string(),
+                rel.corrupt_recovered.to_string(),
+                f(ovh, 2),
+            ]);
+            json_rows.push(format!(
+                "    {{\"mode\": \"{}\", \"rate\": {rate}, \"time_us\": {:.1}, \
+                 \"frames\": {}, \"retransmits\": {}, \"dup_dropped\": {}, \
+                 \"corrupt_recovered\": {}, \"overhead_pct\": {ovh:.2}}}",
+                mode.name(),
+                ns as f64 / 1000.0,
+                rel.frames,
+                rel.retransmits,
+                rel.dup_dropped,
+                rel.corrupt_recovered,
+            ));
+        }
+    }
+    t.artifact(
+        "BENCH_faults.json",
+        format!(
+            "{{\n  \"bench\": \"faults\",\n  \"unit\": \"us\",\n  \"results\": [\n{}\n  ]\n}}\n",
+            json_rows.join(",\n")
+        ),
+    );
+    t.note("Fault plane: per-link seeded RNG (net::faults); drop/dup/corrupt armed together at the row's rate (dup at rate/2, corrupt at rate/5); recovery is resolved analytically on the virtual clock.");
+    t.note("Hard gates (every run): zero-rate rows tick-identical to the plane-free baseline with all recovery counters zero; payloads byte-intact at every rate.");
+    t.note("A CRYPTMPI_FAULTS environment spec would also arm the baseline via run_cluster; leave it unset when benching.");
+    t.note("Machine-readable BENCH_faults.json is written next to the CSV and mirrored to the repo root (CI uploads it as a perf-trajectory artifact).");
+    t
+}
+
+/// This repo's fault-injection report: reliable delivery under the
+/// deterministic fault plane with the zero-rate invisibility gate and
+/// the `BENCH_faults.json` artifact.
+pub fn faults() -> Table {
+    faults_with(96 * 1024, 3)
+}
+
 /// Run one experiment by name.
 pub fn run_experiment(name: &str) -> Option<Table> {
     Some(match name {
@@ -1288,15 +1420,16 @@ pub fn run_experiment(name: &str) -> Option<Table> {
         "datatype" => datatype(),
         "overlap" => overlap(),
         "pipeline" => pipeline(),
+        "faults" => faults(),
         _ => return None,
     })
 }
 
 /// All experiment names: paper order, then the repo's own perf reports.
-pub const ALL_EXPERIMENTS: [&str; 21] = [
+pub const ALL_EXPERIMENTS: [&str; 22] = [
     "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "table1",
     "table2", "table3", "zerocopy", "collectives", "matching", "smoke", "gcm", "datatype",
-    "overlap", "pipeline",
+    "overlap", "pipeline", "faults",
 ];
 
 #[cfg(test)]
@@ -1317,7 +1450,8 @@ mod tests {
                     || name == "gcm"
                     || name == "datatype"
                     || name == "overlap"
-                    || name == "pipeline",
+                    || name == "pipeline"
+                    || name == "faults",
                 "unknown experiment family: {name}"
             );
         }
@@ -1395,6 +1529,22 @@ mod tests {
         assert_eq!(name, "BENCH_pipeline.json");
         assert!(json.contains("\"bench\": \"pipeline\"") && json.contains("\"agg_speedup\""));
         assert_eq!(json.matches("\"wire_identical\": true").count(), t.rows.len());
+    }
+
+    /// The `faults` runner's table + artifact structure at tiny scale.
+    /// Its two hard gates — zero-rate tick identity with the plane-free
+    /// baseline, and byte-intact payloads at every rate — run on every
+    /// invocation, so this is also a correctness test of the reliable
+    /// delivery path in all four security modes.
+    #[test]
+    fn faults_runner_structure() {
+        let t = faults_with(4096, 1);
+        assert_eq!(t.header.len(), 8);
+        assert_eq!(t.rows.len(), 12, "three rates per security mode");
+        let (name, json) = &t.artifacts[0];
+        assert_eq!(name, "BENCH_faults.json");
+        assert!(json.contains("\"bench\": \"faults\""));
+        assert_eq!(json.matches("\"mode\"").count(), t.rows.len());
     }
 
     /// The `matching` runner's acceptance shape at reduced scale: engine

@@ -6,7 +6,7 @@ use crate::coordinator::rank::Rank;
 use crate::coordinator::{CollPolicy, Keys, SecurityMode};
 use crate::crypto::rand::secure_array;
 use crate::mpi::{ClusterReport, RankReport, Transport};
-use crate::net::{SystemProfile, Topology};
+use crate::net::{FaultSpec, SystemProfile, Topology};
 use crate::vtime::calib;
 use std::sync::Arc;
 
@@ -78,7 +78,13 @@ where
         SecurityMode::IpsecSim => Some(cfg.profile.ipsec_rate),
         _ => None,
     };
-    let tp = Arc::new(Transport::new(topo.clone(), cfg.profile.net.clone(), ipsec));
+    // Fault-injection plane: an explicit spec on the profile wins; when
+    // absent, `CRYPTMPI_FAULTS` (if set) arms the plane for this run.
+    let mut net = cfg.profile.net.clone();
+    if net.faults.is_none() {
+        net.faults = FaultSpec::from_env();
+    }
+    let tp = Arc::new(Transport::new(topo.clone(), net, ipsec));
     let profile = Arc::new(cfg.profile.clone());
     let cal = calib::get();
     let t0 = topo.threads_per_rank(cfg.profile.hyperthreads);

@@ -50,16 +50,22 @@
 //! neighborhood exchange ([`CartTopo`]) whose derived-datatype halos ride
 //! the fused gather-seal / open-scatter pipeline.
 //!
-//! All functions return `Err(AuthError)` when an encrypted leg fails to
-//! authenticate (the [`Rank`] wrappers turn that into an abort, as MPI
-//! would). Before the AES master keys exist — key distribution itself
+//! All functions return `Err(TransportError::Auth)` when an encrypted
+//! leg fails to authenticate, and
+//! `Err(TransportError::PeerUnreachable)` when the reliable-delivery
+//! layer exhausted a link's retry budget mid-collective — fail-fast: the
+//! schedule tears down immediately, cancels its posted receives, and
+//! purges the collective's already-arrived frames from the unexpected
+//! queues, instead of hanging on a dead peer. (The [`Rank`] wrappers
+//! turn errors into an abort, as MPI would.) Before the AES master keys
+//! exist — key distribution itself
 //! runs over `gather`/`scatter` — the legs travel the plaintext wire
 //! path; their payloads are RSA-OAEP protected at the application layer
 //! (paper §IV).
 
 use crate::coordinator::rank::{Rank, RecvReq, SendReq};
-use crate::crypto::AuthError;
-use crate::mpi::{CollOp, Datatype};
+use crate::mpi::transport::COLL_TAG_BASE;
+use crate::mpi::{CollOp, Datatype, TransportError};
 use crate::net::Topology;
 use std::collections::VecDeque;
 
@@ -174,7 +180,7 @@ fn group_bcast(
     root_idx: usize,
     tag: u64,
     buf: &mut Vec<u8>,
-) -> Result<(), AuthError> {
+) -> Result<(), TransportError> {
     let n = group.len();
     if n <= 1 {
         return Ok(());
@@ -208,7 +214,7 @@ fn group_reduce_sum(
     root_idx: usize,
     tag: u64,
     acc: &mut [f64],
-) -> Result<(), AuthError> {
+) -> Result<(), TransportError> {
     let n = group.len();
     if n <= 1 {
         return Ok(());
@@ -226,7 +232,7 @@ fn group_reduce_sum(
                 let src = group[((vrank | bit) + root_idx) % n];
                 let other = bytes_to_f64s(&rank.coll_recv(src, tag + round(r))?);
                 if other.len() != acc.len() {
-                    return Err(AuthError);
+                    return Err(TransportError::Auth);
                 }
                 for (a, b) in acc.iter_mut().zip(other.iter()) {
                     *a += *b;
@@ -253,23 +259,23 @@ fn pack_blobs(blobs: &[Vec<u8>]) -> Vec<u8> {
     out
 }
 
-fn unpack_blobs(buf: &[u8], expect: usize) -> Result<Vec<Vec<u8>>, AuthError> {
+fn unpack_blobs(buf: &[u8], expect: usize) -> Result<Vec<Vec<u8>>, TransportError> {
     let mut out = Vec::with_capacity(expect);
     let mut i = 0usize;
     while out.len() < expect {
         if i + 4 > buf.len() {
-            return Err(AuthError);
+            return Err(TransportError::Auth);
         }
         let len = u32::from_le_bytes(buf[i..i + 4].try_into().unwrap()) as usize;
         i += 4;
         if i + len > buf.len() {
-            return Err(AuthError);
+            return Err(TransportError::Auth);
         }
         out.push(buf[i..i + len].to_vec());
         i += len;
     }
     if i != buf.len() {
-        return Err(AuthError);
+        return Err(TransportError::Auth);
     }
     Ok(out)
 }
@@ -285,8 +291,8 @@ fn unpack_blobs(buf: &[u8], expect: usize) -> Result<Vec<Vec<u8>>, AuthError> {
 fn with_coll<T>(
     rank: &mut Rank,
     op: CollOp,
-    f: impl FnOnce(&mut Rank, u64) -> Result<T, AuthError>,
-) -> Result<T, AuthError> {
+    f: impl FnOnce(&mut Rank, u64) -> Result<T, TransportError>,
+) -> Result<T, TransportError> {
     let tag = rank.begin_coll(op);
     let out = f(&mut *rank, tag);
     rank.end_coll();
@@ -354,7 +360,7 @@ type LazyFn = Box<dyn FnOnce(&mut SchedState) -> Vec<u8>>;
 
 /// Runs when every receive of a stage has authenticated: reduction,
 /// store, or unpack. Payloads arrive in the stage's receive order.
-type FinishFn = Box<dyn FnOnce(&mut SchedState, Vec<Vec<u8>>) -> Result<(), AuthError>>;
+type FinishFn = Box<dyn FnOnce(&mut SchedState, Vec<Vec<u8>>) -> Result<(), TransportError>>;
 
 enum SendData {
     /// Payload known at compile time.
@@ -451,8 +457,12 @@ pub struct CollRequest {
     prefetched: Option<Vec<Option<RecvReq>>>,
     state: SchedState,
     output: OutputKind,
+    /// The collective's base tag: every leg's tag is this plus
+    /// phase/round decoration in the bits above [`ROUND_SHIFT`]. The
+    /// error teardown purges exactly this namespace from the engine.
+    tag_base: u64,
     done: bool,
-    failed: bool,
+    failed: Option<TransportError>,
 }
 
 impl CollRequest {
@@ -463,6 +473,7 @@ impl CollRequest {
         rank: &mut Rank,
         op: CollOp,
         output: OutputKind,
+        tag_base: u64,
         stages: Vec<Stage>,
         state: SchedState,
     ) -> CollRequest {
@@ -473,8 +484,9 @@ impl CollRequest {
             prefetched: None,
             state,
             output,
+            tag_base,
             done: false,
-            failed: false,
+            failed: None,
         };
         // An authentication failure here is latched into `failed` and
         // surfaced by the next test()/wait().
@@ -490,18 +502,18 @@ impl CollRequest {
     /// Advance the schedule as far as currently possible without
     /// blocking; `Ok(true)` once the collective has completed. Safe to
     /// call after completion.
-    pub fn test(&mut self, rank: &mut Rank) -> Result<bool, AuthError> {
+    pub fn test(&mut self, rank: &mut Rank) -> Result<bool, TransportError> {
         self.advance(rank, false)
     }
 
     /// Alias of [`CollRequest::test`] for progress-loop call sites.
-    pub fn progress(&mut self, rank: &mut Rank) -> Result<bool, AuthError> {
+    pub fn progress(&mut self, rank: &mut Rank) -> Result<bool, TransportError> {
         self.advance(rank, false)
     }
 
     /// Drive the schedule to completion (blocking on its receives) and
     /// return the collective's output.
-    pub fn wait(mut self, rank: &mut Rank) -> Result<CollOutput, AuthError> {
+    pub fn wait(mut self, rank: &mut Rank) -> Result<CollOutput, TransportError> {
         let done = self.advance(rank, true)?;
         debug_assert!(done, "blocking advance must finish the schedule");
         Ok(match self.output {
@@ -515,13 +527,15 @@ impl CollRequest {
     /// One progress slice, bracketed so the time it spends is attributed
     /// to the collective's counters (and never the compute between
     /// polls). On failure the schedule is torn down: posted receives are
-    /// cancelled and every later call reports the error.
-    fn advance(&mut self, rank: &mut Rank, block: bool) -> Result<bool, AuthError> {
+    /// cancelled, the collective's already-arrived frames are purged
+    /// from the unexpected queues, and every later call reports the
+    /// latched error.
+    fn advance(&mut self, rank: &mut Rank, block: bool) -> Result<bool, TransportError> {
         if self.done {
             return Ok(true);
         }
-        if self.failed {
-            return Err(AuthError);
+        if let Some(e) = self.failed {
+            return Err(e);
         }
         rank.coll_bracket_start(self.op);
         let res = self.drive(rank, block);
@@ -532,19 +546,28 @@ impl CollRequest {
                 Ok(done)
             }
             Err(e) => {
-                self.failed = true;
+                self.failed = Some(e);
                 // Dropping the outstanding requests cancels their
                 // tickets; frames already bound return to the
-                // unexpected queue.
+                // unexpected queue...
                 self.stages.clear();
                 self.active = None;
                 self.prefetched = None;
+                // ...and are then purged eagerly, together with any legs
+                // that landed unexpected before a matching post existed:
+                // an aborted collective must leave no engine state for
+                // later traffic (or a retried collective on a fresh tag)
+                // to trip over.
+                let base = self.tag_base;
+                let mask = (1u64 << ROUND_SHIFT) - 1;
+                rank.transport()
+                    .purge_matching(rank.id(), |t| t >= COLL_TAG_BASE && (t & mask) == base);
                 Err(e)
             }
         }
     }
 
-    fn drive(&mut self, rank: &mut Rank, block: bool) -> Result<bool, AuthError> {
+    fn drive(&mut self, rank: &mut Rank, block: bool) -> Result<bool, TransportError> {
         loop {
             if self.active.is_none() {
                 let Some(stage) = self.stages.pop_front() else {
@@ -742,7 +765,7 @@ fn sched_group_reduce(
                         let other =
                             bytes_to_f64s(&payloads.pop().expect("reduce payload"));
                         if other.len() != st.acc.len() {
-                            return Err(AuthError);
+                            return Err(TransportError::Auth);
                         }
                         for (a, b) in st.acc.iter_mut().zip(other.iter()) {
                             *a += *b;
@@ -793,7 +816,7 @@ fn sched_rabenseifner(
             finish: Some(Box::new(move |st, mut payloads| {
                 let theirs = bytes_to_f64s(&payloads.pop().expect("halving payload"));
                 if theirs.len() != keep.1 - keep.0 {
-                    return Err(AuthError);
+                    return Err(TransportError::Auth);
                 }
                 for (i, v) in theirs.iter().enumerate() {
                     st.acc[keep.0 + i] += *v;
@@ -823,7 +846,7 @@ fn sched_rabenseifner(
             finish: Some(Box::new(move |st, mut payloads| {
                 let theirs = bytes_to_f64s(&payloads.pop().expect("doubling payload"));
                 if theirs.len() != give.1 - give.0 {
-                    return Err(AuthError);
+                    return Err(TransportError::Auth);
                 }
                 st.acc[give.0..give.1].copy_from_slice(&theirs);
                 Ok(())
@@ -964,7 +987,7 @@ fn alltoall_intra_stage(members: &[usize], me: usize, b: usize, tag: u64) -> Opt
         finish: Some(Box::new(move |st, payloads| {
             for (&m, d) in others.iter().zip(payloads) {
                 if d.len() != b {
-                    return Err(AuthError);
+                    return Err(TransportError::Auth);
                 }
                 st.out[m] = d;
             }
@@ -999,7 +1022,7 @@ fn compile_alltoall(rank: &Rank, blocks: &[Vec<u8>], b: usize, tag: u64) -> Vec<
             finish: Some(Box::new(move |st, payloads| {
                 for (&peer, d) in peers.iter().zip(payloads) {
                     if d.len() != b {
-                        return Err(AuthError);
+                        return Err(TransportError::Auth);
                     }
                     st.out[peer] = d;
                 }
@@ -1066,7 +1089,7 @@ fn compile_alltoall(rank: &Rank, blocks: &[Vec<u8>], b: usize, tag: u64) -> Vec<
                     packed.push(my_pack);
                     for q in payloads {
                         if q.len() != pack_total {
-                            return Err(AuthError);
+                            return Err(TransportError::Auth);
                         }
                         packed.push(q);
                     }
@@ -1115,7 +1138,7 @@ fn compile_alltoall(rank: &Rank, blocks: &[Vec<u8>], b: usize, tag: u64) -> Vec<
                     for (&nd, agg) in rn.iter().zip(payloads) {
                         let sn = tp.node_ranks(nd).len();
                         if agg.len() != sn * members_len * b {
-                            return Err(AuthError);
+                            return Err(TransportError::Auth);
                         }
                         incoming.push((nd, agg));
                     }
@@ -1172,7 +1195,7 @@ fn compile_alltoall(rank: &Rank, blocks: &[Vec<u8>], b: usize, tag: u64) -> Vec<
 pub fn ibarrier(rank: &mut Rank) -> CollRequest {
     let tag = rank.coll_open(CollOp::Barrier);
     let stages = compile_barrier(rank, tag);
-    CollRequest::start(rank, CollOp::Barrier, OutputKind::Unit, stages, SchedState::default())
+    CollRequest::start(rank, CollOp::Barrier, OutputKind::Unit, tag, stages, SchedState::default())
 }
 
 /// Nonblocking broadcast from `root`; output is the broadcast bytes.
@@ -1181,7 +1204,7 @@ pub fn ibcast(rank: &mut Rank, root: usize, data: Vec<u8>) -> CollRequest {
     let stages = compile_bcast(rank, root, tag);
     let buf = if rank.id() == root { data } else { Vec::new() };
     let state = SchedState { buf, ..Default::default() };
-    CollRequest::start(rank, CollOp::Bcast, OutputKind::Bytes, stages, state)
+    CollRequest::start(rank, CollOp::Bcast, OutputKind::Bytes, tag, stages, state)
 }
 
 /// Nonblocking all-reduce (sum); output is the reduced f64 vector.
@@ -1189,7 +1212,7 @@ pub fn iallreduce_sum(rank: &mut Rank, data: &[f64]) -> CollRequest {
     let tag = rank.coll_open(CollOp::Allreduce);
     let stages = compile_allreduce(rank, data.len(), tag);
     let state = SchedState { acc: data.to_vec(), ..Default::default() };
-    CollRequest::start(rank, CollOp::Allreduce, OutputKind::F64s, stages, state)
+    CollRequest::start(rank, CollOp::Allreduce, OutputKind::F64s, tag, stages, state)
 }
 
 /// Nonblocking all-to-all of equal-size blocks; output is the exchanged
@@ -1205,13 +1228,13 @@ pub fn ialltoall(rank: &mut Rank, mut blocks: Vec<Vec<u8>>) -> CollRequest {
     let mut out = vec![Vec::new(); p];
     out[me] = std::mem::take(&mut blocks[me]);
     let state = SchedState { blocks, out, ..Default::default() };
-    CollRequest::start(rank, CollOp::Alltoall, OutputKind::Blocks, stages, state)
+    CollRequest::start(rank, CollOp::Alltoall, OutputKind::Blocks, tag, stages, state)
 }
 
 /// Barrier: intra-node fan-in to the leader, dissemination barrier over
 /// the leaders, intra-node release (flat: dissemination over all ranks).
 /// Thin wrapper: compiles the same schedule as [`ibarrier`] and waits.
-pub fn barrier(rank: &mut Rank) -> Result<(), AuthError> {
+pub fn barrier(rank: &mut Rank) -> Result<(), TransportError> {
     ibarrier(rank).wait(rank)?;
     Ok(())
 }
@@ -1219,7 +1242,7 @@ pub fn barrier(rank: &mut Rank) -> Result<(), AuthError> {
 /// Broadcast from `root`: binomial over per-node representatives (the
 /// root for its own node, leaders elsewhere), then binomial inside each
 /// node. Thin wrapper over [`ibcast`].
-pub fn bcast(rank: &mut Rank, root: usize, data: Vec<u8>) -> Result<Vec<u8>, AuthError> {
+pub fn bcast(rank: &mut Rank, root: usize, data: Vec<u8>) -> Result<Vec<u8>, TransportError> {
     Ok(ibcast(rank, root, data).wait(rank)?.into_bytes())
 }
 
@@ -1228,7 +1251,7 @@ pub fn reduce_sum(
     rank: &mut Rank,
     root: usize,
     data: &[f64],
-) -> Result<Option<Vec<f64>>, AuthError> {
+) -> Result<Option<Vec<f64>>, TransportError> {
     with_coll(rank, CollOp::Reduce, |rank, tag| {
         let mut acc = data.to_vec();
         if hierarchical(rank) {
@@ -1252,14 +1275,14 @@ pub fn reduce_sum(
 /// leaders (Rabenseifner for large vectors on power-of-two leader
 /// counts), intra-node broadcast of the result. Thin wrapper over
 /// [`iallreduce_sum`].
-pub fn allreduce_sum(rank: &mut Rank, data: &[f64]) -> Result<Vec<f64>, AuthError> {
+pub fn allreduce_sum(rank: &mut Rank, data: &[f64]) -> Result<Vec<f64>, TransportError> {
     Ok(iallreduce_sum(rank, data).wait(rank)?.into_f64s())
 }
 
 /// Allgather of equal-size blocks; returns the concatenation in rank
 /// order. Hierarchical: intra-node gather at the leader, ring over the
 /// leaders moving whole node super-blocks, intra-node broadcast.
-pub fn allgather(rank: &mut Rank, mine: &[u8]) -> Result<Vec<u8>, AuthError> {
+pub fn allgather(rank: &mut Rank, mine: &[u8]) -> Result<Vec<u8>, TransportError> {
     with_coll(rank, CollOp::Allgather, |rank, tag| {
         if hierarchical(rank) {
             let tl = TwoLevel::of(rank);
@@ -1271,13 +1294,13 @@ pub fn allgather(rank: &mut Rank, mine: &[u8]) -> Result<Vec<u8>, AuthError> {
 }
 
 /// [`allgather`] over f64 vectors (the NAS CG matvec shape).
-pub fn allgather_f64(rank: &mut Rank, mine: &[f64]) -> Result<Vec<f64>, AuthError> {
+pub fn allgather_f64(rank: &mut Rank, mine: &[f64]) -> Result<Vec<f64>, TransportError> {
     Ok(bytes_to_f64s(&allgather(rank, &f64s_to_bytes(mine))?))
 }
 
 /// Ring allgather: P−1 steps; step s forwards the block received at step
 /// s−1 to the right neighbor. All blocks end up everywhere.
-fn flat_ring_allgather(rank: &mut Rank, mine: &[u8], tag: u64) -> Result<Vec<u8>, AuthError> {
+fn flat_ring_allgather(rank: &mut Rank, mine: &[u8], tag: u64) -> Result<Vec<u8>, TransportError> {
     let p = rank.size();
     let me = rank.id();
     let block = mine.len();
@@ -1293,7 +1316,7 @@ fn flat_ring_allgather(rank: &mut Rank, mine: &[u8], tag: u64) -> Result<Vec<u8>
         let data = rank.wait_recv_checked(rreq)?;
         rank.wait_send(sreq);
         if data.len() != block {
-            return Err(AuthError);
+            return Err(TransportError::Auth);
         }
         let incoming = (current + p - 1) % p; // left neighbor's last block
         full[incoming * block..(incoming + 1) * block].copy_from_slice(&data);
@@ -1307,7 +1330,7 @@ fn hier_allgather(
     tl: &TwoLevel,
     mine: &[u8],
     tag: u64,
-) -> Result<Vec<u8>, AuthError> {
+) -> Result<Vec<u8>, TransportError> {
     let p = rank.size();
     let me = rank.id();
     let block = mine.len();
@@ -1324,7 +1347,7 @@ fn hier_allgather(
     for &m in &tl.members[1..] {
         let d = rank.coll_recv(m, tag + phase(0))?;
         if d.len() != block {
-            return Err(AuthError);
+            return Err(TransportError::Auth);
         }
         full[m * block..(m + 1) * block].copy_from_slice(&d);
     }
@@ -1354,7 +1377,7 @@ fn hier_allgather(
         let incoming = (current + nl - 1) % nl;
         let (ilo, ihi) = ranges[incoming];
         if data.len() != ihi - ilo {
-            return Err(AuthError);
+            return Err(TransportError::Auth);
         }
         full[ilo..ihi].copy_from_slice(&data);
         current = incoming;
@@ -1371,7 +1394,7 @@ fn hier_allgather(
 /// are aggregated at the leader, exchanged as one node-to-node message
 /// per peer node, and fanned back out.
 /// Thin wrapper over [`ialltoall`].
-pub fn alltoall(rank: &mut Rank, blocks: Vec<Vec<u8>>) -> Result<Vec<Vec<u8>>, AuthError> {
+pub fn alltoall(rank: &mut Rank, blocks: Vec<Vec<u8>>) -> Result<Vec<Vec<u8>>, TransportError> {
     Ok(ialltoall(rank, blocks).wait(rank)?.into_blocks())
 }
 
@@ -1383,19 +1406,19 @@ fn unpack_remote(
     rnodes: &[usize],
     topo: &Topology,
     b: usize,
-) -> Result<(), AuthError> {
+) -> Result<(), TransportError> {
     let mut i = 0usize;
     for &nd in rnodes {
         for src in topo.node_ranks(nd) {
             if i + b > deliver.len() {
-                return Err(AuthError);
+                return Err(TransportError::Auth);
             }
             out[src] = deliver[i..i + b].to_vec();
             i += b;
         }
     }
     if i != deliver.len() {
-        return Err(AuthError);
+        return Err(TransportError::Auth);
     }
     Ok(())
 }
@@ -1407,7 +1430,7 @@ pub fn gather(
     rank: &mut Rank,
     root: usize,
     data: &[u8],
-) -> Result<Option<Vec<Vec<u8>>>, AuthError> {
+) -> Result<Option<Vec<Vec<u8>>>, TransportError> {
     with_coll(rank, CollOp::Gather, |rank, tag| gather_impl(rank, root, data, tag))
 }
 
@@ -1416,7 +1439,7 @@ fn gather_impl(
     root: usize,
     data: &[u8],
     tag: u64,
-) -> Result<Option<Vec<Vec<u8>>>, AuthError> {
+) -> Result<Option<Vec<Vec<u8>>>, TransportError> {
     let me = rank.id();
     let n = rank.size();
     let out = if hierarchical(rank) {
@@ -1479,7 +1502,7 @@ pub fn scatter(
     rank: &mut Rank,
     root: usize,
     parts: Option<Vec<Vec<u8>>>,
-) -> Result<Vec<u8>, AuthError> {
+) -> Result<Vec<u8>, TransportError> {
     with_coll(rank, CollOp::Scatter, |rank, tag| scatter_impl(rank, root, parts, tag))
 }
 
@@ -1488,7 +1511,7 @@ fn scatter_impl(
     root: usize,
     parts: Option<Vec<Vec<u8>>>,
     tag: u64,
-) -> Result<Vec<u8>, AuthError> {
+) -> Result<Vec<u8>, TransportError> {
     let me = rank.id();
     let n = rank.size();
     let out = if hierarchical(rank) {
@@ -1695,7 +1718,7 @@ impl NeighborRequest {
     /// Drain whichever inbound edges have arrived into `ghost` without
     /// blocking; returns `Ok(true)` once all edges (and sends) are
     /// complete.
-    pub fn test(&mut self, rank: &mut Rank, ghost: &mut [u8]) -> Result<bool, AuthError> {
+    pub fn test(&mut self, rank: &mut Rank, ghost: &mut [u8]) -> Result<bool, TransportError> {
         rank.coll_bracket_start(CollOp::Neighbor);
         let mut complete = true;
         for p in &mut self.recvs {
@@ -1720,7 +1743,7 @@ impl NeighborRequest {
 
     /// Block until every edge has landed in `ghost`; returns the total
     /// unpacked byte count.
-    pub fn wait(mut self, rank: &mut Rank, ghost: &mut [u8]) -> Result<usize, AuthError> {
+    pub fn wait(mut self, rank: &mut Rank, ghost: &mut [u8]) -> Result<usize, TransportError> {
         rank.coll_bracket_start(CollOp::Neighbor);
         let mut res = Ok(());
         for p in &mut self.recvs {
@@ -1990,6 +2013,58 @@ mod tests {
                 assert!(seen.insert(base + phase(p) + round(r)));
             }
         }
+    }
+
+    /// A permanently lossy inter-node link aborts a nonblocking
+    /// collective with a typed `PeerUnreachable` error (not a hang, not
+    /// a generic auth failure) — and the error teardown leaves no
+    /// engine state behind: after the failed wait the rank's combined
+    /// posted/unexpected queue depth is zero, so later traffic (or a
+    /// retried collective on a fresh tag) finds a clean engine.
+    #[test]
+    fn aborted_collective_purges_engine_state() {
+        let p = SystemProfile::noleland();
+        let mut net = p.net.clone();
+        net.faults =
+            Some(crate::net::FaultSpec::zero().with_drop(1.0).with_retry(50.0, 2.0, 3));
+        let topo = crate::net::Topology::new(2, 1);
+        let tp = Arc::new(Transport::new(topo, net, None));
+        let profile = Arc::new(p);
+        let cal = calib::get();
+        let keys = Keys::from_bytes(&[1u8; 16], &[2u8; 16]);
+        let mut a = crate::coordinator::rank::Rank::new(
+            0,
+            Arc::clone(&tp),
+            Arc::clone(&profile),
+            cal,
+            SecurityMode::CryptMpi,
+            Some(keys.clone()),
+            32,
+        );
+        let mut b = crate::coordinator::rank::Rank::new(
+            1,
+            tp,
+            profile,
+            cal,
+            SecurityMode::CryptMpi,
+            Some(keys),
+            32,
+        );
+        // Rank 1 launches its half: its sends cross the dead link, so
+        // every attempt is dropped and a tombstone is deposited at rank
+        // 0 once the retry budget exhausts. Its own receives would fail
+        // the same way; the request is simply dropped below.
+        let req_b = b.iallreduce_sum(&[1.0, 2.0]);
+        let req_a = a.iallreduce_sum(&[3.0, 4.0]);
+        match req_a.wait(&mut a) {
+            Err(TransportError::PeerUnreachable { rank }) => assert_eq!(rank, 1),
+            other => panic!("expected PeerUnreachable, got {other:?}"),
+        }
+        assert_eq!(a.queue_depth(), 0, "aborted collective must leave no engine state");
+        // The peer's health ledger records the dead link.
+        let health = a.health();
+        assert!(health.iter().any(|h| h.peer == 1 && h.unreachable));
+        drop(req_b);
     }
 
     /// Row-major Cartesian geometry: coords/rank round-trip, edge-aware

@@ -13,7 +13,10 @@ pub mod transport;
 
 pub use datatype::{pack, unpack, Datatype};
 pub use stats::{
-    AtomicMatchStats, ClusterReport, CollOp, CollOpStats, CollStats, CommStats, MatchStats,
-    PipelineStats, RankReport, COLL_OPS,
+    AtomicMatchStats, AtomicReliabilityStats, ClusterReport, CollOp, CollOpStats, CollStats,
+    CommStats, MatchStats, PipelineStats, RankReport, ReliabilityStats, COLL_OPS,
 };
-pub use transport::{PostInfo, ProbePeek, Route, Ticket, Transport, WireMsg, COLL_TAG_BASE};
+pub use transport::{
+    CorruptOutcome, FrameMeta, InjectedFault, PeerHealth, PostInfo, ProbePeek, Route, Ticket,
+    Transport, TransportError, WireMsg, COLL_TAG_BASE,
+};

@@ -241,6 +241,138 @@ impl AtomicMatchStats {
     }
 }
 
+/// Counters for the reliable-delivery layer (DESIGN.md §14): logical
+/// frames through the reliable path, the recovery work the fault plane
+/// forced (retransmissions, duplicate suppression, corrupt-frame
+/// recoveries, tombstones), and the virtual time it cost (backoff between
+/// attempts, receiver-side waits for retransmitted copies). At zero fault
+/// rate every counter except `frames` stays 0 — the invisibility
+/// invariant's observable form.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct ReliabilityStats {
+    /// Logical inter-node frames that traversed the reliable path.
+    pub frames: u64,
+    /// Retransmission attempts (lost attempts that were retried).
+    pub retransmits: u64,
+    /// Bytes those retransmissions re-sent.
+    pub retrans_bytes: u64,
+    /// Duplicate frames the receive-side dedup window discarded.
+    pub dup_dropped: u64,
+    /// Frames the plane delivered with an injected bit flip.
+    pub corrupt_injected: u64,
+    /// Injected-corrupt frames recovered via retransmission.
+    pub corrupt_recovered: u64,
+    /// Delivered frames that suffered an injected delay spike.
+    pub delay_spikes: u64,
+    /// Delivered frames held back past a successor (reorder fault).
+    pub reorders: u64,
+    /// Tombstone frames deposited after retry exhaustion (each marks one
+    /// receive that will observe `PeerUnreachable`).
+    pub tombstones: u64,
+    /// Ack records retired on the sender side.
+    pub acks: u64,
+    /// Virtual time spent in retransmission backoff.
+    pub backoff_ns: u64,
+    /// Receiver-side virtual time waiting for recovered copies.
+    pub recovery_wait_ns: u64,
+}
+
+impl ReliabilityStats {
+    pub fn merge(&mut self, other: &ReliabilityStats) {
+        self.frames += other.frames;
+        self.retransmits += other.retransmits;
+        self.retrans_bytes += other.retrans_bytes;
+        self.dup_dropped += other.dup_dropped;
+        self.corrupt_injected += other.corrupt_injected;
+        self.corrupt_recovered += other.corrupt_recovered;
+        self.delay_spikes += other.delay_spikes;
+        self.reorders += other.reorders;
+        self.tombstones += other.tombstones;
+        self.acks += other.acks;
+        self.backoff_ns += other.backoff_ns;
+        self.recovery_wait_ns += other.recovery_wait_ns;
+    }
+}
+
+/// Never-block source of truth for the transport-side half of
+/// [`ReliabilityStats`] (sender-side attempt accounting and receiver-side
+/// dedup drops), mirroring [`AtomicMatchStats`]: relaxed counters outside
+/// any lock, snapshotted at rank finish. The rank-side half
+/// (`corrupt_recovered`, `recovery_wait_ns`) is accounted directly in
+/// `CommStats.reliability` and merged with this snapshot.
+#[derive(Debug, Default)]
+pub struct AtomicReliabilityStats {
+    frames: AtomicU64,
+    retransmits: AtomicU64,
+    retrans_bytes: AtomicU64,
+    dup_dropped: AtomicU64,
+    corrupt_injected: AtomicU64,
+    delay_spikes: AtomicU64,
+    reorders: AtomicU64,
+    tombstones: AtomicU64,
+    acks: AtomicU64,
+    backoff_ns: AtomicU64,
+}
+
+impl AtomicReliabilityStats {
+    pub fn bump_frames(&self) {
+        self.frames.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn bump_retransmit(&self, bytes: u64) {
+        self.retransmits.fetch_add(1, Ordering::Relaxed);
+        self.retrans_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    pub fn bump_dup_dropped(&self) {
+        self.dup_dropped.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn bump_corrupt_injected(&self) {
+        self.corrupt_injected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn bump_delay_spikes(&self) {
+        self.delay_spikes.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn bump_reorders(&self) {
+        self.reorders.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn bump_tombstones(&self) {
+        self.tombstones.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add_acks(&self, n: u64) {
+        self.acks.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn add_backoff(&self, ns: u64) {
+        self.backoff_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    /// Lock-free snapshot (see [`AtomicMatchStats::snapshot`]); the
+    /// rank-side fields are zero here and filled by the rank's own
+    /// accounting before merge.
+    pub fn snapshot(&self) -> ReliabilityStats {
+        ReliabilityStats {
+            frames: self.frames.load(Ordering::Relaxed),
+            retransmits: self.retransmits.load(Ordering::Relaxed),
+            retrans_bytes: self.retrans_bytes.load(Ordering::Relaxed),
+            dup_dropped: self.dup_dropped.load(Ordering::Relaxed),
+            corrupt_injected: self.corrupt_injected.load(Ordering::Relaxed),
+            corrupt_recovered: 0,
+            delay_spikes: self.delay_spikes.load(Ordering::Relaxed),
+            reorders: self.reorders.load(Ordering::Relaxed),
+            tombstones: self.tombstones.load(Ordering::Relaxed),
+            acks: self.acks.load(Ordering::Relaxed),
+            backoff_ns: self.backoff_ns.load(Ordering::Relaxed),
+            recovery_wait_ns: 0,
+        }
+    }
+}
+
 /// Counters for the cross-chunk parallel crypto engine (DESIGN.md §12):
 /// messages that took the parallel seal/open path, the chunks its workers
 /// processed, the per-message worker-count high-water mark, and the
@@ -320,6 +452,9 @@ pub struct CommStats {
     pub matching: MatchStats,
     /// Parallel crypto-engine counters (worker fan-out, pipeline fill).
     pub pipeline: PipelineStats,
+    /// Reliable-delivery counters (transport snapshot + rank-side
+    /// recovery accounting, merged at rank finish).
+    pub reliability: ReliabilityStats,
 }
 
 impl CommStats {
@@ -341,6 +476,7 @@ impl CommStats {
         self.coll.merge(&other.coll);
         self.matching.merge(&other.matching);
         self.pipeline.merge(&other.pipeline);
+        self.reliability.merge(&other.reliability);
     }
 }
 
@@ -461,6 +597,50 @@ mod tests {
         assert_eq!(q.max_workers, 7);
         assert_eq!(q.fill_slots_used, 20);
         assert_eq!(q.fill_slots_avail, 23);
+    }
+
+    #[test]
+    fn atomic_reliability_stats_snapshot_and_merge() {
+        let a = AtomicReliabilityStats::default();
+        a.bump_frames();
+        a.bump_frames();
+        a.bump_retransmit(100);
+        a.bump_retransmit(50);
+        a.bump_dup_dropped();
+        a.bump_corrupt_injected();
+        a.bump_delay_spikes();
+        a.bump_reorders();
+        a.bump_tombstones();
+        a.add_acks(3);
+        a.add_backoff(1_000);
+        let s = a.snapshot();
+        assert_eq!(s.frames, 2);
+        assert_eq!(s.retransmits, 2);
+        assert_eq!(s.retrans_bytes, 150);
+        assert_eq!(s.dup_dropped, 1);
+        assert_eq!(s.corrupt_injected, 1);
+        assert_eq!(s.delay_spikes, 1);
+        assert_eq!(s.reorders, 1);
+        assert_eq!(s.tombstones, 1);
+        assert_eq!(s.acks, 3);
+        assert_eq!(s.backoff_ns, 1_000);
+        // Rank-side fields are never transport-sourced.
+        assert_eq!((s.corrupt_recovered, s.recovery_wait_ns), (0, 0));
+        let mut m = ReliabilityStats {
+            corrupt_recovered: 2,
+            recovery_wait_ns: 7,
+            ..Default::default()
+        };
+        m.merge(&s);
+        assert_eq!(m.frames, 2);
+        assert_eq!(m.corrupt_recovered, 2);
+        assert_eq!(m.recovery_wait_ns, 7);
+        assert_eq!(m.retrans_bytes, 150);
+        // A zero-fault run's snapshot merges as a no-op beyond `frames`.
+        let z = ReliabilityStats { frames: 9, ..Default::default() };
+        let mut base = ReliabilityStats::default();
+        base.merge(&z);
+        assert_eq!(base, z);
     }
 
     #[test]

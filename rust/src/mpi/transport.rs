@@ -56,19 +56,60 @@
 //! does it); `probe` sees the UMQ only — a message already bound to a
 //! ticket is spoken for.
 //!
+//! ## The reliable-delivery layer
+//!
+//! When a [`crate::net::FaultPlane`] is attached to the `NetConfig`
+//! (`CRYPTMPI_FAULTS` or `NetConfig.faults`), every inter-node frame
+//! travels a reliable-delivery protocol layered *under* the matching
+//! engine (DESIGN.md §14). Each directed link carries per-frame wire
+//! sequence numbers; acks are modeled in the reserved [`RELIA_TAG_BASE`]
+//! namespace (wildcard-invisible, like [`COLL_TAG_BASE`]); lost attempts
+//! are retried under a capped-exponential [`crate::net::RetryPolicy`]
+//! with all timeouts charged to virtual time. Because no timers exist in
+//! virtual time, loss recovery is resolved *analytically at post time*:
+//! the transport simulates the whole timeout/retransmit exchange and
+//! deposits the frame at the arrival its surviving attempt earns (lost
+//! attempts still charge the sender's NIC). Retry exhaustion latches the
+//! link unreachable and deposits a *tombstone* frame under the original
+//! envelope, so the matching receive observes
+//! [`TransportError::PeerUnreachable`] instead of hanging. A receive-side
+//! dedup window drops duplicated copies before they reach the matching
+//! engine — probes and receives can never observe a frame twice.
+//!
+//! With no plane attached the reliable path is not merely idle — it is
+//! never entered: the wire image and the virtual-clock trace are
+//! byte/tick-identical to a build without the fault plane (asserted by
+//! the zero-fault invisibility tests and every `faults` bench run).
+//!
 //! Everything above this layer — security modes, chopping, collectives —
 //! lives in [`crate::coordinator`]; everything below — link rates,
 //! topology, contention — in [`crate::net`].
 
-use crate::mpi::stats::{AtomicMatchStats, MatchStats};
-use crate::net::{NetConfig, NodeNics, Topology};
-use std::collections::{BTreeSet, HashMap, VecDeque};
+use crate::mpi::stats::{AtomicMatchStats, AtomicReliabilityStats, MatchStats, ReliabilityStats};
+use crate::net::{FaultPlane, NetConfig, NodeNics, Topology};
+use std::collections::{BTreeMap, BTreeSet, HashMap, VecDeque};
 use std::sync::{Condvar, Mutex};
 
 /// First tag of the reserved internal namespace used by collective
 /// schedules. Application tags must stay below; wildcard receives refuse
 /// to match anything at or above it (see the module docs).
 pub const COLL_TAG_BASE: u64 = 1 << 40;
+
+/// First tag of the reserved reliability namespace: ack records of the
+/// reliable-delivery protocol are addressed here, a sibling of (and
+/// disjoint from) the collective namespace. Everything at or above
+/// [`COLL_TAG_BASE`] — so this range too — is invisible to wildcard
+/// matching, and the `tag-namespace` cryptlint rule confines this
+/// constant to this file alone.
+pub const RELIA_TAG_BASE: u64 = 1 << 41;
+
+/// The reserved-namespace tag an ack for wire frame `wseq` travels under.
+/// The only sanctioned constructor for reliability tags (the cryptlint
+/// rule forbids other modules from touching [`RELIA_TAG_BASE`]).
+#[inline]
+fn relia_tag(wseq: u64) -> u64 {
+    RELIA_TAG_BASE | (wseq & (COLL_TAG_BASE - 1))
+}
 
 /// The `seq`-th tag of the reserved collective namespace. This is the only
 /// sanctioned constructor for internal collective tags: the `tag-namespace`
@@ -92,6 +133,117 @@ pub struct WireMsg {
     /// Virtual time at which the message is fully available at the
     /// receiver.
     pub arrival_ns: u64,
+    /// Reliability metadata stamped by the fault plane; `FrameMeta::clean()`
+    /// on every frame of a fault-free fabric.
+    pub fault: FrameMeta,
+}
+
+/// Per-frame reliability metadata. Frames posted without a fault plane
+/// (or intra-node, which never crosses the fabric) carry
+/// [`FrameMeta::clean`]; the reliable path stamps the link's wire
+/// sequence number and, when the plane injected a fault the receiver
+/// must participate in recovering, the injection record.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FrameMeta {
+    /// Wire sequence number on the directed link (dedup-window key).
+    pub wseq: u64,
+    /// `true` = not a payload frame: the link latched
+    /// [`TransportError::PeerUnreachable`] and this frame exists only so
+    /// the matching receive fails fast instead of hanging.
+    pub tombstone: bool,
+    /// A bit-corruption injected by the fault plane, with its pre-planned
+    /// recovery outcome.
+    pub injected: Option<InjectedFault>,
+}
+
+impl FrameMeta {
+    /// Metadata of a frame the fault plane never touched.
+    pub const fn clean() -> Self {
+        FrameMeta { wseq: 0, tombstone: false, injected: None }
+    }
+}
+
+/// Record of a fault-plane bit flip in a frame's body. The receiver
+/// discovers the corruption itself (GCM tag mismatch, or unparseable
+/// framing for un-MAC'd bytes) and then consults `outcome` — planned at
+/// post time, because virtual time has no timers — to learn where the
+/// sender's retransmission lands.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct InjectedFault {
+    /// Absolute bit index into the frame body that was flipped.
+    pub bit: u64,
+    /// The pre-planned end of the retransmit exchange.
+    pub outcome: CorruptOutcome,
+}
+
+/// How a corrupted frame's recovery plays out.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CorruptOutcome {
+    /// A retransmitted copy survives the fabric and is fully available at
+    /// the receiver at `arrival_ns` (the receiver un-flips the bit and
+    /// waits until then).
+    Retransmit { arrival_ns: u64 },
+    /// Every retransmission was lost too; the link is latched dead.
+    Unreachable,
+}
+
+/// Receive-path failure taxonomy of the reliable transport. The critical
+/// distinction is two-tier: a GCM tag mismatch on a frame the fault
+/// plane *injected* corruption into is a link-level event
+/// ([`TransportError::CorruptFrame`]) and is recovered by retransmission,
+/// while a mismatch on a clean frame is an attack
+/// ([`TransportError::Auth`]) and is never retried — retrying a forgery
+/// would hand an adversary unlimited oracle queries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransportError {
+    /// Cryptographic authentication failure: treated as tampering, fatal.
+    Auth,
+    /// A fault-plane-corrupted frame was rejected at the receiver;
+    /// recovery (retransmission) is in progress or has been applied.
+    CorruptFrame { src: usize, wseq: u64 },
+    /// The reliable-delivery layer exhausted its retry budget towards
+    /// `rank`; the link is latched dead and all traffic on it fails fast.
+    PeerUnreachable { rank: usize },
+}
+
+impl From<crate::crypto::AuthError> for TransportError {
+    fn from(_: crate::crypto::AuthError) -> Self {
+        TransportError::Auth
+    }
+}
+
+impl std::fmt::Display for TransportError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TransportError::Auth => write!(f, "GCM authentication failed"),
+            TransportError::CorruptFrame { src, wseq } => {
+                write!(f, "corrupt frame from rank {src} (wire seq {wseq})")
+            }
+            TransportError::PeerUnreachable { rank } => {
+                write!(f, "peer rank {rank} unreachable (retry budget exhausted)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for TransportError {}
+
+/// Per-peer reliability health as seen by one rank's sender side
+/// ([`Transport::health`] / `Rank::health`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PeerHealth {
+    pub peer: usize,
+    /// Retry budget exhausted: the link is latched dead.
+    pub unreachable: bool,
+    /// Frames sent but whose (modeled) ack has not yet reached us.
+    pub in_flight: usize,
+    /// Total retransmission attempts towards this peer.
+    pub retransmits: u64,
+    /// Backoff charged before the most recent retransmission (ns).
+    pub last_backoff_ns: u64,
+    /// Reserved-namespace tag of the oldest in-flight frame's ack, if any
+    /// (always at or above [`RELIA_TAG_BASE`]).
+    pub oldest_ack_tag: Option<u64>,
 }
 
 /// Handle to a pre-posted receive (namespaced per receiving rank).
@@ -394,6 +546,85 @@ pub struct PostInfo {
     pub local_complete_ns: u64,
 }
 
+/// Envelope of one reliable-path frame (keeps the helper signatures
+/// within reason).
+#[derive(Debug, Clone, Copy)]
+struct Frame {
+    src: usize,
+    dst: usize,
+    tag: u64,
+    seq: u32,
+    wseq: u64,
+}
+
+/// An empty-bodied fail-fast frame under the original envelope: the
+/// matching receive observes it (tag and seq match) and reads
+/// `fault.tombstone` instead of a payload.
+fn tombstone(src: usize, tag: u64, seq: u32, arrival_ns: u64, wseq: u64) -> WireMsg {
+    WireMsg {
+        src,
+        tag,
+        seq,
+        body: Vec::new(),
+        arrival_ns,
+        fault: FrameMeta { wseq, tombstone: true, injected: None },
+    }
+}
+
+/// One modeled ack in flight back to the sender: the reserved-namespace
+/// tag it travels under and the virtual time it reaches the sender.
+#[derive(Debug, Clone, Copy)]
+struct AckRec {
+    tag: u64,
+    ack_ns: u64,
+}
+
+/// Sender-side reliability state of one directed link.
+#[derive(Debug, Default)]
+struct ReliaLink {
+    /// Retry budget exhausted: every later post fails fast (tombstone).
+    unreachable: bool,
+    /// In-flight frames by wire seq; retired lazily when the sender next
+    /// posts on this link after an ack's arrival time.
+    unacked: BTreeMap<u64, AckRec>,
+    retransmits: u64,
+    last_backoff_ns: u64,
+}
+
+/// Receive-side dedup window of one directed link: accepted wire seqs,
+/// pruned to a bounded window. Wire seqs are strictly increasing per
+/// link and the reliable path deposits each logical frame exactly once,
+/// so the window only has to catch duplicate *copies* — which trail
+/// their original closely.
+#[derive(Debug, Default)]
+struct DedupWindow {
+    seen: BTreeSet<u64>,
+}
+
+impl DedupWindow {
+    const WINDOW: usize = 1024;
+
+    /// Accept `wseq` if unseen; `false` means duplicate — discard the
+    /// frame before the matching engine can observe it.
+    fn accept(&mut self, wseq: u64) -> bool {
+        if !self.seen.insert(wseq) {
+            return false;
+        }
+        if self.seen.len() > Self::WINDOW {
+            self.seen.pop_first();
+        }
+        true
+    }
+}
+
+/// Per-rank reliability state: receive-side dedup windows keyed by
+/// source, sender-side link state keyed by destination.
+#[derive(Debug, Default)]
+struct ReliaRank {
+    seen: HashMap<usize, DedupWindow>,
+    links: HashMap<usize, ReliaLink>,
+}
+
 /// The shared transport fabric of one simulated cluster.
 pub struct Transport {
     boxes: Vec<Mailbox>,
@@ -403,13 +634,23 @@ pub struct Transport {
     /// IPSec simulation: rate (B/µs) of the per-node serial kernel crypto
     /// context, if enabled.
     ipsec_rate: Option<f64>,
+    /// Fault-injection plane (from `NetConfig.faults`); `None` = perfect
+    /// fabric, reliable path never entered.
+    faults: Option<FaultPlane>,
+    /// Per-rank reliability state (dedup windows + link state).
+    relia: Vec<Mutex<ReliaRank>>,
+    /// Per-rank reliability counters, outside the mutexes.
+    relia_stats: Vec<AtomicReliabilityStats>,
 }
 
 impl Transport {
     pub fn new(topo: Topology, net: NetConfig, ipsec_rate: Option<f64>) -> Self {
         let boxes = (0..topo.ranks).map(|_| Mailbox::default()).collect();
         let nics = (0..topo.nodes()).map(|_| NodeNics::new()).collect();
-        Transport { boxes, nics, topo, net, ipsec_rate }
+        let faults = net.faults.clone().map(FaultPlane::new);
+        let relia = (0..topo.ranks).map(|_| Mutex::new(ReliaRank::default())).collect();
+        let relia_stats = (0..topo.ranks).map(|_| AtomicReliabilityStats::default()).collect();
+        Transport { boxes, nics, topo, net, ipsec_rate, faults, relia, relia_stats }
     }
 
     pub fn topo(&self) -> &Topology {
@@ -430,6 +671,10 @@ impl Transport {
 
     /// Compute delivery timing for `bytes` from `src` to `dst`, departing
     /// the sender at `depart_ns`, and deposit the message.
+    ///
+    /// When a fault plane is attached and the route crosses the fabric,
+    /// the frame travels the reliable-delivery path instead. Intra-node
+    /// delivery is shared memory — no fabric, no faults, no protocol.
     pub fn post(
         &self,
         src: usize,
@@ -439,8 +684,21 @@ impl Transport {
         body: Vec<u8>,
         depart_ns: u64,
     ) -> PostInfo {
-        let bytes = body.len();
-        let info = if self.topo.same_node(src, dst) {
+        if self.faults.is_some() && !self.topo.same_node(src, dst) {
+            return self.post_reliable(src, dst, tag, seq, body, depart_ns);
+        }
+        let info = self.delivery_timing(src, dst, body.len(), depart_ns);
+        let msg =
+            WireMsg { src, tag, seq, body, arrival_ns: info.arrival_ns, fault: FrameMeta::clean() };
+        self.deposit(dst, msg);
+        info
+    }
+
+    /// Pure timing model of one delivery attempt: reserves the NIC (and,
+    /// in IPSec mode, kernel-crypto) resources the attempt consumes and
+    /// returns its arrival / local-completion times. Does not deposit.
+    fn delivery_timing(&self, src: usize, dst: usize, bytes: usize, depart_ns: u64) -> PostInfo {
+        if self.topo.same_node(src, dst) {
             let dur = (bytes as f64 / self.net.intra_rate * 1e3).round() as u64
                 + (self.net.intra_alpha_us * 1e3).round() as u64;
             let arrival = depart_ns + dur;
@@ -466,10 +724,229 @@ impl Transport {
                 arrival = dst_node.ipsec_rx.reserve(arrival, crypt);
             }
             PostInfo { arrival_ns: arrival, local_complete_ns: tx_done }
+        }
+    }
+
+    /// Sender-side cost of an attempt whose frame never reaches the
+    /// receiver (dropped, partitioned, or a duplicate copy): the bytes
+    /// still traversed the sender's crypto context and NIC. Never called
+    /// on a fault-free link, so at zero fault rates the resource
+    /// reservation sequence is identical to the clean path.
+    fn lost_attempt_tx(&self, src: usize, bytes: usize, depart_ns: u64) {
+        let src_node = &self.nics[self.topo.node_of(src)];
+        let mut ready = depart_ns;
+        if let Some(rate) = self.ipsec_rate {
+            let crypt = (bytes as f64 / rate * 1e3).round() as u64;
+            ready = src_node.ipsec_tx.reserve(ready, crypt);
+        }
+        src_node.egress.reserve(ready, self.net.wire_ns(bytes));
+    }
+
+    /// Is the directed link `src → dst` latched unreachable?
+    fn link_unreachable(&self, src: usize, dst: usize) -> bool {
+        self.relia[src].lock().unwrap().links.get(&dst).is_some_and(|l| l.unreachable)
+    }
+
+    /// Latch the directed link `src → dst` dead (retry budget exhausted).
+    fn latch_unreachable(&self, src: usize, dst: usize) {
+        self.relia[src].lock().unwrap().links.entry(dst).or_default().unreachable = true;
+    }
+
+    /// Account one backoff interval on the sender's link state.
+    fn note_backoff(&self, src: usize, dst: usize, backoff_ns: u64) {
+        let mut r = self.relia[src].lock().unwrap();
+        let link = r.links.entry(dst).or_default();
+        link.retransmits += 1;
+        link.last_backoff_ns = backoff_ns;
+    }
+
+    /// Record the delivered frame's modeled ack — it departs the receiver
+    /// at the frame's arrival and travels back under [`relia_tag`] in one
+    /// fabric latency — and retire every ack that has reached the sender
+    /// by `now_ns` (lazy retirement: the sender notices acks when it next
+    /// touches the link).
+    fn record_unacked(&self, src: usize, dst: usize, wseq: u64, arrival_ns: u64, now_ns: u64) {
+        let ack_ns = arrival_ns + self.net.alpha_ns(1);
+        let mut r = self.relia[src].lock().unwrap();
+        let link = r.links.entry(dst).or_default();
+        let before = link.unacked.len();
+        link.unacked.retain(|_, a| a.ack_ns > now_ns);
+        let retired = (before - link.unacked.len()) as u64;
+        link.unacked.insert(wseq, AckRec { tag: relia_tag(wseq), ack_ns });
+        drop(r);
+        if retired > 0 {
+            self.relia_stats[src].add_acks(retired);
+        }
+    }
+
+    /// Deposit through the receive-side dedup window: a `(src, wseq)`
+    /// already accepted is discarded *before* the matching engine, so
+    /// probes and receives can never observe a duplicate frame. Returns
+    /// whether the frame was accepted.
+    fn deposit_reliable(&self, dst: usize, msg: WireMsg) -> bool {
+        let fresh = {
+            let mut r = self.relia[dst].lock().unwrap();
+            r.seen.entry(msg.src).or_default().accept(msg.fault.wseq)
         };
-        let msg = WireMsg { src, tag, seq, body, arrival_ns: info.arrival_ns };
+        if !fresh {
+            self.relia_stats[dst].bump_dup_dropped();
+            return false;
+        }
         self.deposit(dst, msg);
+        true
+    }
+
+    /// The reliable-delivery path (see the module docs): roll the fault
+    /// plane per attempt, charge lost attempts and backoff timeouts to
+    /// virtual time, and deposit the surviving frame — or a tombstone
+    /// when the retry budget dies first.
+    fn post_reliable(
+        &self,
+        src: usize,
+        dst: usize,
+        tag: u64,
+        seq: u32,
+        body: Vec<u8>,
+        depart_ns: u64,
+    ) -> PostInfo {
+        let fp = self.faults.as_ref().expect("reliable path without a fault plane");
+        let policy = fp.spec().retry();
+        let bytes = body.len();
+        let wseq = fp.next_wseq(src, dst);
+        let rstats = &self.relia_stats[src];
+        rstats.bump_frames();
+        // Fail fast on a link already latched dead: no wire traffic, just
+        // the tombstone the matching receive will trip over.
+        if self.link_unreachable(src, dst) {
+            rstats.bump_tombstones();
+            self.deposit_reliable(dst, tombstone(src, tag, seq, depart_ns, wseq));
+            return PostInfo { arrival_ns: depart_ns, local_complete_ns: depart_ns };
+        }
+        let mut t = depart_ns;
+        let mut attempt = 0u32;
+        loop {
+            let lost =
+                fp.partitioned(src, dst, wseq, attempt, t) || fp.dropped(src, dst, wseq, attempt);
+            if !lost {
+                return self.deliver_attempt(Frame { src, dst, tag, seq, wseq }, body, t, attempt);
+            }
+            // The lost attempt's bytes still left the sender.
+            self.lost_attempt_tx(src, bytes, t);
+            if attempt >= policy.max_retries {
+                break;
+            }
+            let to = policy.timeout_ns(attempt, fp.jitter01(src, dst, wseq, attempt));
+            rstats.bump_retransmit(bytes as u64);
+            rstats.add_backoff(to);
+            self.note_backoff(src, dst, to);
+            t += to;
+            attempt += 1;
+        }
+        // Retry budget exhausted: latch the link dead and deposit a
+        // tombstone under the original envelope, arriving after the final
+        // timeout, so the matching receive fails fast instead of hanging.
+        self.latch_unreachable(src, dst);
+        rstats.bump_tombstones();
+        let give_up = t + policy.timeout_ns(attempt, fp.jitter01(src, dst, wseq, attempt));
+        self.deposit_reliable(dst, tombstone(src, tag, seq, give_up, wseq));
+        PostInfo { arrival_ns: give_up, local_complete_ns: t }
+    }
+
+    /// One surviving delivery attempt of the reliable path: apply
+    /// delay-spike / reorder / corrupt / duplicate faults, deposit through
+    /// the dedup window, and record the modeled ack.
+    fn deliver_attempt(&self, fr: Frame, body: Vec<u8>, t: u64, attempt: u32) -> PostInfo {
+        let fp = self.faults.as_ref().expect("reliable path without a fault plane");
+        let Frame { src, dst, tag, seq, wseq } = fr;
+        let rstats = &self.relia_stats[src];
+        let bytes = body.len();
+        let mut info = self.delivery_timing(src, dst, bytes, t);
+        if let Some(d) = fp.delay_spike_ns(src, dst, wseq, attempt) {
+            info.arrival_ns += d;
+            rstats.bump_delay_spikes();
+        }
+        if fp.reordered(src, dst, wseq, attempt) {
+            // Arrival-time inversion: hold the frame one extra transit so
+            // a back-to-back successor on the same link overtakes it.
+            info.arrival_ns += (info.arrival_ns - t).max(1);
+            rstats.bump_reorders();
+        }
+        let mut body = body;
+        let mut meta = FrameMeta { wseq, tombstone: false, injected: None };
+        if let Some(bitseed) = fp.corrupt_bit(src, dst, wseq, attempt) {
+            if !body.is_empty() {
+                // Flip one deterministic wire bit. The recovery outcome is
+                // planned *now* — the receiver discovers the corruption
+                // later on its own thread, and virtual time has no timers
+                // to drive a retransmission from there.
+                let bit = bitseed % (bytes as u64 * 8);
+                body[(bit / 8) as usize] ^= 1 << (bit % 8);
+                rstats.bump_corrupt_injected();
+                let outcome = self.plan_corrupt_recovery(fr, bytes, t, attempt, info.arrival_ns);
+                if outcome == CorruptOutcome::Unreachable {
+                    self.latch_unreachable(src, dst);
+                }
+                meta.injected = Some(InjectedFault { bit, outcome });
+            }
+        }
+        let dup_body =
+            if fp.duplicated(src, dst, wseq, attempt) { Some(body.clone()) } else { None };
+        let msg =
+            WireMsg { src, tag, seq, body, arrival_ns: info.arrival_ns, fault: meta.clone() };
+        let accepted = self.deposit_reliable(dst, msg);
+        debug_assert!(accepted, "first copy of a frame is never a duplicate");
+        self.record_unacked(src, dst, wseq, info.arrival_ns, t);
+        if let Some(copy) = dup_body {
+            // The duplicate really leaves the NIC (and charges it), but
+            // the receive-side window discards it before the matching
+            // engine — probes and receives never see it.
+            self.lost_attempt_tx(src, bytes, t);
+            let dup =
+                WireMsg { src, tag, seq, body: copy, arrival_ns: info.arrival_ns, fault: meta };
+            let rejected = !self.deposit_reliable(dst, dup);
+            debug_assert!(rejected, "the window must reject the duplicate copy");
+        }
         info
+    }
+
+    /// Simulate the retransmit exchange a corrupted frame will trigger
+    /// once the receiver rejects it: the sender times out (no ack), backs
+    /// off, and resends until a copy survives or the budget dies. Later
+    /// attempts are re-rolled against drop/partition only — one injected
+    /// bit flip per logical frame.
+    fn plan_corrupt_recovery(
+        &self,
+        fr: Frame,
+        bytes: usize,
+        t_sent: u64,
+        attempt: u32,
+        orig_arrival: u64,
+    ) -> CorruptOutcome {
+        let fp = self.faults.as_ref().expect("reliable path without a fault plane");
+        let policy = fp.spec().retry();
+        let Frame { src, dst, wseq, .. } = fr;
+        let rstats = &self.relia_stats[src];
+        let mut t = t_sent;
+        let mut a = attempt;
+        while a < policy.max_retries {
+            let to = policy.timeout_ns(a, fp.jitter01(src, dst, wseq, a));
+            rstats.bump_retransmit(bytes as u64);
+            rstats.add_backoff(to);
+            self.note_backoff(src, dst, to);
+            t += to;
+            a += 1;
+            if fp.partitioned(src, dst, wseq, a, t) || fp.dropped(src, dst, wseq, a) {
+                self.lost_attempt_tx(src, bytes, t);
+                continue;
+            }
+            let retrans = self.delivery_timing(src, dst, bytes, t);
+            // The copy can never be available before the original frame.
+            return CorruptOutcome::Retransmit {
+                arrival_ns: retrans.arrival_ns.max(orig_arrival + 1),
+            };
+        }
+        rstats.bump_tombstones();
+        CorruptOutcome::Unreachable
     }
 
     /// Deposit a message into `dst`'s engine: bind it to the earliest
@@ -694,12 +1171,72 @@ impl Transport {
     pub fn match_stats(&self, me: usize) -> MatchStats {
         self.boxes[me].stats.snapshot()
     }
+
+    /// Remove every unexpected-queue frame of `me` whose tag satisfies
+    /// `pred`, fixing the wildcard tag index and the depth counter;
+    /// returns how many frames were discarded. This is the eager-cleanup
+    /// half of an aborted collective: frames of its reserved tag space
+    /// must not linger in the UMQ after the error latches (previously
+    /// they survived to process end and `queue_depth` never drained).
+    pub fn purge_matching(&self, me: usize, pred: impl Fn(u64) -> bool) -> usize {
+        let mbox = &self.boxes[me];
+        let mut st = mbox.state.lock().unwrap();
+        let keys: Vec<(usize, u64)> = st.umq.keys().filter(|&&(_, t)| pred(t)).copied().collect();
+        let mut removed = 0;
+        for key in keys {
+            if let Some(q) = st.umq.remove(&key) {
+                removed += q.len();
+                if let Some(set) = st.tags.get_mut(&key.1) {
+                    set.remove(&key.0);
+                    if set.is_empty() {
+                        st.tags.remove(&key.1);
+                    }
+                }
+            }
+        }
+        st.depth -= removed;
+        removed
+    }
+
+    /// Per-peer reliability health as seen from rank `me`'s sender side,
+    /// sorted by peer. Empty when no fault plane is attached (the
+    /// reliable path never ran) or before `me` first sent inter-node.
+    pub fn health(&self, me: usize) -> Vec<PeerHealth> {
+        let r = self.relia[me].lock().unwrap();
+        let mut out: Vec<PeerHealth> = r
+            .links
+            .iter()
+            .map(|(&peer, l)| PeerHealth {
+                peer,
+                unreachable: l.unreachable,
+                in_flight: l.unacked.len(),
+                retransmits: l.retransmits,
+                last_backoff_ns: l.last_backoff_ns,
+                oldest_ack_tag: l.unacked.values().next().map(|a| a.tag),
+            })
+            .collect();
+        out.sort_by_key(|h| h.peer);
+        out
+    }
+
+    /// Snapshot of rank `me`'s transport-side reliability counters.
+    /// Lock-free. (The rank-side recovery counters — corrupted frames
+    /// recovered, recovery wait — are merged in by `Rank::finish`.)
+    pub fn relia_stats(&self, me: usize) -> ReliabilityStats {
+        self.relia_stats[me].snapshot()
+    }
+
+    /// The attached fault plane, if any.
+    pub fn faults(&self) -> Option<&FaultPlane> {
+        self.faults.as_ref()
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::net::profile::SystemProfile;
+    use crate::net::FaultSpec;
 
     fn transport(ranks: usize, rpn: usize) -> Transport {
         let p = SystemProfile::noleland();
@@ -1025,6 +1562,205 @@ mod tests {
         assert_eq!(t.posted_depth(1), 0);
         let s = t.match_stats(1);
         assert_eq!(s.preposted_matches, 1);
+    }
+
+    fn faulty_transport(spec: FaultSpec, ranks: usize) -> Transport {
+        let mut net = SystemProfile::noleland().net;
+        net.faults = Some(spec);
+        Transport::new(Topology::new(ranks, 1), net, None)
+    }
+
+    /// The acceptance invariant of the reliability layer: a fault plane
+    /// with all rates zero runs the full reliable path yet is
+    /// byte-and-tick invisible — identical PostInfo, identical arrival
+    /// times, identical wire bytes, zero recovery counters.
+    #[test]
+    fn zero_rate_plane_is_tick_and_byte_invisible() {
+        let plain = transport(2, 1);
+        let faulty = faulty_transport(FaultSpec::zero(), 2);
+        let sizes = [1usize, 33, 4096, 1 << 17];
+        for (i, &n) in sizes.iter().enumerate() {
+            let body: Vec<u8> = (0..n).map(|j| (i + j) as u8).collect();
+            let a = plain.post(0, 1, 7, i as u32, body.clone(), i as u64 * 1000);
+            let b = faulty.post(0, 1, 7, i as u32, body, i as u64 * 1000);
+            assert_eq!(a.arrival_ns, b.arrival_ns, "tick-identical ({n} B)");
+            assert_eq!(a.local_complete_ns, b.local_complete_ns, "tick-identical ({n} B)");
+        }
+        for _ in &sizes {
+            let ma = plain.recv_match(1, Some(0), 7);
+            let mb = faulty.recv_match(1, Some(0), 7);
+            assert_eq!(ma.body, mb.body, "byte-identical wire image");
+            assert_eq!(ma.arrival_ns, mb.arrival_ns);
+            assert!(!mb.fault.tombstone);
+            assert!(mb.fault.injected.is_none());
+        }
+        let rs = faulty.relia_stats(0);
+        assert_eq!(rs.frames, sizes.len() as u64);
+        assert_eq!(rs.retransmits, 0);
+        assert_eq!(rs.backoff_ns, 0);
+        assert_eq!(faulty.relia_stats(1).dup_dropped, 0);
+        // IPSec-simulation framing goes through the same reliable path.
+        let p = SystemProfile::eth10g();
+        let mut fnet = p.net.clone();
+        fnet.faults = Some(FaultSpec::zero());
+        let ip_plain = Transport::new(Topology::new(2, 1), p.net.clone(), Some(p.ipsec_rate));
+        let ip_faulty = Transport::new(Topology::new(2, 1), fnet, Some(p.ipsec_rate));
+        let a = ip_plain.post(0, 1, 1, 0, vec![5u8; 9000], 0);
+        let b = ip_faulty.post(0, 1, 1, 0, vec![5u8; 9000], 0);
+        assert_eq!(a.arrival_ns, b.arrival_ns);
+        assert_eq!(a.local_complete_ns, b.local_complete_ns);
+    }
+
+    /// The reliability ack namespace sits above [`COLL_TAG_BASE`]: frames
+    /// addressed there are invisible to every wildcard path, exactly like
+    /// collective frames.
+    #[test]
+    fn relia_tag_namespace_is_wildcard_invisible() {
+        assert!(RELIA_TAG_BASE >= COLL_TAG_BASE, "reserved ranges must nest");
+        let tag = relia_tag(7);
+        assert!(tag >= RELIA_TAG_BASE);
+        let t = transport(2, 1);
+        t.post(0, 1, tag, 0, vec![1], 0);
+        assert!(t.try_match(1, None, tag).is_none(), "wildcard take refused");
+        assert!(t.try_probe(1, None, tag, u64::MAX).is_none(), "wildcard probe refused");
+        assert_eq!(t.try_match(1, Some(0), tag).unwrap().body, vec![1]);
+    }
+
+    /// A dropped first attempt is retransmitted after the policy timeout:
+    /// on an otherwise idle link the survivor arrives exactly one backoff
+    /// later than the fault-free delivery, and the payload is intact.
+    #[test]
+    fn dropped_frame_retransmits_with_backoff() {
+        let spec0 = FaultSpec::zero().with_drop(0.5).with_retry(100.0, 2.0, 4);
+        // Find a seed whose first roll on (0 → 1, wseq 1) drops and whose
+        // second does not — the rolls are deterministic, so so is this.
+        let seed = (0..1000)
+            .find(|&s| {
+                let fp = FaultPlane::new(spec0.clone().with_seed(s));
+                fp.dropped(0, 1, 1, 0) && !fp.dropped(0, 1, 1, 1)
+            })
+            .expect("some seed drops exactly the first attempt");
+        let spec = spec0.with_seed(seed);
+        let fp = FaultPlane::new(spec.clone());
+        let backoff = spec.retry().timeout_ns(0, fp.jitter01(0, 1, 1, 0));
+        let clean = transport(2, 1);
+        let faulty = faulty_transport(spec, 2);
+        let n = 4096;
+        let a = clean.post(0, 1, 3, 0, vec![7u8; n], 0);
+        let b = faulty.post(0, 1, 3, 0, vec![7u8; n], 0);
+        assert_eq!(b.arrival_ns, a.arrival_ns + backoff, "delayed by exactly the backoff");
+        assert_eq!(b.local_complete_ns, a.local_complete_ns + backoff);
+        assert_eq!(faulty.recv_match(1, Some(0), 3).body, vec![7u8; n]);
+        let rs = faulty.relia_stats(0);
+        assert_eq!((rs.frames, rs.retransmits, rs.retrans_bytes), (1, 1, n as u64));
+        assert_eq!(rs.backoff_ns, backoff);
+        let h = faulty.health(0);
+        assert_eq!((h.len(), h[0].peer, h[0].unreachable), (1, 1, false));
+        assert_eq!((h[0].retransmits, h[0].last_backoff_ns), (1, backoff));
+        assert_eq!(h[0].in_flight, 1);
+        assert!(h[0].oldest_ack_tag.unwrap() >= RELIA_TAG_BASE);
+    }
+
+    /// Retry exhaustion latches the link dead: the receive observes a
+    /// tombstone (fail-fast, no hang) and later posts on the link are
+    /// tombstoned immediately with no wire traffic.
+    #[test]
+    fn retry_exhaustion_latches_peer_unreachable() {
+        let spec = FaultSpec::zero().with_drop(1.0).with_retry(50.0, 2.0, 3);
+        let t = faulty_transport(spec, 2);
+        let info = t.post(0, 1, 9, 0, vec![1, 2, 3], 0);
+        let m = t.recv_match(1, Some(0), 9);
+        assert!(m.fault.tombstone);
+        assert!(m.body.is_empty());
+        assert_eq!(m.arrival_ns, info.arrival_ns);
+        assert!(info.arrival_ns > 0, "the retry budget was charged to virtual time");
+        // Latched: the next post fails fast at its own depart time.
+        let info2 = t.post(0, 1, 9, 0, vec![4, 5], 7777);
+        assert_eq!((info2.arrival_ns, info2.local_complete_ns), (7777, 7777));
+        assert!(t.recv_match(1, Some(0), 9).fault.tombstone);
+        let h = t.health(0);
+        assert_eq!((h.len(), h[0].peer), (1, 1));
+        assert!(h[0].unreachable);
+        let rs = t.relia_stats(0);
+        assert_eq!((rs.frames, rs.retransmits, rs.tombstones), (2, 3, 2));
+        // Directed links: the reverse direction has its own state.
+        assert!(t.health(1).is_empty());
+    }
+
+    /// dup=1.0: every delivered frame leaves a duplicate copy on the
+    /// wire; the receive-side window discards the copies before the
+    /// matching engine, so probes and receives see each frame once.
+    #[test]
+    fn duplicate_copies_never_reach_the_matching_engine() {
+        let t = faulty_transport(FaultSpec::zero().with_dup(1.0), 2);
+        t.post(0, 1, 4, 0, vec![1], 0);
+        t.post(0, 1, 4, 0, vec![2], 0);
+        assert_eq!(t.pending(1), 2, "one engine entry per logical frame");
+        let p = t.try_probe(1, Some(0), 4, u64::MAX).expect("head visible");
+        assert_eq!(p.head, vec![1]);
+        assert_eq!(t.recv_match(1, Some(0), 4).body, vec![1]);
+        assert_eq!(t.recv_match(1, Some(0), 4).body, vec![2]);
+        assert!(t.try_match(1, Some(0), 4).is_none(), "no duplicate left behind");
+        assert_eq!(t.relia_stats(1).dup_dropped, 2);
+    }
+
+    /// corrupt=1.0: the deposited body differs from the sent body by
+    /// exactly one recorded bit, and the pre-planned recovery points at a
+    /// strictly later retransmission (drop rate is zero, so it survives).
+    #[test]
+    fn corrupt_injection_flips_one_bit_and_plans_recovery() {
+        let spec = FaultSpec::zero().with_corrupt(1.0).with_retry(100.0, 2.0, 4);
+        let t = faulty_transport(spec, 2);
+        let body: Vec<u8> = (0..64u8).collect();
+        let info = t.post(0, 1, 5, 0, body.clone(), 0);
+        let m = t.recv_match(1, Some(0), 5);
+        let inj = m.fault.injected.expect("injection recorded on the frame");
+        assert_ne!(m.body, body, "one wire bit flipped");
+        let mut fixed = m.body.clone();
+        fixed[(inj.bit / 8) as usize] ^= 1 << (inj.bit % 8);
+        assert_eq!(fixed, body, "un-flipping the recorded bit restores the payload");
+        match inj.outcome {
+            CorruptOutcome::Retransmit { arrival_ns } => assert!(arrival_ns > info.arrival_ns),
+            CorruptOutcome::Unreachable => panic!("zero drop rate: a retransmit must survive"),
+        }
+        let rs = t.relia_stats(0);
+        assert_eq!((rs.corrupt_injected, rs.retransmits), (1, 1));
+    }
+
+    /// Modeled acks retire lazily: a later post on the same link retires
+    /// every ack that has arrived back at the sender by its depart time.
+    #[test]
+    fn acks_retire_on_later_posts() {
+        let t = faulty_transport(FaultSpec::zero(), 2);
+        t.post(0, 1, 2, 0, vec![0u8; 64], 0);
+        let h = t.health(0);
+        assert_eq!(h[0].in_flight, 1);
+        assert!(h[0].oldest_ack_tag.unwrap() >= RELIA_TAG_BASE);
+        // Far in the future: that ack has long arrived back.
+        t.post(0, 1, 2, 0, vec![0u8; 64], 1_000_000_000);
+        let h = t.health(0);
+        assert_eq!(h[0].in_flight, 1, "old frame retired, new one in flight");
+        assert_eq!(t.relia_stats(0).acks, 1);
+    }
+
+    /// `purge_matching` removes matching UMQ buckets and fixes the tag
+    /// index and depth; unrelated backlog still matches afterwards.
+    #[test]
+    fn purge_matching_cleans_buckets_and_depth() {
+        let t = transport(3, 1);
+        let base = coll_tag(17);
+        t.post(0, 2, base, 0, vec![1], 0);
+        t.post(0, 2, base, 1, vec![2], 0);
+        t.post(1, 2, base + (3 << 44), 0, vec![3], 0);
+        t.post(0, 2, 5, 0, vec![4], 0); // user-tag survivor
+        assert_eq!(t.pending(2), 4);
+        let removed = t.purge_matching(2, |tag| tag >= COLL_TAG_BASE);
+        assert_eq!(removed, 3);
+        assert_eq!(t.pending(2), 1);
+        assert!(t.try_match(2, Some(0), base).is_none());
+        assert!(t.try_match(2, Some(1), base + (3 << 44)).is_none());
+        assert_eq!(t.try_match(2, Some(0), 5).unwrap().body, vec![4]);
+        assert_eq!(t.pending(2), 0);
     }
 
     #[test]

@@ -1,0 +1,520 @@
+//! Deterministic fault-injection plane for the simulated fabric.
+//!
+//! A [`FaultPlane`] sits between `Transport::post` and the channel model
+//! and decides, per wire frame, whether the fabric drops, duplicates,
+//! bit-corrupts, reorders, delay-spikes, or partitions it. Every decision
+//! is a pure function of `(seed, src, dst, wire-seq, attempt, salt)`
+//! through a splitmix64-style mixer, so a failing chaos run replays
+//! *exactly* under the same seed regardless of thread scheduling: the
+//! wire-sequence counter of a directed link is advanced only by that
+//! link's sender, and senders post in program order.
+//!
+//! Faults model the *inter-node* fabric only — intra-node delivery is
+//! shared memory and bypasses the plane entirely, exactly as it bypasses
+//! the NIC channel model.
+//!
+//! The plane is configured by a [`FaultSpec`], either built in code or
+//! parsed from the `CRYPTMPI_FAULTS` environment variable:
+//!
+//! ```text
+//! CRYPTMPI_FAULTS=drop=0.01,dup=0.005,corrupt=0.002,seed=42
+//! ```
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::vtime::us_to_ns;
+
+/// Probabilities and reliability-protocol knobs for one fault plane.
+///
+/// All rates are per wire frame *attempt* on a directed inter-node link.
+/// `partition_us == 0` means a triggered partition never heals.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultSpec {
+    /// Probability a frame attempt is silently lost.
+    pub drop: f64,
+    /// Probability a delivered frame is followed by a duplicate copy.
+    pub dup: f64,
+    /// Probability a delivered frame has one wire bit flipped.
+    pub corrupt: f64,
+    /// Probability a delivered frame is held one extra transit so a
+    /// back-to-back successor overtakes it (arrival-time inversion).
+    pub reorder: f64,
+    /// Probability a delivered frame suffers a latency spike.
+    pub delay: f64,
+    /// Size of a latency spike, microseconds.
+    pub delay_us: f64,
+    /// Probability a frame attempt trips a transient link partition
+    /// (the tripping frame itself is lost).
+    pub partition: f64,
+    /// Partition healing time, microseconds; 0 = permanent.
+    pub partition_us: f64,
+    /// Seed for every deterministic decision.
+    pub seed: u64,
+    /// Base retransmission timeout, microseconds.
+    pub rto_us: f64,
+    /// Exponential backoff factor per retry (clamped to ≥ 1).
+    pub rto_factor: f64,
+    /// Retransmissions after the first attempt before the peer is
+    /// declared unreachable.
+    pub max_retries: u32,
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        FaultSpec {
+            drop: 0.0,
+            dup: 0.0,
+            corrupt: 0.0,
+            reorder: 0.0,
+            delay: 0.0,
+            delay_us: 200.0,
+            partition: 0.0,
+            partition_us: 0.0,
+            seed: 1,
+            rto_us: 100.0,
+            rto_factor: 2.0,
+            max_retries: 4,
+        }
+    }
+}
+
+impl FaultSpec {
+    /// All-zero rates: the reliability machinery runs but no fault ever
+    /// fires. Used by the invisibility tests and the zero-overhead bench.
+    pub fn zero() -> Self {
+        FaultSpec::default()
+    }
+
+    pub fn with_drop(mut self, p: f64) -> Self {
+        self.drop = p;
+        self
+    }
+
+    pub fn with_dup(mut self, p: f64) -> Self {
+        self.dup = p;
+        self
+    }
+
+    pub fn with_corrupt(mut self, p: f64) -> Self {
+        self.corrupt = p;
+        self
+    }
+
+    pub fn with_reorder(mut self, p: f64) -> Self {
+        self.reorder = p;
+        self
+    }
+
+    pub fn with_delay(mut self, p: f64, us: f64) -> Self {
+        self.delay = p;
+        self.delay_us = us;
+        self
+    }
+
+    pub fn with_partition(mut self, p: f64, heal_us: f64) -> Self {
+        self.partition = p;
+        self.partition_us = heal_us;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_retry(mut self, rto_us: f64, factor: f64, max_retries: u32) -> Self {
+        self.rto_us = rto_us;
+        self.rto_factor = factor;
+        self.max_retries = max_retries;
+        self
+    }
+
+    /// True when no fault can ever fire (the reliability layer still
+    /// runs if such a spec is attached; it just never observes a fault).
+    pub fn is_zero(&self) -> bool {
+        self.drop == 0.0
+            && self.dup == 0.0
+            && self.corrupt == 0.0
+            && self.reorder == 0.0
+            && self.delay == 0.0
+            && self.partition == 0.0
+    }
+
+    /// The retransmission policy this spec implies.
+    pub fn retry(&self) -> RetryPolicy {
+        RetryPolicy {
+            base_ns: us_to_ns(self.rto_us).max(1),
+            factor: self.rto_factor.max(1.0),
+            max_retries: self.max_retries,
+        }
+    }
+
+    /// Parse a `key=value,key=value` spec string (the `CRYPTMPI_FAULTS`
+    /// format). Unknown keys and out-of-range probabilities are errors.
+    pub fn parse(s: &str) -> Result<FaultSpec, String> {
+        let mut spec = FaultSpec::default();
+        for item in s.split(',') {
+            let item = item.trim();
+            if item.is_empty() {
+                continue;
+            }
+            let (key, val) = item
+                .split_once('=')
+                .ok_or_else(|| format!("fault spec item `{item}` is not key=value"))?;
+            let fval = || -> Result<f64, String> {
+                val.parse::<f64>().map_err(|_| format!("bad value `{val}` for `{key}`"))
+            };
+            let prob = || -> Result<f64, String> {
+                let p = fval()?;
+                if (0.0..=1.0).contains(&p) {
+                    Ok(p)
+                } else {
+                    Err(format!("probability `{key}={val}` outside [0,1]"))
+                }
+            };
+            match key.trim() {
+                "drop" => spec.drop = prob()?,
+                "dup" => spec.dup = prob()?,
+                "corrupt" => spec.corrupt = prob()?,
+                "reorder" => spec.reorder = prob()?,
+                "delay" => spec.delay = prob()?,
+                "delay_us" => spec.delay_us = fval()?,
+                "partition" | "part" => spec.partition = prob()?,
+                "partition_us" | "part_us" => spec.partition_us = fval()?,
+                "seed" => {
+                    spec.seed =
+                        val.parse::<u64>().map_err(|_| format!("bad seed `{val}`"))?;
+                }
+                "rto_us" => spec.rto_us = fval()?,
+                "rto_factor" => spec.rto_factor = fval()?,
+                "retries" | "max_retries" => {
+                    spec.max_retries =
+                        val.parse::<u32>().map_err(|_| format!("bad retries `{val}`"))?;
+                }
+                other => return Err(format!("unknown fault spec key `{other}`")),
+            }
+        }
+        Ok(spec)
+    }
+
+    /// Read `CRYPTMPI_FAULTS` from the environment; `None` when unset or
+    /// empty. Panics on a malformed spec — silent fallback to a perfect
+    /// network would invert the operator's intent.
+    pub fn from_env() -> Option<FaultSpec> {
+        let raw = std::env::var("CRYPTMPI_FAULTS").ok()?;
+        if raw.trim().is_empty() {
+            return None;
+        }
+        Some(FaultSpec::parse(&raw).unwrap_or_else(|e| panic!("CRYPTMPI_FAULTS: {e}")))
+    }
+}
+
+/// Capped exponential backoff schedule for retransmissions.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RetryPolicy {
+    pub base_ns: u64,
+    pub factor: f64,
+    pub max_retries: u32,
+}
+
+/// Backoff growth is capped at this multiple of the base timeout.
+const BACKOFF_CAP: f64 = 64.0;
+
+impl RetryPolicy {
+    /// Timeout waited after attempt `attempt` (0-based) fails, with up to
+    /// +25% deterministic jitter (`jitter01` in `[0,1)`). Capped at
+    /// `BACKOFF_CAP`× the base so a long retry chain cannot overflow the
+    /// virtual clock.
+    pub fn timeout_ns(&self, attempt: u32, jitter01: f64) -> u64 {
+        let factor = self.factor.max(1.0);
+        let scale = factor.powi(attempt.min(63) as i32).min(BACKOFF_CAP);
+        let t = self.base_ns as f64 * scale * (1.0 + 0.25 * jitter01.clamp(0.0, 1.0));
+        (t.round() as u64).max(1)
+    }
+}
+
+/// Decision salts: one namespace per fault kind so the rolls of a frame
+/// are independent of each other.
+const SALT_DROP: u64 = 1;
+const SALT_DUP: u64 = 2;
+const SALT_CORRUPT: u64 = 3;
+const SALT_REORDER: u64 = 4;
+const SALT_DELAY: u64 = 5;
+const SALT_PARTITION: u64 = 6;
+const SALT_JITTER: u64 = 7;
+const SALT_BIT: u64 = 8;
+
+/// splitmix64 finalizer — the statistical workhorse behind every roll.
+#[inline]
+fn mix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// Mutable per-directed-link state. Only the link's sender thread ever
+/// touches its entry, so determinism survives arbitrary rank scheduling.
+#[derive(Default)]
+struct LinkState {
+    /// Next wire-frame sequence number (counts logical frames, not
+    /// retransmission attempts).
+    next_wseq: u64,
+    /// Virtual time until which the link is partitioned; `u64::MAX` is a
+    /// permanent partition, 0 means none pending.
+    partition_until: u64,
+}
+
+/// The fault plane itself: a spec plus per-link counters/partition state.
+pub struct FaultPlane {
+    spec: FaultSpec,
+    links: Mutex<HashMap<(usize, usize), LinkState>>,
+}
+
+impl FaultPlane {
+    pub fn new(spec: FaultSpec) -> Self {
+        FaultPlane { spec, links: Mutex::new(HashMap::new()) }
+    }
+
+    pub fn spec(&self) -> &FaultSpec {
+        &self.spec
+    }
+
+    /// Raw 64-bit roll for `(src, dst, wseq, attempt, salt)`.
+    fn roll(&self, src: usize, dst: usize, wseq: u64, attempt: u32, salt: u64) -> u64 {
+        let mut h = mix(self.spec.seed ^ 0x6a09_e667_f3bc_c908);
+        h = mix(h ^ (src as u64).wrapping_mul(0xa076_1d64_78bd_642f));
+        h = mix(h ^ (dst as u64).wrapping_mul(0xe703_7ed1_a0b4_28db));
+        h = mix(h ^ wseq);
+        h = mix(h ^ (attempt as u64) << 8);
+        mix(h ^ salt)
+    }
+
+    /// Bernoulli trial at probability `p` from a raw roll.
+    fn chance(p: f64, h: u64) -> bool {
+        // 53 uniform mantissa bits — exact for p = 0 and p = 1.
+        p > 0.0 && ((h >> 11) as f64) < p * (1u64 << 53) as f64
+    }
+
+    /// Claim the next wire-frame sequence number for `src → dst`.
+    pub fn next_wseq(&self, src: usize, dst: usize) -> u64 {
+        let mut links = self.links.lock().unwrap();
+        let st = links.entry((src, dst)).or_default();
+        let w = st.next_wseq;
+        st.next_wseq += 1;
+        w
+    }
+
+    /// Is attempt `attempt` of frame `wseq` lost to a drop?
+    pub fn dropped(&self, src: usize, dst: usize, wseq: u64, attempt: u32) -> bool {
+        Self::chance(self.spec.drop, self.roll(src, dst, wseq, attempt, SALT_DROP))
+    }
+
+    /// Is the link partitioned at `depart_ns` (or does this very attempt
+    /// trip a new partition)? A partitioned attempt is lost.
+    pub fn partitioned(
+        &self,
+        src: usize,
+        dst: usize,
+        wseq: u64,
+        attempt: u32,
+        depart_ns: u64,
+    ) -> bool {
+        let in_window = {
+            let mut links = self.links.lock().unwrap();
+            let st = links.entry((src, dst)).or_default();
+            st.partition_until != 0 && depart_ns < st.partition_until
+        };
+        if in_window {
+            return true;
+        }
+        if Self::chance(self.spec.partition, self.roll(src, dst, wseq, attempt, SALT_PARTITION)) {
+            let until = if self.spec.partition_us == 0.0 {
+                u64::MAX
+            } else {
+                depart_ns.saturating_add(us_to_ns(self.spec.partition_us)).max(1)
+            };
+            let mut links = self.links.lock().unwrap();
+            links.entry((src, dst)).or_default().partition_until = until;
+            return true;
+        }
+        false
+    }
+
+    /// Is the delivered frame followed by a duplicate copy on the wire?
+    pub fn duplicated(&self, src: usize, dst: usize, wseq: u64, attempt: u32) -> bool {
+        Self::chance(self.spec.dup, self.roll(src, dst, wseq, attempt, SALT_DUP))
+    }
+
+    /// If the delivered frame is bit-corrupted, the raw 64-bit seed the
+    /// caller reduces modulo the frame's bit length.
+    pub fn corrupt_bit(&self, src: usize, dst: usize, wseq: u64, attempt: u32) -> Option<u64> {
+        if Self::chance(self.spec.corrupt, self.roll(src, dst, wseq, attempt, SALT_CORRUPT)) {
+            Some(self.roll(src, dst, wseq, attempt, SALT_BIT))
+        } else {
+            None
+        }
+    }
+
+    /// Latency spike added to the delivered frame's arrival, if any.
+    pub fn delay_spike_ns(&self, src: usize, dst: usize, wseq: u64, attempt: u32) -> Option<u64> {
+        if Self::chance(self.spec.delay, self.roll(src, dst, wseq, attempt, SALT_DELAY)) {
+            Some(us_to_ns(self.spec.delay_us).max(1))
+        } else {
+            None
+        }
+    }
+
+    /// Is the delivered frame held back so a successor overtakes it?
+    pub fn reordered(&self, src: usize, dst: usize, wseq: u64, attempt: u32) -> bool {
+        Self::chance(self.spec.reorder, self.roll(src, dst, wseq, attempt, SALT_REORDER))
+    }
+
+    /// Deterministic jitter in `[0,1)` for backoff randomization.
+    pub fn jitter01(&self, src: usize, dst: usize, wseq: u64, attempt: u32) -> f64 {
+        (self.roll(src, dst, wseq, attempt, SALT_JITTER) >> 11) as f64 / (1u64 << 53) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_issue_example() {
+        let s = FaultSpec::parse("drop=0.01,dup=0.005,corrupt=0.002,seed=42").unwrap();
+        assert_eq!(s.drop, 0.01);
+        assert_eq!(s.dup, 0.005);
+        assert_eq!(s.corrupt, 0.002);
+        assert_eq!(s.seed, 42);
+        assert!(!s.is_zero());
+    }
+
+    #[test]
+    fn parse_all_keys_and_aliases() {
+        let s = FaultSpec::parse(
+            "drop=0.1, dup=0.2, corrupt=0.3, reorder=0.4, delay=0.5, delay_us=7, \
+             part=0.6, part_us=9, seed=3, rto_us=50, rto_factor=3, retries=7",
+        )
+        .unwrap();
+        assert_eq!(s.reorder, 0.4);
+        assert_eq!(s.delay_us, 7.0);
+        assert_eq!(s.partition, 0.6);
+        assert_eq!(s.partition_us, 9.0);
+        assert_eq!(s.rto_us, 50.0);
+        assert_eq!(s.rto_factor, 3.0);
+        assert_eq!(s.max_retries, 7);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(FaultSpec::parse("drop=2.0").is_err()); // probability > 1
+        assert!(FaultSpec::parse("drop=-0.1").is_err());
+        assert!(FaultSpec::parse("frobnicate=1").is_err()); // unknown key
+        assert!(FaultSpec::parse("drop").is_err()); // not key=value
+        assert!(FaultSpec::parse("seed=abc").is_err());
+        // Empty items are tolerated (trailing comma etc.).
+        assert!(FaultSpec::parse("drop=0.5,,").is_ok());
+        assert!(FaultSpec::parse("").unwrap().is_zero());
+    }
+
+    #[test]
+    fn rolls_are_deterministic_and_distinct_per_key() {
+        let p = FaultPlane::new(FaultSpec::default().with_seed(7));
+        let q = FaultPlane::new(FaultSpec::default().with_seed(7));
+        for (s, d, w, a) in [(0usize, 1usize, 0u64, 0u32), (1, 0, 5, 2), (3, 9, 1000, 1)] {
+            assert_eq!(p.roll(s, d, w, a, SALT_DROP), q.roll(s, d, w, a, SALT_DROP));
+        }
+        // Different seed, src/dst order, wseq, attempt, or salt ⇒
+        // different roll (overwhelmingly; these fixed points must differ).
+        let r = FaultPlane::new(FaultSpec::default().with_seed(8));
+        assert_ne!(p.roll(0, 1, 0, 0, SALT_DROP), r.roll(0, 1, 0, 0, SALT_DROP));
+        assert_ne!(p.roll(0, 1, 0, 0, SALT_DROP), p.roll(1, 0, 0, 0, SALT_DROP));
+        assert_ne!(p.roll(0, 1, 0, 0, SALT_DROP), p.roll(0, 1, 1, 0, SALT_DROP));
+        assert_ne!(p.roll(0, 1, 0, 0, SALT_DROP), p.roll(0, 1, 0, 1, SALT_DROP));
+        assert_ne!(p.roll(0, 1, 0, 0, SALT_DROP), p.roll(0, 1, 0, 0, SALT_DUP));
+    }
+
+    #[test]
+    fn drop_rate_tracks_probability() {
+        let p = FaultPlane::new(FaultSpec::default().with_drop(0.1).with_seed(11));
+        let n = 100_000u64;
+        let hits = (0..n).filter(|&w| p.dropped(0, 1, w, 0)).count();
+        let rate = hits as f64 / n as f64;
+        assert!((rate - 0.1).abs() < 0.01, "empirical drop rate {rate}");
+        // Extremes are exact.
+        let never = FaultPlane::new(FaultSpec::default().with_seed(11));
+        assert!((0..1000).all(|w| !never.dropped(0, 1, w, 0)));
+        let always = FaultPlane::new(FaultSpec::default().with_drop(1.0).with_seed(11));
+        assert!((0..1000).all(|w| always.dropped(0, 1, w, 0)));
+    }
+
+    #[test]
+    fn wseq_counts_per_directed_link() {
+        let p = FaultPlane::new(FaultSpec::default());
+        assert_eq!(p.next_wseq(0, 1), 0);
+        assert_eq!(p.next_wseq(0, 1), 1);
+        assert_eq!(p.next_wseq(1, 0), 0); // reverse direction independent
+        assert_eq!(p.next_wseq(0, 2), 0);
+        assert_eq!(p.next_wseq(0, 1), 2);
+    }
+
+    #[test]
+    fn partition_window_traps_and_heals() {
+        let spec = FaultSpec::default().with_partition(1.0, 100.0).with_seed(5);
+        let p = FaultPlane::new(spec);
+        // First attempt trips the partition and is lost.
+        assert!(p.partitioned(0, 1, 0, 0, 1_000));
+        // Attempts inside the 100 µs window are lost without re-rolling.
+        assert!(p.partitioned(0, 1, 1, 0, 50_000));
+        // After healing the roll fires again (p=1.0 ⇒ re-trips), so probe
+        // with a zero-rate plane sharing the window instead: departure past
+        // the window with partition probability reset must pass.
+        let healed = FaultPlane::new(FaultSpec::default().with_seed(5));
+        assert!(!healed.partitioned(0, 1, 2, 0, 200_000));
+        // Permanent partition: heal time 0 never clears.
+        let perm = FaultPlane::new(FaultSpec::default().with_partition(1.0, 0.0));
+        assert!(perm.partitioned(2, 3, 0, 0, 0));
+        assert!(perm.partitioned(2, 3, 1, 0, u64::MAX - 1));
+        // The reverse direction is unaffected.
+        assert!(!perm.partitioned(3, 2, 0, 0, 0));
+    }
+
+    #[test]
+    fn backoff_grows_and_caps() {
+        let pol = RetryPolicy { base_ns: 1_000, factor: 2.0, max_retries: 10 };
+        let t0 = pol.timeout_ns(0, 0.0);
+        let t1 = pol.timeout_ns(1, 0.0);
+        let t3 = pol.timeout_ns(3, 0.0);
+        assert_eq!(t0, 1_000);
+        assert_eq!(t1, 2_000);
+        assert_eq!(t3, 8_000);
+        // Cap: 2^40 would overflow any sane schedule; clamps at 64×.
+        assert_eq!(pol.timeout_ns(40, 0.0), 64_000);
+        // Jitter adds at most 25%.
+        assert_eq!(pol.timeout_ns(0, 1.0), 1_250);
+        // Degenerate factor < 1 clamps to constant backoff.
+        let flat = RetryPolicy { base_ns: 500, factor: 0.5, max_retries: 2 };
+        assert_eq!(flat.timeout_ns(5, 0.0), 500);
+    }
+
+    #[test]
+    fn jitter_in_unit_interval() {
+        let p = FaultPlane::new(FaultSpec::default().with_seed(9));
+        for w in 0..1000 {
+            let j = p.jitter01(0, 1, w, 0);
+            assert!((0.0..1.0).contains(&j));
+        }
+    }
+
+    #[test]
+    fn corrupt_bit_seed_varies() {
+        let p = FaultPlane::new(FaultSpec::default().with_corrupt(1.0).with_seed(3));
+        let a = p.corrupt_bit(0, 1, 0, 0).unwrap();
+        let b = p.corrupt_bit(0, 1, 1, 0).unwrap();
+        assert_ne!(a, b);
+        let q = FaultPlane::new(FaultSpec::default().with_seed(3));
+        assert!(q.corrupt_bit(0, 1, 0, 0).is_none());
+    }
+}

@@ -2,8 +2,10 @@
 //! contention, node topology, and the system profiles (Noleland InfiniBand,
 //! PSC Bridges Omni-Path, 10 GbE, 40 Gb IB) used by the paper's evaluation.
 
+pub mod faults;
 pub mod profile;
 
+pub use faults::{FaultPlane, FaultSpec, RetryPolicy};
 pub use profile::{CryptoProfile, NetConfig, SystemProfile};
 
 use std::sync::Mutex;

@@ -10,6 +10,7 @@
 //! cluster actually runs; the profile only stores scaling shape and
 //! relative factors.
 
+use super::faults::FaultSpec;
 use crate::vtime::calib::CryptoCalibration;
 
 /// Hockney-model network constants (µs, µs/byte).
@@ -25,6 +26,12 @@ pub struct NetConfig {
     pub intra_rate: f64,
     /// Intra-node latency, µs.
     pub intra_alpha_us: f64,
+    /// Optional fault-injection plane for the inter-node fabric
+    /// (`net::faults`). `None` — the default for every built-in profile —
+    /// means a perfect network *and* that the reliability layer is
+    /// bypassed entirely: the zero-fault wire image and virtual-clock
+    /// trace are byte/tick-identical to a build without the fault plane.
+    pub faults: Option<FaultSpec>,
 }
 
 impl NetConfig {
@@ -161,6 +168,7 @@ impl SystemProfile {
                 eager_threshold: 17 * 1024,
                 intra_rate: 20_000.0,
                 intra_alpha_us: 0.6,
+                faults: None,
             },
             crypto: CryptoProfile {
                 hw: true,
@@ -193,6 +201,7 @@ impl SystemProfile {
                 eager_threshold: 17 * 1024,
                 intra_rate: 14_000.0,
                 intra_alpha_us: 0.8,
+                faults: None,
             },
             crypto: CryptoProfile {
                 hw: true,
@@ -221,6 +230,7 @@ impl SystemProfile {
                 eager_threshold: 32 * 1024,
                 intra_rate: 20_000.0,
                 intra_alpha_us: 0.6,
+                faults: None,
             },
             crypto: CryptoProfile {
                 hw: true,
@@ -251,6 +261,7 @@ impl SystemProfile {
                 eager_threshold: 17 * 1024,
                 intra_rate: 20_000.0,
                 intra_alpha_us: 0.6,
+                faults: None,
             },
             crypto: CryptoProfile {
                 hw: true,

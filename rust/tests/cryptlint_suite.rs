@@ -187,6 +187,27 @@ pub use transport::{coll_tag, COLL_TAG_BASE};
     assert_eq!(rl("src/mpi/mod.rs", use_decl), vec![]);
 }
 
+#[test]
+fn tag_namespace_confines_reliability_acks_to_transport() {
+    // The reliability ack namespace is tighter than the collective one:
+    // even the collectives layer must never mint ack tags.
+    let src = r#"
+fn forge_ack(wseq: u64) -> u64 {
+    RELIA_TAG_BASE | wseq
+}
+"#;
+    assert_eq!(rl("src/coordinator/collectives.rs", src), vec![(RULE_TAG_NS, 3)]);
+    assert_eq!(rl("src/apps/rogue.rs", src), vec![(RULE_TAG_NS, 3)]);
+    assert_eq!(rl("src/mpi/transport.rs", src), vec![]);
+
+    // Importing the name is still not constructing a tag.
+    let use_decl = r#"
+pub use transport::ack_tag;
+use crate::mpi::transport::RELIA_TAG_BASE;
+"#;
+    assert_eq!(rl("src/mpi/mod.rs", use_decl), vec![]);
+}
+
 // ------------------------------------------------------------ key hygiene
 
 #[test]
