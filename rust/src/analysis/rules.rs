@@ -19,6 +19,11 @@
 //!   …) inside `scope_run` / `scope_run_ordered` worker-job closures
 //!   (`scope_run_ordered`'s completion closure runs on the caller thread
 //!   and is allowed to block).
+//! * [`RULE_TRACE`] — span/metric label arguments (`.span(…)`,
+//!   `.instant(…)` and the rank/transport trace helpers) must not derive
+//!   from key-owning values: the trace plane writes plaintext JSON that
+//!   leaves the process, so it reuses the secret-taint machinery with
+//!   the trace emitters as sinks.
 //!
 //! A per-file allow marker — a comment naming `cryptlint-allow` with the
 //! rule id in parentheses and a `: reason` — suppresses that rule for the
@@ -33,9 +38,11 @@ pub const RULE_UNSAFE: &str = "unsafe-audit";
 pub const RULE_TAG_NS: &str = "tag-namespace";
 pub const RULE_KEY: &str = "key-hygiene";
 pub const RULE_POOL: &str = "pool-discipline";
+pub const RULE_TRACE: &str = "trace-hygiene";
 
 /// Every shipped rule id.
-pub const RULES: &[&str] = &[RULE_SECRET, RULE_UNSAFE, RULE_TAG_NS, RULE_KEY, RULE_POOL];
+pub const RULES: &[&str] =
+    &[RULE_SECRET, RULE_UNSAFE, RULE_TAG_NS, RULE_KEY, RULE_POOL, RULE_TRACE];
 
 /// Types that *own* raw key material (schedules, subkey tables). They must
 /// wipe on Drop; values of these types are secret for flow purposes.
@@ -105,6 +112,23 @@ const TAG_NS_CONFINED: &[(&str, &[&str])] = &[
 /// Method names that block inside worker closures.
 const BLOCKING_CALLS: &[&str] =
     &["lock", "recv", "recv_timeout", "join", "wait", "wait_timeout", "park"];
+
+/// Trace-plane emitter methods ([`RULE_TRACE`] sinks). Only *method*
+/// calls count (`recv.span(…)` — an ident/`)`/`self` receiver followed
+/// by `.name(`): the `pub fn span(` definitions in `trace::Tracer` are
+/// not sinks, and neither is a free function that happens to share a
+/// name.
+const TRACE_SINKS: &[&str] = &[
+    "span",
+    "instant",
+    "tr_span",
+    "tr_instant",
+    "trace_span",
+    "trace_instant",
+    "trace_match",
+    "trace_coll_stage",
+    "trace_coll_teardown",
+];
 
 /// One rule violation.
 #[derive(Debug, Clone)]
@@ -1077,6 +1101,45 @@ impl<'a> Linter<'a> {
                             continue;
                         }
                     }
+                }
+            }
+
+            // Trace sinks: `recv.span(…)`-shaped method calls. Span and
+            // instant args travel into plaintext trace JSON that leaves
+            // the process, so no secret-tainted value may appear among
+            // them — not even via a method call on the secret (its
+            // length, a debug digest, …) that the other sinks exempt.
+            if k == Kind::Ident
+                && TRACE_SINKS.contains(&t.as_str())
+                && cj > 0
+                && self.ctext(cj - 1) == "."
+                && cj + 1 < self.code.len()
+                && self.ctext(cj + 1) == "("
+            {
+                if let Some(close) = self.match_close(cj + 1, "(", ")") {
+                    let mut hits: Vec<(u32, String)> = Vec::new();
+                    for ck in (cj + 2)..close {
+                        if self.ckind(ck) != Kind::Ident {
+                            continue;
+                        }
+                        let tt = self.ctext(ck);
+                        if secret.contains(tt) {
+                            hits.push((
+                                self.cline(ck),
+                                format!(
+                                    "secret-typed value `{tt}` flows into trace sink \
+                                     `.{t}(…)` (key-derived data must never reach \
+                                     span/metric args)"
+                                ),
+                            ));
+                        }
+                    }
+                    for (line, msg) in hits {
+                        self.emit(RULE_TRACE, line, msg);
+                    }
+                    // Fall through without skipping: the argument span is
+                    // still scanned by the other sinks (indexing, raw
+                    // comparisons) on subsequent iterations.
                 }
             }
 

@@ -1396,6 +1396,180 @@ pub fn faults() -> Table {
     faults_with(96 * 1024, 3)
 }
 
+/// The `trace` runner over an explicit message size / iteration count.
+/// Workload: a windowed pipelined pair exchange (inter-node, chopped
+/// path) plus a nonblocking allreduce, under a low-rate deterministic
+/// fault plane — so the emitted timeline carries every span/instant
+/// family of DESIGN.md §15 at once. Every invocation (debug or
+/// release) hard-asserts:
+///
+///   * disarmed invisibility — the same workload with tracing off is
+///     tick-identical per rank and reports all-zero `TraceStats`;
+///   * schema validity — the rendered Perfetto document round-trips
+///     through the in-repo `trace::validate` with one pid per rank;
+///   * pipeline overlap — some worker-lane `seal` span of message
+///     `i+1` begins inside message `i`'s `send_window` span.
+fn trace_with(size: usize, iters: usize) -> Table {
+    use crate::net::FaultSpec;
+    use crate::trace::TraceSpec;
+
+    let mut t = Table::new(
+        "trace",
+        "Tracing plane: Perfetto timelines + latency histograms, armed vs disarmed, noleland IB",
+        &[
+            "mode",
+            "events",
+            "dropped",
+            "rings",
+            "spans",
+            "instants",
+            "p50_send_us",
+            "p95_send_us",
+            "tick_identical",
+        ],
+    );
+    let mut msg = vec![0u8; size];
+    crate::crypto::rand::SimRng::new(size as u64 + 17).fill(&mut msg);
+    let spec =
+        FaultSpec::zero().with_drop(0.01).with_dup(0.005).with_corrupt(0.002).with_seed(42);
+    let run = |mode: SecurityMode, trace: Option<TraceSpec>| {
+        let mut cfg = ClusterConfig::pingpong(SystemProfile::noleland(), mode);
+        cfg.ranks = 4;
+        cfg.ranks_per_node = 2;
+        cfg.profile.net.faults = Some(spec.clone());
+        cfg.profile.net.trace = trace;
+        let msg = msg.clone();
+        let (outs, rep) = run_cluster(&cfg, move |rank| {
+            // Windowed pair exchange across the node boundary: ranks
+            // 0/1 stream to 2/3 with two sends in flight, so message
+            // i+1 seals while message i drains — the overlap the
+            // worker-lane spans must show.
+            let peer = rank.id() ^ 2;
+            let mut ok = true;
+            if rank.id() < 2 {
+                let mut pending: VecDeque<_> = VecDeque::new();
+                for i in 0..iters as u64 {
+                    pending.push_back(rank.isend(peer, i, &msg));
+                    if pending.len() >= 2 {
+                        rank.wait_send(pending.pop_front().expect("window"));
+                    }
+                }
+                for req in pending {
+                    rank.wait_send(req);
+                }
+            } else {
+                for i in 0..iters as u64 {
+                    ok &= rank.recv(peer, i) == msg;
+                }
+            }
+            // Nonblocking allreduce: collective stage spans.
+            let v = [rank.id() as f64 + 1.0; 32];
+            let req = rank.iallreduce_sum(&v);
+            let sum = req.wait(rank).expect("allreduce failed").into_f64s();
+            ok &= sum.iter().all(|&x| x == 10.0);
+            ok
+        });
+        assert!(outs.iter().all(|&x| x), "{mode:?}: payload corrupted end-to-end");
+        rep
+    };
+    let mut cryptmpi_doc: Option<String> = None;
+    for mode in [
+        SecurityMode::Unencrypted,
+        SecurityMode::IpsecSim,
+        SecurityMode::Naive,
+        SecurityMode::CryptMpi,
+    ] {
+        let base = run(mode, None);
+        // Disarmed half of the invariant: no trace buffers, no events,
+        // no timeline on any rank.
+        assert!(
+            base.trace_totals().is_zero(),
+            "{mode:?}: disarmed run must report all-zero TraceStats"
+        );
+        assert!(
+            base.per_rank.iter().all(|r| r.trace.is_none()),
+            "{mode:?}: disarmed run must carry no rank timelines"
+        );
+        assert!(base.perfetto().is_none(), "{mode:?}: disarmed run must render no document");
+        let armed = run(mode, Some(TraceSpec::default()));
+        // Armed half: same virtual clock, tick for tick, on every rank.
+        let identical = base
+            .per_rank
+            .iter()
+            .zip(armed.per_rank.iter())
+            .all(|(b, a)| b.elapsed_ns == a.elapsed_ns);
+        assert!(identical, "{mode:?}: arming the tracer shifted the virtual clock");
+        let totals = armed.trace_totals();
+        assert!(totals.events > 0, "{mode:?}: armed run recorded no events");
+        assert_eq!(
+            totals.ring_allocs,
+            2 * armed.per_rank.len() as u64,
+            "{mode:?}: exactly two ring allocations per rank (rank-side + transport-side)"
+        );
+        // Latency histograms fill whether or not tracing is armed.
+        let lat = armed.latency_totals();
+        assert!(lat.send.count > 0 && lat.recv.count > 0, "{mode:?}: empty p2p histograms");
+        let doc = armed.perfetto().expect("armed run renders a document");
+        let sum = crate::trace::validate::validate(&doc)
+            .unwrap_or_else(|e| panic!("{mode:?}: emitted trace fails validation: {e}"));
+        assert!(sum.spans > 0, "{mode:?}: document carries no spans");
+        assert_eq!(sum.pids.len(), armed.per_rank.len(), "{mode:?}: one pid per rank");
+        if mode == SecurityMode::CryptMpi {
+            // Overlap proof on the sender timeline: consecutive
+            // send-window spans interleave, and a worker-lane seal of
+            // the later message begins inside the earlier window.
+            let rt = armed.per_rank[0].trace.as_ref().expect("rank 0 timeline");
+            let mut windows: Vec<(u64, u64)> = rt
+                .events
+                .iter()
+                .filter(|e| e.name == "send_window")
+                .map(|e| (e.begin_ns, e.end_ns))
+                .collect();
+            windows.sort_unstable();
+            let seals: Vec<u64> = rt
+                .events
+                .iter()
+                .filter(|e| e.name == "seal" && e.lane > 0)
+                .map(|e| e.begin_ns)
+                .collect();
+            let overlapped = windows.windows(2).any(|w| {
+                let (_, e0) = w[0];
+                let (b1, _) = w[1];
+                b1 < e0 && seals.iter().any(|&s| s >= b1 && s < e0)
+            });
+            assert!(
+                overlapped,
+                "CryptMpi: no seal span of message i+1 nested under message i's send window"
+            );
+            assert!(lat.seal.count > 0 && lat.open.count > 0, "CryptMpi: empty crypto lanes");
+            cryptmpi_doc = Some(doc.clone());
+        }
+        t.row(vec![
+            mode.name().into(),
+            totals.events.to_string(),
+            totals.dropped.to_string(),
+            totals.ring_allocs.to_string(),
+            sum.spans.to_string(),
+            sum.instants.to_string(),
+            f(lat.send.p50_ns() as f64 / 1000.0, 1),
+            f(lat.send.p95_ns() as f64 / 1000.0, 1),
+            if identical { "yes".into() } else { "NO".into() },
+        ]);
+    }
+    t.artifact("TRACE_trace.json", cryptmpi_doc.expect("CryptMpi document rendered"));
+    t.note("Workload: 4 ranks / 2 nodes, windowed (depth 2) inter-node pair streams + iallreduce, fault plane drop=1% dup=0.5% corrupt=0.2% seed=42.");
+    t.note("Hard gates (every run): disarmed run tick-identical with zero TraceStats and no timelines; armed document validates with one pid per rank; CryptMpi shows a seal span of message i+1 inside message i's send window.");
+    t.note("TRACE_trace.json (Chrome trace-event / Perfetto JSON) is written next to the CSV; load it at ui.perfetto.dev or chrome://tracing, or check it with the tracecheck binary.");
+    t
+}
+
+/// This repo's tracing-plane report: span timelines and per-op latency
+/// quantiles with the zero-overhead-when-off gate and the
+/// `TRACE_trace.json` artifact.
+pub fn trace() -> Table {
+    trace_with(256 * 1024, 3)
+}
+
 /// Run one experiment by name.
 pub fn run_experiment(name: &str) -> Option<Table> {
     Some(match name {
@@ -1421,15 +1595,16 @@ pub fn run_experiment(name: &str) -> Option<Table> {
         "overlap" => overlap(),
         "pipeline" => pipeline(),
         "faults" => faults(),
+        "trace" => trace(),
         _ => return None,
     })
 }
 
 /// All experiment names: paper order, then the repo's own perf reports.
-pub const ALL_EXPERIMENTS: [&str; 22] = [
+pub const ALL_EXPERIMENTS: [&str; 23] = [
     "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "table1",
     "table2", "table3", "zerocopy", "collectives", "matching", "smoke", "gcm", "datatype",
-    "overlap", "pipeline", "faults",
+    "overlap", "pipeline", "faults", "trace",
 ];
 
 #[cfg(test)]
@@ -1451,7 +1626,8 @@ mod tests {
                     || name == "datatype"
                     || name == "overlap"
                     || name == "pipeline"
-                    || name == "faults",
+                    || name == "faults"
+                    || name == "trace",
                 "unknown experiment family: {name}"
             );
         }
@@ -1545,6 +1721,25 @@ mod tests {
         assert_eq!(name, "BENCH_faults.json");
         assert!(json.contains("\"bench\": \"faults\""));
         assert_eq!(json.matches("\"mode\"").count(), t.rows.len());
+    }
+
+    /// The `trace` runner's table + artifact structure at reduced scale.
+    /// Its hard gates — disarmed tick-identity with zero TraceStats,
+    /// schema-valid Perfetto output with one pid per rank, and the
+    /// seal-inside-send-window overlap proof — run on every invocation,
+    /// so this also exercises the full tracing plane in all four
+    /// security modes on the chopped (pipelined) path.
+    #[test]
+    fn trace_runner_structure() {
+        let t = trace_with(128 * 1024, 2);
+        assert_eq!(t.header.len(), 9);
+        assert_eq!(t.rows.len(), 4, "one row per security mode");
+        assert!(t.rows.iter().all(|r| r[8] == "yes"), "tick-identity column");
+        let (name, doc) = &t.artifacts[0];
+        assert_eq!(name, "TRACE_trace.json");
+        let sum = crate::trace::validate::validate(doc).expect("artifact validates");
+        assert!(sum.spans > 0 && sum.instants > 0);
+        assert_eq!(sum.pids.len(), 4);
     }
 
     /// The `matching` runner's acceptance shape at reduced scale: engine

@@ -1,0 +1,58 @@
+//! `tracecheck` — standalone schema validator for emitted trace
+//! documents (DESIGN.md §15). CI runs it over the `TRACE_*.json`
+//! artifact the `trace` bench runner writes:
+//!
+//! ```text
+//! tracecheck out/TRACE_trace.json [more.json ...]
+//! ```
+//!
+//! Exit status 0 when every document parses and satisfies the schema
+//! (and contains at least one span), 1 otherwise. Zero dependencies:
+//! the validator is the crate's own `trace::validate`, so the binary
+//! checks exactly what the library promises to emit.
+
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let paths: Vec<String> = std::env::args().skip(1).collect();
+    if paths.is_empty() {
+        eprintln!("usage: tracecheck <TRACE_*.json> [more ...]");
+        return ExitCode::FAILURE;
+    }
+    let mut ok = true;
+    for path in &paths {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("tracecheck: {path}: {e}");
+                ok = false;
+                continue;
+            }
+        };
+        match cryptmpi::trace::validate::validate(&text) {
+            Ok(sum) => {
+                if sum.spans == 0 {
+                    eprintln!("tracecheck: {path}: valid but contains no spans");
+                    ok = false;
+                } else {
+                    println!(
+                        "tracecheck: {path}: OK ({} spans, {} instants, {} metas, {} ranks)",
+                        sum.spans,
+                        sum.instants,
+                        sum.metas,
+                        sum.pids.len()
+                    );
+                }
+            }
+            Err(e) => {
+                eprintln!("tracecheck: {path}: INVALID: {e}");
+                ok = false;
+            }
+        }
+    }
+    if ok {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}

@@ -7,6 +7,7 @@ use crate::coordinator::{CollPolicy, Keys, SecurityMode};
 use crate::crypto::rand::secure_array;
 use crate::mpi::{ClusterReport, RankReport, Transport};
 use crate::net::{FaultSpec, SystemProfile, Topology};
+use crate::trace::TraceSpec;
 use crate::vtime::calib;
 use std::sync::Arc;
 
@@ -84,6 +85,11 @@ where
     if net.faults.is_none() {
         net.faults = FaultSpec::from_env();
     }
+    // Tracing plane, same precedence: an explicit spec on the profile
+    // wins; when absent, `CRYPTMPI_TRACE` (if set) arms it for this run.
+    if net.trace.is_none() {
+        net.trace = TraceSpec::from_env();
+    }
     let tp = Arc::new(Transport::new(topo.clone(), net, ipsec));
     let profile = Arc::new(cfg.profile.clone());
     let cal = calib::get();
@@ -116,8 +122,8 @@ where
                     rank.set_keys(keys);
                 }
                 let out = fref(&mut rank);
-                let (elapsed_ns, stats) = rank.finish();
-                *slot = Some((out, RankReport { rank: id, elapsed_ns, stats }));
+                let (elapsed_ns, stats, trace) = rank.finish();
+                *slot = Some((out, RankReport { rank: id, elapsed_ns, stats, trace }));
             }));
         }
         for h in handles {

@@ -391,6 +391,9 @@ struct ActiveStage {
     payloads: Vec<Option<Vec<u8>>>,
     sends: Vec<SendReq>,
     finish: Option<FinishFn>,
+    /// Virtual time the stage was entered — the left edge of its trace
+    /// span (closed when the stage seals).
+    begin_ns: u64,
 }
 
 /// The completed value of a nonblocking collective.
@@ -463,6 +466,9 @@ pub struct CollRequest {
     tag_base: u64,
     done: bool,
     failed: Option<TransportError>,
+    /// Index of the next stage to seal, labelling each stage's trace
+    /// span (and the teardown instant on failure).
+    stage_idx: u64,
 }
 
 impl CollRequest {
@@ -487,6 +493,7 @@ impl CollRequest {
             tag_base,
             done: false,
             failed: None,
+            stage_idx: 0,
         };
         // An authentication failure here is latched into `failed` and
         // surfaced by the next test()/wait().
@@ -547,6 +554,7 @@ impl CollRequest {
             }
             Err(e) => {
                 self.failed = Some(e);
+                rank.trace_coll_teardown(self.stage_idx, self.op as u64);
                 // Dropping the outstanding requests cancels their
                 // tickets; frames already bound return to the
                 // unexpected queue...
@@ -603,8 +611,13 @@ impl CollRequest {
                     sends.push(rank.coll_isend(s.to, s.tag, &data));
                 }
                 let payloads = vec![None; reqs.len()];
-                self.active =
-                    Some(ActiveStage { reqs, payloads, sends, finish: stage.finish });
+                self.active = Some(ActiveStage {
+                    reqs,
+                    payloads,
+                    sends,
+                    finish: stage.finish,
+                    begin_ns: rank.now_ns(),
+                });
             }
             // Sweep the active stage's receives.
             let act = self.active.as_mut().expect("active stage");
@@ -628,12 +641,15 @@ impl CollRequest {
             }
             // Stage sealed: drain its sends, run the reduction step.
             let act = self.active.take().expect("active stage");
+            let begin_ns = act.begin_ns;
             rank.waitall_send(act.sends);
             let payloads: Vec<Vec<u8>> =
                 act.payloads.into_iter().map(|p| p.expect("sealed payload")).collect();
             if let Some(f) = act.finish {
                 f(&mut self.state, payloads)?;
             }
+            rank.trace_coll_stage(begin_ns, self.stage_idx, self.op as u64);
+            self.stage_idx += 1;
         }
     }
 }

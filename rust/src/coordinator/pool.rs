@@ -18,6 +18,16 @@ use std::thread::JoinHandle;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
+/// Display lane of pipeline chunk `chunk_idx` on a `workers`-wide pool,
+/// for the tracing plane: lane 0 is the rank's API timeline, so chunks
+/// rotate deterministically over lanes `1..=workers`. This is an
+/// *attribution* rule, not a scheduling fact — the host may run the
+/// chunk on any worker thread, but the emitted timeline must depend
+/// only on the chunk index, never on host scheduling.
+pub fn virtual_lane(chunk_idx: usize, workers: usize) -> u32 {
+    1 + (chunk_idx % workers.max(1)) as u32
+}
+
 enum Cmd {
     Run(Job),
     Quit,
@@ -198,6 +208,20 @@ impl Drop for WorkerPool {
 mod tests {
     use super::*;
     use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn virtual_lanes_rotate_over_workers_and_never_hit_lane_zero() {
+        assert_eq!(virtual_lane(0, 4), 1);
+        assert_eq!(virtual_lane(3, 4), 4);
+        assert_eq!(virtual_lane(4, 4), 1);
+        assert_eq!(virtual_lane(7, 1), 1);
+        // Degenerate worker count clamps instead of dividing by zero.
+        assert_eq!(virtual_lane(5, 0), 1);
+        for idx in 0..64 {
+            let lane = virtual_lane(idx, 6);
+            assert!((1..=6).contains(&lane), "idx={idx} lane={lane}");
+        }
+    }
 
     #[test]
     fn runs_all_jobs() {

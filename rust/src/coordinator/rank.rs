@@ -201,6 +201,11 @@ pub struct Rank {
     /// and receives issued while set are attributed to its counters.
     coll_op: Option<CollOp>,
     coll_start_ns: u64,
+    /// Span/instant recorder for the tracing plane (DESIGN.md §15).
+    /// `None` when tracing is disarmed — every emission site guards on
+    /// the option, so a disarmed run allocates nothing and never touches
+    /// the clock on behalf of the tracer.
+    tracer: Option<Box<crate::trace::Tracer>>,
 }
 
 impl Rank {
@@ -214,6 +219,11 @@ impl Rank {
         keys: Option<Keys>,
         t0: u32,
     ) -> Self {
+        let tracer = tp
+            .net()
+            .trace
+            .as_ref()
+            .map(|s| Box::new(crate::trace::Tracer::new(id, s.buf_events)));
         Rank {
             id,
             tp,
@@ -232,7 +242,47 @@ impl Rank {
             coll_policy: CollPolicy::default(),
             coll_op: None,
             coll_start_ns: 0,
+            tracer,
         }
+    }
+
+    /// Record a span on this rank's trace track; no-op when disarmed.
+    #[inline]
+    fn tr_span(
+        &mut self,
+        lane: u32,
+        cat: &'static str,
+        name: &'static str,
+        begin_ns: u64,
+        end_ns: u64,
+        a: u64,
+        b: u64,
+    ) {
+        if let Some(t) = self.tracer.as_deref_mut() {
+            t.span(lane, cat, name, begin_ns, end_ns, a, b);
+        }
+    }
+
+    /// Record an instant event on this rank's trace track; no-op when
+    /// disarmed.
+    #[inline]
+    fn tr_instant(&mut self, lane: u32, cat: &'static str, name: &'static str, t_ns: u64, a: u64, b: u64) {
+        if let Some(t) = self.tracer.as_deref_mut() {
+            t.instant(lane, cat, name, t_ns, a, b);
+        }
+    }
+
+    /// Close a collective stage span `[begin_ns, now]` on the API lane.
+    /// Called by the collectives engine when a stage's finisher returns.
+    pub(crate) fn trace_coll_stage(&mut self, begin_ns: u64, stage_idx: u64, op_code: u64) {
+        let end = self.clock.now();
+        self.tr_span(0, "coll", "stage", begin_ns, end, stage_idx, op_code);
+    }
+
+    /// Mark a fail-fast collective teardown on the API lane.
+    pub(crate) fn trace_coll_teardown(&mut self, stage_idx: u64, op_code: u64) {
+        let now = self.clock.now();
+        self.tr_instant(0, "coll", "teardown", now, stage_idx, op_code);
     }
 
     pub fn id(&self) -> usize {
@@ -423,6 +473,7 @@ impl Rank {
         let len = src.remaining() as u64;
         let req = self.send_impl(to, tag, src, route);
         let spent = self.clock.now() - start;
+        self.tr_span(0, "p2p", "send_window", start, req.local_complete_ns, tag, len);
         self.account_send(route, len, spent);
         self.outstanding_sends += 1;
         req
@@ -431,6 +482,7 @@ impl Rank {
     /// Send-side accounting: route time buckets, payload counters, and —
     /// inside a collective — the per-operation split counters.
     fn account_send(&mut self, route: Route, bytes: u64, spent: u64) {
+        self.stats.latency.send.record(spent);
         match route {
             Route::InterNode => self.stats.inter_ns += spent,
             Route::IntraNode => self.stats.intra_ns += spent,
@@ -454,6 +506,8 @@ impl Rank {
 
     /// Non-blocking receive: pre-posted into the matching engine.
     pub fn irecv(&mut self, from: usize, tag: u64) -> RecvReq {
+        let now = self.clock.now();
+        self.tr_instant(0, "match", "post", now, tag, from as u64);
         RecvReq {
             ticket: self.tp.post_recv(self.id, Some(from), tag),
             tp: Arc::clone(&self.tp),
@@ -464,6 +518,8 @@ impl Rank {
     /// Pre-posted receive from any source; resolves by the engine's
     /// wildcard rule (earliest virtual arrival wins).
     pub fn irecv_any(&mut self, tag: u64) -> RecvReq {
+        let now = self.clock.now();
+        self.tr_instant(0, "match", "post", now, tag, u64::MAX);
         RecvReq {
             ticket: self.tp.post_recv(self.id, None, tag),
             tp: Arc::clone(&self.tp),
@@ -705,8 +761,11 @@ impl Rank {
         body.extend_from_slice(&tag_bytes);
         // Virtual cost: single-thread GCM over the whole message.
         let enc = self.profile.crypto.enc_ns(self.calib, m, 1);
+        let b0 = self.clock.now();
         self.clock.advance(enc);
         self.stats.crypto_ns += enc;
+        self.stats.latency.seal.record(enc);
+        self.tr_span(1, "crypto", "seal", b0, b0 + enc, 0, m as u64);
         let _ = naive;
         let wire = body.len();
         let info = self.tp.post(self.id, to, tag, 0, body, self.clock.now());
@@ -737,7 +796,7 @@ impl Rank {
         // workers (DESIGN.md §12). Chunk bytes depend only on the sealer's
         // seed and segment indices — never on scheduling — so both paths
         // put byte-identical images on the wire.
-        let nchunks = nsegs.div_ceil(t) as usize;
+        let nchunks = sealer.num_chunks(t);
         let w = self.pipeline_workers(m, nchunks);
         if w > 1 {
             return self.send_chopped_parallel(to, tag, src, route, sealer, t, w);
@@ -796,8 +855,19 @@ impl Rank {
             }
             // Virtual cost: t threads over the chunk (max-rate model).
             let enc = self.profile.crypto.enc_ns(self.calib, chunk_bytes, t);
+            let b0 = self.clock.now();
             self.clock.advance(enc);
             self.stats.crypto_ns += enc;
+            self.stats.latency.seal.record(enc);
+            self.tr_span(
+                crate::coordinator::pool::virtual_lane(seq as usize - 1, 1),
+                "crypto",
+                "seal",
+                b0,
+                b0 + enc,
+                seq as u64,
+                chunk_bytes as u64,
+            );
             max_wire = max_wire.max(body.len());
             let info = self.tp.post(self.id, to, tag, seq, body, self.clock.now());
             local_complete = local_complete.max(info.local_complete_ns);
@@ -882,8 +952,19 @@ impl Rank {
             pool.scope_run_ordered(jobs, |idx, body: Vec<u8>| {
                 // Same virtual charge, same order, as the serial loop.
                 let enc = self.profile.crypto.enc_ns(self.calib, chunk_bytes_by_idx[idx], t);
+                let b0 = self.clock.now();
                 self.clock.advance(enc);
                 self.stats.crypto_ns += enc;
+                self.stats.latency.seal.record(enc);
+                self.tr_span(
+                    crate::coordinator::pool::virtual_lane(idx, w),
+                    "crypto",
+                    "seal",
+                    b0,
+                    b0 + enc,
+                    seq as u64,
+                    chunk_bytes_by_idx[idx] as u64,
+                );
                 max_wire = max_wire.max(body.len());
                 let info = self.tp.post(self.id, to, tag, seq, body, self.clock.now());
                 local_complete = local_complete.max(info.local_complete_ns);
@@ -952,12 +1033,14 @@ impl Rank {
     /// and account the time to the route (and the current collective).
     fn finish_recv(&mut self, mut hmsg: WireMsg, start: u64) -> Result<Vec<u8>, TransportError> {
         let route = self.tp.route(self.id, hmsg.src);
+        let tag = hmsg.tag;
         self.clock.wait_until(hmsg.arrival_ns);
         let out = self.decode_payload(&mut hmsg);
         // The consumed wire message becomes future send/recv scratch
         // (header-sized vectors fall below the pool's retention floor).
         self.bufpool.recycle(hmsg.body);
         let spent = self.clock.now() - start;
+        self.stats.latency.recv.record(spent);
         match route {
             Route::InterNode => self.stats.inter_ns += spent,
             Route::IntraNode => self.stats.intra_ns += spent,
@@ -972,6 +1055,9 @@ impl Rank {
         if let Ok(data) = &out {
             self.stats.bytes_recv += data.len() as u64;
             self.stats.msgs_recv += 1;
+            let end = self.clock.now();
+            let len = data.len() as u64;
+            self.tr_span(0, "p2p", "recv", start, end, tag, len);
         }
         out
     }
@@ -986,6 +1072,8 @@ impl Rank {
     /// retried.
     fn decode_payload(&mut self, hmsg: &mut WireMsg) -> Result<Vec<u8>, TransportError> {
         if hmsg.fault.tombstone {
+            let now = self.clock.now();
+            self.tr_instant(0, "relia", "tombstone", now, hmsg.tag, hmsg.fault.wseq);
             return Err(TransportError::PeerUnreachable { rank: hmsg.src });
         }
         if hmsg.seq != 0 {
@@ -1088,9 +1176,20 @@ impl Rank {
                 if let Some(b) = hmsg.body.get_mut(idx) {
                     *b ^= 1 << (inj.bit % 8);
                 }
+                let wseq = hmsg.fault.wseq;
+                let b0 = self.clock.now();
                 let waited = self.clock.wait_until(arrival_ns);
                 self.stats.reliability.corrupt_recovered += 1;
                 self.stats.reliability.recovery_wait_ns += waited;
+                self.tr_instant(
+                    0,
+                    "relia",
+                    "retransmit",
+                    b0,
+                    wseq,
+                    crate::net::FaultKind::Corrupt.code(),
+                );
+                self.tr_span(0, "relia", "backoff", b0, b0 + waited, wseq, waited);
                 Ok(())
             }
         }
@@ -1120,10 +1219,12 @@ impl Rank {
             "receive datatype must select disjoint, increasing extents"
         );
         let route = self.tp.route(self.id, hmsg.src);
+        let tag = hmsg.tag;
         self.clock.wait_until(hmsg.arrival_ns);
         let out = self.decode_payload_dt(&mut hmsg, buf, &ext);
         self.bufpool.recycle(hmsg.body);
         let spent = self.clock.now() - start;
+        self.stats.latency.recv.record(spent);
         match route {
             Route::InterNode => self.stats.inter_ns += spent,
             Route::IntraNode => self.stats.intra_ns += spent,
@@ -1138,6 +1239,9 @@ impl Rank {
         if let Ok(n) = &out {
             self.stats.bytes_recv += *n as u64;
             self.stats.msgs_recv += 1;
+            let end = self.clock.now();
+            let len = *n as u64;
+            self.tr_span(0, "p2p", "recv", start, end, tag, len);
         }
         out
     }
@@ -1154,6 +1258,8 @@ impl Rank {
         ext: &[(usize, usize)],
     ) -> Result<usize, TransportError> {
         if hmsg.fault.tombstone {
+            let now = self.clock.now();
+            self.tr_instant(0, "relia", "tombstone", now, hmsg.tag, hmsg.fault.wseq);
             return Err(TransportError::PeerUnreachable { rank: hmsg.src });
         }
         if hmsg.seq != 0 {
@@ -1214,8 +1320,11 @@ impl Rank {
                 // Full GHASH/decrypt cost whether or not the tag verifies
                 // (forged traffic is not free) — see recv_direct.
                 let dec = self.profile.crypto.enc_ns(self.calib, m, 1);
+                let b0 = self.clock.now();
                 self.clock.advance(dec);
                 self.stats.crypto_ns += dec;
+                self.stats.latency.open.record(dec);
+                self.tr_span(1, "crypto", "open", b0, b0 + dec, 0, m as u64);
                 let (framed, tag_bytes) = hmsg.body.split_at_mut(HEADER_LEN + m);
                 let tag_arr: [u8; TAG_LEN] = tag_bytes[..TAG_LEN].try_into().unwrap();
                 // Verify + decrypt in place in the consumed wire frame;
@@ -1248,8 +1357,11 @@ impl Rank {
         // charged whether or not authentication succeeds — forged traffic
         // is not free in the model.
         let dec = self.profile.crypto.enc_ns(self.calib, m, 1);
+        let b0 = self.clock.now();
         self.clock.advance(dec);
         self.stats.crypto_ns += dec;
+        self.stats.latency.open.record(dec);
+        self.tr_span(1, "crypto", "open", b0, b0 + dec, 0, m as u64);
         let mut data = body[HEADER_LEN..HEADER_LEN + m].to_vec();
         let tag_bytes: [u8; TAG_LEN] = body[HEADER_LEN + m..].try_into().unwrap();
         keys.k2.open_in_place(&nonce, &[], &mut data, &tag_bytes)?;
@@ -1287,7 +1399,7 @@ impl Rank {
         // The sender groups `t` segments per chunk with the same
         // deterministic `t` (both sides derive it from the profile and the
         // header's message length), so the stream carries ⌈nsegs/t⌉ chunks.
-        let nchunks = opener.num_segments().div_ceil(t) as usize;
+        let nchunks = opener.num_chunks(t);
         // Both sides derive the same worker policy from the message size,
         // so a parallel-sealed stream is normally also opened in parallel
         // — but nothing requires it: either path accepts either stream.
@@ -1413,8 +1525,11 @@ impl Rank {
         // verdict: a failed open costs the same virtual time as a
         // successful one, so forged chunks are not free in the model.
         let dec = self.profile.crypto.enc_ns(self.calib, bodies_len, t);
+        let b0 = self.clock.now();
         self.clock.advance(dec);
         self.stats.crypto_ns += dec;
+        self.stats.latency.open.record(dec);
+        self.tr_span(1, "crypto", "open", b0, b0 + dec, first as u64, bodies_len as u64);
         let failed: Vec<usize> =
             (0..flags.len()).filter(|&j| flags[j].load(Ordering::SeqCst)).collect();
         if !failed.is_empty() {
@@ -1472,9 +1587,13 @@ impl Rank {
         if let Some(b) = rc.body.get_mut(idx) {
             *b ^= 1 << (inj.bit % 8);
         }
+        let wseq = rc.fault.wseq;
+        let b0 = self.clock.now();
         let waited = self.clock.wait_until(arrival);
         self.stats.reliability.corrupt_recovered += 1;
         self.stats.reliability.recovery_wait_ns += waited;
+        self.tr_instant(0, "relia", "retransmit", b0, wseq, crate::net::FaultKind::Corrupt.code());
+        self.tr_span(0, "relia", "backoff", b0, b0 + waited, wseq, waited);
         let mut seg_starts = Vec::with_capacity(rc.lens.len());
         let mut acc = 0usize;
         for &l in rc.lens {
@@ -1536,6 +1655,8 @@ impl Rank {
         let cmsg = self.tp.wait_posted(self.id, tk);
         if cmsg.fault.tombstone {
             // The sender's retry budget died mid-stream: fail fast.
+            let now = self.clock.now();
+            self.tr_instant(0, "relia", "tombstone", now, cmsg.tag, cmsg.fault.wseq);
             return Err(TransportError::PeerUnreachable { rank: cmsg.src });
         }
         if cmsg.seq != expect_seq {
@@ -1680,11 +1801,16 @@ impl Rank {
             // order — identical clock arithmetic, so simulated timings
             // never depend on host scheduling. Charged before acting on
             // the verdict: forged chunks cost the same as honest ones.
-            for c in &batch {
+            for (i, c) in batch.iter().enumerate() {
                 self.clock.wait_until(c.arrival_ns);
                 let dec = self.profile.crypto.enc_ns(self.calib, c.bodies_len, t);
+                let b0 = self.clock.now();
                 self.clock.advance(dec);
                 self.stats.crypto_ns += dec;
+                self.stats.latency.open.record(dec);
+                let lane = crate::coordinator::pool::virtual_lane(i, w);
+                let (first, blen) = (c.first as u64, c.bodies_len as u64);
+                self.tr_span(lane, "crypto", "open", b0, b0 + dec, first, blen);
             }
             if failed.load(Ordering::SeqCst) {
                 return Err(TransportError::Auth);
@@ -1734,7 +1860,9 @@ impl Rank {
     /// `coll_ns` is an overlapping view: the op's sends/receives were
     /// also charged to the route buckets (see `mpi::stats`).
     pub(crate) fn coll_bracket_end(&mut self) {
-        self.stats.coll_ns += self.clock.now() - self.coll_start_ns;
+        let spent = self.clock.now() - self.coll_start_ns;
+        self.stats.coll_ns += spent;
+        self.stats.latency.coll.record(spent);
         self.coll_op = None;
     }
 
@@ -1896,13 +2024,34 @@ impl Rank {
     }
 
     /// Finish: snapshot the engine's matching and reliability counters
-    /// into the stats and return (elapsed virtual ns, stats).
-    pub(crate) fn finish(mut self) -> (u64, CommStats) {
+    /// into the stats and return (elapsed virtual ns, stats, trace).
+    ///
+    /// The trace merges this rank's own recorder with the transport-side
+    /// events deposited on its behalf (matching/reliability instants are
+    /// recorded by whichever thread drives the engine). Disarmed runs
+    /// return `None` and leave `stats.trace` all-zero — the invariant the
+    /// zero-overhead tests hard-assert.
+    pub(crate) fn finish(mut self) -> (u64, CommStats, Option<crate::trace::RankTrace>) {
         self.stats.matching = self.tp.match_stats(self.id);
         let mut rel = self.tp.relia_stats(self.id);
         rel.merge(&self.stats.reliability);
         self.stats.reliability = rel;
-        (self.clock.now(), self.stats)
+        let trace = match self.tracer.take() {
+            Some(mut t) => {
+                let mut rt = t.take();
+                if let Some(side) = self.tp.take_trace(self.id) {
+                    rt.absorb(side);
+                }
+                self.stats.trace = crate::mpi::stats::TraceStats {
+                    events: rt.events.len() as u64,
+                    dropped: rt.dropped,
+                    ring_allocs: rt.allocs,
+                };
+                Some(rt)
+            }
+            None => None,
+        };
+        (self.clock.now(), self.stats, trace)
     }
 }
 

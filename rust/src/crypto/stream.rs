@@ -340,6 +340,14 @@ impl StreamSealer {
         self.nsegs
     }
 
+    /// Number of `t`-segment chunks this stream travels as: `⌈nsegs/t⌉`.
+    /// Both sides of a chopped transfer derive the same value (the chunk
+    /// grouping is part of the wire protocol), and the pipeline stats and
+    /// tracing lanes key off it.
+    pub fn num_chunks(&self, t: u32) -> usize {
+        self.nsegs.div_ceil(t.max(1)) as usize
+    }
+
     pub fn segment_size(&self) -> usize {
         self.header.seg_size as usize
     }
@@ -459,6 +467,12 @@ impl StreamOpener {
 
     pub fn num_segments(&self) -> u32 {
         self.nsegs
+    }
+
+    /// Number of `t`-segment chunks the stream carries — the opener-side
+    /// mirror of [`StreamSealer::num_chunks`].
+    pub fn num_chunks(&self, t: u32) -> usize {
+        self.nsegs.div_ceil(t.max(1)) as usize
     }
 
     /// Expected ciphertext length of segment `index` (1-based), tag excluded.
@@ -1099,6 +1113,23 @@ mod tests {
             let out = chop_decrypt(&k1, &h, &segs).expect("roundtrip");
             assert_eq!(out, m, "len={len} nsegs={nsegs}");
         }
+    }
+
+    #[test]
+    fn num_chunks_matches_both_sides() {
+        let k1 = Gcm::new(&[7u8; 16]);
+        for (len, nsegs, t) in
+            [(100usize, 3u32, 1u32), (65536, 8, 4), (65537, 8, 3), (1 << 20, 64, 16), (17, 17, 5)]
+        {
+            let sealer = StreamSealer::new(&k1, len, nsegs);
+            let opener = StreamOpener::new(&k1, sealer.header()).unwrap();
+            let want = sealer.num_segments().div_ceil(t) as usize;
+            assert_eq!(sealer.num_chunks(t), want, "len={len} nsegs={nsegs} t={t}");
+            assert_eq!(opener.num_chunks(t), want, "len={len} nsegs={nsegs} t={t}");
+        }
+        // t=0 clamps rather than dividing by zero.
+        let sealer = StreamSealer::new(&k1, 64, 4);
+        assert_eq!(sealer.num_chunks(0), 4);
     }
 
     #[test]

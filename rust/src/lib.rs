@@ -16,8 +16,12 @@
 //! * [`apps`] — ping-pong, OSU multi-pair, stencil kernels, NAS mini-apps.
 //! * [`bench`] — one runner per paper figure/table.
 //! * [`analysis`] — `cryptlint`, the in-repo static-analysis pass (secret
-//!   hygiene, unsafe audit, tag namespace, key hygiene, pool discipline);
-//!   self-hosting via `tests/cryptlint_suite.rs` and the `cryptlint` bin.
+//!   hygiene, unsafe audit, tag namespace, key hygiene, pool discipline,
+//!   trace hygiene); self-hosting via `tests/cryptlint_suite.rs` and the
+//!   `cryptlint` bin.
+//! * [`trace`] — virtual-time tracing plane: per-rank span/instant rings,
+//!   Perfetto JSON emission, zero-dependency schema validator; disarmed it
+//!   is byte- and tick-invisible (DESIGN.md §15).
 
 // Every `unsafe` block must carry a `// SAFETY:` comment; the in-repo
 // `cryptlint` unsafe-audit rule enforces the same invariant (plus
@@ -26,6 +30,7 @@
 
 pub mod analysis;
 pub mod crypto;
+pub mod trace;
 pub mod mpi;
 pub mod net;
 pub mod vtime;

@@ -13,6 +13,8 @@
 //! bench runner uses to prove the hierarchical algorithms move fewer
 //! encrypted bytes across the node boundary.
 
+use crate::trace::RankTrace;
+use crate::vtime::{log2_bucket, log2_bucket_ceil_ns, LOG2_BUCKETS};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 /// The collective operations instrumented by [`CollStats`].
@@ -425,6 +427,120 @@ impl PipelineStats {
     }
 }
 
+/// Fixed-shape latency histogram: 64 log2 buckets over virtual
+/// nanoseconds (bucket *i* counts samples in `[2^i, 2^(i+1))`; see
+/// [`crate::vtime::log2_bucket`]). Always-on — recording is two integer
+/// ops on inline storage, no allocation ever — so the metrics lane does
+/// not violate the tracing plane's zero-overhead-when-off rule: it has
+/// no "off".
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LatencyHistogram {
+    pub buckets: [u64; LOG2_BUCKETS],
+    pub count: u64,
+}
+
+// `[u64; 64]` has no derived `Default` (std stops at 32).
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram { buckets: [0; LOG2_BUCKETS], count: 0 }
+    }
+}
+
+impl LatencyHistogram {
+    #[inline]
+    pub fn record(&mut self, ns: u64) {
+        self.buckets[log2_bucket(ns)] += 1;
+        self.count += 1;
+    }
+
+    /// Quantile estimate: the inclusive upper bound of the bucket holding
+    /// the `q`-th sample (conservative — never under-reports). 0 when
+    /// empty.
+    pub fn quantile_ns(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, &b) in self.buckets.iter().enumerate() {
+            seen += b;
+            if seen >= target {
+                return log2_bucket_ceil_ns(i);
+            }
+        }
+        log2_bucket_ceil_ns(LOG2_BUCKETS - 1)
+    }
+
+    pub fn p50_ns(&self) -> u64 {
+        self.quantile_ns(0.50)
+    }
+
+    pub fn p95_ns(&self) -> u64 {
+        self.quantile_ns(0.95)
+    }
+
+    pub fn p99_ns(&self) -> u64 {
+        self.quantile_ns(0.99)
+    }
+
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+    }
+}
+
+/// Per-operation latency distributions for one rank: one histogram per
+/// instrumented op class. `send`/`recv` are whole point-to-point calls,
+/// `seal`/`open` are individual crypto charges (per chunk on the chopped
+/// path), `coll` is whole collective calls.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LatencyStats {
+    pub send: LatencyHistogram,
+    pub recv: LatencyHistogram,
+    pub seal: LatencyHistogram,
+    pub open: LatencyHistogram,
+    pub coll: LatencyHistogram,
+}
+
+impl LatencyStats {
+    pub fn merge(&mut self, other: &LatencyStats) {
+        self.send.merge(&other.send);
+        self.recv.merge(&other.recv);
+        self.seal.merge(&other.seal);
+        self.open.merge(&other.open);
+        self.coll.merge(&other.coll);
+    }
+}
+
+/// Ring accounting for the tracing plane, surfaced per rank so the
+/// disarmed invariant is checkable: a disarmed run must report the
+/// all-zero value (in particular `ring_allocs == 0` — no trace buffer
+/// was ever allocated).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TraceStats {
+    /// Events captured across the rank's rings (rank-side + transport-side).
+    pub events: u64,
+    /// Events dropped because a ring was full.
+    pub dropped: u64,
+    /// Ring-buffer allocations performed (0 disarmed, 2 armed: one ring
+    /// per side).
+    pub ring_allocs: u64,
+}
+
+impl TraceStats {
+    pub fn is_zero(&self) -> bool {
+        *self == TraceStats::default()
+    }
+
+    pub fn merge(&mut self, other: &TraceStats) {
+        self.events += other.events;
+        self.dropped += other.dropped;
+        self.ring_allocs += other.ring_allocs;
+    }
+}
+
 /// Communication-time accounting for one rank (virtual nanoseconds).
 #[derive(Debug, Default, Clone)]
 pub struct CommStats {
@@ -455,6 +571,10 @@ pub struct CommStats {
     /// Reliable-delivery counters (transport snapshot + rank-side
     /// recovery accounting, merged at rank finish).
     pub reliability: ReliabilityStats,
+    /// Per-op latency distributions (always-on, allocation-free).
+    pub latency: LatencyStats,
+    /// Tracing-plane ring accounting (all-zero when tracing is disarmed).
+    pub trace: TraceStats,
 }
 
 impl CommStats {
@@ -477,6 +597,8 @@ impl CommStats {
         self.matching.merge(&other.matching);
         self.pipeline.merge(&other.pipeline);
         self.reliability.merge(&other.reliability);
+        self.latency.merge(&other.latency);
+        self.trace.merge(&other.trace);
     }
 }
 
@@ -487,6 +609,8 @@ pub struct RankReport {
     /// Total virtual execution time (T_e).
     pub elapsed_ns: u64,
     pub stats: CommStats,
+    /// Drained trace timeline (`Some` only when tracing was armed).
+    pub trace: Option<RankTrace>,
 }
 
 /// Cluster-level aggregate (averages across ranks, as the paper reports).
@@ -526,6 +650,39 @@ impl ClusterReport {
         total
     }
 
+    /// Latency distributions merged across every rank — what runners and
+    /// CI gates query for p50/p95/p99 assertions.
+    pub fn latency_totals(&self) -> LatencyStats {
+        let mut total = LatencyStats::default();
+        for r in &self.per_rank {
+            total.merge(&r.stats.latency);
+        }
+        total
+    }
+
+    /// Tracing-plane ring accounting summed across ranks (all-zero on a
+    /// disarmed run — the checkable half of the invisibility invariant).
+    pub fn trace_totals(&self) -> TraceStats {
+        let mut total = TraceStats::default();
+        for r in &self.per_rank {
+            total.merge(&r.stats.trace);
+        }
+        total
+    }
+
+    /// Render every drained rank timeline as one Chrome trace-event /
+    /// Perfetto JSON document. `None` when no rank carried a trace (run
+    /// was disarmed).
+    pub fn perfetto(&self) -> Option<String> {
+        let traces: Vec<RankTrace> =
+            self.per_rank.iter().filter_map(|r| r.trace.clone()).collect();
+        if traces.is_empty() {
+            None
+        } else {
+            Some(crate::trace::perfetto::render(&traces))
+        }
+    }
+
     fn avg(&self, f: impl Fn(&RankReport) -> u64) -> f64 {
         if self.per_rank.is_empty() {
             return 0.0;
@@ -550,11 +707,12 @@ mod tests {
 
         let rep = ClusterReport {
             per_rank: vec![
-                RankReport { rank: 0, elapsed_ns: 2_000_000_000, stats: a.clone() },
+                RankReport { rank: 0, elapsed_ns: 2_000_000_000, stats: a.clone(), trace: None },
                 RankReport {
                     rank: 1,
                     elapsed_ns: 4_000_000_000,
                     stats: CommStats { inter_ns: 3_000_000_000, ..Default::default() },
+                    trace: None,
                 },
             ],
         };
@@ -684,6 +842,180 @@ mod tests {
     }
 
     #[test]
+    fn latency_histogram_records_and_quantiles() {
+        let mut h = LatencyHistogram::default();
+        assert_eq!(h.quantile_ns(0.5), 0); // empty
+        for ns in [100u64, 200, 400, 100_000] {
+            h.record(ns);
+        }
+        assert_eq!(h.count, 4);
+        // p50 is the 2nd sample: 200 ns → bucket 7, ceiling 255 ns.
+        assert_eq!(h.p50_ns(), 255);
+        // p95/p99 land on the largest sample's bucket ceiling.
+        assert_eq!(h.p99_ns(), log2_bucket_ceil_ns(log2_bucket(100_000)));
+        assert_eq!(h.quantile_ns(1.0), h.p99_ns());
+        // Quantiles never under-report a recorded sample's bucket ceiling.
+        assert!(h.quantile_ns(0.0) >= 127);
+
+        let mut g = LatencyHistogram::default();
+        g.record(1);
+        g.merge(&h);
+        assert_eq!(g.count, 5);
+        assert_eq!(g.quantile_ns(0.0), 1); // smallest sample's bucket
+    }
+
+    #[test]
+    fn trace_stats_zero_and_merge() {
+        let mut t = TraceStats::default();
+        assert!(t.is_zero());
+        t.merge(&TraceStats { events: 5, dropped: 1, ring_allocs: 2 });
+        assert!(!t.is_zero());
+        assert_eq!((t.events, t.dropped, t.ring_allocs), (5, 1, 2));
+    }
+
+    /// Satellite guard against stats-lane merge drift: both inputs are
+    /// built with *exhaustive* struct literals (no `..Default::default()`),
+    /// so adding a field to any lane without updating `merge` — and this
+    /// test — is a compile error here instead of silent undercounting.
+    #[test]
+    fn comm_stats_merge_is_complete_across_all_lanes() {
+        fn hist(n: u64) -> LatencyHistogram {
+            let mut h = LatencyHistogram::default();
+            for i in 0..n {
+                h.record(1 + i);
+            }
+            h
+        }
+        fn lane(seed: u64) -> CommStats {
+            let op = CollOpStats {
+                calls: seed,
+                intra_bytes: seed,
+                inter_bytes: seed,
+                intra_ns: seed,
+                inter_ns: seed,
+            };
+            CommStats {
+                inter_ns: seed,
+                intra_ns: seed,
+                coll_ns: seed,
+                crypto_ns: seed,
+                bytes_sent: seed,
+                bytes_recv: seed,
+                msgs_sent: seed,
+                msgs_recv: seed,
+                coll: CollStats { ops: [op; 9] },
+                matching: MatchStats {
+                    deposits: seed,
+                    preposted_matches: seed,
+                    exact_matches: seed,
+                    wildcard_matches: seed,
+                    wildcard_scan_steps: seed,
+                    max_unexpected_depth: seed,
+                    max_posted_depth: seed,
+                },
+                pipeline: PipelineStats {
+                    parallel_msgs: seed,
+                    parallel_chunks: seed,
+                    max_workers: seed,
+                    fill_slots_used: seed,
+                    fill_slots_avail: seed,
+                },
+                reliability: ReliabilityStats {
+                    frames: seed,
+                    retransmits: seed,
+                    retrans_bytes: seed,
+                    dup_dropped: seed,
+                    corrupt_injected: seed,
+                    corrupt_recovered: seed,
+                    delay_spikes: seed,
+                    reorders: seed,
+                    tombstones: seed,
+                    acks: seed,
+                    backoff_ns: seed,
+                    recovery_wait_ns: seed,
+                },
+                latency: LatencyStats {
+                    send: hist(seed),
+                    recv: hist(seed),
+                    seal: hist(seed),
+                    open: hist(seed),
+                    coll: hist(seed),
+                },
+                trace: TraceStats { events: seed, dropped: seed, ring_allocs: seed },
+            }
+        }
+
+        let mut a = lane(3);
+        a.merge(&lane(5));
+        let sum = 8u64;
+        let max = 5u64;
+        assert_eq!(a.inter_ns, sum);
+        assert_eq!(a.intra_ns, sum);
+        assert_eq!(a.coll_ns, sum);
+        assert_eq!(a.crypto_ns, sum);
+        assert_eq!(a.bytes_sent, sum);
+        assert_eq!(a.bytes_recv, sum);
+        assert_eq!(a.msgs_sent, sum);
+        assert_eq!(a.msgs_recv, sum);
+        for op in COLL_OPS {
+            let s = a.coll.op(op);
+            assert_eq!(
+                (s.calls, s.intra_bytes, s.inter_bytes, s.intra_ns, s.inter_ns),
+                (sum, sum, sum, sum, sum)
+            );
+        }
+        assert_eq!(a.matching.deposits, sum);
+        assert_eq!(a.matching.preposted_matches, sum);
+        assert_eq!(a.matching.exact_matches, sum);
+        assert_eq!(a.matching.wildcard_matches, sum);
+        assert_eq!(a.matching.wildcard_scan_steps, sum);
+        assert_eq!(a.matching.max_unexpected_depth, max); // high-water: max
+        assert_eq!(a.matching.max_posted_depth, max);
+        assert_eq!(a.pipeline.parallel_msgs, sum);
+        assert_eq!(a.pipeline.parallel_chunks, sum);
+        assert_eq!(a.pipeline.max_workers, max); // high-water: max
+        assert_eq!(a.pipeline.fill_slots_used, sum);
+        assert_eq!(a.pipeline.fill_slots_avail, sum);
+        assert_eq!(a.reliability, {
+            let mut r = lane(3).reliability;
+            r.merge(&lane(5).reliability);
+            r
+        });
+        assert_eq!(a.reliability.frames, sum);
+        assert_eq!(a.reliability.recovery_wait_ns, sum);
+        assert_eq!(a.latency.send.count, sum);
+        assert_eq!(a.latency.recv.count, sum);
+        assert_eq!(a.latency.seal.count, sum);
+        assert_eq!(a.latency.open.count, sum);
+        assert_eq!(a.latency.coll.count, sum);
+        assert_eq!(
+            (a.trace.events, a.trace.dropped, a.trace.ring_allocs),
+            (sum, sum, sum)
+        );
+    }
+
+    #[test]
+    fn cluster_latency_and_trace_totals() {
+        let mut s0 = CommStats::default();
+        s0.latency.send.record(100);
+        s0.trace = TraceStats { events: 3, dropped: 0, ring_allocs: 2 };
+        let mut s1 = CommStats::default();
+        s1.latency.send.record(200);
+        s1.latency.coll.record(50);
+        let rep = ClusterReport {
+            per_rank: vec![
+                RankReport { rank: 0, elapsed_ns: 1, stats: s0, trace: None },
+                RankReport { rank: 1, elapsed_ns: 1, stats: s1, trace: None },
+            ],
+        };
+        let lat = rep.latency_totals();
+        assert_eq!(lat.send.count, 2);
+        assert_eq!(lat.coll.count, 1);
+        assert_eq!(rep.trace_totals(), TraceStats { events: 3, dropped: 0, ring_allocs: 2 });
+        assert!(rep.perfetto().is_none()); // no rank carried a timeline
+    }
+
+    #[test]
     fn coll_stats_indexing_and_merge() {
         let mut c = CollStats::default();
         c.op_mut(CollOp::Allreduce).inter_bytes = 64;
@@ -759,8 +1091,8 @@ mod tests {
         s1.coll.op_mut(CollOp::Allgather).inter_bytes = 11;
         let rep = ClusterReport {
             per_rank: vec![
-                RankReport { rank: 0, elapsed_ns: 1, stats: s0 },
-                RankReport { rank: 1, elapsed_ns: 1, stats: s1 },
+                RankReport { rank: 0, elapsed_ns: 1, stats: s0, trace: None },
+                RankReport { rank: 1, elapsed_ns: 1, stats: s1, trace: None },
             ],
         };
         assert_eq!(rep.coll_totals().op(CollOp::Allgather).inter_bytes, 111);

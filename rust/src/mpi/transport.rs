@@ -641,6 +641,12 @@ pub struct Transport {
     relia: Vec<Mutex<ReliaRank>>,
     /// Per-rank reliability counters, outside the mutexes.
     relia_stats: Vec<AtomicReliabilityStats>,
+    /// Transport-side trace recorders, one per rank (DESIGN.md §15):
+    /// matching-engine and reliability events are recorded on the track
+    /// of the rank that *observes* them, by whichever thread drives the
+    /// engine. `None` when tracing is disarmed — the fabric then
+    /// allocates nothing and takes no extra locks.
+    tracers: Option<Vec<Mutex<crate::trace::Tracer>>>,
 }
 
 impl Transport {
@@ -650,7 +656,54 @@ impl Transport {
         let faults = net.faults.clone().map(FaultPlane::new);
         let relia = (0..topo.ranks).map(|_| Mutex::new(ReliaRank::default())).collect();
         let relia_stats = (0..topo.ranks).map(|_| AtomicReliabilityStats::default()).collect();
-        Transport { boxes, nics, topo, net, ipsec_rate, faults, relia, relia_stats }
+        let tracers = net.trace.as_ref().map(|s| {
+            (0..topo.ranks)
+                .map(|r| Mutex::new(crate::trace::Tracer::new(r, s.buf_events)))
+                .collect()
+        });
+        Transport { boxes, nics, topo, net, ipsec_rate, faults, relia, relia_stats, tracers }
+    }
+
+    /// Record an instant on `rank`'s transport-side trace track; no-op
+    /// when tracing is disarmed.
+    #[inline]
+    fn trace_instant(
+        &self,
+        rank: usize,
+        cat: &'static str,
+        name: &'static str,
+        t_ns: u64,
+        a: u64,
+        b: u64,
+    ) {
+        if let Some(v) = self.tracers.as_ref() {
+            v[rank].lock().unwrap().instant(0, cat, name, t_ns, a, b);
+        }
+    }
+
+    /// Record a span on `rank`'s transport-side trace track; no-op when
+    /// tracing is disarmed.
+    #[inline]
+    fn trace_span(
+        &self,
+        rank: usize,
+        cat: &'static str,
+        name: &'static str,
+        begin_ns: u64,
+        end_ns: u64,
+        a: u64,
+        b: u64,
+    ) {
+        if let Some(v) = self.tracers.as_ref() {
+            v[rank].lock().unwrap().span(0, cat, name, begin_ns, end_ns, a, b);
+        }
+    }
+
+    /// Drain rank `me`'s transport-side trace events (matching +
+    /// reliability); `None` when tracing is disarmed. Called once per
+    /// rank by [`crate::coordinator::Rank`]'s finish path.
+    pub fn take_trace(&self, me: usize) -> Option<crate::trace::RankTrace> {
+        self.tracers.as_ref().map(|v| v[me].lock().unwrap().take())
     }
 
     pub fn topo(&self) -> &Topology {
@@ -790,6 +843,7 @@ impl Transport {
         };
         if !fresh {
             self.relia_stats[dst].bump_dup_dropped();
+            self.trace_instant(dst, "relia", "duplicate", msg.arrival_ns, msg.tag, msg.fault.wseq);
             return false;
         }
         self.deposit(dst, msg);
@@ -819,6 +873,7 @@ impl Transport {
         // the tombstone the matching receive will trip over.
         if self.link_unreachable(src, dst) {
             rstats.bump_tombstones();
+            self.trace_instant(src, "relia", "tombstone", depart_ns, wseq, tag);
             self.deposit_reliable(dst, tombstone(src, tag, seq, depart_ns, wseq));
             return PostInfo { arrival_ns: depart_ns, local_complete_ns: depart_ns };
         }
@@ -839,6 +894,8 @@ impl Transport {
             rstats.bump_retransmit(bytes as u64);
             rstats.add_backoff(to);
             self.note_backoff(src, dst, to);
+            self.trace_instant(src, "relia", "retransmit", t, wseq, attempt as u64);
+            self.trace_span(src, "relia", "backoff", t, t + to, wseq, to);
             t += to;
             attempt += 1;
         }
@@ -848,6 +905,7 @@ impl Transport {
         self.latch_unreachable(src, dst);
         rstats.bump_tombstones();
         let give_up = t + policy.timeout_ns(attempt, fp.jitter01(src, dst, wseq, attempt));
+        self.trace_instant(src, "relia", "tombstone", give_up, wseq, tag);
         self.deposit_reliable(dst, tombstone(src, tag, seq, give_up, wseq));
         PostInfo { arrival_ns: give_up, local_complete_ns: t }
     }
@@ -933,6 +991,8 @@ impl Transport {
             rstats.bump_retransmit(bytes as u64);
             rstats.add_backoff(to);
             self.note_backoff(src, dst, to);
+            self.trace_instant(src, "relia", "retransmit", t, wseq, a as u64);
+            self.trace_span(src, "relia", "backoff", t, t + to, wseq, to);
             t += to;
             a += 1;
             if fp.partitioned(src, dst, wseq, a, t) || fp.dropped(src, dst, wseq, a) {
@@ -956,6 +1016,7 @@ impl Transport {
     /// minimum arrival at wait time, so the message must stay visible in
     /// the UMQ until then.
     fn deposit(&self, dst: usize, msg: WireMsg) {
+        self.trace_instant(dst, "match", "deposit", msg.arrival_ns, msg.tag, msg.seq as u64);
         let mbox = &self.boxes[dst];
         let mut st = mbox.state.lock().unwrap();
         mbox.stats.bump_deposits();
@@ -995,6 +1056,8 @@ impl Transport {
         let mut st = mbox.state.lock().unwrap();
         loop {
             if let Some(msg) = take_match(&mut st, &mbox.stats, src, tag) {
+                drop(st);
+                self.trace_match(me, src.is_none(), &msg);
                 return msg;
             }
             st = mbox.cv.wait(st).unwrap();
@@ -1005,7 +1068,20 @@ impl Transport {
     pub fn try_match(&self, me: usize, src: Option<usize>, tag: u64) -> Option<WireMsg> {
         let mbox = &self.boxes[me];
         let mut st = mbox.state.lock().unwrap();
-        take_match(&mut st, &mbox.stats, src, tag)
+        let msg = take_match(&mut st, &mbox.stats, src, tag);
+        drop(st);
+        if let Some(m) = &msg {
+            self.trace_match(me, src.is_none(), m);
+        }
+        msg
+    }
+
+    /// Record a successful match on `me`'s track, at the matched frame's
+    /// arrival time: `match_exact` for a sourced receive, `match_wild`
+    /// for the wildcard lane's arrival-ordered pick.
+    fn trace_match(&self, me: usize, wild: bool, msg: &WireMsg) {
+        let name = if wild { "match_wild" } else { "match_exact" };
+        self.trace_instant(me, "match", name, msg.arrival_ns, msg.tag, msg.src as u64);
     }
 
     /// Pre-post a *message* receive (matches `seq == 0` starts); the
@@ -1073,7 +1149,10 @@ impl Transport {
         let mbox = &self.boxes[me];
         let mut st = mbox.state.lock().unwrap();
         loop {
+            let wild = st.posted.get(&ticket).map_or(false, |e| e.src.is_none());
             if let Some(msg) = resolve_ticket(&mut st, &mbox.stats, ticket) {
+                drop(st);
+                self.trace_match(me, wild, &msg);
                 return msg;
             }
             st = mbox.cv.wait(st).unwrap();
@@ -1088,7 +1167,13 @@ impl Transport {
     pub fn try_resolve_posted(&self, me: usize, ticket: Ticket) -> Option<WireMsg> {
         let mbox = &self.boxes[me];
         let mut st = mbox.state.lock().unwrap();
-        resolve_ticket(&mut st, &mbox.stats, ticket)
+        let wild = st.posted.get(&ticket).map_or(false, |e| e.src.is_none());
+        let msg = resolve_ticket(&mut st, &mbox.stats, ticket);
+        drop(st);
+        if let Some(m) = &msg {
+            self.trace_match(me, wild, m);
+        }
+        msg
     }
 
     /// Block until any of the posted receives completes; returns the index
@@ -1100,7 +1185,10 @@ impl Transport {
         let mut st = mbox.state.lock().unwrap();
         loop {
             for (i, &t) in tickets.iter().enumerate() {
+                let wild = st.posted.get(&t).map_or(false, |e| e.src.is_none());
                 if let Some(msg) = resolve_ticket(&mut st, &mbox.stats, t) {
+                    drop(st);
+                    self.trace_match(me, wild, &msg);
                     return (i, msg);
                 }
             }

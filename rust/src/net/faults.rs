@@ -60,6 +60,35 @@ pub struct FaultSpec {
     pub max_retries: u32,
 }
 
+/// Fault categories of the plane, with stable numeric codes for the
+/// tracing plane's event args (trace args are plain numbers only — the
+/// `trace-hygiene` cryptlint rule forbids anything richer). The codes
+/// are part of the trace schema: renumbering them breaks recorded
+/// timelines, so add new kinds at the end.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    Drop,
+    Duplicate,
+    Corrupt,
+    Reorder,
+    Delay,
+    Partition,
+}
+
+impl FaultKind {
+    /// Stable numeric code carried in trace-event args.
+    pub fn code(self) -> u64 {
+        match self {
+            FaultKind::Drop => 1,
+            FaultKind::Duplicate => 2,
+            FaultKind::Corrupt => 3,
+            FaultKind::Reorder => 4,
+            FaultKind::Delay => 5,
+            FaultKind::Partition => 6,
+        }
+    }
+}
+
 impl Default for FaultSpec {
     fn default() -> Self {
         FaultSpec {
@@ -380,6 +409,22 @@ impl FaultPlane {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn fault_kind_codes_are_stable_and_distinct() {
+        let all = [
+            FaultKind::Drop,
+            FaultKind::Duplicate,
+            FaultKind::Corrupt,
+            FaultKind::Reorder,
+            FaultKind::Delay,
+            FaultKind::Partition,
+        ];
+        // Codes are a wire/schema contract: 1..=6 in declaration order.
+        for (i, k) in all.iter().enumerate() {
+            assert_eq!(k.code(), i as u64 + 1);
+        }
+    }
 
     #[test]
     fn parse_issue_example() {

@@ -5,7 +5,7 @@
 pub mod faults;
 pub mod profile;
 
-pub use faults::{FaultPlane, FaultSpec, RetryPolicy};
+pub use faults::{FaultKind, FaultPlane, FaultSpec, RetryPolicy};
 pub use profile::{CryptoProfile, NetConfig, SystemProfile};
 
 use std::sync::Mutex;

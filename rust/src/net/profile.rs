@@ -11,6 +11,7 @@
 //! relative factors.
 
 use super::faults::FaultSpec;
+use crate::trace::TraceSpec;
 use crate::vtime::calib::CryptoCalibration;
 
 /// Hockney-model network constants (µs, µs/byte).
@@ -32,6 +33,12 @@ pub struct NetConfig {
     /// bypassed entirely: the zero-fault wire image and virtual-clock
     /// trace are byte/tick-identical to a build without the fault plane.
     pub faults: Option<FaultSpec>,
+    /// Optional tracing plane (`crate::trace`). `None` — the default for
+    /// every built-in profile — means tracing is disarmed: no ring buffer
+    /// is allocated and the run is byte/tick-identical to an
+    /// instrumentation-free build (the same invisibility rule as
+    /// `faults`).
+    pub trace: Option<TraceSpec>,
 }
 
 impl NetConfig {
@@ -169,6 +176,7 @@ impl SystemProfile {
                 intra_rate: 20_000.0,
                 intra_alpha_us: 0.6,
                 faults: None,
+                trace: None,
             },
             crypto: CryptoProfile {
                 hw: true,
@@ -202,6 +210,7 @@ impl SystemProfile {
                 intra_rate: 14_000.0,
                 intra_alpha_us: 0.8,
                 faults: None,
+                trace: None,
             },
             crypto: CryptoProfile {
                 hw: true,
@@ -231,6 +240,7 @@ impl SystemProfile {
                 intra_rate: 20_000.0,
                 intra_alpha_us: 0.6,
                 faults: None,
+                trace: None,
             },
             crypto: CryptoProfile {
                 hw: true,
@@ -262,6 +272,7 @@ impl SystemProfile {
                 intra_rate: 20_000.0,
                 intra_alpha_us: 0.6,
                 faults: None,
+                trace: None,
             },
             crypto: CryptoProfile {
                 hw: true,

@@ -1,0 +1,316 @@
+//! Virtual-time tracing plane (DESIGN.md §15): structured spans and
+//! instants over the simulated clock, drained at report time and rendered
+//! as Chrome trace-event / Perfetto JSON.
+//!
+//! The plane is **armed** per cluster run via `NetConfig::trace` (or the
+//! `CRYPTMPI_TRACE` environment variable when the config leaves it
+//! unset); when disarmed every emission site is an `Option` check on a
+//! `None` — no ring buffer exists, no allocation happens, and the
+//! simulated clock arithmetic is untouched, so a disarmed run is byte-
+//! and tick-identical to an instrumentation-free build. The `trace`
+//! bench runner hard-asserts that invariant exactly like the fault
+//! plane's invisibility gate (DESIGN.md §14).
+//!
+//! Event taxonomy (one Perfetto *process* per rank, one *thread* per
+//! lane; lane 0 is the rank's API timeline, lanes `1..=w` are pipeline
+//! worker lanes):
+//!
+//! | cat      | name                        | kind    | lane      |
+//! |----------|-----------------------------|---------|-----------|
+//! | `p2p`    | `send_window`, `recv`       | span    | 0         |
+//! | `crypto` | `seal`, `open`              | span    | worker    |
+//! | `match`  | `post`, `deposit`, `match_exact`, `match_wild` | instant | 0 |
+//! | `coll`   | `stage`                     | span    | 0         |
+//! | `coll`   | `teardown`                  | instant | 0         |
+//! | `relia`  | `backoff`                   | span    | 0         |
+//! | `relia`  | `retransmit`, `tombstone`, `duplicate` | instant | 0 |
+//!
+//! Every event carries two numeric args `a`/`b` (tag/seq, bytes, stage
+//! index… — never key-derived values; the `trace-hygiene` cryptlint rule
+//! enforces that statically).
+
+pub mod json;
+pub mod perfetto;
+pub mod validate;
+
+/// Default ring capacity (events per rank-side ring) when armed without
+/// an explicit `CRYPTMPI_TRACE_BUF`.
+pub const DEFAULT_BUF_EVENTS: usize = 1 << 16;
+
+/// Arming configuration for the tracing plane, carried on `NetConfig`
+/// exactly like the fault plane's `FaultSpec`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceSpec {
+    /// Ring-buffer capacity in events. Each rank owns two rings (the
+    /// rank-thread ring and its transport-side ring); a full ring drops
+    /// further events and counts them in `TraceStats::dropped`.
+    pub buf_events: usize,
+}
+
+impl Default for TraceSpec {
+    fn default() -> Self {
+        TraceSpec { buf_events: DEFAULT_BUF_EVENTS }
+    }
+}
+
+impl TraceSpec {
+    pub fn new() -> Self {
+        TraceSpec::default()
+    }
+
+    /// Read `CRYPTMPI_TRACE` / `CRYPTMPI_TRACE_BUF` from the environment;
+    /// `None` when tracing is not requested. `CRYPTMPI_TRACE` arms on any
+    /// value but `0`, `false`, `off` or empty; `CRYPTMPI_TRACE_BUF`
+    /// overrides the ring capacity. Panics on a malformed capacity —
+    /// silently shrinking an operator's requested buffer would truncate
+    /// the very timeline they asked for.
+    pub fn from_env() -> Option<TraceSpec> {
+        let armed = std::env::var("CRYPTMPI_TRACE").ok().map(|v| {
+            let v = v.trim().to_ascii_lowercase();
+            !(v.is_empty() || v == "0" || v == "false" || v == "off")
+        })?;
+        if !armed {
+            return None;
+        }
+        let mut spec = TraceSpec::default();
+        if let Ok(raw) = std::env::var("CRYPTMPI_TRACE_BUF") {
+            let raw = raw.trim();
+            if !raw.is_empty() {
+                spec.buf_events = raw
+                    .parse::<usize>()
+                    .unwrap_or_else(|_| panic!("CRYPTMPI_TRACE_BUF: bad capacity `{raw}`"))
+                    .max(1);
+            }
+        }
+        Some(spec)
+    }
+}
+
+/// Event phase, mirroring the two Chrome trace-event phases we emit
+/// (`"X"` complete spans and `"i"` instants).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Ph {
+    Complete,
+    Instant,
+}
+
+/// One trace event. Plain data, `Copy`, no owned strings: names and
+/// categories are `&'static str` so pushing an event never allocates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceEvent {
+    pub ph: Ph,
+    /// Sub-track within the rank: 0 = API timeline, `1..=w` = pipeline
+    /// worker lanes.
+    pub lane: u32,
+    pub cat: &'static str,
+    pub name: &'static str,
+    /// Virtual begin time (instants: the event time).
+    pub begin_ns: u64,
+    /// Virtual end time (instants: equal to `begin_ns`).
+    pub end_ns: u64,
+    /// First numeric argument (tag, stage index, attempt…).
+    pub a: u64,
+    /// Second numeric argument (bytes, chunk seq…).
+    pub b: u64,
+}
+
+/// Bounded event ring. The buffer is allocated exactly once (at arming);
+/// a full ring counts drops instead of growing, so the armed plane has a
+/// fixed memory footprint and the disarmed plane has none at all.
+#[derive(Debug)]
+struct Ring {
+    buf: Vec<TraceEvent>,
+    cap: usize,
+    dropped: u64,
+    /// Buffer allocations performed (1 when armed, 0 after a drain).
+    /// Surfaced as `TraceStats::ring_allocs` so the zero-allocation half
+    /// of the disarmed invariant is a checkable counter, not a promise.
+    allocs: u64,
+}
+
+impl Ring {
+    fn with_capacity(cap: usize) -> Self {
+        let cap = cap.max(1);
+        Ring { buf: Vec::with_capacity(cap), cap, dropped: 0, allocs: 1 }
+    }
+
+    fn push(&mut self, ev: TraceEvent) {
+        if self.buf.len() < self.cap {
+            self.buf.push(ev);
+        } else {
+            self.dropped += 1;
+        }
+    }
+}
+
+/// Per-rank event sink: a rank id plus its bounded ring. The rank thread
+/// owns one directly; the transport owns one more per rank behind a
+/// mutex (matching/reliability events fire on the *peer's* thread).
+#[derive(Debug)]
+pub struct Tracer {
+    rank: usize,
+    ring: Ring,
+}
+
+impl Tracer {
+    pub fn new(rank: usize, buf_events: usize) -> Self {
+        Tracer { rank, ring: Ring::with_capacity(buf_events) }
+    }
+
+    /// Emit a complete span `[begin_ns, end_ns]` on `lane`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn span(
+        &mut self,
+        lane: u32,
+        cat: &'static str,
+        name: &'static str,
+        begin_ns: u64,
+        end_ns: u64,
+        a: u64,
+        b: u64,
+    ) {
+        self.ring.push(TraceEvent {
+            ph: Ph::Complete,
+            lane,
+            cat,
+            name,
+            begin_ns,
+            end_ns: end_ns.max(begin_ns),
+            a,
+            b,
+        });
+    }
+
+    /// Emit an instant event at virtual time `t_ns` on `lane`.
+    pub fn instant(
+        &mut self,
+        lane: u32,
+        cat: &'static str,
+        name: &'static str,
+        t_ns: u64,
+        a: u64,
+        b: u64,
+    ) {
+        self.ring.push(TraceEvent {
+            ph: Ph::Instant,
+            lane,
+            cat,
+            name,
+            begin_ns: t_ns,
+            end_ns: t_ns,
+            a,
+            b,
+        });
+    }
+
+    /// Take everything recorded so far, leaving the tracer empty (and
+    /// capacity-less: a drained tracer drops all further events without
+    /// reallocating).
+    pub fn take(&mut self) -> RankTrace {
+        let events = std::mem::take(&mut self.ring.buf);
+        let out = RankTrace {
+            rank: self.rank,
+            events,
+            dropped: self.ring.dropped,
+            allocs: self.ring.allocs,
+        };
+        self.ring.cap = 0;
+        self.ring.dropped = 0;
+        self.ring.allocs = 0;
+        out
+    }
+}
+
+/// The drained timeline of one rank: every event it recorded (rank-side
+/// and transport-side rings merged), plus the ring accounting that backs
+/// the `TraceStats` lane.
+#[derive(Debug, Clone, Default)]
+pub struct RankTrace {
+    pub rank: usize,
+    pub events: Vec<TraceEvent>,
+    pub dropped: u64,
+    pub allocs: u64,
+}
+
+impl RankTrace {
+    /// Merge another drained trace for the same rank (the transport-side
+    /// ring into the rank-side one). Events keep emission order per ring;
+    /// the Perfetto renderer does not require global ordering.
+    pub fn absorb(&mut self, other: RankTrace) {
+        debug_assert_eq!(self.rank, other.rank, "merging traces of different ranks");
+        self.events.extend(other.events);
+        self.dropped += other.dropped;
+        self.allocs += other.allocs;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn span_and_instant_record_in_order() {
+        let mut tr = Tracer::new(3, 16);
+        tr.span(0, "p2p", "send_window", 100, 250, 7, 4096);
+        tr.instant(0, "match", "post", 90, 7, 0);
+        let t = tr.take();
+        assert_eq!(t.rank, 3);
+        assert_eq!(t.events.len(), 2);
+        assert_eq!(t.events[0].ph, Ph::Complete);
+        assert_eq!(t.events[0].begin_ns, 100);
+        assert_eq!(t.events[0].end_ns, 250);
+        assert_eq!(t.events[1].ph, Ph::Instant);
+        assert_eq!(t.events[1].end_ns, 90);
+        assert_eq!(t.dropped, 0);
+        assert_eq!(t.allocs, 1);
+    }
+
+    #[test]
+    fn full_ring_counts_drops_without_growing() {
+        let mut tr = Tracer::new(0, 2);
+        for i in 0..5u64 {
+            tr.instant(0, "match", "deposit", i, i, 0);
+        }
+        let t = tr.take();
+        assert_eq!(t.events.len(), 2);
+        assert_eq!(t.dropped, 3);
+        assert_eq!(t.allocs, 1);
+    }
+
+    #[test]
+    fn drained_tracer_drops_everything_and_stops_counting_allocs() {
+        let mut tr = Tracer::new(0, 4);
+        tr.instant(0, "match", "deposit", 1, 0, 0);
+        let first = tr.take();
+        assert_eq!(first.events.len(), 1);
+        tr.instant(0, "match", "deposit", 2, 0, 0);
+        let second = tr.take();
+        assert!(second.events.is_empty());
+        assert_eq!(second.allocs, 0);
+    }
+
+    #[test]
+    fn inverted_span_clamps_instead_of_underflowing() {
+        let mut tr = Tracer::new(0, 4);
+        tr.span(1, "crypto", "seal", 500, 400, 0, 0);
+        let t = tr.take();
+        assert_eq!(t.events[0].end_ns, 500);
+    }
+
+    #[test]
+    fn absorb_merges_events_and_counters() {
+        let mut a = Tracer::new(2, 8);
+        a.span(0, "p2p", "send_window", 0, 10, 0, 0);
+        let mut b = Tracer::new(2, 8);
+        b.instant(0, "relia", "retransmit", 5, 1, 0);
+        let mut ta = a.take();
+        ta.absorb(b.take());
+        assert_eq!(ta.events.len(), 2);
+        assert_eq!(ta.allocs, 2);
+    }
+
+    #[test]
+    fn spec_default_capacity() {
+        assert_eq!(TraceSpec::new().buf_events, DEFAULT_BUF_EVENTS);
+    }
+}

@@ -1,0 +1,128 @@
+//! Chrome trace-event / Perfetto JSON renderer. Takes the drained
+//! per-rank timelines and produces one document loadable by
+//! `ui.perfetto.dev` or `chrome://tracing`: each rank is a *process*
+//! (pid = rank), each lane a *thread* (tid = lane), with `M` metadata
+//! records naming both, `X` complete spans, and `i` instants.
+//!
+//! Virtual-time nanoseconds are rendered as the microsecond `ts`/`dur`
+//! fields the format requires, via exact integer math (`<us>.<frac3>`)
+//! — no floating point, so output is bit-stable across platforms.
+
+use super::{Ph, RankTrace};
+
+/// Render virtual nanoseconds as fractional microseconds.
+fn us(ns: u64) -> String {
+    format!("{}.{:03}", ns / 1_000, ns % 1_000)
+}
+
+fn lane_name(lane: u32) -> String {
+    if lane == 0 {
+        "api".to_string()
+    } else {
+        format!("worker {lane}")
+    }
+}
+
+/// Render drained rank timelines as one Chrome trace-event document.
+pub fn render(traces: &[RankTrace]) -> String {
+    let mut out = String::with_capacity(
+        64 + traces.iter().map(|t| t.events.len() * 128).sum::<usize>(),
+    );
+    out.push_str("{\"displayTimeUnit\":\"ns\",\"traceEvents\":[");
+    let mut first = true;
+    let mut emit = |s: String, out: &mut String| {
+        if !first {
+            out.push(',');
+        }
+        first = false;
+        out.push_str(&s);
+    };
+    for t in traces {
+        let pid = t.rank;
+        emit(
+            format!(
+                "{{\"ph\":\"M\",\"pid\":{pid},\"tid\":0,\"name\":\"process_name\",\
+                 \"args\":{{\"name\":\"rank {pid}\"}}}}"
+            ),
+            &mut out,
+        );
+        let mut lanes: Vec<u32> = t.events.iter().map(|e| e.lane).collect();
+        lanes.sort_unstable();
+        lanes.dedup();
+        if lanes.is_empty() {
+            lanes.push(0);
+        }
+        for lane in &lanes {
+            emit(
+                format!(
+                    "{{\"ph\":\"M\",\"pid\":{pid},\"tid\":{lane},\"name\":\"thread_name\",\
+                     \"args\":{{\"name\":\"{}\"}}}}",
+                    lane_name(*lane)
+                ),
+                &mut out,
+            );
+        }
+        for e in &t.events {
+            let common = format!(
+                "\"pid\":{pid},\"tid\":{},\"cat\":\"{}\",\"name\":\"{}\",\
+                 \"ts\":{},\"args\":{{\"a\":{},\"b\":{}}}",
+                e.lane,
+                e.cat,
+                e.name,
+                us(e.begin_ns),
+                e.a,
+                e.b
+            );
+            let ev = match e.ph {
+                Ph::Complete => {
+                    format!("{{\"ph\":\"X\",{common},\"dur\":{}}}", us(e.end_ns - e.begin_ns))
+                }
+                Ph::Instant => format!("{{\"ph\":\"i\",{common},\"s\":\"t\"}}"),
+            };
+            emit(ev, &mut out);
+        }
+    }
+    out.push_str("]}");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::Tracer;
+
+    #[test]
+    fn nanoseconds_render_as_exact_microseconds() {
+        assert_eq!(us(0), "0.000");
+        assert_eq!(us(999), "0.999");
+        assert_eq!(us(1_000), "1.000");
+        assert_eq!(us(1_234_567), "1234.567");
+    }
+
+    #[test]
+    fn render_emits_metadata_spans_and_instants() {
+        let mut tr = Tracer::new(1, 16);
+        tr.span(0, "p2p", "send_window", 1_000, 3_500, 7, 4096);
+        tr.span(2, "crypto", "seal", 1_100, 1_400, 1, 2048);
+        tr.instant(0, "match", "deposit", 900, 7, 0);
+        let doc = render(&[tr.take()]);
+        assert!(doc.starts_with("{\"displayTimeUnit\":\"ns\",\"traceEvents\":["));
+        assert!(doc.contains("\"name\":\"process_name\""));
+        assert!(doc.contains("\"name\":\"rank 1\""));
+        assert!(doc.contains("\"name\":\"api\""));
+        assert!(doc.contains("\"name\":\"worker 2\""));
+        assert!(doc.contains("\"ph\":\"X\""));
+        assert!(doc.contains("\"dur\":2.500"));
+        assert!(doc.contains("\"ph\":\"i\""));
+        assert!(doc.contains("\"s\":\"t\""));
+        assert!(doc.ends_with("]}"));
+    }
+
+    #[test]
+    fn empty_trace_still_names_the_process() {
+        let mut tr = Tracer::new(0, 4);
+        let doc = render(&[tr.take()]);
+        assert!(doc.contains("\"name\":\"rank 0\""));
+        assert!(doc.contains("\"name\":\"api\""));
+    }
+}

@@ -1,0 +1,145 @@
+//! Schema validator for emitted trace documents. Used by the `trace`
+//! bench runner (self-validation), the `trace_suite` integration tests,
+//! and the `tracecheck` binary that CI runs on the uploaded artifact.
+//!
+//! Checks the subset of the Chrome trace-event format the emitter
+//! produces: a top-level object with a `traceEvents` array whose
+//! entries are `X` (complete span), `i` (instant) or `M` (metadata)
+//! records with the fields each phase requires.
+
+use super::json::{self, Json};
+
+/// Aggregate facts about a validated document, so callers can assert
+/// shape ("at least one span per rank") without re-parsing.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct TraceSummary {
+    pub spans: usize,
+    pub instants: usize,
+    pub metas: usize,
+    /// Distinct pids (ranks) seen across span/instant events.
+    pub pids: Vec<u64>,
+}
+
+fn req_num(ev: &Json, key: &str, i: usize) -> Result<f64, String> {
+    ev.get(key)
+        .and_then(Json::as_num)
+        .ok_or_else(|| format!("event {i}: missing numeric `{key}`"))
+}
+
+fn req_str<'a>(ev: &'a Json, key: &str, i: usize) -> Result<&'a str, String> {
+    ev.get(key)
+        .and_then(Json::as_str)
+        .ok_or_else(|| format!("event {i}: missing string `{key}`"))
+}
+
+/// Validate a rendered trace document, returning summary counts.
+pub fn validate(text: &str) -> Result<TraceSummary, String> {
+    let doc = json::parse(text)?;
+    let events = doc
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .ok_or("top-level `traceEvents` array missing")?;
+    let mut sum = TraceSummary::default();
+    for (i, ev) in events.iter().enumerate() {
+        let ph = req_str(ev, "ph", i)?;
+        match ph {
+            "X" => {
+                let pid = req_num(ev, "pid", i)?;
+                req_num(ev, "tid", i)?;
+                let ts = req_num(ev, "ts", i)?;
+                let dur = req_num(ev, "dur", i)?;
+                req_str(ev, "name", i)?;
+                req_str(ev, "cat", i)?;
+                if ts < 0.0 {
+                    return Err(format!("event {i}: negative ts"));
+                }
+                if dur < 0.0 {
+                    return Err(format!("event {i}: negative dur"));
+                }
+                sum.spans += 1;
+                let pid = pid as u64;
+                if !sum.pids.contains(&pid) {
+                    sum.pids.push(pid);
+                }
+            }
+            "i" => {
+                let pid = req_num(ev, "pid", i)?;
+                req_num(ev, "tid", i)?;
+                let ts = req_num(ev, "ts", i)?;
+                req_str(ev, "name", i)?;
+                req_str(ev, "cat", i)?;
+                req_str(ev, "s", i)?;
+                if ts < 0.0 {
+                    return Err(format!("event {i}: negative ts"));
+                }
+                sum.instants += 1;
+                let pid = pid as u64;
+                if !sum.pids.contains(&pid) {
+                    sum.pids.push(pid);
+                }
+            }
+            "M" => {
+                req_num(ev, "pid", i)?;
+                let name = req_str(ev, "name", i)?;
+                if name != "process_name" && name != "thread_name" {
+                    return Err(format!("event {i}: unknown metadata `{name}`"));
+                }
+                ev.get("args")
+                    .and_then(|a| a.get("name"))
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| format!("event {i}: metadata without args.name"))?;
+                sum.metas += 1;
+            }
+            other => return Err(format!("event {i}: unknown phase `{other}`")),
+        }
+    }
+    sum.pids.sort_unstable();
+    Ok(sum)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{perfetto, Tracer};
+
+    #[test]
+    fn emitted_document_roundtrips() {
+        let mut a = Tracer::new(0, 16);
+        a.span(0, "p2p", "send_window", 0, 2_000, 1, 64);
+        a.instant(0, "match", "post", 10, 1, 0);
+        let mut b = Tracer::new(1, 16);
+        b.span(1, "crypto", "open", 500, 900, 1, 64);
+        let doc = perfetto::render(&[a.take(), b.take()]);
+        let sum = validate(&doc).unwrap();
+        assert_eq!(sum.spans, 2);
+        assert_eq!(sum.instants, 1);
+        assert_eq!(sum.pids, vec![0, 1]);
+        assert!(sum.metas >= 4); // 2 process names + >=1 thread name each
+    }
+
+    #[test]
+    fn rejects_missing_trace_events() {
+        assert!(validate("{}").is_err());
+        assert!(validate("[]").is_err());
+        assert!(validate("{\"traceEvents\": 3}").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_events() {
+        // Unknown phase.
+        let bad = r#"{"traceEvents":[{"ph":"B","pid":0,"tid":0,"ts":0,"name":"x","cat":"c"}]}"#;
+        assert!(validate(bad).is_err());
+        // Span without duration.
+        let bad = r#"{"traceEvents":[{"ph":"X","pid":0,"tid":0,"ts":0,"name":"x","cat":"c"}]}"#;
+        assert!(validate(bad).is_err());
+        // Instant without scope.
+        let bad = r#"{"traceEvents":[{"ph":"i","pid":0,"tid":0,"ts":1,"name":"x","cat":"c"}]}"#;
+        assert!(validate(bad).is_err());
+        // Metadata without args.name.
+        let bad = r#"{"traceEvents":[{"ph":"M","pid":0,"name":"process_name"}]}"#;
+        assert!(validate(bad).is_err());
+        // Negative duration.
+        let bad = r#"{"traceEvents":[{"ph":"X","pid":0,"tid":0,"ts":0,"dur":-1,"name":"x","cat":"c"}]}"#;
+        assert!(validate(bad).is_err());
+    }
+}

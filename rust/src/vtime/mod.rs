@@ -64,6 +64,32 @@ pub fn ns_to_us(ns: u64) -> f64 {
     ns as f64 / 1e3
 }
 
+/// Number of log2 latency buckets — enough to cover every `u64`
+/// nanosecond duration (bucket *i* spans `[2^i, 2^(i+1))` ns).
+pub const LOG2_BUCKETS: usize = 64;
+
+/// Histogram bucket index for a virtual duration: `floor(log2(ns))`,
+/// with 0 ns folded into bucket 0.
+#[inline]
+pub fn log2_bucket(ns: u64) -> usize {
+    if ns == 0 {
+        0
+    } else {
+        ns.ilog2() as usize
+    }
+}
+
+/// Inclusive upper bound (ns) of a log2 bucket — the conservative value
+/// percentile queries report for samples landing in that bucket.
+#[inline]
+pub fn log2_bucket_ceil_ns(idx: usize) -> u64 {
+    if idx >= LOG2_BUCKETS - 1 {
+        u64::MAX
+    } else {
+        (1u64 << (idx + 1)) - 1
+    }
+}
+
 /// Throughput helper: bytes over a virtual duration → MB/s.
 #[inline]
 pub fn mb_per_s(bytes: u64, ns: u64) -> f64 {
@@ -87,6 +113,23 @@ mod tests {
         assert_eq!(c.now(), 100);
         assert_eq!(c.wait_until(250), 150);
         assert_eq!(c.now(), 250);
+    }
+
+    #[test]
+    fn log2_buckets_cover_the_u64_range() {
+        assert_eq!(log2_bucket(0), 0);
+        assert_eq!(log2_bucket(1), 0);
+        assert_eq!(log2_bucket(2), 1);
+        assert_eq!(log2_bucket(3), 1);
+        assert_eq!(log2_bucket(1024), 10);
+        assert_eq!(log2_bucket(u64::MAX), LOG2_BUCKETS - 1);
+        // Every sample is ≤ its bucket's ceiling.
+        for ns in [0u64, 1, 2, 3, 1023, 1024, 1 << 40, u64::MAX] {
+            assert!(ns <= log2_bucket_ceil_ns(log2_bucket(ns)));
+        }
+        assert_eq!(log2_bucket_ceil_ns(0), 1);
+        assert_eq!(log2_bucket_ceil_ns(10), 2047);
+        assert_eq!(log2_bucket_ceil_ns(LOG2_BUCKETS - 1), u64::MAX);
     }
 
     #[test]

@@ -13,7 +13,7 @@
 //!    justification for each.
 
 use cryptmpi::analysis::rules::{
-    lint_file, RULE_KEY, RULE_POOL, RULE_SECRET, RULE_TAG_NS, RULE_UNSAFE,
+    lint_file, RULE_KEY, RULE_POOL, RULE_SECRET, RULE_TAG_NS, RULE_TRACE, RULE_UNSAFE,
 };
 use cryptmpi::analysis::{default_roots, inventory_json, lint_tree};
 
@@ -283,6 +283,65 @@ fn fanout3(pool: &WorkerPool, m: &std::sync::Mutex<u32>) {
         let mut g = m.lock().unwrap();
         *g += done;
     });
+}
+"#;
+    assert_eq!(rl("src/fixture.rs", src), vec![]);
+}
+
+// ------------------------------------------------------------ trace hygiene
+
+#[test]
+fn trace_hygiene_flags_key_derived_span_args() {
+    // A round-key byte smuggled into a span arg: the trace plane writes
+    // plaintext JSON that leaves the process.
+    let src = r#"
+use crate::crypto::aes::AesKey;
+fn leak(tr: &mut Tracer, key: &AesKey) {
+    let rk = key.round_key_bytes(0);
+    tr.span(0, "crypto", "seal", 0, 10, rk[0] as u64, 0);
+}
+"#;
+    assert_eq!(rl("src/fixture.rs", src), vec![(RULE_TRACE, 5)]);
+
+    // Keystream-derived binding reaching an instant through the same
+    // one-hop taint the secret rule uses.
+    let src2 = r#"
+fn leak2(tr: &mut Tracer, g: &Gcm) {
+    let ks = g.keystream8(0);
+    tr.instant(1, "crypto", "open", 7, ks[0] as u64, 0);
+}
+"#;
+    assert_eq!(rl("src/fixture.rs", src2), vec![(RULE_TRACE, 4)]);
+}
+
+#[test]
+fn trace_hygiene_flags_even_method_calls_on_secrets() {
+    // Unlike branch/index/format sinks, a method call on the secret is
+    // NOT exempt here: `sealer.key_word()` still derives the label from
+    // key-owning state, and the rank/transport helpers are sinks too.
+    let src = r#"
+fn label(rank: &mut Rank, sealer: &StreamSealer, t0: u64) {
+    rank.tr_instant(0, "crypto", "seal", t0, sealer.key_word(), 0);
+}
+"#;
+    assert_eq!(rl("src/fixture.rs", src), vec![(RULE_TRACE, 3)]);
+}
+
+#[test]
+fn trace_hygiene_accepts_plain_metadata_and_definitions() {
+    // Tags, byte counts and timestamps are exactly what spans should
+    // carry; and `pub fn span(` *definitions* (no `.` receiver) are not
+    // sinks, so the Tracer itself lints clean.
+    let src = r#"
+fn ok(tr: &mut Tracer, tag: u64, len: usize) {
+    tr.span(0, "p2p", "send_window", 0, 10, tag, len as u64);
+    tr.instant(0, "match", "post", 5, tag, 0);
+}
+pub struct Ring;
+impl Ring {
+    pub fn span(&mut self, lane: u32) -> u32 {
+        lane
+    }
 }
 "#;
     assert_eq!(rl("src/fixture.rs", src), vec![]);

@@ -1,0 +1,196 @@
+//! Integration suite for the virtual-time tracing & metrics plane
+//! (`trace`, DESIGN.md §15).
+//!
+//! The contract under test, end to end through the public cluster API:
+//!
+//! * **Zero overhead when off** — with `NetConfig::trace` unset, every
+//!   security mode runs tick-identical to an armed run of the same
+//!   workload, reports all-zero `TraceStats` (no events, no drops, no
+//!   ring allocations), carries no per-rank timeline, and renders no
+//!   document. Hard-asserted per rank, not in aggregate.
+//! * **Schema** — an armed run's Perfetto document round-trips through
+//!   the in-repo validator with one pid per rank, and the validator
+//!   rejects malformed documents.
+//! * **Taxonomy** — the armed timeline carries every family the design
+//!   promises for this workload: p2p windows, worker-lane crypto spans,
+//!   matching instants, collective stage spans.
+//! * **Bounded buffers** — a deliberately tiny ring drops events and
+//!   counts them instead of reallocating, still tick-identical.
+
+use cryptmpi::coordinator::{run_cluster, ClusterConfig, SecurityMode};
+use cryptmpi::crypto::rand::SimRng;
+use cryptmpi::mpi::stats::ClusterReport;
+use cryptmpi::net::SystemProfile;
+use cryptmpi::trace::{validate, Ph, TraceSpec};
+
+const MODES: [SecurityMode; 4] = [
+    SecurityMode::Unencrypted,
+    SecurityMode::Naive,
+    SecurityMode::CryptMpi,
+    SecurityMode::IpsecSim,
+];
+
+fn payload(n: usize, seed: u64) -> Vec<u8> {
+    let mut v = vec![0u8; n];
+    SimRng::new(seed).fill(&mut v);
+    v
+}
+
+/// One representative workload: a chopped-size (pipelined) inter-node
+/// round trip plus a nonblocking allreduce, so p2p, crypto, matching and
+/// collective events all fire. `trace` arms the plane; `None` is the
+/// disarmed baseline.
+fn run_workload(mode: SecurityMode, trace: Option<TraceSpec>) -> ClusterReport {
+    let mut cfg = ClusterConfig::pingpong(SystemProfile::noleland(), mode);
+    cfg.profile.net.trace = trace;
+    let msg = payload(96 * 1024, 7);
+    let (outs, rep) = run_cluster(&cfg, move |rank| {
+        let peer = rank.id() ^ 1;
+        let mut ok = true;
+        if rank.id() == 0 {
+            rank.send(peer, 1, &msg);
+            ok &= rank.recv(peer, 2) == msg;
+        } else {
+            ok &= rank.recv(peer, 1) == msg;
+            rank.send(peer, 2, &msg);
+        }
+        let req = rank.iallreduce_sum(&[rank.id() as f64 + 1.0; 8]);
+        let sum = req.wait(rank).expect("allreduce failed").into_f64s();
+        ok &= sum.iter().all(|&x| x == 3.0);
+        ok
+    });
+    assert!(outs.iter().all(|&x| x), "{mode:?}: payload corrupted");
+    rep
+}
+
+/// The headline invariant: arming the tracer must not move the virtual
+/// clock by a single tick, and the disarmed path must not touch a single
+/// trace buffer — per rank, in all four security modes.
+#[test]
+fn disarmed_is_tick_identical_and_allocation_free() {
+    for mode in MODES {
+        let off = run_workload(mode, None);
+        let on = run_workload(mode, Some(TraceSpec::default()));
+        assert!(
+            off.trace_totals().is_zero(),
+            "{mode:?}: disarmed TraceStats must be all-zero, got {:?}",
+            off.trace_totals()
+        );
+        assert!(
+            off.per_rank.iter().all(|r| r.trace.is_none() && r.stats.trace.is_zero()),
+            "{mode:?}: disarmed ranks must carry no timeline"
+        );
+        assert!(off.perfetto().is_none(), "{mode:?}: disarmed run must render no document");
+        assert_eq!(off.per_rank.len(), on.per_rank.len());
+        for (o, a) in off.per_rank.iter().zip(on.per_rank.iter()) {
+            assert_eq!(
+                o.elapsed_ns, a.elapsed_ns,
+                "{mode:?} rank {}: arming the tracer shifted the virtual clock",
+                o.rank
+            );
+        }
+        let totals = on.trace_totals();
+        assert!(totals.events > 0, "{mode:?}: armed run recorded nothing");
+        assert_eq!(totals.dropped, 0, "{mode:?}: default ring must not drop here");
+        assert_eq!(
+            totals.ring_allocs,
+            2 * on.per_rank.len() as u64,
+            "{mode:?}: exactly one rank-side + one transport-side ring allocation per rank"
+        );
+    }
+}
+
+/// The armed CryptMpi timeline carries every event family DESIGN.md §15
+/// promises for this workload, with worker-lane crypto spans off the API
+/// timeline (lane 0).
+#[test]
+fn armed_timeline_covers_the_taxonomy() {
+    let rep = run_workload(SecurityMode::CryptMpi, Some(TraceSpec::default()));
+    let rt = rep.per_rank[0].trace.as_ref().expect("rank 0 timeline");
+    let has = |ph: Ph, cat: &str, name: &str| {
+        rt.events.iter().any(|e| e.ph == ph && e.cat == cat && e.name == name)
+    };
+    assert!(has(Ph::Complete, "p2p", "send_window"), "missing send_window span");
+    assert!(has(Ph::Complete, "p2p", "recv"), "missing recv span");
+    assert!(has(Ph::Complete, "crypto", "seal"), "missing seal span");
+    assert!(has(Ph::Complete, "crypto", "open"), "missing open span");
+    assert!(has(Ph::Instant, "match", "post"), "missing post instant");
+    assert!(has(Ph::Instant, "match", "deposit"), "missing deposit instant");
+    assert!(has(Ph::Complete, "coll", "stage"), "missing collective stage span");
+    assert!(
+        rt.events.iter().any(|e| e.cat == "crypto" && e.lane > 0),
+        "crypto spans must ride worker lanes, not the API timeline"
+    );
+    assert!(
+        rt.events
+            .iter()
+            .filter(|e| e.ph == Ph::Complete)
+            .all(|e| e.end_ns >= e.begin_ns),
+        "spans must be well-formed"
+    );
+}
+
+/// Per-op latency histograms populate regardless of arming, and their
+/// quantiles are ordered.
+#[test]
+fn latency_histograms_populate_with_ordered_quantiles() {
+    let rep = run_workload(SecurityMode::CryptMpi, None);
+    let lat = rep.latency_totals();
+    assert!(lat.send.count > 0 && lat.recv.count > 0, "empty p2p histograms");
+    assert!(lat.seal.count > 0 && lat.open.count > 0, "empty crypto histograms");
+    assert!(lat.coll.count > 0, "empty collective histogram");
+    for h in [&lat.send, &lat.recv, &lat.seal, &lat.open, &lat.coll] {
+        assert!(h.p50_ns() <= h.p95_ns() && h.p95_ns() <= h.p99_ns(), "unordered quantiles");
+        assert!(h.p99_ns() > 0, "quantiles must be positive once recorded");
+    }
+    // Unencrypted mode never touches a cipher.
+    let plain = run_workload(SecurityMode::Unencrypted, None);
+    let lat = plain.latency_totals();
+    assert_eq!(lat.seal.count, 0);
+    assert_eq!(lat.open.count, 0);
+}
+
+/// Armed documents round-trip through the in-repo validator; malformed
+/// documents do not.
+#[test]
+fn document_roundtrips_and_validator_rejects_garbage() {
+    let rep = run_workload(SecurityMode::CryptMpi, Some(TraceSpec::default()));
+    let doc = rep.perfetto().expect("armed run renders a document");
+    let sum = validate::validate(&doc).expect("emitted document must validate");
+    assert!(sum.spans > 0 && sum.instants > 0);
+    assert_eq!(sum.pids, vec![0, 1], "one pid per rank");
+    assert!(sum.metas >= 4, "process + thread name metadata per rank");
+
+    assert!(validate::validate("not json").is_err());
+    assert!(validate::validate("{\"traceEvents\": {}}").is_err());
+    let bad_phase = r#"{"traceEvents":[{"ph":"B","pid":0,"tid":0,"ts":0,"name":"x","cat":"c"}]}"#;
+    assert!(validate::validate(bad_phase).is_err());
+    let span_sans_dur = r#"{"traceEvents":[{"ph":"X","pid":0,"tid":0,"ts":0,"name":"x","cat":"c"}]}"#;
+    assert!(validate::validate(span_sans_dur).is_err());
+}
+
+/// A deliberately tiny ring saturates, drops, and counts — it must never
+/// reallocate (allocation count stays at arming-time 1 per ring) and
+/// must still be tick-identical with the disarmed run.
+#[test]
+fn tiny_ring_drops_and_counts_instead_of_growing() {
+    let off = run_workload(SecurityMode::CryptMpi, None);
+    let on = run_workload(SecurityMode::CryptMpi, Some(TraceSpec { buf_events: 4 }));
+    for (o, a) in off.per_rank.iter().zip(on.per_rank.iter()) {
+        assert_eq!(o.elapsed_ns, a.elapsed_ns, "rank {}: tiny ring shifted the clock", o.rank);
+    }
+    let totals = on.trace_totals();
+    assert!(totals.dropped > 0, "a 4-event ring must overflow on this workload");
+    assert_eq!(
+        totals.ring_allocs,
+        2 * on.per_rank.len() as u64,
+        "overflow must drop, never reallocate"
+    );
+    for r in &on.per_rank {
+        let rt = r.trace.as_ref().expect("armed rank timeline");
+        assert!(rt.events.len() <= 8, "rank {}: two 4-event rings hold at most 8", r.rank);
+    }
+    // The saturated document still validates.
+    let doc = on.perfetto().expect("document");
+    validate::validate(&doc).expect("saturated document must still validate");
+}
